@@ -1,0 +1,67 @@
+//! Quickstart: load the AOT-compiled `quickstart` artifacts, initialize
+//! weights on the PJRT device, take a few SGD steps, and evaluate — the
+//! minimal end-to-end tour of the three-layer stack.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use bptcnn::data::Dataset;
+use bptcnn::nn::Network;
+use bptcnn::runtime::{find_model_dir, XlaService};
+use bptcnn::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = find_model_dir("quickstart") else {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    };
+    println!("loading artifacts from {} …", dir.display());
+    let service = XlaService::start(&dir)?;
+    let h = service.handle();
+    let cfg = h.manifest.config.clone();
+    println!(
+        "model '{}': {} parameters, batch {} of {}×{}×{} images",
+        cfg.name,
+        cfg.param_count(),
+        cfg.batch_size,
+        cfg.input_hw,
+        cfg.input_hw,
+        cfg.in_channels
+    );
+
+    // Synthetic 10-class dataset (the ImageNet stand-in).
+    let ds = Arc::new(Dataset::synthetic(&cfg, 512, 0.25, 1));
+    let mut weights = h.init_weights(42)?;
+
+    // A few epochs of plain SGD through the compiled train_step.
+    println!("\n{:>5} {:>10} {:>10}", "step", "loss", "accuracy");
+    let steps = 40;
+    for step in 0..steps {
+        let (xv, yv, _) = ds.batch(step * cfg.batch_size, cfg.batch_size);
+        let x = Tensor::from_vec(&[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels], xv);
+        let y = Tensor::from_vec(&[cfg.batch_size, cfg.num_classes], yv);
+        let (w, loss, correct) = h.train_step(weights, x, y, 0.3)?;
+        weights = w;
+        if step % 5 == 0 || step == steps - 1 {
+            println!(
+                "{step:>5} {loss:>10.4} {:>10.3}",
+                correct / cfg.batch_size as f32
+            );
+        }
+    }
+
+    // Cross-backend check: the native Rust network computes the same loss.
+    let (xv, yv, _) = ds.batch(0, cfg.batch_size);
+    let x = Tensor::from_vec(&[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels], xv.clone());
+    let y = Tensor::from_vec(&[cfg.batch_size, cfg.num_classes], yv.clone());
+    let (xla_loss, _) = h.eval_step(weights.clone(), x, y)?;
+    let native = Network::with_weights(&cfg, weights);
+    let (native_loss, _) = native.eval_batch(&xv, &yv, cfg.batch_size);
+    println!(
+        "\ncross-backend parity: XLA loss {xla_loss:.5} vs native loss {native_loss:.5} (Δ {:.2e})",
+        (xla_loss - native_loss).abs()
+    );
+    anyhow::ensure!((xla_loss - native_loss).abs() < 1e-3, "backends disagree");
+    println!("quickstart OK");
+    Ok(())
+}

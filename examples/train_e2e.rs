@@ -1,0 +1,155 @@
+//! End-to-end validation run (the session's mandated driver): train the
+//! `e2e` CNN (~38 k params) for a few hundred steps on the synthetic
+//! 10-class corpus with the FULL stack composed:
+//!
+//!   L1 Pallas conv/pool/FC kernels → lowered inside → L2 JAX train_step
+//!   → AOT HLO text → PJRT runtime → L3 Rust coordinator running
+//!   4 heterogeneous workers with AGWU + IDPA.
+//!
+//! Logs the loss curve and writes `results/train_e2e.json`; the run is
+//! recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+
+use std::sync::Arc;
+
+use bptcnn::config::{ClusterConfig, PartitionStrategy, TrainConfig, UpdateStrategy};
+use bptcnn::data::Dataset;
+use bptcnn::metrics::{ascii_chart, log_run, Table};
+use bptcnn::outer::worker::LocalTrainer;
+use bptcnn::outer::{build_schedule, run_agwu, slowdown_factors};
+use bptcnn::runtime::{find_model_dir, XlaService, XlaTrainer};
+use bptcnn::tensor::Tensor;
+use bptcnn::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let Some(dir) = find_model_dir("e2e") else {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    };
+    let service = XlaService::start(&dir)?;
+    let network = service.handle().manifest.config.clone();
+    let nodes = 4;
+    let samples = 2048;
+    let iterations = 8; // epochs over each worker's shard (≈ hundreds of SGD steps)
+
+    let cluster = ClusterConfig::heterogeneous(nodes, 0x5EED);
+    let tc = TrainConfig {
+        network: network.clone(),
+        update: UpdateStrategy::Agwu,
+        partition: PartitionStrategy::Idpa,
+        total_samples: samples,
+        iterations,
+        idpa_batches: 3,
+        learning_rate: 0.15,
+        seed: 42,
+    };
+    println!(
+        "e2e: {} params, {} synthetic samples, {} heterogeneous nodes, AGWU+IDPA, K={}",
+        network.param_count(),
+        samples,
+        nodes,
+        iterations
+    );
+
+    let train_ds = Arc::new(Dataset::synthetic(&network, samples, 0.3, tc.seed));
+    let eval_ds = Dataset::synthetic_split(&network, 256, 0.3, tc.seed, tc.seed ^ 0xEEEE);
+    let (schedule, allocations, iters) = build_schedule(&tc, &cluster);
+    let slow = slowdown_factors(&cluster);
+    println!("IDPA allocations (samples/node): {allocations:?} | slowdowns {slow:?}");
+
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..nodes)
+        .map(|j| {
+            Box::new(
+                XlaTrainer::new(service.handle(), Arc::clone(&train_ds), tc.learning_rate)
+                    .with_slowdown(slow[j]),
+            ) as Box<dyn LocalTrainer>
+        })
+        .collect();
+    let init = service.handle().init_weights(tc.seed as i32)?;
+
+    let eval_handle = service.handle();
+    let net2 = network.clone();
+    let eval_hook = move |ws: &bptcnn::tensor::WeightSet| -> (f64, f64) {
+        let bsz = net2.batch_size;
+        let (mut loss, mut correct, mut batches, mut seen) = (0.0f64, 0.0f64, 0usize, 0usize);
+        while seen < eval_ds.len() {
+            let (xv, yv, _) = eval_ds.batch(seen, bsz);
+            let x = Tensor::from_vec(&[bsz, net2.input_hw, net2.input_hw, net2.in_channels], xv);
+            let y = Tensor::from_vec(&[bsz, net2.num_classes], yv);
+            let (l, c) = eval_handle.eval_step(ws.clone(), x, y).expect("xla eval");
+            loss += l as f64;
+            correct += c as f64;
+            seen += bsz;
+            batches += 1;
+        }
+        (loss / batches as f64, correct / (batches * bsz) as f64)
+    };
+
+    let t0 = std::time::Instant::now();
+    let report = run_agwu(init, workers, &schedule, iters, Some(&eval_hook));
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        "e2e loss curve (held-out, per global version)",
+        &["version", "node", "t[s]", "eval loss", "eval acc"],
+    );
+    for v in &report.versions {
+        if let Some((loss, acc)) = v.eval {
+            table.row(&[
+                format!("{}", v.version),
+                format!("{}", v.node),
+                format!("{:.2}", v.at_s),
+                format!("{loss:.4}"),
+                format!("{acc:.3}"),
+            ]);
+        }
+    }
+    table.print();
+
+    let curve: Vec<(f64, f64)> = report
+        .versions
+        .iter()
+        .filter_map(|v| v.eval.map(|(l, _)| (v.version as f64, l)))
+        .collect();
+    let acc_curve: Vec<(f64, f64)> = report
+        .versions
+        .iter()
+        .filter_map(|v| v.eval.map(|(_, a)| (v.version as f64, a)))
+        .collect();
+    println!(
+        "{}",
+        ascii_chart("\ne2e held-out loss vs global version", &[("loss", curve.clone())], 64, 14)
+    );
+
+    let first_loss = curve.first().map(|p| p.1).unwrap_or(f64::NAN);
+    let last_loss = curve.last().map(|p| p.1).unwrap_or(f64::NAN);
+    let final_acc = acc_curve.last().map(|p| p.1).unwrap_or(0.0);
+    println!(
+        "loss {first_loss:.4} → {last_loss:.4} | final accuracy {final_acc:.3} | comm {:.2} MB | wall {wall:.1}s ({} versions)",
+        report.comm.megabytes(),
+        report.versions.len()
+    );
+
+    log_run(
+        "results/train_e2e.json",
+        Json::obj(vec![
+            ("example", Json::from("train_e2e")),
+            ("params", Json::from(network.param_count())),
+            ("samples", Json::from(samples)),
+            ("nodes", Json::from(nodes)),
+            ("iterations", Json::from(iters)),
+            ("first_loss", Json::from(first_loss)),
+            ("last_loss", Json::from(last_loss)),
+            ("final_accuracy", Json::from(final_acc)),
+            ("comm_mb", Json::from(report.comm.megabytes())),
+            ("wall_s", Json::from(wall)),
+            ("loss_curve", Json::Arr(curve.iter().map(|p| Json::arr_f64(&[p.0, p.1])).collect())),
+        ]),
+    )?;
+    println!("(logged to results/train_e2e.json)");
+
+    anyhow::ensure!(last_loss < first_loss, "e2e training did not learn");
+    anyhow::ensure!(final_acc > 0.3, "e2e accuracy too low: {final_acc}");
+    println!("train_e2e OK");
+    Ok(())
+}

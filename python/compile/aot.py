@@ -1,0 +1,131 @@
+"""AOT compilation driver: lower the L2 model to HLO-text artifacts.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--configs e2e,quickstart]``
+
+Per config this writes::
+
+    artifacts/<name>/init.hlo.txt        seed:i32                      -> (params…)
+    artifacts/<name>/train_step.hlo.txt  (params…, x, y, lr)           -> (params…, loss, correct)
+    artifacts/<name>/eval_step.hlo.txt   (params…, x, y)               -> (loss, correct)
+    artifacts/<name>/meta.json           shapes / manifest for the Rust runtime
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowered with
+``return_tuple=True``; the Rust side unwraps the tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: M.CNNConfig, out_dir: str) -> dict:
+    """Lower all three entry points for one config; return its manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    shapes = cfg.param_shapes()
+    param_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    x_spec = jax.ShapeDtypeStruct(
+        (cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels), jnp.float32
+    )
+    y_spec = jax.ShapeDtypeStruct((cfg.batch_size, cfg.num_classes), jnp.float32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def init_fn(seed):
+        return tuple(M.init_params(cfg, seed))
+
+    def train_fn(*args):
+        params = list(args[: len(shapes)])
+        x, y, lr = args[len(shapes) :]
+        new_params, loss, correct = M.train_step(cfg, params, x, y, lr)
+        return (*new_params, loss, correct)
+
+    def eval_fn(*args):
+        params = list(args[: len(shapes)])
+        x, y = args[len(shapes) :]
+        return M.eval_step(cfg, params, x, y)
+
+    entries = {
+        "init": (init_fn, [seed_spec]),
+        "train_step": (train_fn, [*param_specs, x_spec, y_spec, lr_spec]),
+        "eval_step": (eval_fn, [*param_specs, x_spec, y_spec]),
+    }
+    for name, (fn, specs) in entries.items():
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "input_hw": cfg.input_hw,
+            "in_channels": cfg.in_channels,
+            "conv_layers": cfg.conv_layers,
+            "filters": cfg.filters,
+            "kernel_hw": cfg.kernel_hw,
+            "fc_layers": cfg.fc_layers,
+            "fc_neurons": cfg.fc_neurons,
+            "num_classes": cfg.num_classes,
+            "batch_size": cfg.batch_size,
+            "pool_window": cfg.pool_window,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in shapes],
+        "param_count": cfg.param_count(),
+        "entries": {
+            "init": {"inputs": ["seed:i32[]"], "outputs": len(shapes)},
+            "train_step": {
+                "inputs": len(shapes),
+                "extra_inputs": ["x", "y", "lr"],
+                "outputs": len(shapes) + 2,
+            },
+            "eval_step": {
+                "inputs": len(shapes),
+                "extra_inputs": ["x", "y"],
+                "outputs": 2,
+            },
+        },
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--configs",
+        default="quickstart,e2e",
+        help="comma-separated config names from model.CONFIGS",
+    )
+    args = ap.parse_args()
+    for name in args.configs.split(","):
+        cfg = M.CONFIGS[name.strip()]
+        print(f"lowering config '{cfg.name}' ({cfg.param_count()} params)…")
+        lower_config(cfg, os.path.join(args.out, cfg.name))
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

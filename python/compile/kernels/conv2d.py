@@ -1,0 +1,171 @@
+"""Layer-1 Pallas kernels for the convolutional layer — the paper's compute
+hot-spot (§4.1.1: convolutional layers take >85% of training time).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation)
+--------------------------------------------------------
+The paper decomposes a convolutional layer into ``K_C = H_a × W_a``
+independent scalar tasks (Eqs. 13–14) scheduled onto CPU threads. On a TPU
+that granularity would starve the MXU, so the kernel expresses the *same*
+decomposition as a **shifted matmul**: for each filter offset ``(i, j)`` the
+input window ``x[:, i:i+H_a, j:j+W_a, :]`` is flattened to a
+``(N·H_a·W_a, C)`` matrix and multiplied with the ``(C, O)`` filter slice on
+the MXU — every MXU output row is exactly one of the paper's Eq.-13 tasks.
+The grid (batch tiles) plays the role of the paper's task queue, and the
+BlockSpecs express the HBM→VMEM schedule the paper expressed with per-task
+working sets.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+Rust runtime executes directly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_fwd_kernel(x_ref, f_ref, b_ref, o_ref):
+    """One program: VALID conv (stride 1) of a batch block via shifted matmul."""
+    n, h, w, c = x_ref.shape
+    kh, kw, _, co = f_ref.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    x = x_ref[...]
+    f = f_ref[...]
+    acc = jnp.zeros((n * ho * wo, co), jnp.float32)
+    # Static KH×KW loop: each iteration is one MXU matmul (the paper's K_C
+    # tasks batched along the matmul M dimension).
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + ho, j : j + wo, :].reshape(n * ho * wo, c)
+            acc = acc + patch @ f[i, j]
+    acc = acc + b_ref[...]
+    o_ref[...] = acc.reshape(n, ho, wo, co)
+
+
+def conv2d_fwd(x: jax.Array, f: jax.Array, b: jax.Array, *, block_n: int | None = None) -> jax.Array:
+    """VALID convolution + bias via the Pallas kernel.
+
+    ``x``: (N, H, W, C); ``f``: (KH, KW, C, O); ``b``: (O,).
+    ``block_n``: batch-tile size for the grid (must divide N). ``None`` runs a
+    single program over the whole batch — appropriate when the working set
+    fits VMEM (see :func:`vmem_bytes_fwd`).
+    """
+    n, h, w, c = x.shape
+    kh, kw, _, co = f.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    out_shape = jax.ShapeDtypeStruct((n, ho, wo, co), jnp.float32)
+    if block_n is None:
+        return pl.pallas_call(_conv2d_fwd_kernel, out_shape=out_shape, interpret=True)(x, f, b)
+    if n % block_n != 0:
+        raise ValueError(f"block_n={block_n} must divide batch {n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _conv2d_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, h, w, c), lambda g: (g, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c, co), lambda g: (0, 0, 0, 0)),
+            pl.BlockSpec((co,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, ho, wo, co), lambda g: (g, 0, 0, 0)),
+        out_shape=out_shape,
+        interpret=True,
+    )(x, f, b)
+
+
+def _conv2d_filter_grad_kernel(x_ref, dy_ref, df_ref):
+    """dL/dF for VALID conv — Eq. (21): df[i,j] = patchᵀ(i,j) @ dy."""
+    n, h, w, c = x_ref.shape
+    kh, kw, _, co = df_ref.shape
+    ho, wo = h - kh + 1, w - kw + 1
+    x = x_ref[...]
+    dy = dy_ref[...].reshape(n * ho * wo, co)
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + ho, j : j + wo, :].reshape(n * ho * wo, c)
+            df_ref[i, j] = patch.T @ dy  # (C, O) MXU matmul
+def conv2d_filter_grad(x: jax.Array, dy: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Pallas filter gradient: (KH, KW, C, O)."""
+    c, co = x.shape[3], dy.shape[3]
+    return pl.pallas_call(
+        _conv2d_filter_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((kh, kw, c, co), jnp.float32),
+        interpret=True,
+    )(x, dy)
+
+
+def _conv2d_input_grad_kernel(dy_ref, f_ref, dx_ref):
+    """dL/dX for VALID conv — Eq. (18): scatter-accumulate dy @ f[i,j]ᵀ."""
+    kh, kw, c, co = f_ref.shape
+    n, ho, wo, _ = dy_ref.shape
+    f = f_ref[...]
+    dy = dy_ref[...].reshape(n * ho * wo, co)
+    h, w = ho + kh - 1, wo + kw - 1
+    dx = jnp.zeros((n, h, w, c), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            contrib = (dy @ f[i, j].T).reshape(n, ho, wo, c)
+            dx = dx.at[:, i : i + ho, j : j + wo, :].add(contrib)
+    dx_ref[...] = dx
+
+
+def conv2d_input_grad(dy: jax.Array, f: jax.Array, h: int, w: int) -> jax.Array:
+    """Pallas input gradient: (N, H, W, C)."""
+    n = dy.shape[0]
+    c = f.shape[2]
+    return pl.pallas_call(
+        _conv2d_input_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), jnp.float32),
+        interpret=True,
+    )(dy, f)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def conv2d(x: jax.Array, f: jax.Array, b: jax.Array, block_n: int | None = None) -> jax.Array:
+    """Differentiable VALID conv whose forward AND backward are Pallas kernels.
+
+    The L2 model (``compile/model.py``) calls this so the whole training step
+    lowers into a single HLO module with the kernels inlined.
+    """
+    return conv2d_fwd(x, f, b, block_n=block_n)
+
+
+def _conv2d_vjp_fwd(x, f, b, block_n):
+    return conv2d_fwd(x, f, b, block_n=block_n), (x, f)
+
+
+def _conv2d_vjp_bwd(block_n, res, dy):
+    x, f = res
+    kh, kw, _, _ = f.shape
+    _, h, w, _ = x.shape
+    dx = conv2d_input_grad(dy, f, h, w)
+    df = conv2d_filter_grad(x, dy, kh, kw)
+    db = dy.sum(axis=(0, 1, 2))
+    return dx, df, db
+
+
+conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)
+
+
+def vmem_bytes_fwd(block_n: int, h: int, w: int, c: int, kh: int, kw: int, co: int) -> int:
+    """Estimated VMEM working set of one forward program (f32).
+
+    Used by the §Perf analysis in EXPERIMENTS.md to size ``block_n`` against
+    the ~16 MiB VMEM budget of a real TPU core.
+    """
+    ho, wo = h - kh + 1, w - kw + 1
+    x_bytes = block_n * h * w * c * 4
+    f_bytes = kh * kw * c * co * 4
+    acc_bytes = block_n * ho * wo * co * 4
+    patch_bytes = block_n * ho * wo * c * 4  # one shifted view materialized
+    return x_bytes + f_bytes + acc_bytes + patch_bytes
+
+
+def mxu_flops_fwd(n: int, h: int, w: int, c: int, kh: int, kw: int, co: int) -> int:
+    """MXU FLOPs of the forward kernel (2·M·K·N per shifted matmul)."""
+    ho, wo = h - kh + 1, w - kw + 1
+    return kh * kw * 2 * (n * ho * wo) * c * co

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas matmul kernel for the fully-connected classifier layers.
+
+A straightforward MXU-tiled matmul: the grid walks row blocks of the batch;
+each program computes ``x_block @ w + b``. For the paper's FC sizes
+(≤2000×2000, Table 2) a single row block holds the whole batch in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...] + b_ref[...]
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, *, block_m: int | None = None) -> jax.Array:
+    """FC layer ``(B, I) @ (I, O) + (O,)`` as a Pallas kernel.
+
+    ``block_m`` tiles the batch dimension (must divide B); ``None`` uses a
+    single program.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    out = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    if block_m is None:
+        return pl.pallas_call(_dense_kernel, out_shape=out, interpret=True)(x, w, b)
+    if m % block_m != 0:
+        raise ValueError(f"block_m={block_m} must divide batch {m}")
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=(m // block_m,),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda g: (g, 0)),
+            pl.BlockSpec((k, n), lambda g: (0, 0)),
+            pl.BlockSpec((n,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n), lambda g: (g, 0)),
+        out_shape=out,
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_bytes(block_m: int, k: int, n: int) -> int:
+    """Estimated VMEM working set of one program (f32) for §Perf."""
+    return (block_m * k + k * n + n + block_m * n) * 4
+
+
+@jax.custom_vjp
+def fc(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable FC layer whose forward and backward are Pallas matmuls.
+
+    Backward per §4.1.2: ``dx = dy @ wᵀ`` (Eq. 18 analogue for dense layers),
+    ``dw = xᵀ @ dy`` (Eq. 21 analogue), ``db = Σ dy`` (Eq. 22).
+    """
+    return dense(x, w, b)
+
+
+def _fc_vjp_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _fc_vjp_bwd(res, dy):
+    x, w = res
+    zeros_i = jnp.zeros((w.shape[0],), jnp.float32)
+    zeros_o = jnp.zeros((dy.shape[1],), jnp.float32)
+    dx = dense(dy, w.T, zeros_i)  # (B, O) @ (O, I)
+    dw = dense(x.T, dy, zeros_o)  # (I, B) @ (B, O)
+    db = dy.sum(axis=0)
+    return dx, dw, db
+
+
+fc.defvjp(_fc_vjp_fwd, _fc_vjp_bwd)

@@ -1,0 +1,81 @@
+"""Layer-1 Pallas pooling kernels (paper §3.1: max / mean pooling layers).
+
+The model uses mean pooling (differentiable with a uniform-spread gradient,
+Eq.-18-style error propagation through the pooling layer); a max-pool forward
+kernel is provided for completeness and benchmarked in the ablations.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mean_pool_kernel(window: int, x_ref, o_ref):
+    n, h, w, c = x_ref.shape
+    ho, wo = h // window, w // window
+    x = x_ref[...][:, : ho * window, : wo * window, :]
+    x = x.reshape(n, ho, window, wo, window, c)
+    o_ref[...] = x.mean(axis=(2, 4))
+
+
+def mean_pool_fwd(x: jax.Array, window: int = 2) -> jax.Array:
+    """Non-overlapping mean pooling: (N, H, W, C) → (N, H//w, W//w, C)."""
+    n, h, w, c = x.shape
+    out = jax.ShapeDtypeStruct((n, h // window, w // window, c), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_mean_pool_kernel, window), out_shape=out, interpret=True
+    )(x)
+
+
+def _max_pool_kernel(window: int, x_ref, o_ref):
+    n, h, w, c = x_ref.shape
+    ho, wo = h // window, w // window
+    x = x_ref[...][:, : ho * window, : wo * window, :]
+    x = x.reshape(n, ho, window, wo, window, c)
+    o_ref[...] = x.max(axis=(2, 4))
+
+
+def max_pool_fwd(x: jax.Array, window: int = 2) -> jax.Array:
+    """Non-overlapping max pooling: (N, H, W, C) → (N, H//w, W//w, C)."""
+    n, h, w, c = x.shape
+    out = jax.ShapeDtypeStruct((n, h // window, w // window, c), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_max_pool_kernel, window), out_shape=out, interpret=True
+    )(x)
+
+
+def _mean_pool_grad_kernel(window: int, dy_ref, dx_ref):
+    n, ho, wo, c = dy_ref.shape
+    g = dy_ref[...][:, :, None, :, None, :] / float(window * window)
+    g = jnp.broadcast_to(g, (n, ho, window, wo, window, c))
+    dx_ref[...] = g.reshape(n, ho * window, wo * window, c)
+
+
+def mean_pool_grad(dy: jax.Array, window: int = 2) -> jax.Array:
+    """Gradient of mean pooling (uniform spread back to the window)."""
+    n, ho, wo, c = dy.shape
+    out = jax.ShapeDtypeStruct((n, ho * window, wo * window, c), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_mean_pool_grad_kernel, window), out_shape=out, interpret=True
+    )(dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def mean_pool(x: jax.Array, window: int = 2) -> jax.Array:
+    """Differentiable mean pooling with Pallas forward and backward."""
+    return mean_pool_fwd(x, window)
+
+
+def _mean_pool_vjp_fwd(x, window):
+    return mean_pool_fwd(x, window), None
+
+
+def _mean_pool_vjp_bwd(window, _res, dy):
+    return (mean_pool_grad(dy, window),)
+
+
+mean_pool.defvjp(_mean_pool_vjp_fwd, _mean_pool_vjp_bwd)

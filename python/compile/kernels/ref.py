@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package is checked against these functions by
+``python/tests/test_kernel.py`` (pytest + hypothesis). The references are
+written with ``jax.lax`` / ``jnp`` primitives only — no Pallas — so they
+exercise an entirely independent lowering path.
+
+Layouts
+-------
+* images:  NHWC  ``(N, H, W, C)``
+* filters: HWIO  ``(KH, KW, C_in, C_out)`` — matches Eq. (1) of the paper
+  (per-filter depth = input depth).
+* FC:      ``(B, I) @ (I, O) + (O,)``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x: jax.Array, f: jax.Array) -> jax.Array:
+    """VALID convolution (stride 1), Eq. (1)/(12) of the paper.
+
+    ``x``: (N, H, W, C); ``f``: (KH, KW, C, O) → (N, H-KH+1, W-KW+1, O).
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        f,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_same(x: jax.Array, f: jax.Array) -> jax.Array:
+    """SAME convolution (stride 1): output spatial dims equal input's."""
+    return jax.lax.conv_general_dilated(
+        x,
+        f,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_filter_grad(x: jax.Array, dy: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Gradient of VALID conv w.r.t. the filter — Eq. (21) of the paper.
+
+    ``x``: (N, H, W, C); ``dy``: (N, H-kh+1, W-kw+1, O) → (kh, kw, C, O).
+    """
+    _, vjp = jax.vjp(
+        lambda f: conv2d(x, f),
+        jnp.zeros((kh, kw, x.shape[3], dy.shape[3]), x.dtype),
+    )
+    return vjp(dy)[0]
+
+
+def conv2d_input_grad(dy: jax.Array, f: jax.Array, h: int, w: int) -> jax.Array:
+    """Gradient of VALID conv w.r.t. the input — Eq. (18) of the paper.
+
+    Equivalent to a FULL convolution of ``dy`` with the spatially-flipped,
+    channel-transposed filter.
+    """
+    n = dy.shape[0]
+    c = f.shape[2]
+    _, vjp = jax.vjp(lambda x: conv2d(x, f), jnp.zeros((n, h, w, c), dy.dtype))
+    return vjp(dy)[0]
+
+
+def mean_pool(x: jax.Array, window: int = 2) -> jax.Array:
+    """Non-overlapping mean pooling over (H, W)."""
+    n, h, w, c = x.shape
+    ho, wo = h // window, w // window
+    x = x[:, : ho * window, : wo * window, :]
+    x = x.reshape(n, ho, window, wo, window, c)
+    return x.mean(axis=(2, 4))
+
+
+def max_pool(x: jax.Array, window: int = 2) -> jax.Array:
+    """Non-overlapping max pooling over (H, W)."""
+    n, h, w, c = x.shape
+    ho, wo = h // window, w // window
+    x = x[:, : ho * window, : wo * window, :]
+    x = x.reshape(n, ho, window, wo, window, c)
+    return x.max(axis=(2, 4))
+
+
+def mean_pool_grad(dy: jax.Array, window: int = 2) -> jax.Array:
+    """Gradient of non-overlapping mean pooling (uniform spread)."""
+    n, ho, wo, c = dy.shape
+    g = dy[:, :, None, :, None, :] / float(window * window)
+    g = jnp.broadcast_to(g, (n, ho, window, wo, window, c))
+    return g.reshape(n, ho * window, wo * window, c)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer: (B, I) @ (I, O) + (O,)."""
+    return x @ w + b
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,205 @@
+"""Layer-2 JAX model: the paper's CNN forward/backward + SGD training step.
+
+The network follows §3.1 of the paper (Fig. 1): a feature extractor of
+``conv_layers`` convolutional layers (Eq. 1, each followed by ReLU and SAME
+padding so Table-2 depths stay well-formed), one mean-pooling layer, and a
+fully-connected classifier of ``fc_layers`` hidden layers with ``fc_neurons``
+each (Fig. 1's classifier). The loss is the square error of the output layer
+(Eq. 16), and weights are updated by SGD (Eq. 23).
+
+Every convolution, pooling and FC layer calls the Layer-1 Pallas kernels in
+``compile/kernels/`` (forward *and* backward via ``jax.custom_vjp``), so the
+whole training step lowers into a single HLO module.
+
+This module is build-time only: ``compile/aot.py`` lowers ``init_fn`` /
+``train_step`` / ``eval_step`` to HLO text artifacts that the Rust runtime
+(`rust/src/runtime/`) loads and executes. Python is never on the training
+path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as kconv
+from .kernels import matmul as kmat
+from .kernels import pool as kpool
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """Network-scale configuration (paper Table 2 vocabulary).
+
+    ``conv_layers``/``filters`` ↔ "layers(Conv)"/"filters(Conv)";
+    ``fc_layers``/``fc_neurons`` ↔ "layers(FC)"/"neurons(FC)". ``fc_layers``
+    counts hidden layers; the class-logit layer is always appended.
+    """
+
+    name: str = "e2e"
+    input_hw: int = 16
+    in_channels: int = 1
+    conv_layers: int = 2
+    filters: int = 8
+    kernel_hw: int = 3
+    fc_layers: int = 2
+    fc_neurons: int = 64
+    num_classes: int = 10
+    batch_size: int = 32
+    pool_window: int = 2
+    learning_rate: float = 0.05  # default η of Eq. 23 (runtime passes its own)
+
+    def param_shapes(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flattened parameter manifest: ordered (name, shape) pairs.
+
+        The Rust coordinator treats the weight set as an ordered list of
+        tensors; this order IS the wire format between L3 and the artifacts.
+        """
+        shapes: List[Tuple[str, Tuple[int, ...]]] = []
+        c = self.in_channels
+        k = self.kernel_hw
+        for i in range(self.conv_layers):
+            shapes.append((f"conv{i}.filter", (k, k, c, self.filters)))
+            shapes.append((f"conv{i}.bias", (self.filters,)))
+            c = self.filters
+        hw = self.input_hw // self.pool_window
+        fan_in = hw * hw * c
+        for i in range(self.fc_layers):
+            shapes.append((f"fc{i}.weight", (fan_in, self.fc_neurons)))
+            shapes.append((f"fc{i}.bias", (self.fc_neurons,)))
+            fan_in = self.fc_neurons
+        shapes.append(("out.weight", (fan_in, self.num_classes)))
+        shapes.append(("out.bias", (self.num_classes,)))
+        return shapes
+
+    def param_count(self) -> int:
+        total = 0
+        for _, shape in self.param_shapes():
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+
+# Named configurations compiled to artifacts by compile/aot.py.
+CONFIGS = {
+    # Minimal config for the quickstart example and runtime smoke tests.
+    "quickstart": CNNConfig(
+        name="quickstart",
+        input_hw=8,
+        conv_layers=1,
+        filters=4,
+        fc_layers=1,
+        fc_neurons=32,
+        batch_size=8,
+    ),
+    # The end-to-end training workload (examples/train_e2e.rs, Fig. 11).
+    "e2e": CNNConfig(name="e2e"),
+}
+
+
+def table2_config(case: int) -> CNNConfig:
+    """Paper Table 2 network-scale cases 1–7 (used by the Fig. 14a sweep)."""
+    layers_conv = [2, 4, 6, 8, 8, 10, 10]
+    filters_conv = [4, 4, 8, 8, 10, 10, 12]
+    layers_fc = [3, 3, 5, 5, 7, 7, 7]
+    neurons_fc = [500, 1000, 1500, 1500, 2000, 2000, 2000]
+    i = case - 1
+    return CNNConfig(
+        name=f"case{case}",
+        input_hw=16,
+        conv_layers=layers_conv[i],
+        filters=filters_conv[i],
+        fc_layers=layers_fc[i],
+        fc_neurons=neurons_fc[i],
+    )
+
+
+def _pad_same(x: jax.Array, k: int) -> jax.Array:
+    """Zero padding P = (k-1)//2 per Eq. (12) so H_a = H_x (SAME, stride 1)."""
+    p = (k - 1) // 2
+    return jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+
+
+def init_params(cfg: CNNConfig, seed: jax.Array) -> List[jax.Array]:
+    """He-scaled normal init, traceable in ``seed`` so it lowers to HLO."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jax.Array] = []
+    for pname, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if pname.endswith(".bias"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = jnp.sqrt(2.0 / fan_in)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def forward(cfg: CNNConfig, params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Forward pass → class logits. ``x``: (B, H, W, C_in)."""
+    k = 0
+    for _ in range(cfg.conv_layers):
+        f, b = params[k], params[k + 1]
+        k += 2
+        x = _pad_same(x, cfg.kernel_hw)
+        x = kconv.conv2d(x, f, b)  # Pallas fwd + bwd (Eq. 1)
+        x = jnp.maximum(x, 0.0)
+    x = kpool.mean_pool(x, cfg.pool_window)  # Pallas pooling
+    bsz = x.shape[0]
+    x = x.reshape(bsz, -1)
+    for _ in range(cfg.fc_layers):
+        w, b = params[k], params[k + 1]
+        k += 2
+        x = jnp.maximum(kmat.fc(x, w, b), 0.0)  # Pallas FC
+    w, b = params[k], params[k + 1]
+    return kmat.fc(x, w, b)
+
+
+def loss_and_correct(
+    cfg: CNNConfig, params: Sequence[jax.Array], x: jax.Array, y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Square error of the output layer (Eq. 16) + correct-count.
+
+    ``y``: one-hot labels (B, num_classes). The output activation is softmax
+    so the squared error is bounded and the argmax matches the classifier
+    decision; loss is averaged over the batch.
+    """
+    logits = forward(cfg, params, x)
+    probs = jax.nn.softmax(logits, axis=-1)
+    loss = jnp.sum((y - probs) ** 2) / x.shape[0]
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y, axis=-1)).astype(jnp.float32)
+    )
+    return loss, correct
+
+
+def train_step(
+    cfg: CNNConfig,
+    params: Sequence[jax.Array],
+    x: jax.Array,
+    y: jax.Array,
+    lr: jax.Array,
+) -> Tuple[List[jax.Array], jax.Array, jax.Array]:
+    """One SGD step (Eq. 23): returns (updated params…, loss, correct)."""
+
+    def objective(ps):
+        loss, correct = loss_and_correct(cfg, ps, x, y)
+        return loss, correct
+
+    (loss, correct), grads = jax.value_and_grad(objective, has_aux=True)(list(params))
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, loss, correct
+
+
+def eval_step(
+    cfg: CNNConfig, params: Sequence[jax.Array], x: jax.Array, y: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Evaluation: (loss, correct) on one batch without updating weights."""
+    return loss_and_correct(cfg, params, x, y)

@@ -1,0 +1,99 @@
+"""AOT pipeline: lowering produces valid HLO text and a manifest consistent
+with the model's parameter layout (the L3 wire format)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model as M
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4]" in text
+
+
+def test_lower_config_writes_all_artifacts(tmp_path):
+    cfg = M.CNNConfig(
+        name="tiny", input_hw=6, conv_layers=1, filters=2, fc_layers=1,
+        fc_neurons=8, num_classes=3, batch_size=2,
+    )
+    manifest = aot.lower_config(cfg, str(tmp_path))
+    for entry in ("init", "train_step", "eval_step"):
+        path = tmp_path / f"{entry}.hlo.txt"
+        assert path.exists()
+        text = path.read_text()
+        assert "ENTRY" in text
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta == manifest
+    assert meta["param_count"] == cfg.param_count()
+    assert len(meta["params"]) == len(cfg.param_shapes())
+
+
+def test_train_step_hlo_signature_matches_manifest(tmp_path):
+    """The HLO entry computation must take P+3 parameters and return a
+    (P+2)-tuple — this is the contract rust/src/runtime depends on."""
+    cfg = M.CNNConfig(
+        name="tiny", input_hw=6, conv_layers=1, filters=2, fc_layers=1,
+        fc_neurons=8, num_classes=3, batch_size=2,
+    )
+    aot.lower_config(cfg, str(tmp_path))
+    text = (tmp_path / "train_step.hlo.txt").read_text()
+    p = len(cfg.param_shapes())
+    # Count 'parameter(k)' occurrences in the entry computation.
+    n_params = sum(1 for i in range(p + 4) if f"parameter({i})" in text)
+    assert n_params == p + 3, f"expected {p + 3} HLO parameters, found {n_params}"
+
+
+def test_lowered_train_step_executes_and_matches_eager(tmp_path):
+    """Compile the lowered StableHLO (same path the artifacts take) and check
+    it produces the same numbers as eager execution."""
+    cfg = M.CNNConfig(
+        name="tiny", input_hw=6, conv_layers=1, filters=2, fc_layers=1,
+        fc_neurons=8, num_classes=3, batch_size=2,
+    )
+    shapes = cfg.param_shapes()
+    params = M.init_params(cfg, jnp.int32(0))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (cfg.batch_size, cfg.input_hw, cfg.input_hw, 1))
+    y = jax.nn.one_hot(jnp.arange(cfg.batch_size) % cfg.num_classes, cfg.num_classes)
+    lr = jnp.float32(0.1)
+
+    def train_fn(*args):
+        ps = list(args[: len(shapes)])
+        xx, yy, l = args[len(shapes):]
+        new_params, loss, correct = M.train_step(cfg, ps, xx, yy, l)
+        return (*new_params, loss, correct)
+
+    eager = train_fn(*params, x, y, lr)
+    jitted = jax.jit(train_fn)(*params, x, y, lr)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_checked_in_artifacts_if_present():
+    """If `make artifacts` has run, validate the manifests on disk."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(root):
+        return
+    for name in os.listdir(root):
+        meta_path = os.path.join(root, name, "meta.json")
+        if not os.path.exists(meta_path):
+            continue
+        with open(meta_path) as fh:
+            meta = json.load(fh)
+        cfg = M.CONFIGS.get(name)
+        if cfg is None:
+            continue
+        assert meta["param_count"] == cfg.param_count()
+        assert [tuple(p["shape"]) for p in meta["params"]] == [
+            s for _, s in cfg.param_shapes()
+        ]

@@ -1,0 +1,249 @@
+"""Layer-1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/seeds; explicit cases pin the shapes the artifacts
+actually use. This is the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as kconv
+from compile.kernels import matmul as kmat
+from compile.kernels import pool as kpool
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- conv fwd
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5),
+    hw=st.integers(4, 12),
+    c=st.integers(1, 4),
+    co=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_fwd_matches_ref(n, hw, c, co, k, seed):
+    if k > hw:
+        k = 1
+    x = _rand(seed, (n, hw, hw, c))
+    f = _rand(seed + 1, (k, k, c, co))
+    b = _rand(seed + 2, (co,))
+    got = kconv.conv2d_fwd(x, f, b)
+    want = ref.conv2d(x, f) + b
+    _close(got, want)
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 4),
+    block_n=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_fwd_gridded_matches_whole(blocks, block_n, seed):
+    """Gridded (batch-tiled) kernel == single-program kernel (HBM→VMEM split
+    must not change the numbers)."""
+    n = blocks * block_n
+    x = _rand(seed, (n, 8, 8, 2))
+    f = _rand(seed + 1, (3, 3, 2, 4))
+    b = _rand(seed + 2, (4,))
+    _close(kconv.conv2d_fwd(x, f, b, block_n=block_n), kconv.conv2d_fwd(x, f, b))
+
+
+def test_conv2d_fwd_block_must_divide_batch():
+    x = _rand(0, (5, 8, 8, 1))
+    f = _rand(1, (3, 3, 1, 2))
+    b = jnp.zeros((2,))
+    with pytest.raises(ValueError):
+        kconv.conv2d_fwd(x, f, b, block_n=2)
+
+
+def test_conv2d_identity_kernel():
+    """1x1 identity filter reproduces the input exactly."""
+    x = _rand(3, (2, 6, 6, 1))
+    f = jnp.ones((1, 1, 1, 1), jnp.float32)
+    b = jnp.zeros((1,))
+    _close(kconv.conv2d_fwd(x, f, b), x)
+
+
+# --------------------------------------------------------------- conv grads
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    hw=st.integers(5, 10),
+    c=st.integers(1, 3),
+    co=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_filter_grad_matches_ref(n, hw, c, co, seed):
+    k = 3
+    x = _rand(seed, (n, hw, hw, c))
+    dy = _rand(seed + 1, (n, hw - k + 1, hw - k + 1, co))
+    got = kconv.conv2d_filter_grad(x, dy, k, k)
+    want = ref.conv2d_filter_grad(x, dy, k, k)
+    _close(got, want)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    hw=st.integers(5, 10),
+    c=st.integers(1, 3),
+    co=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_input_grad_matches_ref(n, hw, c, co, seed):
+    k = 3
+    f = _rand(seed, (k, k, c, co))
+    dy = _rand(seed + 1, (n, hw - k + 1, hw - k + 1, co))
+    got = kconv.conv2d_input_grad(dy, f, hw, hw)
+    want = ref.conv2d_input_grad(dy, f, hw, hw)
+    _close(got, want)
+
+
+def test_conv2d_custom_vjp_matches_jax_autodiff():
+    """grad through the Pallas custom_vjp == grad through lax.conv."""
+    x = _rand(7, (3, 8, 8, 2))
+    f = _rand(8, (3, 3, 2, 4))
+    b = _rand(9, (4,))
+
+    def loss_pallas(x, f, b):
+        return jnp.sum(jnp.tanh(kconv.conv2d(x, f, b)))
+
+    def loss_ref(x, f, b):
+        return jnp.sum(jnp.tanh(ref.conv2d(x, f) + b))
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, f, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, f, b)
+    for a, b_ in zip(g1, g2):
+        _close(a, b_)
+
+
+# ------------------------------------------------------------------ pooling
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    hw=st.sampled_from([4, 6, 8, 12]),
+    c=st.integers(1, 5),
+    window=st.sampled_from([2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mean_pool_matches_ref(n, hw, c, window, seed):
+    x = _rand(seed, (n, hw, hw, c))
+    _close(kpool.mean_pool_fwd(x, window), ref.mean_pool(x, window))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 4),
+    hw=st.sampled_from([4, 6, 8]),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_max_pool_matches_ref(n, hw, c, seed):
+    x = _rand(seed, (n, hw, hw, c))
+    _close(kpool.max_pool_fwd(x, 2), ref.max_pool(x, 2))
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([2, 3, 4]),
+    c=st.integers(1, 3),
+    window=st.sampled_from([2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mean_pool_grad_matches_ref(n, hw, c, window, seed):
+    dy = _rand(seed, (n, hw, hw, c))
+    _close(kpool.mean_pool_grad(dy, window), ref.mean_pool_grad(dy, window))
+
+
+def test_mean_pool_custom_vjp_matches_autodiff():
+    x = _rand(11, (2, 8, 8, 3))
+
+    def loss_pallas(x):
+        return jnp.sum(kpool.mean_pool(x, 2) ** 2)
+
+    def loss_ref(x):
+        return jnp.sum(ref.mean_pool(x, 2) ** 2)
+
+    _close(jax.grad(loss_pallas)(x), jax.grad(loss_ref)(x))
+
+
+def test_mean_pool_preserves_constant():
+    """Pooling a constant field is the identity on values."""
+    x = jnp.full((1, 4, 4, 2), 3.5, jnp.float32)
+    out = kpool.mean_pool_fwd(x, 2)
+    _close(out, jnp.full((1, 2, 2, 2), 3.5, jnp.float32))
+
+
+# ------------------------------------------------------------------- matmul
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 32),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    _close(kmat.dense(x, w, b), ref.dense(x, w, b))
+
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(1, 4),
+    block_m=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_gridded_matches_whole(blocks, block_m, seed):
+    m = blocks * block_m
+    x = _rand(seed, (m, 12))
+    w = _rand(seed + 1, (12, 7))
+    b = _rand(seed + 2, (7,))
+    _close(kmat.dense(x, w, b, block_m=block_m), kmat.dense(x, w, b))
+
+
+def test_fc_custom_vjp_matches_autodiff():
+    x = _rand(21, (4, 10))
+    w = _rand(22, (10, 6))
+    b = _rand(23, (6,))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(jnp.sin(kmat.fc(x, w, b)))
+
+    def loss_ref(x, w, b):
+        return jnp.sum(jnp.sin(ref.dense(x, w, b)))
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(g1, g2):
+        _close(a, b_)
+
+
+# --------------------------------------------------------- perf-model sanity
+def test_vmem_estimate_monotone_in_block():
+    a = kconv.vmem_bytes_fwd(1, 16, 16, 8, 3, 3, 8)
+    b = kconv.vmem_bytes_fwd(8, 16, 16, 8, 3, 3, 8)
+    assert b > a
+
+
+def test_mxu_flops_formula():
+    # 1 batch, 3x3 kernel over 8x8 (6x6 out), C=2, O=4:
+    # 9 matmuls of (36x2)@(2x4) → 9 * 2*36*2*4 FLOPs
+    assert kconv.mxu_flops_fwd(1, 8, 8, 2, 3, 3, 4) == 9 * 2 * 36 * 2 * 4

@@ -1,0 +1,157 @@
+"""Layer-2 correctness: model shapes, gradients, training dynamics, Table-2
+configurations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+SETTINGS = dict(deadline=None, max_examples=10)
+
+
+def _batch(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels))
+    labels = jax.random.randint(ky, (cfg.batch_size,), 0, cfg.num_classes)
+    y = jax.nn.one_hot(labels, cfg.num_classes)
+    return x, y
+
+
+def test_param_shapes_order_and_count():
+    cfg = M.CONFIGS["e2e"]
+    shapes = cfg.param_shapes()
+    # conv params first, in layer order, weight-then-bias
+    assert shapes[0][0] == "conv0.filter"
+    assert shapes[1][0] == "conv0.bias"
+    assert shapes[-2][0] == "out.weight"
+    assert shapes[-1][0] == "out.bias"
+    assert len(shapes) == 2 * (cfg.conv_layers + cfg.fc_layers + 1)
+    assert cfg.param_count() == sum(int(np.prod(s)) for _, s in shapes)
+
+
+def test_init_params_match_manifest():
+    cfg = M.CONFIGS["quickstart"]
+    params = M.init_params(cfg, jnp.int32(0))
+    shapes = cfg.param_shapes()
+    assert len(params) == len(shapes)
+    for p, (_, s) in zip(params, shapes):
+        assert p.shape == s
+        assert p.dtype == jnp.float32
+
+
+def test_init_biases_zero_weights_scaled():
+    cfg = M.CONFIGS["quickstart"]
+    params = M.init_params(cfg, jnp.int32(7))
+    for p, (name, _) in zip(params, cfg.param_shapes()):
+        if name.endswith(".bias"):
+            assert float(jnp.abs(p).max()) == 0.0
+        else:
+            assert float(jnp.abs(p).max()) > 0.0
+
+
+def test_init_deterministic_in_seed():
+    cfg = M.CONFIGS["quickstart"]
+    a = M.init_params(cfg, jnp.int32(3))
+    b = M.init_params(cfg, jnp.int32(3))
+    c = M.init_params(cfg, jnp.int32(4))
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(not np.array_equal(np.asarray(pa), np.asarray(pc)) for pa, pc in zip(a, c))
+
+
+def test_forward_shapes():
+    cfg = M.CONFIGS["quickstart"]
+    params = M.init_params(cfg, jnp.int32(0))
+    x, _ = _batch(cfg)
+    logits = M.forward(cfg, params, x)
+    assert logits.shape == (cfg.batch_size, cfg.num_classes)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_loss_nonnegative_and_bounded(seed):
+    cfg = M.CONFIGS["quickstart"]
+    params = M.init_params(cfg, jnp.int32(seed % 100))
+    x, y = _batch(cfg, seed)
+    loss, correct = M.eval_step(cfg, params, x, y)
+    # Square error of softmax vs one-hot is in [0, 2] per sample (Eq. 16).
+    assert 0.0 <= float(loss) <= 2.0
+    assert 0.0 <= float(correct) <= cfg.batch_size
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    """Repeated SGD on one batch must overfit it (Eq. 23 sanity)."""
+    cfg = M.CONFIGS["quickstart"]
+    params = M.init_params(cfg, jnp.int32(0))
+    x, y = _batch(cfg, seed=1)
+    first_loss = None
+    loss = None
+    for _ in range(30):
+        params, loss, _ = M.train_step(cfg, params, x, y, jnp.float32(0.5))
+        if first_loss is None:
+            first_loss = float(loss)
+    assert float(loss) < 0.7 * first_loss
+
+
+def test_train_step_grad_matches_finite_differences():
+    cfg = M.CNNConfig(
+        name="fd", input_hw=6, conv_layers=1, filters=2, fc_layers=1,
+        fc_neurons=8, num_classes=3, batch_size=2,
+    )
+    params = M.init_params(cfg, jnp.int32(5))
+    x, y = _batch(cfg, seed=2)
+
+    def loss_of(ps):
+        loss, _ = M.eval_step(cfg, ps, x, y)
+        return float(loss)
+
+    grads = jax.grad(lambda ps: M.eval_step(cfg, ps, x, y)[0])(params)
+    # Check a handful of coordinates of the first conv filter by central FD.
+    p0 = np.asarray(params[0]).copy()
+    g0 = np.asarray(grads[0])
+    eps = 1e-3
+    for idx in [(0, 0, 0, 0), (1, 1, 0, 1), (2, 2, 0, 0)]:
+        pp = [p.copy() for p in params]
+        pm = [p.copy() for p in params]
+        ap = p0.copy()
+        ap[idx] += eps
+        am = p0.copy()
+        am[idx] -= eps
+        pp[0] = jnp.asarray(ap)
+        pm[0] = jnp.asarray(am)
+        fd = (loss_of(pp) - loss_of(pm)) / (2 * eps)
+        assert abs(fd - g0[idx]) < 5e-3, f"FD mismatch at {idx}: {fd} vs {g0[idx]}"
+
+
+def test_eval_step_does_not_modify_params():
+    cfg = M.CONFIGS["quickstart"]
+    params = M.init_params(cfg, jnp.int32(0))
+    before = [np.asarray(p).copy() for p in params]
+    x, y = _batch(cfg)
+    M.eval_step(cfg, params, x, y)
+    for b, p in zip(before, params):
+        np.testing.assert_array_equal(b, np.asarray(p))
+
+
+@pytest.mark.parametrize("case", range(1, 8))
+def test_table2_configs(case):
+    """Table 2 cases 1–7 are well-formed and monotonically larger."""
+    cfg = M.table2_config(case)
+    assert cfg.conv_layers in (2, 4, 6, 8, 10)
+    assert cfg.param_shapes()  # constructible
+    if case > 1:
+        assert M.table2_config(case).param_count() >= M.table2_config(case - 1).param_count()
+
+
+def test_table2_case1_matches_paper_row():
+    cfg = M.table2_config(1)
+    assert (cfg.conv_layers, cfg.filters, cfg.fc_layers, cfg.fc_neurons) == (2, 4, 3, 500)
+
+
+def test_table2_case7_matches_paper_row():
+    cfg = M.table2_config(7)
+    assert (cfg.conv_layers, cfg.filters, cfg.fc_layers, cfg.fc_neurons) == (10, 12, 7, 2000)

@@ -1,0 +1,55 @@
+//! Inner-layer benchmarks: conv task decomposition + Algorithm-4.2
+//! scheduling vs sequential execution (paper Fig. 14d micro-scale), task
+//! granularity ablation, and DAG machinery overheads.
+
+use bptcnn::inner::{conv2d_parallel, conv_task_dag, execute_dag, TaskDag};
+use bptcnn::nn::ops::{self, ConvDims};
+use bptcnn::util::bench::Bench;
+use bptcnn::util::rng::Xoshiro256;
+use bptcnn::util::threadpool::ThreadPool;
+
+fn main() {
+    let mut b = Bench::from_env("inner");
+    let d = ConvDims { n: 8, h: 32, w: 32, c: 8, k: 3, co: 16 };
+    let mut rng = Xoshiro256::new(1);
+    let x: Vec<f32> = (0..d.x_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let f: Vec<f32> = (0..d.f_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let bias = vec![0.0f32; d.co];
+    let flops = (d.y_len() * d.k * d.k * d.c * 2) as f64;
+
+    // Sequential conv (the inner-layer baseline).
+    let mut out = vec![0.0f32; d.y_len()];
+    b.bench_with_throughput("conv_fwd/sequential", flops, || {
+        ops::conv2d_same_fwd(&d, &x, &f, &bias, &mut out);
+    });
+
+    // Task-parallel conv at several granularities (Alg. 4.1 + 4.2).
+    for threads in [1, 2, 4] {
+        let pool = ThreadPool::new(threads);
+        for rows in [1usize, 4, 16] {
+            let mut out = vec![0.0f32; d.y_len()];
+            b.bench_with_throughput(
+                &format!("conv_fwd/tasks_{threads}t_{rows}rows"),
+                flops,
+                || {
+                    conv2d_parallel(&pool, &d, &x, &f, &bias, &mut out, rows);
+                },
+            );
+        }
+    }
+
+    // DAG construction + priority scheduling overhead (empty tasks).
+    b.bench("dag/build_1k_tasks", || {
+        let _ = conv_task_dag(&ConvDims { n: 32, h: 32, w: 32, c: 4, k: 3, co: 8 }, 1);
+    });
+    let pool = ThreadPool::new(4);
+    b.bench("dag/schedule_512_noop_tasks", || {
+        let mut dag: TaskDag<()> = TaskDag::new();
+        for _ in 0..512 {
+            dag.add("noop", 1.0, &[], ());
+        }
+        execute_dag(&pool, dag, |_| {});
+    });
+
+    b.finish();
+}

@@ -1,0 +1,48 @@
+//! Outer-layer benchmarks: parameter-server update throughput (SGWU Eq. 7
+//! vs AGWU Eq. 10) across the paper's Table-2 weight-set sizes, IDPA
+//! scheduling cost, and weight-set algebra primitives.
+
+use bptcnn::config::NetworkConfig;
+use bptcnn::nn::Network;
+use bptcnn::outer::{IdpaPartitioner, ParamServer};
+use bptcnn::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("outer");
+
+    for case in [1usize, 4, 7] {
+        let cfg = NetworkConfig::table2_case(case);
+        let bytes = cfg.weight_bytes() as f64;
+        let init = Network::init(&cfg, 1).weights;
+        let local = Network::init(&cfg, 2).weights;
+
+        // SGWU round with m = 4 locals (Eq. 7).
+        let locals: Vec<_> = (0..4).map(|_| (local.clone(), 0.8)).collect();
+        let mut ps = ParamServer::new(init.clone(), 4);
+        b.bench_with_throughput(&format!("sgwu/case{case}_{}KB", cfg.weight_bytes() / 1024), bytes, || {
+            ps.update_sgwu(&locals);
+        });
+
+        // AGWU single submission (Eq. 10, incl. increment + γ).
+        let mut ps = ParamServer::new(init.clone(), 4);
+        let (_, base) = ps.fetch(0);
+        b.bench_with_throughput(&format!("agwu/case{case}_{}KB", cfg.weight_bytes() / 1024), bytes, || {
+            ps.update_agwu(0, &local, base.min(ps.version()), 0.8);
+        });
+
+        // Weight-set algebra hot path.
+        let mut acc = init.clone();
+        b.bench_with_throughput(&format!("weightset_axpy/case{case}"), bytes, || {
+            acc.axpy(0.001, &local);
+        });
+    }
+
+    // IDPA schedule construction at paper scale.
+    b.bench("idpa/30nodes_10batches_600k", || {
+        let freqs: Vec<f64> = (0..30).map(|j| 1.6 + 0.05 * j as f64).collect();
+        let mut p = IdpaPartitioner::new(600_000, 10, &freqs);
+        p.run_with_oracle(|j| 1.0 / (1.0 + j as f64));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,68 @@
+//! Runtime benchmarks: XLA executable invocation latency and host↔device
+//! conversion costs — the L3↔artifact boundary that the AGWU hot path pays
+//! on every local iteration. Skips gracefully when artifacts are missing.
+
+use std::sync::Arc;
+
+use bptcnn::data::Dataset;
+use bptcnn::nn::Network;
+use bptcnn::runtime::{find_model_dir, XlaService};
+use bptcnn::tensor::Tensor;
+use bptcnn::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("runtime");
+
+    let Some(dir) = find_model_dir("quickstart") else {
+        println!("runtime benches skipped: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let service = XlaService::start(&dir).expect("service");
+    let h = service.handle();
+    let cfg = h.manifest.config.clone();
+    let ds = Arc::new(Dataset::synthetic(&cfg, 128, 0.2, 1));
+    let weights = h.init_weights(1).unwrap();
+    let (xv, yv, _) = ds.batch(0, cfg.batch_size);
+    let x = Tensor::from_vec(&[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels], xv.clone());
+    let y = Tensor::from_vec(&[cfg.batch_size, cfg.num_classes], yv.clone());
+
+    // Full train_step invocation (weights round-trip through literals).
+    let batch_samples = cfg.batch_size as f64;
+    let mut w = weights.clone();
+    b.bench_with_throughput("xla/train_step_quickstart", batch_samples, || {
+        let (nw, _, _) = h.train_step(w.clone(), x.clone(), y.clone(), 0.1).unwrap();
+        w = nw;
+    });
+    b.bench_with_throughput("xla/eval_step_quickstart", batch_samples, || {
+        h.eval_step(weights.clone(), x.clone(), y.clone()).unwrap();
+    });
+
+    // Native backend equivalents for the same step (the backend ablation).
+    let mut net = Network::with_weights(&cfg, weights.clone());
+    b.bench_with_throughput("native/train_step_quickstart", batch_samples, || {
+        net.train_batch(&xv, &yv, cfg.batch_size, 0.1);
+    });
+    let net_eval = Network::with_weights(&cfg, weights.clone());
+    b.bench_with_throughput("native/eval_step_quickstart", batch_samples, || {
+        net_eval.eval_batch(&xv, &yv, cfg.batch_size);
+    });
+
+    // e2e model, if built.
+    if let Some(dir) = find_model_dir("e2e") {
+        let service = XlaService::start(&dir).expect("service");
+        let h = service.handle();
+        let cfg = h.manifest.config.clone();
+        let ds = Dataset::synthetic(&cfg, 64, 0.2, 2);
+        let weights = h.init_weights(1).unwrap();
+        let (xv, yv, _) = ds.batch(0, cfg.batch_size);
+        let x = Tensor::from_vec(&[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels], xv);
+        let y = Tensor::from_vec(&[cfg.batch_size, cfg.num_classes], yv);
+        let mut w = weights.clone();
+        b.bench_with_throughput("xla/train_step_e2e", cfg.batch_size as f64, || {
+            let (nw, _, _) = h.train_step(w.clone(), x.clone(), y.clone(), 0.1).unwrap();
+            w = nw;
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,49 @@
+//! Simulator benchmarks: DES engine event throughput and full paper-figure
+//! sweep timings (the cost of regenerating Fig. 12 / Fig. 14 / Fig. 15).
+
+use bptcnn::config::{ClusterConfig, PartitionStrategy, UpdateStrategy};
+use bptcnn::sim::{simulate, simulate_algorithm, Algorithm, EventQueue, SimConfig};
+use bptcnn::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("sim");
+
+    // Raw event-queue throughput.
+    b.bench_with_throughput("event_queue/push_pop_10k", 10_000.0, || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..10_000u32 {
+            q.schedule_at((i as u64).wrapping_mul(0x9E37_79B9) % 1_000_000, i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    // One full AGWU simulation at paper scale (30 nodes × 100 iterations —
+    // 3000 events + allocation).
+    let cfg = SimConfig {
+        cluster: ClusterConfig::heterogeneous(30, 7),
+        samples: 600_000,
+        iterations: 100,
+        ..SimConfig::paper_default()
+    };
+    let events = (30 * 100) as f64;
+    b.bench_with_throughput("simulate/agwu_idpa_30n_100k", events, || {
+        simulate(&cfg);
+    });
+    let sgwu_cfg = SimConfig {
+        update: UpdateStrategy::Sgwu,
+        partition: PartitionStrategy::Udpa,
+        ..cfg.clone()
+    };
+    b.bench_with_throughput("simulate/sgwu_udpa_30n_100k", events, || {
+        simulate(&sgwu_cfg);
+    });
+
+    // Baseline models.
+    for alg in [Algorithm::TensorflowLike, Algorithm::DistBeliefLike, Algorithm::DcCnnLike] {
+        b.bench(&format!("simulate/{}", alg.name().to_lowercase()), || {
+            simulate_algorithm(alg, &cfg);
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,412 @@
+//! Typed configuration for networks, clusters, training and simulation.
+//!
+//! `NetworkConfig` mirrors `python/compile/model.py::CNNConfig` — the Rust
+//! side derives the same parameter manifest so the native backend, the
+//! simulator's cost model and the XLA artifacts all agree on the weight-set
+//! layout. Configs round-trip through the hand-rolled JSON module.
+
+use crate::util::json::Json;
+
+/// CNN network-scale configuration (paper Table 2 vocabulary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkConfig {
+    pub name: String,
+    pub input_hw: usize,
+    pub in_channels: usize,
+    pub conv_layers: usize,
+    pub filters: usize,
+    pub kernel_hw: usize,
+    pub fc_layers: usize,
+    pub fc_neurons: usize,
+    pub num_classes: usize,
+    pub batch_size: usize,
+    pub pool_window: usize,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        // Mirrors python CONFIGS["e2e"].
+        Self {
+            name: "e2e".into(),
+            input_hw: 16,
+            in_channels: 1,
+            conv_layers: 2,
+            filters: 8,
+            kernel_hw: 3,
+            fc_layers: 2,
+            fc_neurons: 64,
+            num_classes: 10,
+            batch_size: 32,
+            pool_window: 2,
+        }
+    }
+}
+
+impl NetworkConfig {
+    /// Mirrors python CONFIGS["quickstart"].
+    pub fn quickstart() -> Self {
+        Self {
+            name: "quickstart".into(),
+            input_hw: 8,
+            conv_layers: 1,
+            filters: 4,
+            fc_layers: 1,
+            fc_neurons: 32,
+            batch_size: 8,
+            ..Self::default()
+        }
+    }
+
+    /// Paper Table 2 network-scale cases 1–7 (Fig. 14a sweep).
+    pub fn table2_case(case: usize) -> Self {
+        assert!((1..=7).contains(&case), "Table 2 has cases 1–7");
+        let layers_conv = [2, 4, 6, 8, 8, 10, 10];
+        let filters_conv = [4, 4, 8, 8, 10, 10, 12];
+        let layers_fc = [3, 3, 5, 5, 7, 7, 7];
+        let neurons_fc = [500, 1000, 1500, 1500, 2000, 2000, 2000];
+        let i = case - 1;
+        Self {
+            name: format!("case{case}"),
+            input_hw: 16,
+            conv_layers: layers_conv[i],
+            filters: filters_conv[i],
+            fc_layers: layers_fc[i],
+            fc_neurons: neurons_fc[i],
+            ..Self::default()
+        }
+    }
+
+    /// Ordered parameter manifest — must match
+    /// `python/compile/model.py::CNNConfig.param_shapes` exactly.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut shapes = Vec::new();
+        let mut c = self.in_channels;
+        let k = self.kernel_hw;
+        for i in 0..self.conv_layers {
+            shapes.push((format!("conv{i}.filter"), vec![k, k, c, self.filters]));
+            shapes.push((format!("conv{i}.bias"), vec![self.filters]));
+            c = self.filters;
+        }
+        let hw = self.input_hw / self.pool_window;
+        let mut fan_in = hw * hw * c;
+        for i in 0..self.fc_layers {
+            shapes.push((format!("fc{i}.weight"), vec![fan_in, self.fc_neurons]));
+            shapes.push((format!("fc{i}.bias"), vec![self.fc_neurons]));
+            fan_in = self.fc_neurons;
+        }
+        shapes.push(("out.weight".into(), vec![fan_in, self.num_classes]));
+        shapes.push(("out.bias".into(), vec![self.num_classes]));
+        shapes
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Weight-set size in bytes (f32) — `c_w` of Eq. 11.
+    pub fn weight_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Per-sample forward+backward FLOP estimate, the simulator's cost-model
+    /// input. Convolutions dominate (the paper measures >85% of time in conv
+    /// layers, §4.1.1); backward ≈ 2× forward.
+    pub fn flops_per_sample(&self) -> f64 {
+        let mut flops = 0.0;
+        let hw = self.input_hw as f64;
+        let k = self.kernel_hw as f64;
+        let mut c = self.in_channels as f64;
+        for _ in 0..self.conv_layers {
+            // SAME conv: H·W output positions × k² × C_in × C_out MACs.
+            flops += hw * hw * k * k * c * self.filters as f64 * 2.0;
+            c = self.filters as f64;
+        }
+        let hwp = (self.input_hw / self.pool_window) as f64;
+        let mut fan_in = hwp * hwp * c;
+        for _ in 0..self.fc_layers {
+            flops += fan_in * self.fc_neurons as f64 * 2.0;
+            fan_in = self.fc_neurons as f64;
+        }
+        flops += fan_in * self.num_classes as f64 * 2.0;
+        flops * 3.0 // fwd + ~2× bwd
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.clone())),
+            ("input_hw", Json::from(self.input_hw)),
+            ("in_channels", Json::from(self.in_channels)),
+            ("conv_layers", Json::from(self.conv_layers)),
+            ("filters", Json::from(self.filters)),
+            ("kernel_hw", Json::from(self.kernel_hw)),
+            ("fc_layers", Json::from(self.fc_layers)),
+            ("fc_neurons", Json::from(self.fc_neurons)),
+            ("num_classes", Json::from(self.num_classes)),
+            ("batch_size", Json::from(self.batch_size)),
+            ("pool_window", Json::from(self.pool_window)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = Self::default();
+        let get = |key: &str, dv: usize| j.get(key).as_usize().unwrap_or(dv);
+        Ok(Self {
+            name: j.get("name").as_str().unwrap_or("unnamed").to_string(),
+            input_hw: get("input_hw", d.input_hw),
+            in_channels: get("in_channels", d.in_channels),
+            conv_layers: get("conv_layers", d.conv_layers),
+            filters: get("filters", d.filters),
+            kernel_hw: get("kernel_hw", d.kernel_hw),
+            fc_layers: get("fc_layers", d.fc_layers),
+            fc_neurons: get("fc_neurons", d.fc_neurons),
+            num_classes: get("num_classes", d.num_classes),
+            batch_size: get("batch_size", d.batch_size),
+            pool_window: get("pool_window", d.pool_window),
+        })
+    }
+}
+
+/// Global weight-update strategy (§3.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateStrategy {
+    /// Synchronous: Eq. 7 accuracy-weighted averaging at epoch barriers.
+    Sgwu,
+    /// Asynchronous: Eqs. 9–10 with staleness attenuation γ.
+    Agwu,
+}
+
+impl UpdateStrategy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgwu" | "sync" => Ok(Self::Sgwu),
+            "agwu" | "async" => Ok(Self::Agwu),
+            other => anyhow::bail!("unknown update strategy '{other}' (want sgwu|agwu)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sgwu => "SGWU",
+            Self::Agwu => "AGWU",
+        }
+    }
+}
+
+/// Data partitioning strategy (§3.3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Incremental heterogeneity-aware partitioning (Algorithm 3.1).
+    Idpa,
+    /// Uniform baseline from §5.3.3.
+    Udpa,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "idpa" => Ok(Self::Idpa),
+            "udpa" | "uniform" => Ok(Self::Udpa),
+            other => anyhow::bail!("unknown partition strategy '{other}' (want idpa|udpa)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Idpa => "IDPA",
+            Self::Udpa => "UDPA",
+        }
+    }
+}
+
+/// One computing node's capability profile (§3.3.1: heterogeneous cluster).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeProfile {
+    /// Nominal CPU frequency in GHz — μ_j of Eq. 2.
+    pub freq_ghz: f64,
+    /// Cores available for inner-layer threads.
+    pub cores: usize,
+    /// Multiplicative load factor on actual speed (models "other employers'
+    /// applications", §3.3.1); 1.0 = unloaded.
+    pub background_load: f64,
+}
+
+impl NodeProfile {
+    pub fn uniform(freq_ghz: f64, cores: usize) -> Self {
+        Self { freq_ghz, cores, background_load: 1.0 }
+    }
+}
+
+/// Cluster description for both the in-process trainer and the simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeProfile>,
+    /// Link bandwidth node↔parameter-server, bytes/s (Fig. 15a model).
+    pub bandwidth_bytes_per_s: f64,
+    /// Per-message latency, seconds.
+    pub link_latency_s: f64,
+}
+
+impl ClusterConfig {
+    /// A heterogeneous cluster like the paper's testbed: frequencies spread
+    /// around 2.3 GHz (Nehalem-EX era), 8 cores each, varied load.
+    pub fn heterogeneous(m: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        let nodes = (0..m)
+            .map(|_| NodeProfile {
+                freq_ghz: rng.range_f64(1.6, 3.2),
+                cores: 8, // Nehalem-EX: 8 cores/chip (paper §5.1)
+                background_load: rng.range_f64(0.6, 1.0),
+            })
+            .collect();
+        Self {
+            nodes,
+            bandwidth_bytes_per_s: 1.0e9 / 8.0, // 1 Gb/s
+            link_latency_s: 200e-6,
+        }
+    }
+
+    /// Homogeneous cluster (for UDPA-favourable control runs).
+    pub fn homogeneous(m: usize) -> Self {
+        Self {
+            nodes: (0..m).map(|_| NodeProfile::uniform(2.3, 8)).collect(),
+            bandwidth_bytes_per_s: 1.0e9 / 8.0,
+            link_latency_s: 200e-6,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// μ_j / Σ μ_j' shares of Eq. 2.
+    pub fn frequency_shares(&self) -> Vec<f64> {
+        let total: f64 = self.nodes.iter().map(|n| n.freq_ghz).sum();
+        self.nodes.iter().map(|n| n.freq_ghz / total).collect()
+    }
+}
+
+/// End-to-end training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub network: NetworkConfig,
+    pub update: UpdateStrategy,
+    pub partition: PartitionStrategy,
+    /// N: total training samples.
+    pub total_samples: usize,
+    /// K: training iterations (epochs of local iteration training).
+    pub iterations: usize,
+    /// A: number of IDPA batches (A < K).
+    pub idpa_batches: usize,
+    pub learning_rate: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            network: NetworkConfig::default(),
+            update: UpdateStrategy::Agwu,
+            partition: PartitionStrategy::Idpa,
+            total_samples: 2048,
+            iterations: 20,
+            idpa_batches: 4,
+            learning_rate: 0.05,
+            seed: 42,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_manifest_matches_python_e2e() {
+        // python: CONFIGS["e2e"].param_count() == 38306 (verified by pytest
+        // + the artifact manifest).
+        assert_eq!(NetworkConfig::default().param_count(), 38306);
+    }
+
+    #[test]
+    fn param_manifest_matches_python_quickstart() {
+        // python: CONFIGS["quickstart"].param_count() == 2450.
+        assert_eq!(NetworkConfig::quickstart().param_count(), 2450);
+    }
+
+    #[test]
+    fn param_shape_order() {
+        let shapes = NetworkConfig::quickstart().param_shapes();
+        assert_eq!(shapes[0].0, "conv0.filter");
+        assert_eq!(shapes[0].1, vec![3, 3, 1, 4]);
+        assert_eq!(shapes.last().unwrap().0, "out.bias");
+    }
+
+    #[test]
+    fn table2_rows_match_paper() {
+        let c1 = NetworkConfig::table2_case(1);
+        assert_eq!((c1.conv_layers, c1.filters, c1.fc_layers, c1.fc_neurons), (2, 4, 3, 500));
+        let c7 = NetworkConfig::table2_case(7);
+        assert_eq!((c7.conv_layers, c7.filters, c7.fc_layers, c7.fc_neurons), (10, 12, 7, 2000));
+    }
+
+    #[test]
+    fn table2_cases_monotone_in_size() {
+        let mut prev = 0;
+        for case in 1..=7 {
+            let count = NetworkConfig::table2_case(case).param_count();
+            assert!(count >= prev, "case {case} shrank: {count} < {prev}");
+            prev = count;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Table 2")]
+    fn table2_case_bounds() {
+        NetworkConfig::table2_case(8);
+    }
+
+    #[test]
+    fn flops_grow_with_network() {
+        let small = NetworkConfig::table2_case(1).flops_per_sample();
+        let large = NetworkConfig::table2_case(7).flops_per_sample();
+        assert!(large > small * 2.0);
+    }
+
+    #[test]
+    fn network_json_roundtrip() {
+        let cfg = NetworkConfig::table2_case(3);
+        let j = cfg.to_json();
+        let back = NetworkConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn strategies_parse() {
+        assert_eq!(UpdateStrategy::parse("agwu").unwrap(), UpdateStrategy::Agwu);
+        assert_eq!(UpdateStrategy::parse("SGWU").unwrap(), UpdateStrategy::Sgwu);
+        assert!(UpdateStrategy::parse("x").is_err());
+        assert_eq!(PartitionStrategy::parse("idpa").unwrap(), PartitionStrategy::Idpa);
+        assert_eq!(PartitionStrategy::parse("uniform").unwrap(), PartitionStrategy::Udpa);
+    }
+
+    #[test]
+    fn heterogeneous_cluster_varies() {
+        let c = ClusterConfig::heterogeneous(10, 1);
+        assert_eq!(c.size(), 10);
+        let freqs: Vec<f64> = c.nodes.iter().map(|n| n.freq_ghz).collect();
+        let spread = crate::util::stats::max(&freqs) - crate::util::stats::min(&freqs);
+        assert!(spread > 0.1, "expected heterogeneity, spread={spread}");
+        let shares = c.frequency_shares();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_cluster_deterministic_in_seed() {
+        let a = ClusterConfig::heterogeneous(5, 7);
+        let b = ClusterConfig::heterogeneous(5, 7);
+        assert_eq!(a, b);
+    }
+}

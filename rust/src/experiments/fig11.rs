@@ -1,0 +1,250 @@
+//! Fig. 11 — accuracy & AUC vs training epochs for the comparison
+//! algorithms (real training on the in-process cluster, native backend).
+//!
+//! Paper result: BPT-CNN reaches the highest average accuracy (0.744 vs
+//! 0.721 TF / 0.722 DisBelief / 0.639 DC-CNN) and the highest AUC; the
+//! expected *shape* here is: AGWU+IDPA ≥ sync-uniform ≈ plain-async >
+//! single-node, with BPT-CNN's curve the most stable.
+
+use std::sync::Arc;
+
+use crate::config::{ClusterConfig, NetworkConfig, PartitionStrategy, TrainConfig, UpdateStrategy};
+use crate::data::Dataset;
+use crate::metrics::{ascii_chart, Table};
+use crate::nn::Network;
+use crate::outer::cluster::{run_async, run_sgwu, AsyncMode};
+use crate::outer::trainer::{build_schedule, slowdown_factors};
+use crate::outer::worker::{LocalTrainer, NativeTrainer};
+use crate::util::stats;
+
+/// The four comparison strategies realized as real update rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// BPT-CNN: AGWU (Eq. 10) + IDPA.
+    BptCnn,
+    /// tensorflow-like: synchronous uniform data parallelism.
+    TensorflowLike,
+    /// distbelief-like: plain async (no γ, no accuracy weighting).
+    DistBeliefLike,
+    /// dccnn-like: single-node training.
+    DcCnnLike,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::BptCnn => "BPT-CNN",
+            Strategy::TensorflowLike => "Tensorflow",
+            Strategy::DistBeliefLike => "DisBelief",
+            Strategy::DcCnnLike => "DC-CNN",
+        }
+    }
+
+    pub fn all() -> [Strategy; 4] {
+        [
+            Strategy::BptCnn,
+            Strategy::TensorflowLike,
+            Strategy::DistBeliefLike,
+            Strategy::DcCnnLike,
+        ]
+    }
+}
+
+/// Training-noise level for the Fig. 11 / Table 1 accuracy studies.
+pub const NOISE: f32 = 1.4;
+
+/// Accuracy curve of one strategy: (epoch-equivalent, accuracy) points plus
+/// the wall-clock view (seconds, accuracy).
+pub struct StrategyCurve {
+    pub strategy: Strategy,
+    pub points: Vec<(f64, f64)>,
+    pub time_points: Vec<(f64, f64)>,
+    pub final_accuracy: f64,
+    pub auc: f64,
+}
+
+/// First wall-clock second at which the strategy reached `threshold`.
+pub fn time_to_accuracy(curve: &StrategyCurve, threshold: f64) -> Option<f64> {
+    curve
+        .time_points
+        .iter()
+        .find(|(_, acc)| *acc >= threshold)
+        .map(|(t, _)| *t)
+}
+
+/// Train one strategy and return its held-out accuracy curve.
+pub fn train_strategy(
+    strategy: Strategy,
+    network: &NetworkConfig,
+    samples: usize,
+    iterations: usize,
+    seed: u64,
+) -> StrategyCurve {
+    let m = match strategy {
+        Strategy::DcCnnLike => 1,
+        _ => 4,
+    };
+    let cluster = match strategy {
+        Strategy::DcCnnLike => ClusterConfig::homogeneous(1),
+        _ => ClusterConfig::heterogeneous(m, seed ^ 0x5EED),
+    };
+    let tc = TrainConfig {
+        network: network.clone(),
+        update: UpdateStrategy::Agwu,
+        partition: match strategy {
+            Strategy::BptCnn => PartitionStrategy::Idpa,
+            _ => PartitionStrategy::Udpa,
+        },
+        total_samples: samples,
+        iterations,
+        idpa_batches: (iterations / 2).clamp(1, 4),
+        learning_rate: 0.25,
+        seed,
+    };
+    // Heavy pixel noise: the regime where per-node overfitting hurts and
+    // the global-averaging robustness the paper credits BPT-CNN with
+    // (§5.2 "narrows the impact of local overfitting") actually matters.
+    let train_ds = Arc::new(Dataset::synthetic(network, samples, NOISE, seed));
+    let eval_ds = Dataset::synthetic_split(network, 256, NOISE, seed, seed ^ 0xEEEE);
+    let (schedule, _, iters) = build_schedule(&tc, &cluster);
+    let slow = slowdown_factors(&cluster);
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..m)
+        .map(|j| {
+            Box::new(
+                NativeTrainer::new(network, Arc::clone(&train_ds), tc.learning_rate)
+                    .with_slowdown(slow[j]),
+            ) as Box<dyn LocalTrainer>
+        })
+        .collect();
+    let init = Network::init(network, seed).weights;
+
+    let cfg2 = network.clone();
+    let eval_hook = move |ws: &crate::tensor::WeightSet| -> (f64, f64) {
+        let net = Network::with_weights(&cfg2, ws.clone());
+        let bsz = cfg2.batch_size;
+        let mut correct = 0usize;
+        let mut loss = 0.0f64;
+        let mut batches = 0usize;
+        let mut seen = 0usize;
+        while seen < eval_ds.len() {
+            let (x, y, _) = eval_ds.batch(seen, bsz);
+            let (l, c) = net.eval_batch(&x, &y, bsz);
+            loss += l as f64;
+            correct += c;
+            seen += bsz;
+            batches += 1;
+        }
+        (loss / batches as f64, correct as f64 / (batches * bsz) as f64)
+    };
+
+    let report = match strategy {
+        Strategy::TensorflowLike => run_sgwu(init, workers, &schedule, iters, Some(&eval_hook)),
+        Strategy::DistBeliefLike => {
+            run_async(init, workers, &schedule, iters, Some(&eval_hook), AsyncMode::Plain)
+        }
+        Strategy::BptCnn | Strategy::DcCnnLike => {
+            run_async(init, workers, &schedule, iters, Some(&eval_hook), AsyncMode::Agwu)
+        }
+    };
+
+    // Normalize versions to epoch-equivalents (m versions per epoch async).
+    let per_epoch = match strategy {
+        Strategy::TensorflowLike => 1.0,
+        _ => m as f64,
+    };
+    let points: Vec<(f64, f64)> = report
+        .versions
+        .iter()
+        .filter_map(|v| v.eval.map(|(_, acc)| (v.version as f64 / per_epoch, acc)))
+        .collect();
+    let time_points: Vec<(f64, f64)> = report
+        .versions
+        .iter()
+        .filter_map(|v| v.eval.map(|(_, acc)| (v.at_s, acc)))
+        .collect();
+    let final_accuracy = points.last().map(|p| p.1).unwrap_or(0.0);
+    let span = points.last().map(|p| p.0).unwrap_or(1.0)
+        - points.first().map(|p| p.0).unwrap_or(0.0);
+    let auc = if span > 0.0 { stats::auc(&points) / span } else { final_accuracy };
+    StrategyCurve { strategy, points, time_points, final_accuracy, auc }
+}
+
+pub fn run(quick: bool) -> String {
+    let network = NetworkConfig::quickstart();
+    let (samples, iterations) = if quick { (384, 6) } else { (1024, 24) };
+    let mut out = String::new();
+    out.push_str("\n# Fig. 11 — accuracy & AUC of the comparison algorithms\n");
+    out.push_str(&format!(
+        "(real training, native backend, {samples} samples, {iterations} iterations)\n"
+    ));
+    let curves: Vec<StrategyCurve> = Strategy::all()
+        .into_iter()
+        .map(|s| train_strategy(s, &network, samples, iterations, 42))
+        .collect();
+
+    let mut table = Table::new(
+        "Fig. 11 summary (paper: BPT-CNN 0.744 acc, AUC +5.9–10.1% over baselines)",
+        &["algorithm", "final acc", "mean acc", "AUC", "t→0.5acc[s]"],
+    );
+    for c in &curves {
+        let mean_acc = stats::mean(&c.points.iter().map(|p| p.1).collect::<Vec<_>>());
+        table.row(&[
+            c.strategy.name().to_string(),
+            format!("{:.3}", c.final_accuracy),
+            format!("{mean_acc:.3}"),
+            format!("{:.3}", c.auc),
+            time_to_accuracy(c, 0.5)
+                .map(|t| format!("{t:.2}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    out.push_str(&table.render());
+    out.push_str(
+        "
+Deviation note: per-EPOCH ordering differs from the paper — the synthetic
+         task is small enough that plain single-node SGD converges in a few epochs,
+         and Eq. 10's Q-weighting (local accuracy ≈ chance at start) damps AGWU's
+         early updates. The paper's equal-resource claim is carried by the wall-
+         clock view below (heterogeneous stragglers + single-node serialization
+         penalize the baselines), and by Figs. 12–13. See EXPERIMENTS.md §Fig11.
+",
+    );
+
+    let series: Vec<(&str, Vec<(f64, f64)>)> = curves
+        .iter()
+        .map(|c| (c.strategy.name(), c.points.clone()))
+        .collect();
+    out.push_str(&ascii_chart(
+        "\nFig. 11(a): held-out accuracy vs epoch",
+        &series,
+        64,
+        16,
+    ));
+    let time_series: Vec<(&str, Vec<(f64, f64)>)> = curves
+        .iter()
+        .map(|c| (c.strategy.name(), c.time_points.clone()))
+        .collect();
+    out.push_str(&ascii_chart(
+        "\nFig. 11(a'): held-out accuracy vs wall-clock seconds (equal resources)",
+        &time_series,
+        64,
+        16,
+    ));
+    print!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategies_learn_and_bptcnn_competitive() {
+        let network = NetworkConfig::quickstart();
+        let bpt = train_strategy(Strategy::BptCnn, &network, 384, 6, 1);
+        let dc = train_strategy(Strategy::DcCnnLike, &network, 384, 6, 1);
+        assert!(bpt.final_accuracy > 0.15, "bpt acc {}", bpt.final_accuracy);
+        assert!(!bpt.points.is_empty() && !dc.points.is_empty());
+        assert!(bpt.auc > 0.0 && bpt.auc <= 1.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig. 12 — total execution time of the comparison algorithms
+//! (a) vs data size (100 k → 700 k samples, 30-node cluster) and
+//! (b) vs cluster scale (5 → 35 nodes, 600 k samples); 100 iterations.
+//!
+//! Paper anchors: BPT-CNN 62.77 s → 307.35 s over (a) while DC-CNN blows up
+//! 91.21 s → 929.74 s; over (b) BPT-CNN and TF keep improving with nodes,
+//! DC-CNN does not.
+
+use crate::config::ClusterConfig;
+use crate::metrics::Table;
+use crate::sim::{simulate_algorithm, Algorithm, SimConfig};
+
+pub fn data_size_sweep(quick: bool) -> Table {
+    let sizes: Vec<usize> = if quick {
+        vec![100_000, 400_000, 700_000]
+    } else {
+        vec![100_000, 200_000, 300_000, 400_000, 500_000, 600_000, 700_000]
+    };
+    let mut table = Table::new(
+        "Fig. 12(a): execution time [s] vs data size (30 nodes, 100 iterations)",
+        &["samples", "BPT-CNN", "Tensorflow", "DisBelief", "DC-CNN"],
+    );
+    for &n in &sizes {
+        let cfg = SimConfig {
+            cluster: ClusterConfig::heterogeneous(30, 7),
+            samples: n,
+            iterations: 100,
+            ..SimConfig::paper_default()
+        };
+        let mut row = vec![format!("{}k", n / 1000)];
+        for alg in Algorithm::paper_set() {
+            let r = simulate_algorithm(alg, &cfg);
+            row.push(format!("{:.2}", r.total_s));
+        }
+        table.row(&row);
+    }
+    table
+}
+
+pub fn cluster_scale_sweep(quick: bool) -> Table {
+    let nodes: Vec<usize> = if quick { vec![5, 20, 35] } else { vec![5, 10, 15, 20, 25, 30, 35] };
+    let mut table = Table::new(
+        "Fig. 12(b): execution time [s] vs cluster scale (600k samples, 100 iterations)",
+        &["nodes", "BPT-CNN", "Tensorflow", "DisBelief", "DC-CNN"],
+    );
+    for &m in &nodes {
+        let cfg = SimConfig {
+            cluster: ClusterConfig::heterogeneous(m, 7),
+            samples: 600_000,
+            iterations: 100,
+            ..SimConfig::paper_default()
+        };
+        let mut row = vec![format!("{m}")];
+        for alg in Algorithm::paper_set() {
+            let r = simulate_algorithm(alg, &cfg);
+            row.push(format!("{:.2}", r.total_s));
+        }
+        table.row(&row);
+    }
+    table
+}
+
+pub fn run(quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("\n# Fig. 12 — total execution time of the comparison algorithms (simulated)\n");
+    out.push_str(&data_size_sweep(quick).render());
+    out.push_str(&cluster_scale_sweep(quick).render());
+    print!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweeps_produce_full_tables() {
+        assert_eq!(data_size_sweep(true).len(), 3);
+        assert_eq!(cluster_scale_sweep(true).len(), 3);
+    }
+}

@@ -1,0 +1,96 @@
+//! Fig. 13 — execution time to reach a fixed accuracy (0.750 in the paper)
+//! under different computing resources: (a) cluster nodes, (b) CPU cores.
+//!
+//! Combines Table 1's iteration requirements (how many epochs each
+//! algorithm needs) with the simulator's per-iteration time. Paper shape:
+//! BPT-CNN fastest everywhere; DisBelief/DC-CNN *degrade* past ~25 nodes.
+
+use crate::config::ClusterConfig;
+use crate::metrics::Table;
+use crate::sim::{simulate_algorithm, Algorithm, SimConfig};
+
+/// Iteration requirements for accuracy 0.750 from paper Table 1. Using the
+/// paper's own ratios keeps (a)/(b) interpretable even though our synthetic
+/// task reaches thresholds faster (see table1.rs for measured equivalents).
+pub const ITERS_075: [(&str, usize); 4] = [
+    ("BPT-CNN", 42),
+    ("Tensorflow", 64),
+    ("DisBelief", 85),
+    ("DC-CNN", 147),
+];
+
+fn algorithms() -> [Algorithm; 4] {
+    Algorithm::paper_set()
+}
+
+pub fn nodes_sweep(quick: bool) -> Table {
+    let nodes: Vec<usize> = if quick { vec![5, 20, 35] } else { vec![5, 10, 15, 20, 25, 30, 35] };
+    let mut table = Table::new(
+        "Fig. 13(a): time [s] to accuracy 0.750 vs cluster nodes (8 cores/node)",
+        &["nodes", "BPT-CNN", "Tensorflow", "DisBelief", "DC-CNN"],
+    );
+    for &m in &nodes {
+        let mut row = vec![format!("{m}")];
+        for (alg, (_, iters)) in algorithms().into_iter().zip(ITERS_075) {
+            let cfg = SimConfig {
+                cluster: ClusterConfig::heterogeneous(m, 7),
+                samples: 300_000,
+                iterations: iters,
+                ..SimConfig::paper_default()
+            };
+            let r = simulate_algorithm(alg, &cfg);
+            row.push(format!("{:.2}", r.total_s));
+        }
+        table.row(&row);
+    }
+    table
+}
+
+pub fn cores_sweep(quick: bool) -> Table {
+    let cores: Vec<usize> = if quick { vec![2, 8, 16] } else { vec![1, 2, 4, 8, 12, 16] };
+    let mut table = Table::new(
+        "Fig. 13(b): time [s] to accuracy 0.750 vs CPU cores per node (20 nodes)",
+        &["cores", "BPT-CNN", "Tensorflow", "DisBelief", "DC-CNN"],
+    );
+    for &c in &cores {
+        let mut row = vec![format!("{c}")];
+        for (alg, (_, iters)) in algorithms().into_iter().zip(ITERS_075) {
+            let mut cluster = ClusterConfig::heterogeneous(20, 7);
+            for n in cluster.nodes.iter_mut() {
+                n.cores = c;
+            }
+            let cfg = SimConfig {
+                cluster,
+                samples: 300_000,
+                iterations: iters,
+                threads_per_node: c,
+                ..SimConfig::paper_default()
+            };
+            let r = simulate_algorithm(alg, &cfg);
+            row.push(format!("{:.2}", r.total_s));
+        }
+        table.row(&row);
+    }
+    table
+}
+
+pub fn run(quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("\n# Fig. 13 — execution time for fixed accuracy 0.750 (simulated)\n");
+    out.push_str("(iteration counts per algorithm from paper Table 1: 42/64/85/147)\n");
+    out.push_str(&nodes_sweep(quick).render());
+    out.push_str(&cores_sweep(quick).render());
+    print!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_complete() {
+        assert_eq!(nodes_sweep(true).len(), 3);
+        assert_eq!(cores_sweep(true).len(), 3);
+    }
+}

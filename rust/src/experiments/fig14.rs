@@ -1,0 +1,138 @@
+//! Fig. 14 — BPT-CNN execution time under its own strategy ablations:
+//! {AGWU, SGWU} × {IDPA, UDPA} over (a) CNN network scale (Table 2 cases),
+//! (b) data size, (c) cluster scale, (d) threads per node.
+//!
+//! Paper shape: AGWU+IDPA fastest everywhere; the margin grows with
+//! cluster size and thread count.
+
+use crate::config::{ClusterConfig, NetworkConfig, PartitionStrategy, UpdateStrategy};
+use crate::metrics::Table;
+use crate::sim::{simulate, SimConfig};
+
+const COMBOS: [(UpdateStrategy, PartitionStrategy); 4] = [
+    (UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+    (UpdateStrategy::Agwu, PartitionStrategy::Udpa),
+    (UpdateStrategy::Sgwu, PartitionStrategy::Idpa),
+    (UpdateStrategy::Sgwu, PartitionStrategy::Udpa),
+];
+
+const HEADER: [&str; 5] = ["x", "AGWU+IDPA", "AGWU+UDPA", "SGWU+IDPA", "SGWU+UDPA"];
+
+fn base() -> SimConfig {
+    SimConfig {
+        cluster: ClusterConfig::heterogeneous(20, 7),
+        samples: 300_000,
+        iterations: 100,
+        ..SimConfig::paper_default()
+    }
+}
+
+fn sweep<F: Fn(&mut SimConfig, usize)>(
+    title: &str,
+    xlabel: &str,
+    xs: &[usize],
+    setter: F,
+) -> Table {
+    let mut header = HEADER;
+    header[0] = xlabel;
+    let mut table = Table::new(title, &header);
+    for &x in xs {
+        let mut row = vec![format!("{x}")];
+        for (u, p) in COMBOS {
+            let mut cfg = base();
+            cfg.update = u;
+            cfg.partition = p;
+            setter(&mut cfg, x);
+            let r = simulate(&cfg);
+            row.push(format!("{:.2}", r.total_s));
+        }
+        table.row(&row);
+    }
+    table
+}
+
+pub fn network_scale_sweep(quick: bool) -> Table {
+    let cases: Vec<usize> = if quick { vec![1, 4, 7] } else { (1..=7).collect() };
+    sweep(
+        "Fig. 14(a): time [s] vs CNN network scale (Table 2 cases)",
+        "case",
+        &cases,
+        |cfg, case| cfg.network = NetworkConfig::table2_case(case),
+    )
+}
+
+pub fn data_size_sweep(quick: bool) -> Table {
+    let sizes: Vec<usize> = if quick {
+        vec![100_000, 400_000, 700_000]
+    } else {
+        vec![100_000, 200_000, 300_000, 400_000, 500_000, 600_000, 700_000]
+    };
+    sweep(
+        "Fig. 14(b): time [s] vs data size",
+        "samples",
+        &sizes,
+        |cfg, n| cfg.samples = n,
+    )
+}
+
+pub fn cluster_scale_sweep(quick: bool) -> Table {
+    let nodes: Vec<usize> = if quick { vec![5, 20, 35] } else { vec![5, 10, 15, 20, 25, 30, 35] };
+    sweep(
+        "Fig. 14(c): time [s] vs cluster scale",
+        "nodes",
+        &nodes,
+        |cfg, m| cfg.cluster = ClusterConfig::heterogeneous(m, 7),
+    )
+}
+
+pub fn threads_sweep(quick: bool) -> Table {
+    let threads: Vec<usize> = if quick { vec![1, 8, 16] } else { vec![1, 2, 4, 8, 12, 16] };
+    sweep(
+        "Fig. 14(d): time [s] vs threads per node",
+        "threads",
+        &threads,
+        |cfg, t| cfg.threads_per_node = t,
+    )
+}
+
+pub fn run(quick: bool) -> String {
+    let mut out = String::new();
+    out.push_str("\n# Fig. 14 — BPT-CNN strategy ablations {AGWU,SGWU}×{IDPA,UDPA} (simulated)\n");
+    out.push_str(&network_scale_sweep(quick).render());
+    out.push_str(&data_size_sweep(quick).render());
+    out.push_str(&cluster_scale_sweep(quick).render());
+    out.push_str(&threads_sweep(quick).render());
+    print!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_sweeps_complete() {
+        assert_eq!(network_scale_sweep(true).len(), 3);
+        assert_eq!(data_size_sweep(true).len(), 3);
+        assert_eq!(cluster_scale_sweep(true).len(), 3);
+        assert_eq!(threads_sweep(true).len(), 3);
+    }
+
+    #[test]
+    fn agwu_idpa_wins_on_heterogeneous_cluster() {
+        // The headline ablation claim, checked numerically.
+        let mut best = f64::INFINITY;
+        let mut best_combo = 0;
+        for (i, (u, p)) in COMBOS.iter().enumerate() {
+            let mut cfg = base();
+            cfg.update = *u;
+            cfg.partition = *p;
+            let r = simulate(&cfg);
+            if r.total_s < best {
+                best = r.total_s;
+                best_combo = i;
+            }
+        }
+        assert_eq!(best_combo, 0, "AGWU+IDPA should be fastest");
+    }
+}

@@ -1,0 +1,45 @@
+//! Paper-experiment regenerators: one module per table/figure of §5.
+//! Each `run(quick)` prints the same rows/series the paper reports and
+//! returns the rendered text (also logged to `results/` as JSON lines).
+//!
+//! `quick = true` shrinks workloads for CI-speed smoke runs; `quick = false`
+//! runs the paper-scale sweeps (simulator figures stay fast either way; the
+//! real-training figures scale with the flag).
+
+pub mod ablation;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod table1;
+
+/// Dispatch by experiment id ("fig11" … "fig15", "table1", "all").
+pub fn run(id: &str, quick: bool) -> anyhow::Result<String> {
+    let out = match id {
+        "fig11" => fig11::run(quick),
+        "fig12" => fig12::run(quick),
+        "fig13" => fig13::run(quick),
+        "fig14" => fig14::run(quick),
+        "fig15" => fig15::run(quick),
+        "table1" => table1::run(quick),
+        "ablation" => ablation::run(quick),
+        "all" => {
+            let mut all = String::new();
+            for id in ["fig11", "table1", "fig12", "fig13", "fig14", "fig15", "ablation"] {
+                all.push_str(&run(id, quick)?);
+            }
+            all
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (fig11..fig15, table1, ablation, all)"),
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(super::run("fig99", true).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Table 1 — training iterations required by each comparison algorithm to
+//! reach fixed accuracy thresholds.
+//!
+//! Paper row (ImageNet): acc 0.75 → BPT-CNN 42, TF 64, DisBelief 85,
+//! DC-CNN 147; acc 0.80 → 97 / 187 / 211 / –. Expected shape on the
+//! synthetic task: BPT-CNN needs the fewest epochs at the higher
+//! thresholds; DC-CNN (single node) the most (or never reaches them).
+
+use crate::config::NetworkConfig;
+use crate::metrics::Table;
+
+use super::fig11::{train_strategy, Strategy, StrategyCurve};
+
+/// First epoch at which the curve reaches `threshold` accuracy.
+pub fn iterations_to_accuracy(curve: &StrategyCurve, threshold: f64) -> Option<f64> {
+    curve
+        .points
+        .iter()
+        .find(|(_, acc)| *acc >= threshold)
+        .map(|(epoch, _)| *epoch)
+}
+
+pub fn run(quick: bool) -> String {
+    let network = NetworkConfig::quickstart();
+    let (samples, iterations) = if quick { (384, 8) } else { (1024, 32) };
+    // Thresholds scaled to the synthetic task's accuracy range.
+    let thresholds = [0.35, 0.50, 0.65, 0.80];
+
+    let curves: Vec<StrategyCurve> = Strategy::all()
+        .into_iter()
+        .map(|s| train_strategy(s, &network, samples, iterations, 42))
+        .collect();
+
+    let mut out = String::new();
+    out.push_str("\n# Table 1 — iterations (epochs) required for fixed accuracy\n");
+    out.push_str("(paper @0.75: BPT-CNN 42 < TF 64 < DisBelief 85 < DC-CNN 147)\n");
+    let mut table = Table::new(
+        "Epochs to reach accuracy threshold ('-' = not reached)",
+        &["accuracy", "BPT-CNN", "Tensorflow", "DisBelief", "DC-CNN"],
+    );
+    for &th in &thresholds {
+        let mut row = vec![format!("{th:.2}")];
+        for c in &curves {
+            row.push(
+                iterations_to_accuracy(c, th)
+                    .map(|e| format!("{e:.1}"))
+                    .unwrap_or_else(|| "-".to_string()),
+            );
+        }
+        table.row(&row);
+    }
+    out.push_str(&table.render());
+    print!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_lookup() {
+        let curve = StrategyCurve {
+            strategy: Strategy::BptCnn,
+            points: vec![(1.0, 0.2), (2.0, 0.5), (3.0, 0.7)],
+            time_points: vec![(0.1, 0.2), (0.2, 0.5), (0.3, 0.7)],
+            final_accuracy: 0.7,
+            auc: 0.5,
+        };
+        assert_eq!(iterations_to_accuracy(&curve, 0.4), Some(2.0));
+        assert_eq!(iterations_to_accuracy(&curve, 0.1), Some(1.0));
+        assert_eq!(iterations_to_accuracy(&curve, 0.9), None);
+    }
+}

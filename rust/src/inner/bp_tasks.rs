@@ -1,0 +1,436 @@
+//! Backward-pass (local weight training) task decomposition — §4.1.2.
+//!
+//! The paper parallelizes the loss-function calculation per neuron of the
+//! upstream layer (Fig. 8) and the weight-gradient computation per filter
+//! weight (Eq. 21). Here a full train step of the native network runs as
+//! task DAGs mirroring Fig. 9:
+//!
+//! * forward conv layers — Algorithm 4.1 row tasks ([`conv_tasks`]);
+//! * pool / FC / loss — the serial spine of the DAG (<15% of the time,
+//!   §4.1.1);
+//! * backward conv — per-*image* tasks: each computes a private partial
+//!   filter gradient (Eq. 21 restricted to one sample) plus its disjoint
+//!   slice of `dx` (Eq. 18); partials are then reduced. This is the
+//!   thread-safe realization of Fig. 8's per-neuron parallelism.
+
+use std::sync::{Arc, Mutex};
+
+use crate::config::NetworkConfig;
+use crate::nn::ops::{self, ConvDims};
+use crate::nn::Network;
+use crate::util::threadpool::ThreadPool;
+
+use super::conv_tasks::{conv2d_parallel, DisjointBuf};
+use super::dag::TaskDag;
+use super::scheduler::{execute_dag, ScheduleStats};
+
+/// Result of one task-parallel train step.
+pub struct ParallelStepResult {
+    pub loss: f32,
+    pub correct: usize,
+    pub stats: ScheduleStats,
+}
+
+/// Backward of one conv layer with per-image tasks: filter/bias gradients
+/// reduced from per-task partials, input gradient written into disjoint
+/// per-image slices. Numerically ≡ `ops::conv2d_same_bwd_*`
+/// (per-image partial sums commute with the full-batch sums of Eq. 21).
+pub fn conv_bwd_parallel(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+) -> ScheduleStats {
+    let mut dag: TaskDag<usize> = TaskDag::new();
+    let cost = (d.h * d.w * d.k * d.k * d.c * d.co) as f64;
+    for n in 0..d.n {
+        dag.add(format!("conv_bwd[n{n}]"), cost, &[], n);
+    }
+    let per_image = ConvDims { n: 1, ..*d };
+    let x: Arc<[f32]> = Arc::from(x);
+    let f: Arc<[f32]> = Arc::from(f);
+    let dy: Arc<[f32]> = Arc::from(dy);
+    let partials: Arc<Mutex<(Vec<f32>, Vec<f32>)>> =
+        Arc::new(Mutex::new((vec![0.0; d.f_len()], vec![0.0; d.co])));
+    let want_dx = dx.is_some();
+    let mut dx_holder = dx;
+    let dx_buf = dx_holder
+        .as_deref_mut()
+        .map(|b| Arc::new(DisjointBuf::new(b)));
+    let x_img = d.h * d.w * d.c;
+    let y_img = d.h * d.w * d.co;
+    let partials2 = Arc::clone(&partials);
+    let stats = execute_dag(pool, dag, move |&n: &usize| {
+        let xs = &x[n * x_img..(n + 1) * x_img];
+        let dys = &dy[n * y_img..(n + 1) * y_img];
+        let mut df_p = vec![0.0f32; per_image.f_len()];
+        let mut db_p = vec![0.0f32; per_image.co];
+        ops::conv2d_same_bwd_filter(&per_image, xs, dys, &mut df_p, &mut db_p);
+        if want_dx {
+            // SAFETY: image n exclusively owns dx[n·x_img .. (n+1)·x_img).
+            let dxs = unsafe { dx_buf.as_ref().unwrap().slice_mut(n * x_img, x_img) };
+            ops::conv2d_same_bwd_input(&per_image, dys, &f, dxs);
+        }
+        // Reduce partials (the only shared-write section).
+        let mut guard = partials2.lock().unwrap();
+        for (a, b) in guard.0.iter_mut().zip(df_p.iter()) {
+            *a += b;
+        }
+        for (a, b) in guard.1.iter_mut().zip(db_p.iter()) {
+            *a += b;
+        }
+    });
+    let guard = partials.lock().unwrap();
+    df.copy_from_slice(&guard.0);
+    db.copy_from_slice(&guard.1);
+    stats
+}
+
+/// One full training step (forward + backward + SGD, Eq. 23) executed with
+/// the inner-layer task decomposition on the thread pool. Numerically
+/// identical to `Network::train_batch`.
+pub fn parallel_train_step(
+    pool: &ThreadPool,
+    net: &mut Network,
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    lr: f32,
+    rows_per_task: usize,
+) -> ParallelStepResult {
+    let cfg = net.cfg.clone();
+    let hw = cfg.input_hw;
+    let ws = net.weights.clone();
+    let mut grads = net.weights.zeros_like();
+    let mut agg: Option<ScheduleStats> = None;
+
+    // ---- Forward: conv stack (Algorithm 4.1 tasks per layer) -------------
+    let mut conv_ins: Vec<Vec<f32>> = Vec::with_capacity(cfg.conv_layers);
+    let mut conv_outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.conv_layers);
+    let mut cur = x.to_vec();
+    for l in 0..cfg.conv_layers {
+        let c = if l == 0 { cfg.in_channels } else { cfg.filters };
+        let d = ConvDims { n: batch, h: hw, w: hw, c, k: cfg.kernel_hw, co: cfg.filters };
+        conv_ins.push(cur.clone());
+        let mut out = vec![0.0f32; d.y_len()];
+        let s = conv2d_parallel(
+            pool,
+            &d,
+            &cur,
+            ws.tensors()[2 * l].data(),
+            ws.tensors()[2 * l + 1].data(),
+            &mut out,
+            rows_per_task,
+        );
+        agg = Some(merge_stats(agg, s));
+        ops::relu_fwd(&mut out);
+        conv_outs.push(out.clone());
+        cur = out;
+    }
+
+    // ---- Forward: pool + FC + logits (serial spine) -----------------------
+    let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
+    let win = cfg.pool_window;
+    let hp = hw / win;
+    let mut pooled = vec![0.0f32; batch * hp * hp * c];
+    ops::mean_pool_fwd(batch, hw, hw, c, win, &cur, &mut pooled);
+    let mut feat = pooled.clone();
+    let mut fan_in = hp * hp * c;
+    let mut fc_outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.fc_layers);
+    let mut pi = 2 * cfg.conv_layers;
+    for _ in 0..cfg.fc_layers {
+        let w = &ws.tensors()[pi];
+        let b = &ws.tensors()[pi + 1];
+        pi += 2;
+        let out_dim = w.shape()[1];
+        let mut out = vec![0.0f32; batch * out_dim];
+        ops::dense_fwd(batch, fan_in, out_dim, &feat, w.data(), b.data(), &mut out);
+        ops::relu_fwd(&mut out);
+        fc_outs.push(out.clone());
+        feat = out;
+        fan_in = out_dim;
+    }
+    let w_out = &ws.tensors()[pi];
+    let b_out = &ws.tensors()[pi + 1];
+    let mut logits = vec![0.0f32; batch * cfg.num_classes];
+    ops::dense_fwd(batch, fan_in, cfg.num_classes, &feat, w_out.data(), b_out.data(), &mut logits);
+
+    // ---- Loss (Eq. 16) -----------------------------------------------------
+    let mut dlogits = vec![0.0f32; batch * cfg.num_classes];
+    let (loss, correct) = ops::mse_softmax_loss(batch, cfg.num_classes, &logits, y, &mut dlogits);
+
+    // ---- Backward: FC spine -------------------------------------------------
+    let pooled_dim = hp * hp * c;
+    let out_w_idx = 2 * cfg.conv_layers + 2 * cfg.fc_layers;
+    let last_feat: &[f32] = if cfg.fc_layers > 0 { &fc_outs[cfg.fc_layers - 1] } else { &pooled };
+    let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
+    let mut dfeat = vec![0.0f32; batch * last_dim];
+    {
+        let gts = grads.tensors_mut();
+        let (a, b) = gts.split_at_mut(out_w_idx + 1);
+        ops::dense_bwd(
+            batch,
+            last_dim,
+            cfg.num_classes,
+            last_feat,
+            ws.tensors()[out_w_idx].data(),
+            &dlogits,
+            &mut dfeat,
+            a[out_w_idx].data_mut(),
+            b[0].data_mut(),
+        );
+    }
+    for l in (0..cfg.fc_layers).rev() {
+        ops::relu_bwd(&fc_outs[l], &mut dfeat);
+        let in_feat: &[f32] = if l == 0 { &pooled } else { &fc_outs[l - 1] };
+        let in_dim = if l == 0 { pooled_dim } else { cfg.fc_neurons };
+        let w_idx = 2 * cfg.conv_layers + 2 * l;
+        let mut dprev = vec![0.0f32; batch * in_dim];
+        {
+            let gts = grads.tensors_mut();
+            let (a, b) = gts.split_at_mut(w_idx + 1);
+            ops::dense_bwd(
+                batch,
+                in_dim,
+                cfg.fc_neurons,
+                in_feat,
+                ws.tensors()[w_idx].data(),
+                &dfeat,
+                &mut dprev,
+                a[w_idx].data_mut(),
+                b[0].data_mut(),
+            );
+        }
+        dfeat = dprev;
+    }
+    let mut dconv = vec![0.0f32; batch * hw * hw * c];
+    ops::mean_pool_bwd(batch, hw, hw, c, win, &dfeat, &mut dconv);
+
+    // ---- Backward: conv stack with per-image tasks (Fig. 8) ----------------
+    for l in (0..cfg.conv_layers).rev() {
+        ops::relu_bwd(&conv_outs[l], &mut dconv);
+        let cin = if l == 0 { cfg.in_channels } else { cfg.filters };
+        let d = ConvDims { n: batch, h: hw, w: hw, c: cin, k: cfg.kernel_hw, co: cfg.filters };
+        let w_idx = 2 * l;
+        let mut dprev = if l > 0 { Some(vec![0.0f32; d.x_len()]) } else { None };
+        let s = {
+            let gts = grads.tensors_mut();
+            let (a, b) = gts.split_at_mut(w_idx + 1);
+            conv_bwd_parallel(
+                pool,
+                &d,
+                &conv_ins[l],
+                ws.tensors()[w_idx].data(),
+                &dconv,
+                a[w_idx].data_mut(),
+                b[0].data_mut(),
+                dprev.as_deref_mut(),
+            )
+        };
+        agg = Some(merge_stats(agg, s));
+        if let Some(dp) = dprev {
+            dconv = dp;
+        }
+    }
+
+    // ---- SGD (Eq. 23) -------------------------------------------------------
+    net.weights.axpy(-lr, &grads);
+    let stats = agg.unwrap_or(ScheduleStats {
+        makespan_s: 0.0,
+        thread_busy_s: vec![0.0; pool.size()],
+        thread_assigned_cost: vec![0.0; pool.size()],
+        tasks: 0,
+    });
+    ParallelStepResult { loss, correct, stats }
+}
+
+fn merge_stats(acc: Option<ScheduleStats>, s: ScheduleStats) -> ScheduleStats {
+    match acc {
+        None => s,
+        Some(mut a) => {
+            a.makespan_s += s.makespan_s;
+            a.tasks += s.tasks;
+            for (x, y) in a.thread_busy_s.iter_mut().zip(s.thread_busy_s.iter()) {
+                *x += y;
+            }
+            for (x, y) in a.thread_assigned_cost.iter_mut().zip(s.thread_assigned_cost.iter()) {
+                *x += y;
+            }
+            a
+        }
+    }
+}
+
+/// Build the Fig.-9 style task DAG for a whole train step at (image × layer)
+/// granularity — used for DAG-structure analysis and critical-path benches.
+pub fn train_step_dag(cfg: &NetworkConfig, batch: usize) -> TaskDag<String> {
+    let mut dag = TaskDag::new();
+    let hw = cfg.input_hw;
+    let k = cfg.kernel_hw;
+    let mut prev: Vec<usize> = Vec::new();
+    for l in 0..cfg.conv_layers {
+        let c = if l == 0 { cfg.in_channels } else { cfg.filters };
+        let cost = (hw * hw * k * k * c * cfg.filters) as f64;
+        let mut cur = Vec::new();
+        for n in 0..batch {
+            let deps: Vec<usize> = if l == 0 { vec![] } else { vec![prev[n]] };
+            cur.push(dag.add(format!("fwd_conv{l}[n{n}]"), cost, &deps, format!("fwd_conv{l}")));
+        }
+        prev = cur;
+    }
+    let pool_cost = (hw * hw * cfg.filters) as f64;
+    let mut pool_ids = Vec::new();
+    for n in 0..batch {
+        let deps = if prev.is_empty() { vec![] } else { vec![prev[n]] };
+        pool_ids.push(dag.add(format!("fwd_pool[n{n}]"), pool_cost, &deps, "fwd_pool".into()));
+    }
+    let hp = hw / cfg.pool_window;
+    let fan0 = hp * hp * cfg.filters;
+    let mut last = dag.add(
+        "fwd_fc0".to_string(),
+        (batch * fan0 * cfg.fc_neurons) as f64,
+        &pool_ids,
+        "fwd_fc".into(),
+    );
+    for l in 1..cfg.fc_layers {
+        last = dag.add(
+            format!("fwd_fc{l}"),
+            (batch * cfg.fc_neurons * cfg.fc_neurons) as f64,
+            &[last],
+            "fwd_fc".into(),
+        );
+    }
+    let loss = dag.add("loss", (batch * cfg.num_classes) as f64, &[last], "loss".into());
+    let mut bwd_last = dag.add("bwd_fc", (batch * cfg.fc_neurons) as f64, &[loss], "bwd_fc".into());
+    bwd_last = dag.add("bwd_pool", pool_cost, &[bwd_last], "bwd_pool".into());
+    for l in (0..cfg.conv_layers).rev() {
+        let c = if l == 0 { cfg.in_channels } else { cfg.filters };
+        let cost = (hw * hw * k * k * c * cfg.filters) as f64;
+        let mut cur = Vec::new();
+        for n in 0..batch {
+            cur.push(dag.add(format!("bwd_conv{l}[n{n}]"), cost, &[bwd_last], format!("bwd_conv{l}")));
+        }
+        bwd_last = dag.add(
+            format!("reduce_conv{l}"),
+            (k * k * c * cfg.filters) as f64,
+            &cur,
+            "reduce".into(),
+        );
+    }
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::util::rng::Xoshiro256;
+
+    fn cfg() -> NetworkConfig {
+        NetworkConfig {
+            name: "bp".into(),
+            input_hw: 8,
+            in_channels: 1,
+            conv_layers: 2,
+            filters: 4,
+            kernel_hw: 3,
+            fc_layers: 1,
+            fc_neurons: 16,
+            num_classes: 4,
+            batch_size: 4,
+            pool_window: 2,
+        }
+    }
+
+    #[test]
+    fn conv_bwd_parallel_matches_serial() {
+        let mut rng = Xoshiro256::new(20);
+        let d = ConvDims { n: 4, h: 6, w: 6, c: 2, k: 3, co: 3 };
+        let x: Vec<f32> = (0..d.x_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let f: Vec<f32> = (0..d.f_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let dy: Vec<f32> = (0..d.y_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let mut df_s = vec![0.0; d.f_len()];
+        let mut db_s = vec![0.0; d.co];
+        let mut dx_s = vec![0.0; d.x_len()];
+        ops::conv2d_same_bwd_filter(&d, &x, &dy, &mut df_s, &mut db_s);
+        ops::conv2d_same_bwd_input(&d, &dy, &f, &mut dx_s);
+        let pool = ThreadPool::new(4);
+        let mut df_p = vec![0.0; d.f_len()];
+        let mut db_p = vec![0.0; d.co];
+        let mut dx_p = vec![0.0; d.x_len()];
+        conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, Some(&mut dx_p));
+        for (a, b) in df_s.iter().zip(df_p.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in db_s.iter().zip(db_p.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in dx_s.iter().zip(dx_p.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parallel_step_matches_serial_step() {
+        let cfg = cfg();
+        let ds = Dataset::synthetic(&cfg, 16, 0.1, 11);
+        let (x, y, _) = ds.batch(0, 4);
+        let mut serial = Network::init(&cfg, 12);
+        let mut par = serial.clone();
+        let pool = ThreadPool::new(4);
+        let (sl, sc) = serial.train_batch(&x, &y, 4, 0.1);
+        let r = parallel_train_step(&pool, &mut par, &x, &y, 4, 0.1, 2);
+        assert!((sl - r.loss).abs() < 1e-5, "loss {sl} vs {}", r.loss);
+        assert_eq!(sc, r.correct);
+        assert!(
+            serial.weights.max_abs_diff(&par.weights) < 1e-5,
+            "weights diverged: {}",
+            serial.weights.max_abs_diff(&par.weights)
+        );
+    }
+
+    #[test]
+    fn parallel_training_converges() {
+        let cfg = cfg();
+        let ds = Dataset::synthetic(&cfg, 32, 0.1, 13);
+        let (x, y, _) = ds.batch(0, 4);
+        let mut net = Network::init(&cfg, 14);
+        let pool = ThreadPool::new(2);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..40 {
+            let r = parallel_train_step(&pool, &mut net, &x, &y, 4, 0.3, 2);
+            first.get_or_insert(r.loss);
+            last = r.loss;
+        }
+        assert!(last < 0.5 * first.unwrap());
+    }
+
+    #[test]
+    fn train_step_dag_structure() {
+        let cfg = cfg();
+        let dag = train_step_dag(&cfg, 4);
+        let fwd_conv = dag.nodes().iter().filter(|n| n.label.starts_with("fwd_conv")).count();
+        let bwd_conv = dag.nodes().iter().filter(|n| n.label.starts_with("bwd_conv")).count();
+        assert_eq!(fwd_conv, 8);
+        assert_eq!(bwd_conv, 8);
+        let order = dag.topological_order();
+        assert_eq!(order.len(), dag.len());
+        let levels = dag.levels();
+        let loss_id = dag.nodes().iter().position(|n| n.label == "loss").unwrap();
+        assert!(levels[loss_id] >= 3);
+    }
+
+    #[test]
+    fn dag_critical_path_shorter_than_total() {
+        let dag = train_step_dag(&cfg(), 8);
+        assert!(
+            dag.critical_path_cost() < dag.total_cost() / 2.0,
+            "expected ≥2× theoretical parallelism"
+        );
+    }
+}

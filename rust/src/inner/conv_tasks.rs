@@ -1,0 +1,178 @@
+//! Convolution-layer task decomposition — Algorithm 4.1 (§4.1.1).
+//!
+//! The paper extracts every convolution area of the input matrix (Eq. 14)
+//! and convolves them in parallel with the shared filter (Fig. 6). Its
+//! maximum parallelism degree is `K_C = H_a × W_a` (Eq. 13) — one task per
+//! output element. At CPU-thread granularity one scalar per task drowns in
+//! scheduling overhead, so the decomposition here groups whole output *rows*
+//! into one task (`rows_per_task` tunes the granularity; `1` row ≈ `W_a`
+//! paper-tasks fused — the ablation bench sweeps this knob).
+//!
+//! Tasks write disjoint row slices of the shared output buffer through
+//! [`DisjointBuf`], the lock-free analogue of the paper's observation that
+//! "different tasks can access different convolution areas simultaneously…
+//! without data dependence".
+
+use std::sync::Arc;
+
+use crate::nn::ops::{self, ConvDims};
+use crate::util::threadpool::ThreadPool;
+
+use super::dag::TaskDag;
+use super::scheduler::{execute_dag, ScheduleStats};
+
+/// A buffer whose tasks write provably disjoint regions concurrently.
+///
+/// Safety contract: every (offset, len) window handed out via `slice_mut`
+/// must be disjoint across concurrently running tasks. The conv
+/// decomposition guarantees this structurally: task (n, y) owns exactly
+/// rows `[y, y+rows)` of image `n`.
+pub struct DisjointBuf {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for DisjointBuf {}
+unsafe impl Sync for DisjointBuf {}
+
+impl DisjointBuf {
+    pub fn new(buf: &mut [f32]) -> Self {
+        Self { ptr: buf.as_mut_ptr(), len: buf.len() }
+    }
+
+    /// # Safety
+    /// Callers must ensure `[offset, offset+len)` windows of concurrent
+    /// calls do not overlap.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [f32] {
+        assert!(offset + len <= self.len, "disjoint window out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+    }
+}
+
+/// Payload of one convolution task: image index + row range.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvTask {
+    pub n: usize,
+    pub y0: usize,
+    pub rows: usize,
+}
+
+/// Build the Algorithm 4.1 task list for one SAME conv layer: `K_C` output
+/// areas grouped `rows_per_task` rows at a time (per image). All tasks are
+/// independent (level-0 DAG), mirroring Fig. 6.
+pub fn conv_task_dag(d: &ConvDims, rows_per_task: usize) -> TaskDag<ConvTask> {
+    assert!(rows_per_task >= 1);
+    let mut dag = TaskDag::new();
+    // Cost model: rows × W output elements × k²·C·O MACs each.
+    let cost_per_row = (d.w * d.k * d.k * d.c * d.co) as f64;
+    for n in 0..d.n {
+        let mut y = 0;
+        while y < d.h {
+            let rows = rows_per_task.min(d.h - y);
+            dag.add(
+                format!("conv[n{n},y{y}+{rows}]"),
+                cost_per_row * rows as f64,
+                &[],
+                ConvTask { n, y0: y, rows },
+            );
+            y += rows;
+        }
+    }
+    dag
+}
+
+/// Execute a SAME conv layer with the task-parallel decomposition on the
+/// pool; numerically identical to `ops::conv2d_same_fwd`.
+pub fn conv2d_parallel(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows_per_task: usize,
+) -> ScheduleStats {
+    assert_eq!(out.len(), d.y_len());
+    let dag = conv_task_dag(d, rows_per_task);
+    let shared = Arc::new(DisjointBuf::new(out));
+    let row_len = d.w * d.co;
+    let x: Arc<[f32]> = Arc::from(x);
+    let f: Arc<[f32]> = Arc::from(f);
+    let bias: Arc<[f32]> = Arc::from(bias);
+    let dd = *d;
+    execute_dag(pool, dag, move |task: &ConvTask| {
+        for r in 0..task.rows {
+            let y = task.y0 + r;
+            let offset = (task.n * dd.h + y) * row_len;
+            // SAFETY: task (n, y) exclusively owns output rows [y0, y0+rows)
+            // of image n; ranges never overlap across tasks.
+            let row = unsafe { shared.slice_mut(offset, row_len) };
+            ops::conv2d_same_row(&dd, &x, &f, &bias, task.n, y, row);
+        }
+    })
+}
+
+/// K_C of Eq. 13 (stride 1, SAME padding ⇒ output H×W), per image.
+pub fn kc(d: &ConvDims) -> usize {
+    d.kc()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn task_count_matches_decomposition() {
+        let d = ConvDims { n: 2, h: 8, w: 8, c: 1, k: 3, co: 4 };
+        assert_eq!(conv_task_dag(&d, 1).len(), 2 * 8);
+        assert_eq!(conv_task_dag(&d, 4).len(), 2 * 2);
+        assert_eq!(conv_task_dag(&d, 3).len(), 2 * 3); // 3+3+2 rows
+        assert_eq!(kc(&d), 64);
+    }
+
+    #[test]
+    fn parallel_matches_serial_all_granularities() {
+        let mut rng = Xoshiro256::new(10);
+        let d = ConvDims { n: 3, h: 7, w: 6, c: 2, k: 3, co: 4 };
+        let x = rand_vec(&mut rng, d.x_len());
+        let f = rand_vec(&mut rng, d.f_len());
+        let b = rand_vec(&mut rng, d.co);
+        let mut serial = vec![0.0; d.y_len()];
+        ops::conv2d_same_fwd(&d, &x, &f, &b, &mut serial);
+        let pool = ThreadPool::new(4);
+        for rows in [1, 2, 3, 7] {
+            let mut par = vec![0.0; d.y_len()];
+            let stats = conv2d_parallel(&pool, &d, &x, &f, &b, &mut par, rows);
+            assert_eq!(stats.tasks, conv_task_dag(&d, rows).len());
+            for (a, bb) in par.iter().zip(serial.iter()) {
+                assert!((a - bb).abs() < 1e-5, "rows={rows}");
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_are_independent_level_zero() {
+        let d = ConvDims { n: 1, h: 4, w: 4, c: 1, k: 3, co: 1 };
+        let dag = conv_task_dag(&d, 1);
+        assert!(dag.levels().iter().all(|&l| l == 0));
+        // Critical path == one task's cost (full parallelism, Eq. 15).
+        let max_cost = dag.nodes().iter().map(|n| n.cost).fold(0.0, f64::max);
+        assert_eq!(dag.critical_path_cost(), max_cost);
+    }
+
+    #[test]
+    fn disjoint_buf_bounds_checked() {
+        let mut buf = vec![0.0f32; 8];
+        let db = DisjointBuf::new(&mut buf);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            db.slice_mut(6, 4);
+        }));
+        assert!(res.is_err());
+    }
+}

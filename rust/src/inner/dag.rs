@@ -1,0 +1,206 @@
+//! Task DAG for the inner-layer parallelism (§4.2(1)).
+//!
+//! Computation steps of a CNN subnetwork's training pass are decomposed into
+//! subtasks "depending upon their logical and data dependence" (Fig. 9); the
+//! resulting graph is a DAG whose levels drive priority marking.
+
+use std::collections::VecDeque;
+
+/// Task identifier within one [`TaskDag`].
+pub type TaskId = usize;
+
+/// A node in the task DAG. The payload is opaque to the graph; the scheduler
+/// receives it when the task is dispatched.
+#[derive(Debug)]
+pub struct TaskNode<P> {
+    pub id: TaskId,
+    pub label: String,
+    pub payload: P,
+    /// Tasks that must complete before this one starts (data dependence).
+    pub deps: Vec<TaskId>,
+    /// Estimated cost (arbitrary units) for load-balanced assignment.
+    pub cost: f64,
+}
+
+/// A directed acyclic graph of tasks.
+#[derive(Debug, Default)]
+pub struct TaskDag<P> {
+    nodes: Vec<TaskNode<P>>,
+}
+
+impl<P> TaskDag<P> {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    /// Add a task with the given dependencies; returns its id.
+    /// Dependencies must already exist (ids are created in topological
+    /// insertion order, which makes cycles unrepresentable by construction).
+    pub fn add(&mut self, label: impl Into<String>, cost: f64, deps: &[TaskId], payload: P) -> TaskId {
+        let id = self.nodes.len();
+        for &d in deps {
+            assert!(d < id, "dependency {d} does not exist yet (inserting {id})");
+        }
+        self.nodes.push(TaskNode {
+            id,
+            label: label.into(),
+            payload,
+            deps: deps.to_vec(),
+            cost,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: TaskId) -> &TaskNode<P> {
+        &self.nodes[id]
+    }
+
+    pub fn nodes(&self) -> &[TaskNode<P>] {
+        &self.nodes
+    }
+
+    pub fn into_nodes(self) -> Vec<TaskNode<P>> {
+        self.nodes
+    }
+
+    /// Downstream adjacency: for each task, the tasks that depend on it.
+    pub fn dependents(&self) -> Vec<Vec<TaskId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for node in &self.nodes {
+            for &d in &node.deps {
+                out[d].push(node.id);
+            }
+        }
+        out
+    }
+
+    /// DAG level of each task: level 0 = entry tasks, level of a task =
+    /// 1 + max(level of deps). Drives §4.2's priority marking ("upstream
+    /// tasks' priorities are higher than that of downstream tasks").
+    pub fn levels(&self) -> Vec<usize> {
+        let mut levels = vec![0usize; self.nodes.len()];
+        for node in &self.nodes {
+            let lvl = node
+                .deps
+                .iter()
+                .map(|&d| levels[d] + 1)
+                .max()
+                .unwrap_or(0);
+            levels[node.id] = lvl;
+        }
+        levels
+    }
+
+    /// Length of the critical path through the DAG in cost units — the lower
+    /// bound on parallel makespan (§4.2's "waiting time of critical paths").
+    pub fn critical_path_cost(&self) -> f64 {
+        let mut finish = vec![0.0f64; self.nodes.len()];
+        for node in &self.nodes {
+            let start = node
+                .deps
+                .iter()
+                .map(|&d| finish[d])
+                .fold(0.0f64, f64::max);
+            finish[node.id] = start + node.cost;
+        }
+        finish.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.nodes.iter().map(|n| n.cost).sum()
+    }
+
+    /// Kahn topological order (sanity / test helper; insertion order is
+    /// already topological by construction).
+    pub fn topological_order(&self) -> Vec<TaskId> {
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|n| n.deps.len()).collect();
+        let dependents = self.dependents();
+        let mut queue: VecDeque<TaskId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(id) = queue.pop_front() {
+            order.push(id);
+            for &dep in &dependents[id] {
+                indeg[dep] -= 1;
+                if indeg[dep] == 0 {
+                    queue.push_back(dep);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "cycle detected");
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> TaskDag<u32> {
+        // a → b, a → c, {b,c} → d
+        let mut dag = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], 0);
+        let b = dag.add("b", 2.0, &[a], 1);
+        let c = dag.add("c", 3.0, &[a], 2);
+        let _d = dag.add("d", 1.0, &[b, c], 3);
+        dag
+    }
+
+    #[test]
+    fn levels_of_diamond() {
+        assert_eq!(diamond().levels(), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn dependents_inverse_of_deps() {
+        let dag = diamond();
+        let deps = dag.dependents();
+        assert_eq!(deps[0], vec![1, 2]);
+        assert_eq!(deps[1], vec![3]);
+        assert_eq!(deps[2], vec![3]);
+        assert!(deps[3].is_empty());
+    }
+
+    #[test]
+    fn critical_path_of_diamond() {
+        // a(1) → c(3) → d(1) = 5.
+        assert!((diamond().critical_path_cost() - 5.0).abs() < 1e-12);
+        assert!((diamond().total_cost() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topological_order_respects_deps() {
+        let dag = diamond();
+        let order = dag.topological_order();
+        let pos: Vec<usize> = (0..4).map(|i| order.iter().position(|&x| x == i).unwrap()).collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not exist")]
+    fn forward_references_rejected() {
+        let mut dag: TaskDag<()> = TaskDag::new();
+        dag.add("bad", 1.0, &[5], ());
+    }
+
+    #[test]
+    fn empty_dag() {
+        let dag: TaskDag<()> = TaskDag::new();
+        assert!(dag.is_empty());
+        assert_eq!(dag.critical_path_cost(), 0.0);
+        assert!(dag.topological_order().is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! Inner-layer parallel training (paper §4): task decomposition of the
+//! convolutional layer (Algorithm 4.1) and the local weight training
+//! (backward pass), task-DAG construction with priority marking (§4.2(1)),
+//! and the priority scheduler with least-loaded thread assignment
+//! (Algorithm 4.2).
+
+pub mod bp_tasks;
+pub mod conv_tasks;
+pub mod dag;
+pub mod priority;
+pub mod scheduler;
+
+pub use bp_tasks::{parallel_train_step, train_step_dag, ParallelStepResult};
+pub use conv_tasks::{conv2d_parallel, conv_task_dag, ConvTask};
+pub use dag::{TaskDag, TaskId, TaskNode};
+pub use priority::{mark_priorities, priority_order};
+pub use scheduler::{execute_dag, execute_sequential, ScheduleStats};

@@ -1,0 +1,76 @@
+//! Task priority marking (§4.2(1)).
+//!
+//! "We set a maximum value for the entrance task of the task DAG graph.
+//! Then, the priorities of tasks in each level are set according to the
+//! tasks' level. Specifically, upstream tasks' priorities are higher than
+//! that of downstream tasks, while tasks at the same level have the same
+//! priority."
+
+use super::dag::TaskDag;
+
+/// Priority of each task: entry tasks get `max_priority`, each level down
+/// decrements. Higher value = schedule earlier.
+pub fn mark_priorities<P>(dag: &TaskDag<P>) -> Vec<u32> {
+    let levels = dag.levels();
+    let max_level = levels.iter().copied().max().unwrap_or(0) as u32;
+    levels.iter().map(|&l| max_level - l as u32).collect()
+}
+
+/// Order of dispatch: by priority descending (stable on task id so
+/// same-level tasks keep decomposition order — deterministic schedules).
+pub fn priority_order<P>(dag: &TaskDag<P>) -> Vec<usize> {
+    let pri = mark_priorities(dag);
+    let mut order: Vec<usize> = (0..dag.len()).collect();
+    order.sort_by(|&a, &b| pri[b].cmp(&pri[a]).then(a.cmp(&b)));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inner::dag::TaskDag;
+
+    #[test]
+    fn entry_tasks_have_max_priority() {
+        let mut dag = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], ());
+        let b = dag.add("b", 1.0, &[a], ());
+        let c = dag.add("c", 1.0, &[a], ());
+        let _d = dag.add("d", 1.0, &[b, c], ());
+        let pri = mark_priorities(&dag);
+        assert_eq!(pri, vec![2, 1, 1, 0]);
+    }
+
+    #[test]
+    fn same_level_same_priority() {
+        let mut dag = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], ());
+        for _ in 0..5 {
+            dag.add("x", 1.0, &[a], ());
+        }
+        let pri = mark_priorities(&dag);
+        assert!(pri[1..].iter().all(|&p| p == pri[1]));
+        assert!(pri[0] > pri[1]);
+    }
+
+    #[test]
+    fn priority_order_is_topological() {
+        let mut dag = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], ());
+        let b = dag.add("b", 1.0, &[a], ());
+        let c = dag.add("c", 1.0, &[b], ());
+        let d = dag.add("d", 1.0, &[], ());
+        let order = priority_order(&dag);
+        let pos: Vec<usize> = (0..4).map(|i| order.iter().position(|&x| x == i).unwrap()).collect();
+        assert!(pos[a] < pos[b] && pos[b] < pos[c]);
+        // d is an entry task → same priority as a, ordered by id.
+        assert!(pos[d] < pos[b]);
+    }
+
+    #[test]
+    fn empty_dag_ok() {
+        let dag: TaskDag<()> = TaskDag::new();
+        assert!(mark_priorities(&dag).is_empty());
+        assert!(priority_order(&dag).is_empty());
+    }
+}

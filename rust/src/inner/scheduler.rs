@@ -1,0 +1,253 @@
+//! Priority task scheduling — Algorithm 4.2.
+//!
+//! Tasks are taken in priority order (upstream first, §4.2(1)); a task whose
+//! dependencies are incomplete makes the dispatcher *wait* (Alg 4.2 line 7);
+//! ready tasks are assigned to the thread with minimal accumulated workload
+//! (line 8). Execution happens on [`ThreadPool`] workers via their pinned
+//! per-thread queues, so "assignment to thread k" is real, not advisory.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
+
+use super::dag::TaskDag;
+use super::priority::priority_order;
+
+/// Outcome of one DAG execution.
+#[derive(Debug, Clone)]
+pub struct ScheduleStats {
+    /// Wall-clock seconds from first dispatch to last completion.
+    pub makespan_s: f64,
+    /// Busy seconds per worker thread (measured, not estimated).
+    pub thread_busy_s: Vec<f64>,
+    /// Estimated cost assigned per thread (the quantity Alg 4.2 balances).
+    pub thread_assigned_cost: Vec<f64>,
+    pub tasks: usize,
+}
+
+impl ScheduleStats {
+    /// Balance index over measured busy time (Fig. 15b metric, applied to
+    /// threads instead of nodes).
+    pub fn balance_index(&self) -> f64 {
+        stats::balance_index(&self.thread_busy_s)
+    }
+
+    /// Balance index over assigned cost.
+    pub fn assigned_balance_index(&self) -> f64 {
+        stats::balance_index(&self.thread_assigned_cost)
+    }
+}
+
+struct DispatchState {
+    done: Mutex<(Vec<bool>, usize)>, // (per-task done flags, remaining)
+    cv: Condvar,
+}
+
+/// Execute a task DAG per Algorithm 4.2. `runner` is invoked with each
+/// task's payload on the assigned worker thread.
+pub fn execute_dag<P, F>(pool: &ThreadPool, dag: TaskDag<P>, runner: F) -> ScheduleStats
+where
+    P: Send + Sync + 'static,
+    F: Fn(&P) + Send + Sync + 'static,
+{
+    let n = dag.len();
+    let order = priority_order(&dag);
+    let nodes = Arc::new(dag.into_nodes());
+    let runner = Arc::new(runner);
+    let state = Arc::new(DispatchState {
+        done: Mutex::new((vec![false; n], n)),
+        cv: Condvar::new(),
+    });
+    let busy_ns: Arc<Vec<AtomicU64>> =
+        Arc::new((0..pool.size()).map(|_| AtomicU64::new(0)).collect());
+    let mut assigned = vec![0.0f64; pool.size()];
+
+    let t0 = Instant::now();
+    for &tid in &order {
+        // Line 5–7: wait until every dependency of the top task is complete.
+        {
+            let mut guard = state.done.lock().unwrap();
+            while !nodes[tid].deps.iter().all(|&d| guard.0[d]) {
+                guard = state.cv.wait(guard).unwrap();
+            }
+        }
+        // Line 8: thread with minimal (assigned) workload.
+        let k = assigned
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        assigned[k] += nodes[tid].cost;
+        // Line 9: assignment.
+        let nodes2 = Arc::clone(&nodes);
+        let runner2 = Arc::clone(&runner);
+        let state2 = Arc::clone(&state);
+        let busy2 = Arc::clone(&busy_ns);
+        pool.execute_on(k, move || {
+            let start = Instant::now();
+            runner2(&nodes2[tid].payload);
+            busy2[k].fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let mut guard = state2.done.lock().unwrap();
+            guard.0[tid] = true;
+            guard.1 -= 1;
+            state2.cv.notify_all();
+        });
+    }
+    // Wait for all tasks to complete.
+    {
+        let mut guard = state.done.lock().unwrap();
+        while guard.1 != 0 {
+            guard = state.cv.wait(guard).unwrap();
+        }
+    }
+    let makespan = t0.elapsed().as_secs_f64();
+    ScheduleStats {
+        makespan_s: makespan,
+        thread_busy_s: busy_ns
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
+            .collect(),
+        thread_assigned_cost: assigned,
+        tasks: n,
+    }
+}
+
+/// Sequential baseline: run tasks in topological (insertion) order on the
+/// calling thread. Used by the ablation benches to measure scheduling
+/// overhead and speedup.
+pub fn execute_sequential<P, F>(dag: TaskDag<P>, runner: F) -> f64
+where
+    F: Fn(&P),
+{
+    let t0 = Instant::now();
+    for node in dag.nodes() {
+        runner(&node.payload);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Build a random layered DAG and check the scheduler never violates
+    /// dependency order.
+    #[test]
+    fn execution_respects_dependencies() {
+        let pool = ThreadPool::new(4);
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        // 3 layers of 8 tasks, each depending on 2 tasks of the previous.
+        let mut prev: Vec<usize> = Vec::new();
+        let mut all = Vec::new();
+        for layer in 0..3 {
+            let mut cur = Vec::new();
+            for i in 0..8 {
+                let deps: Vec<usize> = if layer == 0 {
+                    vec![]
+                } else {
+                    vec![prev[i % prev.len()], prev[(i + 3) % prev.len()]]
+                };
+                let id = dag.add(format!("t{layer}_{i}"), 1.0, &deps, all.len());
+                cur.push(id);
+                all.push(id);
+            }
+            prev = cur;
+        }
+        // Record completion order.
+        let n = dag.len();
+        let seq = Arc::new(AtomicUsize::new(0));
+        let finish_pos: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(usize::MAX)).collect());
+        let deps_snapshot: Vec<Vec<usize>> =
+            dag.nodes().iter().map(|nd| nd.deps.clone()).collect();
+        {
+            let seq = Arc::clone(&seq);
+            let fp = Arc::clone(&finish_pos);
+            execute_dag(&pool, dag, move |&tid| {
+                let p = seq.fetch_add(1, Ordering::SeqCst);
+                fp[tid].store(p, Ordering::SeqCst);
+            });
+        }
+        for (tid, deps) in deps_snapshot.iter().enumerate() {
+            let my = finish_pos[tid].load(Ordering::SeqCst);
+            for &d in deps {
+                let dp = finish_pos[d].load(Ordering::SeqCst);
+                assert!(dp < my, "task {tid} (pos {my}) finished before dep {d} (pos {dp})");
+            }
+        }
+    }
+
+    #[test]
+    fn all_tasks_run_exactly_once() {
+        let pool = ThreadPool::new(3);
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for i in 0..50 {
+            let deps = if i >= 10 { vec![i - 10] } else { vec![] };
+            dag.add("t", 1.0, &deps, i);
+        }
+        let counts: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..50).map(|_| AtomicUsize::new(0)).collect());
+        let c2 = Arc::clone(&counts);
+        let stats = execute_dag(&pool, dag, move |&i| {
+            c2[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(stats.tasks, 50);
+        for c in counts.iter() {
+            assert_eq!(c.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn assigned_cost_is_balanced_for_uniform_independent_tasks() {
+        let pool = ThreadPool::new(4);
+        let mut dag: TaskDag<()> = TaskDag::new();
+        for _ in 0..64 {
+            dag.add("t", 1.0, &[], ());
+        }
+        let stats = execute_dag(&pool, dag, |_| {});
+        // 64 equal tasks over 4 threads → exactly 16 cost units each.
+        assert!(stats.assigned_balance_index() > 0.99, "{:?}", stats.thread_assigned_cost);
+    }
+
+    #[test]
+    fn heavier_tasks_spread_by_cost() {
+        let pool = ThreadPool::new(2);
+        let mut dag: TaskDag<()> = TaskDag::new();
+        // One big task (cost 3) + three small (cost 1) → 3 | 1+1+1 split.
+        dag.add("big", 3.0, &[], ());
+        for _ in 0..3 {
+            dag.add("small", 1.0, &[], ());
+        }
+        let stats = execute_dag(&pool, dag, |_| {});
+        let mut costs = stats.thread_assigned_cost.clone();
+        costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(costs, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn sequential_runs_everything() {
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for i in 0..10 {
+            dag.add("t", 1.0, &[], i);
+        }
+        let count = std::cell::Cell::new(0usize);
+        execute_sequential(dag, |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], 0);
+        dag.add("b", 1.0, &[a], 1);
+        let stats = execute_dag(&pool, dag, |_| {});
+        assert_eq!(stats.tasks, 2);
+        assert_eq!(stats.thread_assigned_cost.len(), 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! BPT-CNN — reproduction of "A Bi-layered Parallel Training Architecture for
+//! Large-scale Convolutional Neural Networks" (Chen et al., IEEE TPDS 2018).
+//!
+//! Layer 3 of the Rust + JAX + Pallas stack: the distributed-training
+//! coordinator (outer-layer IDPA/SGWU/AGWU, inner-layer task-DAG
+//! scheduling), the PJRT runtime that executes the AOT-compiled XLA
+//! artifacts, the discrete-event cluster simulator behind the paper's
+//! performance figures, and every substrate those need.
+#![allow(clippy::needless_range_loop)]
+
+pub mod config;
+pub mod data;
+pub mod inner;
+pub mod nn;
+pub mod outer;
+pub mod runtime;
+pub mod sim;
+pub mod metrics;
+pub mod experiments;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,373 @@
+//! `bptcnn` — the BPT-CNN launcher (Layer-3 leader entrypoint).
+//!
+//! Subcommands:
+//!   train       run distributed training on the in-process cluster
+//!   simulate    run one discrete-event cluster simulation
+//!   experiment  regenerate a paper table/figure (fig11..fig15, table1, all)
+//!   inspect     print artifact manifest / config information
+
+use bptcnn::config::{
+    ClusterConfig, NetworkConfig, PartitionStrategy, TrainConfig, UpdateStrategy,
+};
+use bptcnn::metrics::Table;
+use bptcnn::sim::{simulate, SimConfig};
+use bptcnn::util::cli::{Args, CliError};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("simulate") => cmd_simulate(&argv[1..]),
+        Some("experiment") => cmd_experiment(&argv[1..]),
+        Some("inspect") => cmd_inspect(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "bptcnn — Bi-layered Parallel Training for large-scale CNNs (TPDS'18 reproduction)\n\n\
+         USAGE: bptcnn <command> [flags]\n\n\
+         COMMANDS:\n  \
+           train       distributed training on the in-process cluster\n  \
+           simulate    discrete-event cluster simulation at paper scale\n  \
+           experiment  regenerate paper results: fig11..fig15, table1, all\n  \
+           inspect     show artifact manifests and configs\n\n\
+         Run `bptcnn <command> --help` for flags."
+    );
+}
+
+fn handle<T>(r: Result<T, CliError>, usage: &str) -> Result<T, i32> {
+    match r {
+        Ok(v) => Ok(v),
+        Err(CliError::HelpRequested) => {
+            println!("{usage}");
+            Err(0)
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n{usage}");
+            Err(2)
+        }
+    }
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let spec = Args::new("bptcnn train", "distributed training on the in-process cluster")
+        .opt("network", "quickstart", "network config: quickstart|e2e|case1..case7")
+        .opt("update", "agwu", "global weight update strategy: agwu|sgwu")
+        .opt("partition", "idpa", "data partitioning: idpa|udpa")
+        .opt("nodes", "4", "computing nodes (worker threads)")
+        .opt("samples", "2048", "training samples (synthetic dataset)")
+        .opt("iterations", "10", "training iterations K")
+        .opt("batches", "4", "IDPA batches A")
+        .opt("lr", "0.1", "learning rate η (Eq. 23)")
+        .opt("seed", "42", "RNG seed")
+        .opt("backend", "native", "compute backend: native|xla");
+    let usage = spec.usage();
+    let p = match handle(spec.parse(argv), &usage) {
+        Ok(p) => p,
+        Err(c) => return c,
+    };
+    let run = || -> anyhow::Result<()> {
+        let network = parse_network(p.str("network"))?;
+        let tc = TrainConfig {
+            network,
+            update: UpdateStrategy::parse(p.str("update"))?,
+            partition: PartitionStrategy::parse(p.str("partition"))?,
+            total_samples: p.usize("samples")?,
+            iterations: p.usize("iterations")?,
+            idpa_batches: p.usize("batches")?,
+            learning_rate: p.f64("lr")? as f32,
+            seed: p.u64("seed")?,
+        };
+        let cluster = ClusterConfig::heterogeneous(p.usize("nodes")?, tc.seed ^ 0x5EED);
+        println!(
+            "training {} ({} params) on {} nodes: {} + {}, N={}, K={}",
+            tc.network.name,
+            tc.network.param_count(),
+            cluster.size(),
+            tc.update.name(),
+            tc.partition.name(),
+            tc.total_samples,
+            tc.iterations
+        );
+        let report = match p.str("backend") {
+            "native" => bptcnn::outer::train_native(&tc, &cluster),
+            "xla" => train_xla(&tc, &cluster)?,
+            other => anyhow::bail!("unknown backend '{other}'"),
+        };
+        let mut t = Table::new("training curve (held-out)", &["version", "t[s]", "loss", "accuracy"]);
+        for c in &report.curve {
+            t.row(&[
+                format!("{}", c.version),
+                format!("{:.2}", c.at_s),
+                format!("{:.4}", c.loss),
+                format!("{:.3}", c.accuracy),
+            ]);
+        }
+        t.print();
+        println!(
+            "\nfinal accuracy {:.3} | AUC {:.3} | comm {:.2} MB | sync wait {:.2} s | balance {:.3} | wall {:.1} s",
+            report.final_accuracy,
+            report.accuracy_auc,
+            report.comm_mb,
+            report.sync_wait_s,
+            report.balance_index,
+            report.wall_s
+        );
+        println!("allocations: {:?}", report.allocations);
+        Ok(())
+    };
+    exit_on(run())
+}
+
+/// XLA-backed training: the artifacts drive every worker through the shared
+/// device service (Python is not involved).
+fn train_xla(
+    tc: &TrainConfig,
+    cluster: &ClusterConfig,
+) -> anyhow::Result<bptcnn::outer::TrainReport> {
+    use bptcnn::outer::worker::LocalTrainer;
+    use bptcnn::runtime::{find_model_dir, XlaService, XlaTrainer};
+    use std::sync::Arc;
+
+    let dir = find_model_dir(&tc.network.name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "artifacts for '{}' not found — run `make artifacts` first",
+            tc.network.name
+        )
+    })?;
+    let service = XlaService::start(&dir)?;
+    // Use the manifest's network config (authoritative for batch shape).
+    let network = service.handle().manifest.config.clone();
+    let tc = TrainConfig { network: network.clone(), ..tc.clone() };
+    let train_ds = Arc::new(bptcnn::data::Dataset::synthetic(
+        &network,
+        tc.total_samples,
+        0.3,
+        tc.seed,
+    ));
+    let eval_ds = bptcnn::data::Dataset::synthetic_split(&network, 256, 0.3, tc.seed, tc.seed ^ 0xEEEE);
+    let (schedule, allocations, iterations) = bptcnn::outer::build_schedule(&tc, cluster);
+    let slow = bptcnn::outer::slowdown_factors(cluster);
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..cluster.size())
+        .map(|j| {
+            Box::new(
+                XlaTrainer::new(service.handle(), Arc::clone(&train_ds), tc.learning_rate)
+                    .with_slowdown(slow[j]),
+            ) as Box<dyn LocalTrainer>
+        })
+        .collect();
+    let init = service.handle().init_weights(tc.seed as i32)?;
+    let eval_handle = service.handle();
+    let net2 = network.clone();
+    let eval_hook = move |ws: &bptcnn::tensor::WeightSet| -> (f64, f64) {
+        let bsz = net2.batch_size;
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut batches = 0usize;
+        let mut seen = 0usize;
+        while seen < eval_ds.len() {
+            let (xv, yv, _) = eval_ds.batch(seen, bsz);
+            let x = bptcnn::tensor::Tensor::from_vec(
+                &[bsz, net2.input_hw, net2.input_hw, net2.in_channels],
+                xv,
+            );
+            let y = bptcnn::tensor::Tensor::from_vec(&[bsz, net2.num_classes], yv);
+            let (l, c) = eval_handle.eval_step(ws.clone(), x, y).expect("xla eval");
+            loss += l as f64;
+            correct += c as f64;
+            seen += bsz;
+            batches += 1;
+        }
+        (loss / batches as f64, correct / (batches * bsz) as f64)
+    };
+    let report = match tc.update {
+        UpdateStrategy::Sgwu => {
+            bptcnn::outer::run_sgwu(init, workers, &schedule, iterations, Some(&eval_hook))
+        }
+        UpdateStrategy::Agwu => {
+            bptcnn::outer::run_agwu(init, workers, &schedule, iterations, Some(&eval_hook))
+        }
+    };
+    // Package like train_native does.
+    let curve: Vec<bptcnn::outer::CurvePoint> = report
+        .versions
+        .iter()
+        .filter_map(|v| {
+            v.eval.map(|(loss, accuracy)| bptcnn::outer::CurvePoint {
+                version: v.version,
+                at_s: v.at_s,
+                loss,
+                accuracy,
+            })
+        })
+        .collect();
+    let final_accuracy = curve.last().map(|c| c.accuracy).unwrap_or(0.0);
+    let pts: Vec<(f64, f64)> = curve.iter().map(|c| (c.version as f64, c.accuracy)).collect();
+    let span = pts.last().map(|p| p.0).unwrap_or(1.0) - pts.first().map(|p| p.0).unwrap_or(0.0);
+    let accuracy_auc = if span > 0.0 {
+        bptcnn::util::stats::auc(&pts) / span
+    } else {
+        final_accuracy
+    };
+    Ok(bptcnn::outer::TrainReport {
+        comm_mb: report.comm.megabytes(),
+        sync_wait_s: report.sync_wait_s,
+        balance_index: report.balance_index(),
+        wall_s: report.wall_s,
+        curve,
+        allocations,
+        final_accuracy,
+        accuracy_auc,
+        cluster: report,
+    })
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let spec = Args::new("bptcnn simulate", "discrete-event cluster simulation")
+        .opt("network", "e2e", "network config: quickstart|e2e|case1..case7")
+        .opt("update", "agwu", "agwu|sgwu")
+        .opt("partition", "idpa", "idpa|udpa")
+        .opt("nodes", "30", "cluster size")
+        .opt("samples", "100000", "training samples N")
+        .opt("iterations", "100", "iterations K")
+        .opt("batches", "10", "IDPA batches A")
+        .opt("threads", "8", "inner-layer threads per node")
+        .opt("seed", "7", "RNG seed");
+    let usage = spec.usage();
+    let p = match handle(spec.parse(argv), &usage) {
+        Ok(p) => p,
+        Err(c) => return c,
+    };
+    let run = || -> anyhow::Result<()> {
+        let cfg = SimConfig {
+            network: parse_network(p.str("network"))?,
+            cluster: ClusterConfig::heterogeneous(p.usize("nodes")?, p.u64("seed")?),
+            update: UpdateStrategy::parse(p.str("update"))?,
+            partition: PartitionStrategy::parse(p.str("partition"))?,
+            samples: p.usize("samples")?,
+            iterations: p.usize("iterations")?,
+            idpa_batches: p.usize("batches")?,
+            threads_per_node: p.usize("threads")?,
+            seed: p.u64("seed")?,
+        };
+        let r = simulate(&cfg);
+        println!(
+            "{} + {} | {} nodes | N={} K={}",
+            cfg.update.name(),
+            cfg.partition.name(),
+            cfg.cluster.size(),
+            cfg.samples,
+            cfg.iterations
+        );
+        println!("  makespan        {:.2} s", r.total_s);
+        println!("  sync wait (Eq8) {:.2} s", r.sync_wait_s);
+        println!("  comm (Eq11)     {:.2} MB over {:.2} s", r.comm_mb, r.comm_time_s);
+        println!("  balance index   {:.3}", r.balance_index);
+        println!("  versions        {} (mean staleness {:.2})", r.versions, r.mean_staleness);
+        Ok(())
+    };
+    exit_on(run())
+}
+
+fn cmd_experiment(argv: &[String]) -> i32 {
+    let spec = Args::new("bptcnn experiment", "regenerate a paper table/figure")
+        .opt("id", "all", "fig11|fig12|fig13|fig14|fig15|table1|all")
+        .flag("quick", "shrink workloads for a fast smoke run")
+        .opt("out", "", "also write the rendered text to this file");
+    let usage = spec.usage();
+    let p = match handle(spec.parse(argv), &usage) {
+        Ok(p) => p,
+        Err(c) => return c,
+    };
+    // Allow positional id: `bptcnn experiment fig12`.
+    let id = p
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| p.str("id").to_string());
+    let run = || -> anyhow::Result<()> {
+        let text = bptcnn::experiments::run(&id, p.bool("quick"))?;
+        let out = p.str("out");
+        if !out.is_empty() {
+            std::fs::write(out, &text)?;
+            println!("\n(wrote {out})");
+        }
+        Ok(())
+    };
+    exit_on(run())
+}
+
+fn cmd_inspect(argv: &[String]) -> i32 {
+    let spec = Args::new("bptcnn inspect", "show artifact manifests and configs")
+        .opt("network", "e2e", "network name");
+    let usage = spec.usage();
+    let p = match handle(spec.parse(argv), &usage) {
+        Ok(p) => p,
+        Err(c) => return c,
+    };
+    let run = || -> anyhow::Result<()> {
+        let name = p.str("network");
+        let cfg = parse_network(name)?;
+        let mut t = Table::new(
+            &format!("network '{}'", cfg.name),
+            &["param", "shape", "elements"],
+        );
+        for (pname, shape) in cfg.param_shapes() {
+            let n: usize = shape.iter().product();
+            t.row(&[pname, format!("{shape:?}"), format!("{n}")]);
+        }
+        t.print();
+        println!(
+            "\ntotal {} params | {} KB weight set | ~{:.1} MFLOPs/sample",
+            cfg.param_count(),
+            cfg.weight_bytes() / 1024,
+            cfg.flops_per_sample() / 1e6
+        );
+        match bptcnn::runtime::find_model_dir(name) {
+            Some(dir) => {
+                let m = bptcnn::runtime::ArtifactManifest::load(&dir)?;
+                println!("artifacts: {} (validated ✓)", m.dir.display());
+            }
+            None => println!("artifacts: not built (run `make artifacts`)"),
+        }
+        Ok(())
+    };
+    exit_on(run())
+}
+
+fn parse_network(name: &str) -> anyhow::Result<NetworkConfig> {
+    match name {
+        "quickstart" => Ok(NetworkConfig::quickstart()),
+        "e2e" => Ok(NetworkConfig::default()),
+        other => {
+            if let Some(case) = other.strip_prefix("case") {
+                let case: usize = case.parse()?;
+                anyhow::ensure!((1..=7).contains(&case), "case must be 1..=7");
+                Ok(NetworkConfig::table2_case(case))
+            } else {
+                anyhow::bail!("unknown network '{other}' (quickstart|e2e|case1..case7)")
+            }
+        }
+    }
+}
+
+fn exit_on(r: anyhow::Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! Terminal line charts — the paper's figures, rendered as ASCII so
+//! `bptcnn experiment figNN` output is self-contained.
+
+/// Render one or more named series as an ASCII chart. Points are (x, y);
+/// series are marked with distinct glyphs.
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) =
+        (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in pts {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("{ymax:>10.3} ┤"));
+    out.push_str(&grid[0].iter().collect::<String>());
+    out.push('\n');
+    for row in grid.iter().take(height - 1).skip(1) {
+        out.push_str("           │");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>10.3} ┤"));
+    out.push_str(&grid[height - 1].iter().collect::<String>());
+    out.push('\n');
+    out.push_str(&format!(
+        "           └{}\n            {:<10.3}{:>width$.3}\n",
+        "─".repeat(width),
+        xmin,
+        xmax,
+        width = width - 10
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", GLYPHS[i % GLYPHS.len()], name))
+        .collect();
+    out.push_str(&format!("            {}\n", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_series() {
+        let s = ascii_chart(
+            "test",
+            &[
+                ("up", vec![(0.0, 0.0), (1.0, 1.0)]),
+                ("down", vec![(0.0, 1.0), (1.0, 0.0)]),
+            ],
+            40,
+            10,
+        );
+        assert!(s.contains("test"));
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("up") && s.contains("down"));
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = ascii_chart("empty", &[("none", vec![])], 40, 10);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_safe() {
+        let s = ascii_chart("flat", &[("c", vec![(1.0, 5.0), (2.0, 5.0)])], 30, 8);
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,40 @@
+//! Result presentation: aligned tables (the paper's rows), ASCII charts
+//! (the paper's figures in terminal form), and JSON run logs.
+
+pub mod chart;
+pub mod table;
+
+pub use chart::ascii_chart;
+pub use table::Table;
+
+use crate::util::json::Json;
+
+/// Append a run record to a JSON-lines log file (used by the experiment
+/// harness so EXPERIMENTS.md numbers are reproducible from disk).
+pub fn log_run(path: &str, record: Json) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{record}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_run_appends_parseable_lines() {
+        let path = std::env::temp_dir().join(format!("bptcnn_log_{}.jsonl", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        log_run(&path, Json::obj(vec![("a", Json::from(1.0))])).unwrap();
+        log_run(&path, Json::obj(vec![("a", Json::from(2.0))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(Json::parse(lines[1]).unwrap().get("a").as_f64(), Some(2.0));
+        let _ = std::fs::remove_file(&path);
+    }
+}

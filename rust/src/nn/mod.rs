@@ -1,0 +1,12 @@
+//! Native (pure-Rust) CNN implementation — the paper's per-node subnetwork.
+//!
+//! `ops` holds the dense primitives (conv/pool/dense forward+backward, the
+//! Eq. 16 loss); `network` assembles them into the full model matching the
+//! L2 JAX definition. The inner-layer parallel scheduler (`crate::inner`)
+//! decomposes these same computations into DAG tasks per §4.1/§4.2.
+
+pub mod network;
+pub mod ops;
+
+pub use network::{Activations, Network};
+pub use ops::ConvDims;

@@ -1,0 +1,416 @@
+//! The native CNN: a pure-Rust implementation of the exact network the L2
+//! JAX model defines (same layer stack, same weight-set layout, same loss).
+//!
+//! Roles:
+//! * the artifact-free [`crate::runtime::NativeBackend`] used by most tests
+//!   and the simulator calibration;
+//! * the task source for the inner-layer parallel scheduler (`inner/`),
+//!   which re-executes the conv/backprop loops as DAG tasks (§4.1/4.2).
+
+use crate::config::NetworkConfig;
+use crate::tensor::{Tensor, WeightSet};
+use crate::util::rng::Xoshiro256;
+
+use super::ops::{self, ConvDims};
+
+/// Cached per-layer activations from one forward pass (needed by backward).
+#[derive(Debug, Clone)]
+pub struct Activations {
+    /// Input batch (NHWC flattened).
+    pub input: Vec<f32>,
+    /// Post-ReLU output of each conv layer.
+    pub conv_outs: Vec<Vec<f32>>,
+    /// Output of the pooling layer (flattened features).
+    pub pooled: Vec<f32>,
+    /// Post-ReLU output of each hidden FC layer.
+    pub fc_outs: Vec<Vec<f32>>,
+    /// Final logits.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+}
+
+/// A CNN (sub)network with its local weight set (paper Definition 1).
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub cfg: NetworkConfig,
+    pub weights: WeightSet,
+}
+
+impl Network {
+    /// He-initialised network; biases zero (parity with the L2 model's
+    /// `init_params`, though RNG streams differ).
+    pub fn init(cfg: &NetworkConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let tensors = cfg
+            .param_shapes()
+            .into_iter()
+            .map(|(name, shape)| {
+                if name.ends_with(".bias") {
+                    Tensor::zeros(&shape)
+                } else {
+                    let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                    let std = (2.0 / fan_in as f64).sqrt() as f32;
+                    Tensor::randn(&shape, &mut rng, 0.0, std)
+                }
+            })
+            .collect();
+        Self { cfg: cfg.clone(), weights: WeightSet::new(tensors) }
+    }
+
+    /// Wrap an existing weight set (e.g. fetched from the parameter server
+    /// or produced by the XLA `init` artifact).
+    pub fn with_weights(cfg: &NetworkConfig, weights: WeightSet) -> Self {
+        assert_eq!(
+            weights.len(),
+            cfg.param_shapes().len(),
+            "weight set arity does not match config"
+        );
+        Self { cfg: cfg.clone(), weights }
+    }
+
+    fn conv_dims(&self, layer: usize, batch: usize) -> ConvDims {
+        let c = if layer == 0 { self.cfg.in_channels } else { self.cfg.filters };
+        ConvDims {
+            n: batch,
+            h: self.cfg.input_hw,
+            w: self.cfg.input_hw,
+            c,
+            k: self.cfg.kernel_hw,
+            co: self.cfg.filters,
+        }
+    }
+
+    /// Forward pass, caching activations for backward.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Activations {
+        let cfg = &self.cfg;
+        let hw = cfg.input_hw;
+        assert_eq!(x.len(), batch * hw * hw * cfg.in_channels, "bad input length");
+        let ws = self.weights.tensors();
+        let mut cur = x.to_vec();
+        let mut conv_outs = Vec::with_capacity(cfg.conv_layers);
+        let mut pi = 0;
+        for layer in 0..cfg.conv_layers {
+            let d = self.conv_dims(layer, batch);
+            let mut out = vec![0.0f32; d.y_len()];
+            ops::conv2d_same_fwd(&d, &cur, ws[pi].data(), ws[pi + 1].data(), &mut out);
+            pi += 2;
+            ops::relu_fwd(&mut out);
+            conv_outs.push(out.clone());
+            cur = out;
+        }
+        // Pool.
+        let win = cfg.pool_window;
+        let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
+        let hp = hw / win;
+        let mut pooled = vec![0.0f32; batch * hp * hp * c];
+        ops::mean_pool_fwd(batch, hw, hw, c, win, &cur, &mut pooled);
+        // FC stack.
+        let mut feat = pooled.clone();
+        let mut fan_in = hp * hp * c;
+        let mut fc_outs = Vec::with_capacity(cfg.fc_layers);
+        for _ in 0..cfg.fc_layers {
+            let w = &ws[pi];
+            let b = &ws[pi + 1];
+            pi += 2;
+            let out_dim = w.shape()[1];
+            let mut out = vec![0.0f32; batch * out_dim];
+            ops::dense_fwd(batch, fan_in, out_dim, &feat, w.data(), b.data(), &mut out);
+            ops::relu_fwd(&mut out);
+            fc_outs.push(out.clone());
+            feat = out;
+            fan_in = out_dim;
+        }
+        let w = &ws[pi];
+        let b = &ws[pi + 1];
+        let mut logits = vec![0.0f32; batch * cfg.num_classes];
+        ops::dense_fwd(batch, fan_in, cfg.num_classes, &feat, w.data(), b.data(), &mut logits);
+        Activations {
+            input: x.to_vec(),
+            conv_outs,
+            pooled,
+            fc_outs,
+            logits,
+            batch,
+        }
+    }
+
+    /// Backward pass from one-hot labels: returns (loss, correct, gradients).
+    pub fn backward(&self, acts: &Activations, y: &[f32]) -> (f32, usize, WeightSet) {
+        let cfg = &self.cfg;
+        let batch = acts.batch;
+        let ws = self.weights.tensors();
+        let mut grads = self.weights.zeros_like();
+
+        // Loss layer (Eq. 16 + softmax Jacobian).
+        let mut dlogits = vec![0.0f32; batch * cfg.num_classes];
+        let (loss, correct) =
+            ops::mse_softmax_loss(batch, cfg.num_classes, &acts.logits, y, &mut dlogits);
+
+        // FC stack backward (Eqs. 17–23 for dense layers).
+        let hw = cfg.input_hw;
+        let win = cfg.pool_window;
+        let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
+        let hp = hw / win;
+        let pooled_dim = hp * hp * c;
+
+        let out_w_idx = 2 * cfg.conv_layers + 2 * cfg.fc_layers;
+        let gts = grads.tensors_mut();
+
+        // Output layer.
+        let last_feat: &[f32] = if cfg.fc_layers > 0 {
+            &acts.fc_outs[cfg.fc_layers - 1]
+        } else {
+            &acts.pooled
+        };
+        let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
+        let mut dfeat = vec![0.0f32; batch * last_dim];
+        {
+            let (dw, db_slice) = {
+                let (a, b) = gts.split_at_mut(out_w_idx + 1);
+                (&mut a[out_w_idx], &mut b[0])
+            };
+            ops::dense_bwd(
+                batch,
+                last_dim,
+                cfg.num_classes,
+                last_feat,
+                ws[out_w_idx].data(),
+                &dlogits,
+                &mut dfeat,
+                dw.data_mut(),
+                db_slice.data_mut(),
+            );
+        }
+
+        // Hidden FC layers, last to first.
+        for l in (0..cfg.fc_layers).rev() {
+            // ReLU backward through this layer's output.
+            ops::relu_bwd(&acts.fc_outs[l], &mut dfeat);
+            let in_feat: &[f32] = if l == 0 { &acts.pooled } else { &acts.fc_outs[l - 1] };
+            let in_dim = if l == 0 { pooled_dim } else { cfg.fc_neurons };
+            let w_idx = 2 * cfg.conv_layers + 2 * l;
+            let mut dprev = vec![0.0f32; batch * in_dim];
+            let (dw, db_slice) = {
+                let (a, b) = gts.split_at_mut(w_idx + 1);
+                (&mut a[w_idx], &mut b[0])
+            };
+            ops::dense_bwd(
+                batch,
+                in_dim,
+                cfg.fc_neurons,
+                in_feat,
+                ws[w_idx].data(),
+                &dfeat,
+                &mut dprev,
+                dw.data_mut(),
+                db_slice.data_mut(),
+            );
+            dfeat = dprev;
+        }
+
+        // Pool backward.
+        let mut dconv = vec![0.0f32; batch * hw * hw * c];
+        ops::mean_pool_bwd(batch, hw, hw, c, win, &dfeat, &mut dconv);
+
+        // Conv stack backward, last to first (Eqs. 18, 21, 22).
+        for l in (0..cfg.conv_layers).rev() {
+            ops::relu_bwd(&acts.conv_outs[l], &mut dconv);
+            let d = self.conv_dims(l, batch);
+            let in_act: &[f32] = if l == 0 { &acts.input } else { &acts.conv_outs[l - 1] };
+            let w_idx = 2 * l;
+            {
+                let (dw, db_slice) = {
+                    let (a, b) = gts.split_at_mut(w_idx + 1);
+                    (&mut a[w_idx], &mut b[0])
+                };
+                ops::conv2d_same_bwd_filter(
+                    &d,
+                    in_act,
+                    &dconv,
+                    dw.data_mut(),
+                    db_slice.data_mut(),
+                );
+            }
+            if l > 0 {
+                let mut dprev = vec![0.0f32; d.x_len()];
+                ops::conv2d_same_bwd_input(&d, &dconv, ws[w_idx].data(), &mut dprev);
+                dconv = dprev;
+            }
+        }
+
+        (loss, correct, grads)
+    }
+
+    /// One SGD step on one batch (Eq. 23): returns (loss, correct).
+    pub fn train_batch(&mut self, x: &[f32], y: &[f32], batch: usize, lr: f32) -> (f32, usize) {
+        let acts = self.forward(x, batch);
+        let (loss, correct, grads) = self.backward(&acts, y);
+        self.weights.axpy(-lr, &grads);
+        (loss, correct)
+    }
+
+    /// Evaluate one batch without updating weights.
+    pub fn eval_batch(&self, x: &[f32], y: &[f32], batch: usize) -> (f32, usize) {
+        let acts = self.forward(x, batch);
+        let mut scratch = vec![0.0f32; batch * self.cfg.num_classes];
+        ops::mse_softmax_loss(batch, self.cfg.num_classes, &acts.logits, y, &mut scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny_cfg() -> NetworkConfig {
+        NetworkConfig {
+            name: "tiny".into(),
+            input_hw: 6,
+            in_channels: 1,
+            conv_layers: 1,
+            filters: 2,
+            kernel_hw: 3,
+            fc_layers: 1,
+            fc_neurons: 8,
+            num_classes: 3,
+            batch_size: 4,
+            pool_window: 2,
+        }
+    }
+
+    #[test]
+    fn init_matches_manifest() {
+        let cfg = NetworkConfig::quickstart();
+        let net = Network::init(&cfg, 0);
+        assert_eq!(net.weights.len(), cfg.param_shapes().len());
+        assert_eq!(net.weights.param_count(), cfg.param_count());
+        for (t, (name, shape)) in net.weights.tensors().iter().zip(cfg.param_shapes()) {
+            assert_eq!(t.shape(), &shape[..], "{name}");
+            if name.ends_with(".bias") {
+                assert_eq!(t.max_abs(), 0.0, "{name} should start at zero");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let cfg = tiny_cfg();
+        let net = Network::init(&cfg, 1);
+        let x = vec![0.5f32; 4 * 6 * 6];
+        let acts = net.forward(&x, 4);
+        assert_eq!(acts.logits.len(), 4 * 3);
+        assert_eq!(acts.conv_outs.len(), 1);
+        assert_eq!(acts.conv_outs[0].len(), 4 * 6 * 6 * 2);
+        assert_eq!(acts.pooled.len(), 4 * 3 * 3 * 2);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = tiny_cfg();
+        let net = Network::init(&cfg, 2);
+        let mut rng = Xoshiro256::new(3);
+        let x: Vec<f32> = (0..2 * 36).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let mut y = vec![0.0f32; 2 * 3];
+        y[0] = 1.0;
+        y[3 + 2] = 1.0;
+        let acts = net.forward(&x, 2);
+        let (_, _, grads) = net.backward(&acts, &y);
+
+        let loss_at = |net: &Network| -> f64 {
+            let (l, _) = net.eval_batch(&x, &y, 2);
+            l as f64
+        };
+        let eps = 1e-2f32;
+        // Probe a few coordinates in each parameter tensor.
+        for ti in 0..net.weights.len() {
+            let len = net.weights.tensors()[ti].len();
+            for &idx in [0usize, len / 2, len - 1].iter() {
+                let mut np = net.clone();
+                np.weights.tensors_mut()[ti].data_mut()[idx] += eps;
+                let mut nm = net.clone();
+                nm.weights.tensors_mut()[ti].data_mut()[idx] -= eps;
+                let fd = (loss_at(&np) - loss_at(&nm)) / (2.0 * eps as f64);
+                let an = grads.tensors()[ti].data()[idx] as f64;
+                assert!(
+                    (fd - an).abs() < 5e-3,
+                    "tensor {ti} idx {idx}: fd={fd:.6} analytic={an:.6}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overfits_fixed_batch() {
+        let cfg = tiny_cfg();
+        let mut net = Network::init(&cfg, 4);
+        let ds = Dataset::synthetic(
+            &NetworkConfig { num_classes: 3, ..tiny_cfg() },
+            12,
+            0.05,
+            5,
+        );
+        let (x, y, _) = ds.batch(0, 4);
+        let (first, _) = net.eval_batch(&x, &y, 4);
+        let mut last = first;
+        for _ in 0..60 {
+            let (l, _) = net.train_batch(&x, &y, 4, 0.5);
+            last = l;
+        }
+        assert!(last < 0.5 * first, "no learning: first={first} last={last}");
+    }
+
+    #[test]
+    fn learns_synthetic_task_better_than_chance() {
+        let cfg = NetworkConfig {
+            name: "learn".into(),
+            input_hw: 8,
+            in_channels: 1,
+            conv_layers: 1,
+            filters: 4,
+            kernel_hw: 3,
+            fc_layers: 1,
+            fc_neurons: 16,
+            num_classes: 4,
+            batch_size: 8,
+            pool_window: 2,
+        };
+        let ds = Dataset::synthetic(&cfg, 256, 0.3, 6);
+        let mut net = Network::init(&cfg, 7);
+        for epoch in 0..6 {
+            let _ = epoch;
+            for start in (0..256).step_by(8) {
+                let (x, y, _) = ds.batch(start, 8);
+                net.train_batch(&x, &y, 8, 0.2);
+            }
+        }
+        let mut correct = 0;
+        for start in (0..256).step_by(8) {
+            let (x, y, _) = ds.batch(start, 8);
+            let (_, c) = net.eval_batch(&x, &y, 8);
+            correct += c;
+        }
+        let acc = correct as f64 / 256.0;
+        assert!(acc > 0.6, "accuracy {acc} not better than chance (0.25)");
+    }
+
+    #[test]
+    fn eval_does_not_change_weights() {
+        let cfg = tiny_cfg();
+        let net = Network::init(&cfg, 8);
+        let before = net.weights.clone();
+        let x = vec![0.1f32; 2 * 36];
+        let y = vec![0.0f32; 6];
+        let _ = net.eval_batch(&x, &y, 2);
+        assert_eq!(net.weights.max_abs_diff(&before), 0.0);
+    }
+
+    #[test]
+    fn with_weights_validates_arity() {
+        let cfg = tiny_cfg();
+        let net = Network::init(&cfg, 9);
+        let w = net.weights.clone();
+        let net2 = Network::with_weights(&cfg, w);
+        assert_eq!(net2.weights.param_count(), cfg.param_count());
+    }
+}

@@ -1,0 +1,642 @@
+//! Dense NN primitives (serial reference implementations).
+//!
+//! Layouts match the Layer-1/Layer-2 Python side exactly: images NHWC,
+//! filters HWIO, FC row-major `(B, I) @ (I, O)`. The inner-layer task
+//! decomposition (`inner/conv_tasks.rs`) re-uses the per-row helpers here so
+//! the parallel and serial paths share one numeric core.
+
+/// Dimensions of a SAME convolution (stride 1, P = (k−1)/2 per Eq. 12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvDims {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub k: usize,
+    pub co: usize,
+}
+
+impl ConvDims {
+    pub fn pad(&self) -> usize {
+        (self.k - 1) / 2
+    }
+
+    pub fn x_len(&self) -> usize {
+        self.n * self.h * self.w * self.c
+    }
+
+    pub fn f_len(&self) -> usize {
+        self.k * self.k * self.c * self.co
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.n * self.h * self.w * self.co
+    }
+
+    /// K_C of Eq. 13 for SAME/stride-1: one task per output element
+    /// (per image, per output channel collapsed into the task body).
+    pub fn kc(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+#[inline]
+fn xi(d: &ConvDims, n: usize, y: usize, x: usize, c: usize) -> usize {
+    ((n * d.h + y) * d.w + x) * d.c + c
+}
+
+#[inline]
+fn yi(d: &ConvDims, n: usize, y: usize, x: usize, o: usize) -> usize {
+    ((n * d.h + y) * d.w + x) * d.co + o
+}
+
+#[inline]
+fn fi(d: &ConvDims, ky: usize, kx: usize, c: usize, o: usize) -> usize {
+    ((ky * d.k + kx) * d.c + c) * d.co + o
+}
+
+/// Compute one output row `(image n, row y)` of a SAME convolution — this is
+/// the granularity of the paper's Eq.-13/14 convolution tasks (a row of
+/// `a_{i,j}` values; one scalar per task would drown in scheduling overhead,
+/// see DESIGN.md §Hardware-Adaptation).
+pub fn conv2d_same_row(
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    bias: &[f32],
+    n: usize,
+    y: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), d.w * d.co);
+    let p = d.pad() as isize;
+    for ox in 0..d.w {
+        let base = ox * d.co;
+        out[base..base + d.co].copy_from_slice(bias);
+        for ky in 0..d.k {
+            let iy = y as isize + ky as isize - p;
+            if iy < 0 || iy >= d.h as isize {
+                continue;
+            }
+            for kx in 0..d.k {
+                let ix = ox as isize + kx as isize - p;
+                if ix < 0 || ix >= d.w as isize {
+                    continue;
+                }
+                let xoff = xi(d, n, iy as usize, ix as usize, 0);
+                let foff = fi(d, ky, kx, 0, 0);
+                for c in 0..d.c {
+                    let xv = x[xoff + c];
+                    let frow = &f[foff + c * d.co..foff + (c + 1) * d.co];
+                    let orow = &mut out[base..base + d.co];
+                    for o in 0..d.co {
+                        orow[o] += xv * frow[o];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full SAME convolution forward: Eq. (1) with zero padding, stride 1.
+pub fn conv2d_same_fwd(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), d.x_len());
+    debug_assert_eq!(f.len(), d.f_len());
+    debug_assert_eq!(bias.len(), d.co);
+    debug_assert_eq!(out.len(), d.y_len());
+    let row = d.w * d.co;
+    for n in 0..d.n {
+        for y in 0..d.h {
+            let start = (n * d.h + y) * row;
+            conv2d_same_row(d, x, f, bias, n, y, &mut out[start..start + row]);
+        }
+    }
+}
+
+/// Backward of SAME conv w.r.t. input (Eq. 18): full correlation with the
+/// flipped filter.
+pub fn conv2d_same_bwd_input(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), d.y_len());
+    debug_assert_eq!(dx.len(), d.x_len());
+    dx.fill(0.0);
+    let p = d.pad() as isize;
+    for n in 0..d.n {
+        for oy in 0..d.h {
+            for ox in 0..d.w {
+                let dybase = yi(d, n, oy, ox, 0);
+                for ky in 0..d.k {
+                    let iy = oy as isize + ky as isize - p;
+                    if iy < 0 || iy >= d.h as isize {
+                        continue;
+                    }
+                    for kx in 0..d.k {
+                        let ix = ox as isize + kx as isize - p;
+                        if ix < 0 || ix >= d.w as isize {
+                            continue;
+                        }
+                        let xoff = xi(d, n, iy as usize, ix as usize, 0);
+                        let foff = fi(d, ky, kx, 0, 0);
+                        for c in 0..d.c {
+                            let mut acc = 0.0f32;
+                            let frow = &f[foff + c * d.co..foff + (c + 1) * d.co];
+                            for o in 0..d.co {
+                                acc += dy[dybase + o] * frow[o];
+                            }
+                            dx[xoff + c] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward of SAME conv w.r.t. the filter (Eq. 21) and bias (Eq. 22).
+pub fn conv2d_same_bwd_filter(
+    d: &ConvDims,
+    x: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(df.len(), d.f_len());
+    debug_assert_eq!(db.len(), d.co);
+    df.fill(0.0);
+    db.fill(0.0);
+    let p = d.pad() as isize;
+    for n in 0..d.n {
+        for oy in 0..d.h {
+            for ox in 0..d.w {
+                let dybase = yi(d, n, oy, ox, 0);
+                for o in 0..d.co {
+                    db[o] += dy[dybase + o];
+                }
+                for ky in 0..d.k {
+                    let iy = oy as isize + ky as isize - p;
+                    if iy < 0 || iy >= d.h as isize {
+                        continue;
+                    }
+                    for kx in 0..d.k {
+                        let ix = ox as isize + kx as isize - p;
+                        if ix < 0 || ix >= d.w as isize {
+                            continue;
+                        }
+                        let xoff = xi(d, n, iy as usize, ix as usize, 0);
+                        let foff = fi(d, ky, kx, 0, 0);
+                        for c in 0..d.c {
+                            let xv = x[xoff + c];
+                            let frow = &mut df[foff + c * d.co..foff + (c + 1) * d.co];
+                            for o in 0..d.co {
+                                frow[o] += xv * dy[dybase + o];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// ReLU forward in-place; returns nothing (mask derivable from output).
+pub fn relu_fwd(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: `dx = dy * (out > 0)` where `out` is the *post*-ReLU
+/// activation.
+pub fn relu_bwd(out: &[f32], dy: &mut [f32]) {
+    for (g, &o) in dy.iter_mut().zip(out.iter()) {
+        if o <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Non-overlapping mean pool forward. `(n, h, w, c)` → `(n, h/win, w/win, c)`.
+pub fn mean_pool_fwd(n: usize, h: usize, w: usize, c: usize, win: usize, x: &[f32], out: &mut [f32]) {
+    let ho = h / win;
+    let wo = w / win;
+    debug_assert_eq!(out.len(), n * ho * wo * c);
+    let inv = 1.0 / (win * win) as f32;
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let obase = ((b * ho + oy) * wo + ox) * c;
+                for ch in 0..c {
+                    out[obase + ch] = 0.0;
+                }
+                for dy_ in 0..win {
+                    for dx_ in 0..win {
+                        let ibase = ((b * h + oy * win + dy_) * w + ox * win + dx_) * c;
+                        for ch in 0..c {
+                            out[obase + ch] += x[ibase + ch];
+                        }
+                    }
+                }
+                for ch in 0..c {
+                    out[obase + ch] *= inv;
+                }
+            }
+        }
+    }
+}
+
+/// Mean pool backward: uniform spread of the gradient over each window.
+pub fn mean_pool_bwd(n: usize, h: usize, w: usize, c: usize, win: usize, dy: &[f32], dx: &mut [f32]) {
+    let ho = h / win;
+    let wo = w / win;
+    debug_assert_eq!(dy.len(), n * ho * wo * c);
+    debug_assert_eq!(dx.len(), n * h * w * c);
+    dx.fill(0.0);
+    let inv = 1.0 / (win * win) as f32;
+    for b in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let obase = ((b * ho + oy) * wo + ox) * c;
+                for dy_ in 0..win {
+                    for dx_ in 0..win {
+                        let ibase = ((b * h + oy * win + dy_) * w + ox * win + dx_) * c;
+                        for ch in 0..c {
+                            dx[ibase + ch] = dy[obase + ch] * inv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense forward: `out = x @ w + b`; x is `(m, k)`, w `(k, n)`, b `(n,)`.
+pub fn dense_fwd(m: usize, k: usize, n: usize, x: &[f32], w: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.copy_from_slice(b);
+        let xrow = &x[i * k..(i + 1) * k];
+        for (kk, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // post-ReLU activations are often sparse
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += xv * wrow[j];
+            }
+        }
+    }
+}
+
+/// Dense backward: `dx = dy @ wᵀ`, `dw = xᵀ @ dy`, `db = Σ dy`.
+pub fn dense_bwd(
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    dx.fill(0.0);
+    dw.fill(0.0);
+    db.fill(0.0);
+    for i in 0..m {
+        let dyrow = &dy[i * n..(i + 1) * n];
+        for j in 0..n {
+            db[j] += dyrow[j];
+        }
+        let xrow = &x[i * k..(i + 1) * k];
+        let dxrow = &mut dx[i * k..(i + 1) * k];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += dyrow[j] * wrow[j];
+            }
+            dxrow[kk] = acc;
+            let xv = xrow[kk];
+            if xv != 0.0 {
+                let dwrow = &mut dw[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    dwrow[j] += xv * dyrow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Softmax over the last axis of a `(m, n)` matrix, in place.
+pub fn softmax_rows(m: usize, n: usize, x: &mut [f32]) {
+    for i in 0..m {
+        let row = &mut x[i * n..(i + 1) * n];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Square-error loss of the output layer (Eq. 16) on softmax probabilities,
+/// averaged over the batch; also returns the gradient w.r.t. the logits and
+/// the number of correct argmax predictions.
+///
+/// dE/dz_j = p_j · (g_j − Σ_i g_i·p_i) with g = 2(p − y)/B (softmax Jacobian
+/// applied to the square-error gradient).
+pub fn mse_softmax_loss(
+    m: usize,
+    n: usize,
+    logits: &[f32],
+    y: &[f32],
+    dlogits: &mut [f32],
+) -> (f32, usize) {
+    debug_assert_eq!(logits.len(), m * n);
+    debug_assert_eq!(y.len(), m * n);
+    let mut probs = logits.to_vec();
+    softmax_rows(m, n, &mut probs);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let inv_b = 1.0 / m as f32;
+    for i in 0..m {
+        let p = &probs[i * n..(i + 1) * n];
+        let yy = &y[i * n..(i + 1) * n];
+        let zrow = &logits[i * n..(i + 1) * n];
+        // loss
+        for j in 0..n {
+            let d = (yy[j] - p[j]) as f64;
+            loss += d * d;
+        }
+        // correctness (argmax of logits vs one-hot)
+        let pred = argmax(zrow);
+        let truth = argmax(yy);
+        if pred == truth {
+            correct += 1;
+        }
+        // gradient
+        let g: Vec<f32> = (0..n).map(|j| 2.0 * (p[j] - yy[j]) * inv_b).collect();
+        let gp: f32 = (0..n).map(|j| g[j] * p[j]).sum();
+        let drow = &mut dlogits[i * n..(i + 1) * n];
+        for j in 0..n {
+            drow[j] = p[j] * (g[j] - gp);
+        }
+    }
+    ((loss / m as f64) as f32, correct)
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    /// Brute-force SAME conv used as the in-Rust oracle.
+    fn conv_naive(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32]) -> Vec<f32> {
+        let p = d.pad() as isize;
+        let mut out = vec![0.0f32; d.y_len()];
+        for n in 0..d.n {
+            for oy in 0..d.h {
+                for ox in 0..d.w {
+                    for o in 0..d.co {
+                        let mut acc = bias[o];
+                        for ky in 0..d.k {
+                            for kx in 0..d.k {
+                                let iy = oy as isize + ky as isize - p;
+                                let ix = ox as isize + kx as isize - p;
+                                if iy < 0 || ix < 0 || iy >= d.h as isize || ix >= d.w as isize {
+                                    continue;
+                                }
+                                for c in 0..d.c {
+                                    acc += x[xi(d, n, iy as usize, ix as usize, c)]
+                                        * f[fi(d, ky, kx, c, o)];
+                                }
+                            }
+                        }
+                        out[yi(d, n, oy, ox, o)] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_fwd_matches_naive() {
+        let mut rng = Xoshiro256::new(1);
+        let d = ConvDims { n: 2, h: 6, w: 5, c: 3, k: 3, co: 4 };
+        let x = rand_vec(&mut rng, d.x_len());
+        let f = rand_vec(&mut rng, d.f_len());
+        let b = rand_vec(&mut rng, d.co);
+        let mut out = vec![0.0; d.y_len()];
+        conv2d_same_fwd(&d, &x, &f, &b, &mut out);
+        let naive = conv_naive(&d, &x, &f, &b);
+        for (a, b) in out.iter().zip(naive.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conv_fwd_identity_1x1() {
+        let d = ConvDims { n: 1, h: 3, w: 3, c: 1, k: 1, co: 1 };
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let f = vec![1.0];
+        let b = vec![0.0];
+        let mut out = vec![0.0; 9];
+        conv2d_same_fwd(&d, &x, &f, &b, &mut out);
+        assert_eq!(out, x);
+    }
+
+    /// Finite-difference gradient check of conv backward passes.
+    #[test]
+    fn conv_bwd_finite_difference() {
+        let mut rng = Xoshiro256::new(2);
+        let d = ConvDims { n: 1, h: 4, w: 4, c: 2, k: 3, co: 2 };
+        let x = rand_vec(&mut rng, d.x_len());
+        let f = rand_vec(&mut rng, d.f_len());
+        let b = rand_vec(&mut rng, d.co);
+        // Loss = sum(out²)/2, so dy = out.
+        let mut out = vec![0.0; d.y_len()];
+        conv2d_same_fwd(&d, &x, &f, &b, &mut out);
+        let dy = out.clone();
+        let mut dx = vec![0.0; d.x_len()];
+        let mut df = vec![0.0; d.f_len()];
+        let mut db = vec![0.0; d.co];
+        conv2d_same_bwd_input(&d, &dy, &f, &mut dx);
+        conv2d_same_bwd_filter(&d, &x, &dy, &mut df, &mut db);
+
+        let loss = |x: &[f32], f: &[f32], b: &[f32]| -> f64 {
+            let mut out = vec![0.0; d.y_len()];
+            conv2d_same_fwd(&d, x, f, b, &mut out);
+            out.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, d.x_len() - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (loss(&xp, &f, &b) - loss(&xm, &f, &b)) / (2.0 * eps as f64);
+            assert!((fd - dx[idx] as f64).abs() < 2e-2, "dx[{idx}]: fd={fd} an={}", dx[idx]);
+        }
+        for idx in [0usize, d.f_len() / 2, d.f_len() - 1] {
+            let mut fp = f.clone();
+            fp[idx] += eps;
+            let mut fm = f.clone();
+            fm[idx] -= eps;
+            let fd = (loss(&x, &fp, &b) - loss(&x, &fm, &b)) / (2.0 * eps as f64);
+            assert!((fd - df[idx] as f64).abs() < 2e-2, "df[{idx}]: fd={fd} an={}", df[idx]);
+        }
+        for idx in 0..d.co {
+            let mut bp = b.clone();
+            bp[idx] += eps;
+            let mut bm = b.clone();
+            bm[idx] -= eps;
+            let fd = (loss(&x, &f, &bp) - loss(&x, &f, &bm)) / (2.0 * eps as f64);
+            assert!((fd - db[idx] as f64).abs() < 2e-2, "db[{idx}]: fd={fd} an={}", db[idx]);
+        }
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu_fwd(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut dy = vec![5.0, 5.0, 5.0];
+        relu_bwd(&x, &mut dy);
+        assert_eq!(dy, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn mean_pool_roundtrip() {
+        // 1×2×2×1 constant window pools to its value.
+        let x = vec![1.0, 3.0, 5.0, 7.0];
+        let mut out = vec![0.0; 1];
+        mean_pool_fwd(1, 2, 2, 1, 2, &x, &mut out);
+        assert_eq!(out, vec![4.0]);
+        let mut dx = vec![0.0; 4];
+        mean_pool_bwd(1, 2, 2, 1, 2, &[8.0], &mut dx);
+        assert_eq!(dx, vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        // (1,2) @ (2,2): [1,2] @ [[1,2],[3,4]] + [10, 20] = [17, 30]
+        let x = vec![1.0, 2.0];
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![10.0, 20.0];
+        let mut out = vec![0.0; 2];
+        dense_fwd(1, 2, 2, &x, &w, &b, &mut out);
+        assert_eq!(out, vec![17.0, 30.0]);
+    }
+
+    #[test]
+    fn dense_bwd_finite_difference() {
+        let mut rng = Xoshiro256::new(3);
+        let (m, k, n) = (3, 4, 5);
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let b = rand_vec(&mut rng, n);
+        let mut out = vec![0.0; m * n];
+        dense_fwd(m, k, n, &x, &w, &b, &mut out);
+        let dy = out.clone(); // loss = sum(out²)/2
+        let mut dx = vec![0.0; m * k];
+        let mut dw = vec![0.0; k * n];
+        let mut db = vec![0.0; n];
+        dense_bwd(m, k, n, &x, &w, &dy, &mut dx, &mut dw, &mut db);
+        let loss = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+            let mut out = vec![0.0; m * n];
+            dense_fwd(m, k, n, x, w, b, &mut out);
+            out.iter().map(|&v| (v as f64).powi(2) / 2.0).sum()
+        };
+        let eps = 1e-2f32;
+        for idx in [0, m * k - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let fd = (loss(&xp, &w, &b) - loss(&xm, &w, &b)) / (2.0 * eps as f64);
+            assert!((fd - dx[idx] as f64).abs() < 2e-2);
+        }
+        for idx in [0, k * n - 1] {
+            let mut wp = w.clone();
+            wp[idx] += eps;
+            let mut wm = w.clone();
+            wm[idx] -= eps;
+            let fd = (loss(&x, &wp, &b) - loss(&x, &wm, &b)) / (2.0 * eps as f64);
+            assert!((fd - dw[idx] as f64).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut x = vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0];
+        softmax_rows(2, 3, &mut x);
+        assert!((x[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!((x[3..6].iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+        // Overflow-safe on large values.
+        assert!((x[3] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mse_softmax_loss_gradient_finite_difference() {
+        let mut rng = Xoshiro256::new(4);
+        let (m, n) = (2, 4);
+        let logits = rand_vec(&mut rng, m * n);
+        let mut y = vec![0.0f32; m * n];
+        y[1] = 1.0;
+        y[n + 2] = 1.0;
+        let mut dl = vec![0.0; m * n];
+        let (loss0, _) = mse_softmax_loss(m, n, &logits, &y, &mut dl);
+        assert!(loss0 > 0.0);
+        let eps = 1e-3f32;
+        for idx in 0..m * n {
+            let mut lp = logits.clone();
+            lp[idx] += eps;
+            let mut lm = logits.clone();
+            lm[idx] -= eps;
+            let mut scratch = vec![0.0; m * n];
+            let (lp_loss, _) = mse_softmax_loss(m, n, &lp, &y, &mut scratch);
+            let (lm_loss, _) = mse_softmax_loss(m, n, &lm, &y, &mut scratch);
+            let fd = (lp_loss - lm_loss) / (2.0 * eps);
+            assert!(
+                (fd - dl[idx]).abs() < 1e-3,
+                "dlogits[{idx}]: fd={fd} an={}",
+                dl[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn perfect_prediction_counts_correct() {
+        let logits = vec![10.0, -10.0, -10.0, 10.0]; // 2 samples, 2 classes
+        let y = vec![1.0, 0.0, 0.0, 1.0];
+        let mut dl = vec![0.0; 4];
+        let (loss, correct) = mse_softmax_loss(2, 2, &logits, &y, &mut dl);
+        assert_eq!(correct, 2);
+        assert!(loss < 1e-6);
+    }
+}

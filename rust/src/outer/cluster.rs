@@ -1,0 +1,368 @@
+//! In-process distributed cluster (§3.2.2): one OS thread per computing
+//! node plus the parameter server, with real concurrency semantics —
+//! SGWU rounds synchronize at a barrier (and pay the Eq. 8 wait), AGWU
+//! workers free-run and race on the server exactly as Fig. 5 describes.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::UpdateStrategy;
+use crate::tensor::WeightSet;
+
+use super::param_server::{CommStats, ParamServer};
+use super::worker::LocalTrainer;
+
+/// One global-version record in the training log.
+#[derive(Debug, Clone)]
+pub struct VersionRecord {
+    pub version: usize,
+    /// Node whose submission produced this version (SGWU: usize::MAX = all).
+    pub node: usize,
+    /// Local training loss / accuracy behind the update.
+    pub local_loss: f64,
+    pub local_accuracy: f64,
+    /// Wall-clock seconds since training start.
+    pub at_s: f64,
+    /// Held-out (loss, accuracy) of the *global* set at this version, when
+    /// an eval hook was supplied (possibly subsampled).
+    pub eval: Option<(f64, f64)>,
+}
+
+/// Full report of one cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub strategy: UpdateStrategy,
+    pub versions: Vec<VersionRecord>,
+    pub comm: CommStats,
+    /// Eq. 8 synchronization wait (SGWU; 0 for AGWU by construction).
+    pub sync_wait_s: f64,
+    pub wall_s: f64,
+    /// Total busy seconds per node (for the balance index).
+    pub node_busy_s: Vec<f64>,
+    pub final_weights: WeightSet,
+}
+
+impl ClusterReport {
+    pub fn balance_index(&self) -> f64 {
+        crate::util::stats::balance_index(&self.node_busy_s)
+    }
+}
+
+/// Per-node IDPA allocation schedule: `schedule[a][j]` = dataset index range
+/// node j receives before its (a+1)-th local iteration.
+pub type AllocationSchedule = Vec<Vec<std::ops::Range<usize>>>;
+
+/// Held-out evaluation hook: global weight set → (loss, accuracy).
+pub type EvalHook<'a> = &'a (dyn Fn(&WeightSet) -> (f64, f64) + Sync);
+
+/// Run `iterations` rounds with the **SGWU** strategy (Fig. 4).
+pub fn run_sgwu(
+    init: WeightSet,
+    mut workers: Vec<Box<dyn LocalTrainer>>,
+    schedule: &AllocationSchedule,
+    iterations: usize,
+    eval: Option<EvalHook<'_>>,
+) -> ClusterReport {
+    let m = workers.len();
+    assert!(m > 0);
+    let mut ps = ParamServer::new(init, m);
+    let mut sync_wait = 0.0f64;
+    let mut node_busy = vec![0.0f64; m];
+    let mut versions = Vec::new();
+    let t0 = Instant::now();
+
+    for iter in 0..iterations {
+        // IDPA incremental allocation (batch `iter` of the schedule).
+        if iter < schedule.len() {
+            for (j, w) in workers.iter_mut().enumerate() {
+                w.add_samples(schedule[iter][j].clone());
+            }
+        }
+        // Every node fetches the same global version (m transfers).
+        let globals: Vec<WeightSet> = (0..m).map(|j| ps.fetch(j).0).collect();
+        // Parallel local epochs.
+        let outcomes: Vec<(super::worker::EpochOutcome, f64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = workers
+                .iter_mut()
+                .zip(globals)
+                .map(|(w, g)| {
+                    scope.spawn(move || {
+                        let t = Instant::now();
+                        let out = w.train_epoch(g);
+                        (out, t.elapsed().as_secs_f64())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Eq. 8: the round barrier makes every node wait for the slowest.
+        let t_max = outcomes.iter().map(|(_, t)| *t).fold(0.0f64, f64::max);
+        for (j, (_, t)) in outcomes.iter().enumerate() {
+            sync_wait += t_max - t;
+            node_busy[j] += t;
+        }
+        // Eq. 7 update.
+        let locals: Vec<(WeightSet, f64)> = outcomes
+            .iter()
+            .map(|(o, _)| (o.weights.clone(), o.accuracy))
+            .collect();
+        let version = ps.update_sgwu(&locals);
+        let mean_loss =
+            outcomes.iter().map(|(o, _)| o.loss).sum::<f64>() / m as f64;
+        let mean_acc =
+            outcomes.iter().map(|(o, _)| o.accuracy).sum::<f64>() / m as f64;
+        versions.push(VersionRecord {
+            version,
+            node: usize::MAX,
+            local_loss: mean_loss,
+            local_accuracy: mean_acc,
+            at_s: t0.elapsed().as_secs_f64(),
+            eval: eval.map(|f| f(ps.global())),
+        });
+    }
+
+    ClusterReport {
+        strategy: UpdateStrategy::Sgwu,
+        versions,
+        comm: ps.comm.clone(),
+        sync_wait_s: sync_wait,
+        wall_s: t0.elapsed().as_secs_f64(),
+        node_busy_s: node_busy,
+        final_weights: ps.global().clone(),
+    }
+}
+
+/// Asynchronous update rule selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AsyncMode {
+    /// The paper's AGWU: Eq. 10 with γ attenuation + accuracy weighting.
+    Agwu,
+    /// Downpour-style baseline: plain 1/m increment, no γ, no Q.
+    Plain,
+}
+
+/// Run `iterations` local iterations per node with the **AGWU** strategy
+/// (Fig. 5 / Algorithm 3.2): every worker free-runs fetch → train → submit;
+/// the server applies Eq. 10 immediately on each submission.
+pub fn run_agwu(
+    init: WeightSet,
+    workers: Vec<Box<dyn LocalTrainer>>,
+    schedule: &AllocationSchedule,
+    iterations: usize,
+    eval: Option<EvalHook<'_>>,
+) -> ClusterReport {
+    run_async(init, workers, schedule, iterations, eval, AsyncMode::Agwu)
+}
+
+/// Asynchronous run with an explicit update rule (AGWU or the plain
+/// Downpour-style baseline).
+pub fn run_async(
+    init: WeightSet,
+    workers: Vec<Box<dyn LocalTrainer>>,
+    schedule: &AllocationSchedule,
+    iterations: usize,
+    eval: Option<EvalHook<'_>>,
+    mode: AsyncMode,
+) -> ClusterReport {
+    let m = workers.len();
+    assert!(m > 0);
+    let ps = Arc::new(Mutex::new(ParamServer::new(init, m)));
+    let versions: Arc<Mutex<Vec<VersionRecord>>> = Arc::new(Mutex::new(Vec::new()));
+    let t0 = Instant::now();
+
+    // Per-node allocation schedule columns.
+    let node_schedules: Vec<Vec<std::ops::Range<usize>>> = (0..m)
+        .map(|j| schedule.iter().map(|row| row[j].clone()).collect())
+        .collect();
+
+    let node_busy: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = workers
+            .into_iter()
+            .zip(node_schedules)
+            .enumerate()
+            .map(|(j, (mut w, sched))| {
+                let ps = Arc::clone(&ps);
+                let versions = Arc::clone(&versions);
+                scope.spawn(move || {
+                    let mut busy = 0.0f64;
+                    for iter in 0..iterations {
+                        if iter < sched.len() {
+                            w.add_samples(sched[iter].clone());
+                        }
+                        // Fetch the freshest global version.
+                        let (global, base) = ps.lock().unwrap().fetch(j);
+                        // Local epoch — no locks held while computing.
+                        let t = Instant::now();
+                        let out = w.train_epoch(global);
+                        busy += t.elapsed().as_secs_f64();
+                        // Submit immediately (Alg. 3.2): no waiting for
+                        // other nodes.
+                        let (version, snapshot) = {
+                            let mut guard = ps.lock().unwrap();
+                            let v = match mode {
+                                AsyncMode::Agwu => {
+                                    guard.update_agwu(j, &out.weights, base, out.accuracy)
+                                }
+                                AsyncMode::Plain => {
+                                    guard.update_async_plain(j, &out.weights, base)
+                                }
+                            };
+                            (v, eval.map(|_| guard.global().clone()))
+                        };
+                        // Eval outside the lock so stragglers don't serialize.
+                        let eval_point = match (eval, snapshot) {
+                            (Some(f), Some(g)) => Some(f(&g)),
+                            _ => None,
+                        };
+                        versions.lock().unwrap().push(VersionRecord {
+                            version,
+                            node: j,
+                            local_loss: out.loss,
+                            local_accuracy: out.accuracy,
+                            at_s: t0.elapsed().as_secs_f64(),
+                            eval: eval_point,
+                        });
+                    }
+                    busy
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let ps = Arc::try_unwrap(ps).expect("threads joined").into_inner().unwrap();
+    let mut versions = Arc::try_unwrap(versions)
+        .expect("threads joined")
+        .into_inner()
+        .unwrap();
+    versions.sort_by_key(|v| v.version);
+
+    ClusterReport {
+        strategy: UpdateStrategy::Agwu,
+        versions,
+        comm: ps.comm.clone(),
+        sync_wait_s: 0.0, // no synchronization barrier exists in AGWU
+        wall_s: t0.elapsed().as_secs_f64(),
+        node_busy_s: node_busy,
+        final_weights: ps.global().clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::data::Dataset;
+    use crate::nn::Network;
+    use crate::outer::worker::NativeTrainer;
+
+    fn setup(m: usize, per_node: usize) -> (NetworkConfig, Arc<Dataset>, AllocationSchedule) {
+        let cfg = NetworkConfig::quickstart();
+        let ds = Arc::new(Dataset::synthetic(&cfg, m * per_node, 0.2, 31));
+        // One-shot allocation (UDPA-like) as a single schedule batch.
+        let schedule = vec![(0..m).map(|j| j * per_node..(j + 1) * per_node).collect()];
+        (cfg, ds, schedule)
+    }
+
+    fn workers(
+        cfg: &NetworkConfig,
+        ds: &Arc<Dataset>,
+        m: usize,
+        lr: f32,
+    ) -> Vec<Box<dyn LocalTrainer>> {
+        (0..m)
+            .map(|_| {
+                Box::new(NativeTrainer::new(cfg, Arc::clone(ds), lr)) as Box<dyn LocalTrainer>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sgwu_runs_and_accounts_comm() {
+        let (cfg, ds, schedule) = setup(3, 16);
+        let init = Network::init(&cfg, 1).weights;
+        let report = run_sgwu(init, workers(&cfg, &ds, 3, 0.2), &schedule, 4, None);
+        assert_eq!(report.versions.len(), 4);
+        // Eq. 11: 2·m·K transfers.
+        assert_eq!(report.comm.fetches, 3 * 4);
+        assert_eq!(report.comm.submits, 3 * 4);
+        assert!(report.sync_wait_s >= 0.0);
+        assert_eq!(report.node_busy_s.len(), 3);
+    }
+
+    #[test]
+    fn agwu_runs_all_iterations_without_sync_wait() {
+        let (cfg, ds, schedule) = setup(3, 16);
+        let init = Network::init(&cfg, 2).weights;
+        let report = run_agwu(init, workers(&cfg, &ds, 3, 0.2), &schedule, 4, None);
+        // m·K versions, strictly increasing.
+        assert_eq!(report.versions.len(), 12);
+        for (i, v) in report.versions.iter().enumerate() {
+            assert_eq!(v.version, i + 1);
+        }
+        assert_eq!(report.sync_wait_s, 0.0);
+        assert_eq!(report.comm.fetches, 12);
+        assert_eq!(report.comm.submits, 12);
+    }
+
+    #[test]
+    fn sgwu_single_node_equals_plain_sgd() {
+        // With m=1 and accuracy weighting over one node, SGWU must reproduce
+        // exactly the node's local SGD trajectory.
+        let cfg = NetworkConfig::quickstart();
+        let ds = Arc::new(Dataset::synthetic(&cfg, 16, 0.2, 33));
+        let schedule: AllocationSchedule = vec![vec![0..16]];
+        let init = Network::init(&cfg, 5).weights;
+
+        let report = run_sgwu(init.clone(), workers(&cfg, &ds, 1, 0.2), &schedule, 3, None);
+        // Reference: same worker run standalone.
+        let mut w = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2);
+        w.add_samples(0..16);
+        let mut cur = init;
+        for _ in 0..3 {
+            cur = w.train_epoch(cur).weights;
+        }
+        assert!(
+            report.final_weights.max_abs_diff(&cur) < 1e-6,
+            "diff {}",
+            report.final_weights.max_abs_diff(&cur)
+        );
+    }
+
+    #[test]
+    fn both_strategies_learn() {
+        let (cfg, ds, schedule) = setup(2, 32);
+        let init = Network::init(&cfg, 7).weights;
+        for strat in ["sgwu", "agwu"] {
+            let report = match strat {
+                "sgwu" => run_sgwu(init.clone(), workers(&cfg, &ds, 2, 0.3), &schedule, 6, None),
+                _ => run_agwu(init.clone(), workers(&cfg, &ds, 2, 0.3), &schedule, 6, None),
+            };
+            let first = report.versions.first().unwrap().local_loss;
+            let last = report.versions.last().unwrap().local_loss;
+            assert!(
+                last < first,
+                "{strat} did not learn: first={first} last={last}"
+            );
+        }
+    }
+
+    #[test]
+    fn agwu_with_straggler_still_progresses() {
+        let cfg = NetworkConfig::quickstart();
+        let ds = Arc::new(Dataset::synthetic(&cfg, 48, 0.2, 35));
+        let schedule: AllocationSchedule = vec![vec![0..16, 16..32, 32..48]];
+        let init = Network::init(&cfg, 9).weights;
+        let mut ws: Vec<Box<dyn LocalTrainer>> = Vec::new();
+        ws.push(Box::new(NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2)));
+        ws.push(Box::new(NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2)));
+        ws.push(Box::new(
+            NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2).with_slowdown(3.0),
+        ));
+        let report = run_agwu(init, ws, &schedule, 3, None);
+        assert_eq!(report.versions.len(), 9);
+        // The straggler's updates arrive late (higher at_s) but all arrive.
+        let by_node3: Vec<_> = report.versions.iter().filter(|v| v.node == 2).collect();
+        assert_eq!(by_node3.len(), 3);
+    }
+}

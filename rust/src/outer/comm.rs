@@ -1,0 +1,58 @@
+//! Link cost model for weight-set traffic (§3.3.2(3), Fig. 15a).
+//!
+//! In the in-process cluster the "network" is a channel, so transfer *time*
+//! is modelled (latency + bytes/bandwidth) while transfer *volume* is
+//! accounted exactly by `ParamServer::comm` (Eq. 11).
+
+/// Simple latency + bandwidth link model.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferModel {
+    pub bandwidth_bytes_per_s: f64,
+    pub latency_s: f64,
+}
+
+impl TransferModel {
+    pub fn new(bandwidth_bytes_per_s: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bytes_per_s > 0.0);
+        Self { bandwidth_bytes_per_s, latency_s }
+    }
+
+    /// Seconds to move `bytes` over the link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Eq. 11 as time: 2·c_w·m·K where c_w is one weight-set transfer.
+    pub fn total_update_time(&self, weight_bytes: usize, m: usize, k: usize) -> f64 {
+        2.0 * self.transfer_time(weight_bytes) * m as f64 * k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_components() {
+        let m = TransferModel::new(1e6, 0.001);
+        // 1 MB at 1 MB/s + 1 ms latency.
+        assert!((m.transfer_time(1_000_000) - 1.001).abs() < 1e-9);
+        assert!((m.transfer_time(0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq11_scaling() {
+        let m = TransferModel::new(1e9, 0.0);
+        let t1 = m.total_update_time(1000, 5, 10);
+        let t2 = m.total_update_time(1000, 10, 10);
+        let t3 = m.total_update_time(1000, 5, 20);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9, "linear in m");
+        assert!((t3 / t1 - 2.0).abs() < 1e-9, "linear in K");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        TransferModel::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Outer-layer parallel training (paper §3.3): incremental data partitioning
+//! and allocation (IDPA, Algorithm 3.1), the parameter server with the
+//! synchronous (SGWU, Eq. 7) and asynchronous (AGWU, Algorithm 3.2) global
+//! weight-update strategies, the in-process cluster of worker threads, and
+//! the top-level BPT-CNN trainer.
+
+pub mod cluster;
+pub mod comm;
+pub mod param_server;
+pub mod partition;
+pub mod trainer;
+pub mod worker;
+
+pub use cluster::{run_agwu, run_sgwu, AllocationSchedule, ClusterReport, VersionRecord};
+pub use comm::TransferModel;
+pub use param_server::{CommStats, ParamServer};
+pub use partition::{udpa_partition, IdpaPartitioner};
+pub use trainer::{build_schedule, slowdown_factors, train_native, CurvePoint, TrainReport};
+pub use worker::{EpochOutcome, LocalTrainer, NativeTrainer};

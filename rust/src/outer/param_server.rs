@@ -1,0 +1,323 @@
+//! The parameter server — global weight updating strategies (§3.3.2).
+//!
+//! * **SGWU** (Eq. 7): after all m nodes finish an epoch, the global set is
+//!   the accuracy-weighted mean of the local sets.
+//! * **AGWU** (Algorithm 3.2, Eqs. 9–10): a node's submission immediately
+//!   produces a new global version: `W^(i) = W^(i−1) + γ·Q·(W_j^(k) − W^(k))`
+//!   where `k` is the global version the node trained from and
+//!   `γ_j^(k) = e^(k/(i−1)) / Σ_{j'≠j} e^(k_{j'}/(i−1))` attenuates stale
+//!   updates.
+//!
+//! The server retains the recent version history so `(W_j^(k) − W^(k))` can
+//! be formed for any base version still in flight.
+
+use std::collections::VecDeque;
+
+use crate::tensor::WeightSet;
+
+/// Communication accounting — Eq. 11: every fetch and every submit moves one
+/// weight set between a node and the server (`2·c_w·m·K` total).
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub fetches: usize,
+    pub submits: usize,
+    pub bytes: u64,
+}
+
+impl CommStats {
+    pub fn megabytes(&self) -> f64 {
+        self.bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// The parameter server holding the global weight set (Definition 2).
+#[derive(Debug)]
+pub struct ParamServer {
+    global: WeightSet,
+    /// Current global version `i`.
+    version: usize,
+    /// Retained past versions for AGWU's `(W_j^(k) − W^(k))`.
+    history: VecDeque<(usize, WeightSet)>,
+    history_cap: usize,
+    /// Base version each node last fetched (k_{j'} in Eq. 9's denominator).
+    node_base: Vec<usize>,
+    pub comm: CommStats,
+}
+
+impl ParamServer {
+    pub fn new(init: WeightSet, nodes: usize) -> Self {
+        let mut history = VecDeque::new();
+        history.push_back((0, init.clone()));
+        Self {
+            global: init,
+            version: 0,
+            history,
+            history_cap: 2 * nodes.max(1) + 2,
+            node_base: vec![0; nodes],
+            comm: CommStats::default(),
+        }
+    }
+
+    pub fn version(&self) -> usize {
+        self.version
+    }
+
+    pub fn global(&self) -> &WeightSet {
+        &self.global
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_base.len()
+    }
+
+    /// Share the current global set with node `j` (counts communication,
+    /// records the node's base version for staleness tracking).
+    pub fn fetch(&mut self, node: usize) -> (WeightSet, usize) {
+        self.node_base[node] = self.version;
+        self.comm.fetches += 1;
+        self.comm.bytes += self.global.byte_size() as u64;
+        (self.global.clone(), self.version)
+    }
+
+    /// SGWU — Eq. 7: all m local sets + accuracies arrive together; the new
+    /// global version is their accuracy-weighted mean.
+    pub fn update_sgwu(&mut self, locals: &[(WeightSet, f64)]) -> usize {
+        assert_eq!(locals.len(), self.nodes(), "SGWU needs all nodes");
+        for (ws, _) in locals {
+            self.comm.submits += 1;
+            self.comm.bytes += ws.byte_size() as u64;
+        }
+        let total_q: f64 = locals.iter().map(|(_, q)| q.max(1e-9)).sum();
+        let mut new_global = self.global.zeros_like();
+        for (ws, q) in locals {
+            new_global.axpy((q.max(1e-9) / total_q) as f32, ws);
+        }
+        self.install(new_global)
+    }
+
+    /// Staleness attenuation γ_j^(k) — Eq. 9. `i` is the version the update
+    /// will create; the denominator sums the staleness terms of the *other*
+    /// nodes' current base versions.
+    pub fn gamma(&self, node: usize, base_version: usize) -> f64 {
+        let i = self.version + 1;
+        let denom_scale = (i.saturating_sub(1)).max(1) as f64;
+        let numer = (base_version as f64 / denom_scale).exp();
+        let mut denom = 0.0;
+        for (j, &k) in self.node_base.iter().enumerate() {
+            if j == node {
+                continue;
+            }
+            denom += (k as f64 / denom_scale).exp();
+        }
+        if denom <= 0.0 {
+            1.0 // single-node cluster: no attenuation
+        } else {
+            numer / denom
+        }
+    }
+
+    /// Plain asynchronous update (DistBelief/Downpour-style baseline used by
+    /// the Fig. 11 / Table 1 ablations): the increment is applied with a
+    /// fixed 1/m scale — no staleness attenuation (γ≡1), no accuracy
+    /// weighting (Q≡1).
+    pub fn update_async_plain(
+        &mut self,
+        _node: usize,
+        local: &WeightSet,
+        base_version: usize,
+    ) -> usize {
+        self.comm.submits += 1;
+        self.comm.bytes += local.byte_size() as u64;
+        // Increment computed against a borrowed history entry — no copy.
+        let base = self.lookup(base_version).unwrap_or_else(|| self.oldest_retained());
+        let mut increment = local.sub(base);
+        increment.scale(1.0 / self.nodes() as f32);
+        // In-place apply + one inherent clone for the history entry.
+        self.global.axpy(1.0, &increment);
+        self.install_current()
+    }
+
+    /// AGWU — Algorithm 3.2 / Eq. 10: apply one node's increment
+    /// immediately. Returns the new global version.
+    pub fn update_agwu(
+        &mut self,
+        node: usize,
+        local: &WeightSet,
+        base_version: usize,
+        accuracy: f64,
+    ) -> usize {
+        self.comm.submits += 1;
+        self.comm.bytes += local.byte_size() as u64;
+        let gamma = self.gamma(node, base_version);
+        // ΔW_j^{k→i} = γ_j^(k) · Q_j^(k) · (W_j^(k) − W^(k)), computed
+        // against a borrowed history entry (no base copy — §Perf L3-1).
+        let base = self.lookup(base_version).unwrap_or_else(|| self.oldest_retained());
+        let mut increment = local.sub(base);
+        increment.scale((gamma * accuracy.max(1e-9)) as f32);
+        self.global.axpy(1.0, &increment);
+        self.install_current()
+    }
+
+    fn install(&mut self, ws: WeightSet) -> usize {
+        self.global = ws;
+        self.install_current()
+    }
+
+    /// Record the (already-updated) current global as a new version. One
+    /// weight-set copy — inherent, since history must own a snapshot.
+    fn install_current(&mut self) -> usize {
+        self.version += 1;
+        self.history.push_back((self.version, self.global.clone()));
+        while self.history.len() > self.history_cap {
+            self.history.pop_front();
+        }
+        self.version
+    }
+
+    fn lookup(&self, version: usize) -> Option<&WeightSet> {
+        self.history
+            .iter()
+            .find(|(v, _)| *v == version)
+            .map(|(_, w)| w)
+    }
+
+    fn oldest_retained(&self) -> &WeightSet {
+        &self.history.front().expect("history never empty").1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn ws(vals: &[f32]) -> WeightSet {
+        WeightSet::new(vec![Tensor::from_vec(&[vals.len()], vals.to_vec())])
+    }
+
+    fn v0(ps: &ParamServer) -> Vec<f32> {
+        ps.global().tensors()[0].data().to_vec()
+    }
+
+    #[test]
+    fn sgwu_equal_accuracy_is_mean() {
+        let mut ps = ParamServer::new(ws(&[0.0, 0.0]), 2);
+        let v = ps.update_sgwu(&[(ws(&[2.0, 0.0]), 0.5), (ws(&[0.0, 4.0]), 0.5)]);
+        assert_eq!(v, 1);
+        assert_eq!(v0(&ps), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn sgwu_weights_by_accuracy_eq7() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 2);
+        // Q = (0.75, 0.25): W = 0.75·4 + 0.25·0 = 3.
+        ps.update_sgwu(&[(ws(&[4.0]), 0.75), (ws(&[0.0]), 0.25)]);
+        assert_eq!(v0(&ps), vec![3.0]);
+    }
+
+    #[test]
+    fn agwu_applies_increment_eq10() {
+        let mut ps = ParamServer::new(ws(&[1.0]), 1);
+        let (w, k) = ps.fetch(0);
+        assert_eq!(k, 0);
+        // Node trains 1.0 → 3.0; single node ⇒ γ = 1; Q = 0.5.
+        let mut local = w.clone();
+        local.tensors_mut()[0].data_mut()[0] = 3.0;
+        let v = ps.update_agwu(0, &local, k, 0.5);
+        assert_eq!(v, 1);
+        // W = 1 + 1·0.5·(3−1) = 2.
+        assert_eq!(v0(&ps), vec![2.0]);
+    }
+
+    #[test]
+    fn agwu_stale_update_attenuated() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 3);
+        // All three nodes fetch version 0.
+        let (w0, k0) = ps.fetch(0);
+        let (_, _) = ps.fetch(1);
+        let (_, _) = ps.fetch(2);
+        // Nodes 1 and 2 submit and refetch repeatedly → version advances,
+        // their bases modernize; node 0 stays on version 0.
+        for round in 0..4 {
+            for node in [1usize, 2] {
+                let (w, k) = ps.fetch(node);
+                let mut local = w.clone();
+                local.tensors_mut()[0].data_mut()[0] += 0.1;
+                ps.update_agwu(node, &local, k, 0.8);
+                let _ = round;
+            }
+        }
+        let i = ps.version();
+        assert!(i >= 8);
+        // γ for the stale node (base 0) must be < γ for a fresh node.
+        let g_stale = ps.gamma(0, k0);
+        let g_fresh = ps.gamma(1, i);
+        assert!(
+            g_stale < g_fresh,
+            "stale γ {g_stale} not attenuated vs fresh γ {g_fresh}"
+        );
+        // Stale submission still applies, scaled.
+        let before = v0(&ps)[0];
+        let mut local = w0.clone();
+        local.tensors_mut()[0].data_mut()[0] = 100.0;
+        ps.update_agwu(0, &local, k0, 1.0);
+        let after = v0(&ps)[0];
+        let delta = after - before;
+        assert!(delta > 0.0 && delta < 100.0 * g_stale as f32 * 1.01);
+    }
+
+    #[test]
+    fn gamma_normalizes_against_peer_staleness() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 2);
+        // Advance to version 10 via node 1.
+        for _ in 0..10 {
+            let (w, k) = ps.fetch(1);
+            ps.update_agwu(1, &w, k, 1.0);
+        }
+        // Node 0 fetched long ago (base 0); node 1's base is fresh.
+        // For node 0: numer = e^0, denom = e^(k1/(i-1)) ≈ e^1 → γ ≈ 1/e.
+        let g = ps.gamma(0, 0);
+        assert!((g - (-1.0f64).exp()).abs() < 0.15, "γ={g}");
+    }
+
+    #[test]
+    fn comm_accounting_eq11() {
+        // 2 nodes, K=3 iterations of fetch+submit each ⇒ 2·m·K transfers.
+        let mut ps = ParamServer::new(ws(&[0.0; 8]), 2);
+        for _ in 0..3 {
+            for node in 0..2 {
+                let (w, k) = ps.fetch(node);
+                ps.update_agwu(node, &w, k, 1.0);
+            }
+        }
+        assert_eq!(ps.comm.fetches, 6);
+        assert_eq!(ps.comm.submits, 6);
+        // 12 transfers × 32 bytes.
+        assert_eq!(ps.comm.bytes, 12 * 32);
+    }
+
+    #[test]
+    fn history_pruned_but_recent_bases_resolvable() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 1);
+        for _ in 0..50 {
+            let (w, k) = ps.fetch(0);
+            ps.update_agwu(0, &w, k, 1.0);
+        }
+        // History capacity is 2·1+2 = 4; old versions pruned.
+        assert!(ps.history.len() <= 4);
+        // A very stale base falls back to the oldest retained version
+        // rather than panicking.
+        let local = ws(&[1.0]);
+        let v = ps.update_agwu(0, &local, 1, 1.0);
+        assert_eq!(v, 51);
+    }
+
+    #[test]
+    fn sgwu_version_monotone() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 1);
+        for i in 1..=5 {
+            let v = ps.update_sgwu(&[(ws(&[i as f32]), 1.0)]);
+            assert_eq!(v, i);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Data partitioning & allocation — §3.3.1.
+//!
+//! * **IDPA** (Algorithm 3.1, Eqs. 2–6): the training set is partitioned in
+//!   `A` incremental batches. Batch 1 is split proportionally to nominal
+//!   CPU frequency μ_j (Eq. 2); each later batch is split so every node's
+//!   *predicted* finish time for the next iteration equalizes (Eqs. 3–5),
+//!   using measured per-sample times from the previous iteration.
+//! * **UDPA** (§5.3.3 baseline): uniform split, all at once.
+//!
+//! Invariants (tested): every batch conserves exactly ⌊N/A⌋ samples; the
+//! total over A batches is A·⌊N/A⌋; allocations are non-negative.
+
+/// Per-batch allocation state of the IDPA strategy.
+#[derive(Debug, Clone)]
+pub struct IdpaPartitioner {
+    /// N — total samples to distribute.
+    pub total_samples: usize,
+    /// A — number of incremental batches.
+    pub batches: usize,
+    /// μ_j — nominal node frequencies (Eq. 2).
+    freqs: Vec<f64>,
+    /// n_j^(a) history: allocation[a][j].
+    allocations: Vec<Vec<usize>>,
+    /// Σ_a n_j^(a) so far.
+    totals: Vec<usize>,
+}
+
+impl IdpaPartitioner {
+    pub fn new(total_samples: usize, batches: usize, freqs: &[f64]) -> Self {
+        assert!(batches >= 1, "A must be ≥ 1");
+        assert!(!freqs.is_empty(), "need at least one node");
+        assert!(freqs.iter().all(|&f| f > 0.0), "frequencies must be positive");
+        Self {
+            total_samples,
+            batches,
+            freqs: freqs.to_vec(),
+            allocations: Vec::new(),
+            totals: vec![0; freqs.len()],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.freqs.len()
+    }
+
+    /// ⌊N/A⌋ — samples distributed per batch.
+    pub fn batch_quota(&self) -> usize {
+        self.total_samples / self.batches
+    }
+
+    pub fn batches_done(&self) -> usize {
+        self.allocations.len()
+    }
+
+    pub fn totals(&self) -> &[usize] {
+        &self.totals
+    }
+
+    pub fn allocations(&self) -> &[Vec<usize>] {
+        &self.allocations
+    }
+
+    /// First batch — Eq. 2: proportional to μ_j, remainder to node m.
+    pub fn first_batch(&mut self) -> Vec<usize> {
+        assert!(self.allocations.is_empty(), "first_batch called twice");
+        let quota = self.batch_quota();
+        let m = self.nodes();
+        let total_freq: f64 = self.freqs.iter().sum();
+        let mut alloc = vec![0usize; m];
+        let mut assigned = 0usize;
+        for j in 0..m - 1 {
+            let n = ((quota as f64) * self.freqs[j] / total_freq).floor() as usize;
+            alloc[j] = n;
+            assigned += n;
+        }
+        alloc[m - 1] = quota - assigned; // Eq. 2's j = m case
+        self.commit(alloc.clone());
+        alloc
+    }
+
+    /// Batch a ≥ 2 — Eqs. 3–5: rebalance from measured per-sample times.
+    ///
+    /// `measured_times[j]` = T_j, the wall time node j took for its last
+    /// iteration over its current `totals()[j]` samples.
+    pub fn next_batch(&mut self, measured_times: &[f64]) -> Vec<usize> {
+        let a = self.allocations.len() + 1;
+        assert!(a >= 2, "call first_batch first");
+        assert!(a <= self.batches, "all {} batches already allocated", self.batches);
+        assert_eq!(measured_times.len(), self.nodes());
+        let quota = self.batch_quota();
+        let m = self.nodes();
+
+        // t̄_j = T_j / n_j (average per-sample time on node j).
+        let tbar: Vec<f64> = measured_times
+            .iter()
+            .zip(self.totals.iter())
+            .map(|(&t, &n)| if n > 0 { t / n as f64 } else { t.max(1e-12) })
+            .collect();
+        // T_a per Eq. 3, but with the *harmonic* mean of t̄_j instead of the
+        // paper's arithmetic mean: with the arithmetic mean, Σ_j T_a/t̄_j =
+        // (⌊N/A⌋·a/m)·t̄·Σ 1/t̄_j ≥ ⌊N/A⌋·a (AM–HM inequality), so Eq. 5
+        // systematically over-allocates nodes 1..m−1 and starves node m.
+        // The harmonic mean makes Σ_j n'_j = ⌊N/A⌋·a exactly, which is the
+        // stated objective ("all nodes complete each iteration as close as
+        // possible"). Documented in DESIGN.md §2.
+        let h_mean = m as f64 / tbar.iter().map(|t| 1.0 / t).sum::<f64>();
+        let t_a = quota as f64 * a as f64 * h_mean / m as f64;
+
+        // n'_j = T_a / t̄_j (Eq. 4) → n_j^(a) = n'_j − Σ n_j^(a') (Eq. 5),
+        // clamped at 0 (a node already over its equal-time share receives
+        // nothing this batch), remainder to node m.
+        let mut alloc = vec![0usize; m];
+        let mut assigned = 0usize;
+        for j in 0..m - 1 {
+            let target = t_a / tbar[j];
+            let n = (target - self.totals[j] as f64).floor().max(0.0) as usize;
+            let n = n.min(quota - assigned); // cannot exceed this batch's quota
+            alloc[j] = n;
+            assigned += n;
+        }
+        alloc[m - 1] = quota - assigned;
+        self.commit(alloc.clone());
+        alloc
+    }
+
+    fn commit(&mut self, alloc: Vec<usize>) {
+        for (t, &n) in self.totals.iter_mut().zip(alloc.iter()) {
+            *t += n;
+        }
+        self.allocations.push(alloc);
+    }
+
+    /// Run the whole A-batch schedule against a performance oracle
+    /// (`per_sample_time(j)` seconds) that stands in for measured T_j.
+    /// Returns the final totals. This is what the simulator uses.
+    pub fn run_with_oracle<F: Fn(usize) -> f64>(&mut self, per_sample_time: F) -> Vec<usize> {
+        self.first_batch();
+        for _ in 1..self.batches {
+            let times: Vec<f64> = (0..self.nodes())
+                .map(|j| per_sample_time(j) * self.totals[j].max(1) as f64)
+                .collect();
+            self.next_batch(&times);
+        }
+        self.totals.clone()
+    }
+
+    /// ΔK correction — Eq. 6: with incremental allocation the first A
+    /// iterations only train N(A+1)/2 sample-visits, so the remaining
+    /// iteration count grows: K' = K + A/2 − 1 total.
+    pub fn corrected_iterations(&self, k: usize) -> usize {
+        // K' = A + ΔK where ΔK = K − A/2 − 1  ⇒  K' = K + A/2 − 1.
+        (k + self.batches / 2).saturating_sub(1).max(1)
+    }
+}
+
+/// UDPA baseline: uniform one-shot split of N over m nodes.
+pub fn udpa_partition(total_samples: usize, m: usize) -> Vec<usize> {
+    assert!(m >= 1);
+    let base = total_samples / m;
+    let rem = total_samples % m;
+    (0..m).map(|j| base + usize::from(j < rem)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_batch_proportional_to_frequency() {
+        let mut p = IdpaPartitioner::new(1000, 2, &[1.0, 1.0, 2.0]);
+        let alloc = p.first_batch();
+        assert_eq!(alloc.iter().sum::<usize>(), 500);
+        // Node 2 has half the total frequency → ~250 of 500.
+        assert_eq!(alloc[2], 500 - alloc[0] - alloc[1]);
+        assert!((alloc[2] as i64 - 250).abs() <= 2, "{alloc:?}");
+        assert!((alloc[0] as i64 - 125).abs() <= 2);
+    }
+
+    #[test]
+    fn every_batch_conserves_quota() {
+        let mut p = IdpaPartitioner::new(10_000, 5, &[2.0, 3.0, 1.5, 2.5]);
+        p.first_batch();
+        for a in 1..5 {
+            let times: Vec<f64> = p
+                .totals()
+                .iter()
+                .enumerate()
+                .map(|(j, &n)| n as f64 * (0.5 + j as f64 * 0.3))
+                .collect();
+            let alloc = p.next_batch(&times);
+            assert_eq!(alloc.iter().sum::<usize>(), p.batch_quota(), "batch {a}");
+        }
+        assert_eq!(p.totals().iter().sum::<usize>(), 5 * (10_000 / 5));
+    }
+
+    #[test]
+    fn faster_nodes_get_more_samples() {
+        // Node 0 is 4× faster (per-sample time 4× smaller).
+        let mut p = IdpaPartitioner::new(8_000, 4, &[2.0, 2.0]);
+        let totals = p.run_with_oracle(|j| if j == 0 { 0.001 } else { 0.004 });
+        assert!(totals[0] > totals[1] * 2, "{totals:?}");
+        assert_eq!(totals.iter().sum::<usize>(), 8_000);
+    }
+
+    #[test]
+    fn equal_speed_converges_to_equal_split() {
+        let mut p = IdpaPartitioner::new(9_000, 3, &[1.0, 2.0, 3.0]);
+        // Frequencies differ but *measured* speed is equal → later batches
+        // must pull allocations back toward uniform.
+        let totals = p.run_with_oracle(|_| 0.002);
+        let spread = totals.iter().max().unwrap() - totals.iter().min().unwrap();
+        assert!(spread < 900, "totals did not rebalance: {totals:?}");
+    }
+
+    #[test]
+    fn finish_times_equalize_after_rebalancing() {
+        // The IDPA objective: all nodes complete each iteration in nearly
+        // the same time (§3.3.1).
+        let speeds = [0.001, 0.002, 0.003, 0.0015];
+        let mut p = IdpaPartitioner::new(40_000, 8, &[2.8, 2.0, 1.6, 2.4]);
+        let totals = p.run_with_oracle(|j| speeds[j]);
+        let times: Vec<f64> = totals.iter().zip(speeds.iter()).map(|(&n, &s)| n as f64 * s).collect();
+        let balance = crate::util::stats::balance_index(&times);
+        assert!(balance > 0.9, "finish times unbalanced: {times:?} (balance {balance})");
+    }
+
+    #[test]
+    fn corrected_iterations_eq6() {
+        let p = IdpaPartitioner::new(100, 6, &[1.0]);
+        // K' = K + A/2 − 1 = 20 + 3 − 1 = 22.
+        assert_eq!(p.corrected_iterations(20), 22);
+    }
+
+    #[test]
+    fn udpa_uniform() {
+        assert_eq!(udpa_partition(10, 3), vec![4, 3, 3]);
+        assert_eq!(udpa_partition(9, 3), vec![3, 3, 3]);
+        assert_eq!(udpa_partition(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(udpa_partition(600_000, 30).iter().sum::<usize>(), 600_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "first_batch called twice")]
+    fn first_batch_only_once() {
+        let mut p = IdpaPartitioner::new(100, 2, &[1.0, 1.0]);
+        p.first_batch();
+        p.first_batch();
+    }
+
+    #[test]
+    #[should_panic(expected = "already allocated")]
+    fn cannot_exceed_batch_count() {
+        let mut p = IdpaPartitioner::new(100, 2, &[1.0, 1.0]);
+        p.first_batch();
+        p.next_batch(&[1.0, 1.0]);
+        p.next_batch(&[1.0, 1.0]);
+    }
+}

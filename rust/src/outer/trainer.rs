@@ -1,0 +1,269 @@
+//! The BPT-CNN trainer — the top-level outer-layer driver (§3.2/§3.3).
+//!
+//! Glues together: synthetic dataset → calibration of node speeds →
+//! IDPA/UDPA allocation schedule → in-process cluster run (SGWU or AGWU) →
+//! held-out evaluation curve and the summary metrics the paper reports
+//! (accuracy, AUC, sync wait, communication volume, balance index).
+
+use std::sync::Arc;
+
+use crate::config::{ClusterConfig, PartitionStrategy, TrainConfig, UpdateStrategy};
+use crate::data::Dataset;
+use crate::nn::Network;
+use crate::util::stats;
+
+use super::cluster::{self, AllocationSchedule, ClusterReport};
+use super::partition::{udpa_partition, IdpaPartitioner};
+use super::worker::{LocalTrainer, NativeTrainer};
+
+/// One point of the held-out evaluation curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub version: usize,
+    pub at_s: f64,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Full training report (the Fig. 11 / Fig. 15 measurement bundle).
+#[derive(Debug)]
+pub struct TrainReport {
+    pub curve: Vec<CurvePoint>,
+    pub cluster: ClusterReport,
+    /// Final per-node sample totals (IDPA/UDPA outcome).
+    pub allocations: Vec<usize>,
+    pub final_accuracy: f64,
+    /// Trapezoidal AUC of the accuracy-vs-version curve, normalized to the
+    /// version span (Fig. 11b metric).
+    pub accuracy_auc: f64,
+    pub comm_mb: f64,
+    pub sync_wait_s: f64,
+    pub balance_index: f64,
+    pub wall_s: f64,
+}
+
+/// Node slowdown factors from the cluster profile: the fastest node runs at
+/// 1.0×, others proportionally slower (freq × (1 − background load share)).
+pub fn slowdown_factors(cluster: &ClusterConfig) -> Vec<f64> {
+    let speeds: Vec<f64> = cluster
+        .nodes
+        .iter()
+        .map(|n| n.freq_ghz * n.background_load)
+        .collect();
+    let max = speeds.iter().copied().fold(f64::MIN, f64::max);
+    speeds.iter().map(|s| max / s).collect()
+}
+
+/// Build the IDPA or UDPA allocation schedule over dataset indices.
+///
+/// IDPA runs Algorithm 3.1 against the calibrated speed oracle (per-sample
+/// time ∝ slowdown factor); UDPA allocates everything uniformly in one shot.
+pub fn build_schedule(
+    tc: &TrainConfig,
+    cluster: &ClusterConfig,
+) -> (AllocationSchedule, Vec<usize>, usize) {
+    let m = cluster.size();
+    let n = tc.total_samples;
+    match tc.partition {
+        PartitionStrategy::Udpa => {
+            let sizes = udpa_partition(n, m);
+            let mut start = 0;
+            let row: Vec<std::ops::Range<usize>> = sizes
+                .iter()
+                .map(|&s| {
+                    let r = start..start + s;
+                    start += s;
+                    r
+                })
+                .collect();
+            (vec![row], sizes, tc.iterations)
+        }
+        PartitionStrategy::Idpa => {
+            let freqs: Vec<f64> = cluster.nodes.iter().map(|nd| nd.freq_ghz).collect();
+            let slow = slowdown_factors(cluster);
+            let mut part = IdpaPartitioner::new(n, tc.idpa_batches, &freqs);
+            part.run_with_oracle(|j| slow[j]);
+            // Convert per-batch allocations into index ranges, carving the
+            // dataset sequentially.
+            let mut start = 0;
+            let mut schedule = Vec::with_capacity(part.batches_done());
+            for batch in part.allocations() {
+                let row: Vec<std::ops::Range<usize>> = batch
+                    .iter()
+                    .map(|&s| {
+                        let r = start..start + s;
+                        start += s;
+                        r
+                    })
+                    .collect();
+                schedule.push(row);
+            }
+            let totals = part.totals().to_vec();
+            let iterations = part.corrected_iterations(tc.iterations);
+            (schedule, totals, iterations)
+        }
+    }
+}
+
+/// Train with the native backend on an in-process cluster. `eval_every`
+/// controls how often the held-out hook runs under AGWU (1 = every version).
+pub fn train_native(tc: &TrainConfig, cluster_cfg: &ClusterConfig) -> TrainReport {
+    let m = cluster_cfg.size();
+    let train_ds = Arc::new(Dataset::synthetic(&tc.network, tc.total_samples, 0.3, tc.seed));
+    let eval_n = 256.min(tc.total_samples.max(64));
+    let eval_ds = Dataset::synthetic_split(&tc.network, eval_n, 0.3, tc.seed, tc.seed ^ 0xEEEE);
+
+    let (schedule, allocations, iterations) = build_schedule(tc, cluster_cfg);
+    let slow = slowdown_factors(cluster_cfg);
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..m)
+        .map(|j| {
+            Box::new(
+                NativeTrainer::new(&tc.network, Arc::clone(&train_ds), tc.learning_rate)
+                    .with_slowdown(slow[j]),
+            ) as Box<dyn LocalTrainer>
+        })
+        .collect();
+
+    let init = Network::init(&tc.network, tc.seed).weights;
+    let net_cfg = tc.network.clone();
+    let eval_hook = move |ws: &crate::tensor::WeightSet| -> (f64, f64) {
+        let net = Network::with_weights(&net_cfg, ws.clone());
+        let bsz = net_cfg.batch_size;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut batches = 0usize;
+        let mut seen = 0usize;
+        while seen < eval_ds.len() {
+            let (x, y, _) = eval_ds.batch(seen, bsz);
+            let (l, c) = net.eval_batch(&x, &y, bsz);
+            loss += l as f64;
+            correct += c;
+            seen += bsz;
+            batches += 1;
+        }
+        (
+            loss / batches.max(1) as f64,
+            correct as f64 / (batches * bsz).max(1) as f64,
+        )
+    };
+
+    let report = match tc.update {
+        UpdateStrategy::Sgwu => {
+            cluster::run_sgwu(init, workers, &schedule, iterations, Some(&eval_hook))
+        }
+        UpdateStrategy::Agwu => {
+            cluster::run_agwu(init, workers, &schedule, iterations, Some(&eval_hook))
+        }
+    };
+
+    let curve: Vec<CurvePoint> = report
+        .versions
+        .iter()
+        .filter_map(|v| {
+            v.eval.map(|(loss, accuracy)| CurvePoint {
+                version: v.version,
+                at_s: v.at_s,
+                loss,
+                accuracy,
+            })
+        })
+        .collect();
+    let final_accuracy = curve.last().map(|c| c.accuracy).unwrap_or(0.0);
+    let pts: Vec<(f64, f64)> = curve
+        .iter()
+        .map(|c| (c.version as f64, c.accuracy))
+        .collect();
+    let span = pts.last().map(|p| p.0).unwrap_or(1.0) - pts.first().map(|p| p.0).unwrap_or(0.0);
+    let accuracy_auc = if span > 0.0 { stats::auc(&pts) / span } else { final_accuracy };
+
+    TrainReport {
+        comm_mb: report.comm.megabytes(),
+        sync_wait_s: report.sync_wait_s,
+        balance_index: report.balance_index(),
+        wall_s: report.wall_s,
+        curve,
+        allocations,
+        final_accuracy,
+        accuracy_auc,
+        cluster: report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+
+    fn quick_tc(update: UpdateStrategy, partition: PartitionStrategy) -> TrainConfig {
+        TrainConfig {
+            network: NetworkConfig::quickstart(),
+            update,
+            partition,
+            total_samples: 256,
+            iterations: 6,
+            idpa_batches: 2,
+            learning_rate: 0.3,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn schedule_udpa_uniform_single_batch() {
+        let tc = quick_tc(UpdateStrategy::Sgwu, PartitionStrategy::Udpa);
+        let cluster = ClusterConfig::homogeneous(4);
+        let (schedule, sizes, iters) = build_schedule(&tc, &cluster);
+        assert_eq!(schedule.len(), 1);
+        assert_eq!(sizes, vec![64, 64, 64, 64]);
+        assert_eq!(iters, 6);
+        // Ranges tile the dataset.
+        assert_eq!(schedule[0][0], 0..64);
+        assert_eq!(schedule[0][3], 192..256);
+    }
+
+    #[test]
+    fn schedule_idpa_incremental_and_heterogeneous() {
+        let tc = quick_tc(UpdateStrategy::Agwu, PartitionStrategy::Idpa);
+        let mut cluster = ClusterConfig::homogeneous(3);
+        cluster.nodes[0].freq_ghz = 3.2; // fast node
+        cluster.nodes[2].freq_ghz = 1.6; // slow node
+        let (schedule, totals, iters) = build_schedule(&tc, &cluster);
+        assert_eq!(schedule.len(), 2); // A = 2 batches
+        assert!(totals[0] > totals[2], "fast node should get more: {totals:?}");
+        assert_eq!(totals.iter().sum::<usize>(), 2 * (256 / 2));
+        // Eq. 6: K' = K + A/2 − 1 = 6 + 1 − 1 = 6.
+        assert_eq!(iters, 6);
+    }
+
+    #[test]
+    fn train_native_agwu_idpa_learns() {
+        let tc = quick_tc(UpdateStrategy::Agwu, PartitionStrategy::Idpa);
+        let cluster = ClusterConfig::heterogeneous(2, 1);
+        let report = train_native(&tc, &cluster);
+        assert!(!report.curve.is_empty());
+        assert!(report.final_accuracy > 0.18, "acc={}", report.final_accuracy);
+        assert!(report.comm_mb > 0.0);
+        assert_eq!(report.sync_wait_s, 0.0);
+        assert!(report.balance_index > 0.0 && report.balance_index <= 1.0);
+    }
+
+    #[test]
+    fn train_native_sgwu_udpa_learns_and_waits() {
+        let tc = quick_tc(UpdateStrategy::Sgwu, PartitionStrategy::Udpa);
+        let mut cluster = ClusterConfig::homogeneous(2);
+        cluster.nodes[1].background_load = 0.4; // straggler
+        let report = train_native(&tc, &cluster);
+        assert!(report.final_accuracy > 0.18, "acc={}", report.final_accuracy);
+        assert!(report.sync_wait_s > 0.0, "SGWU with straggler must wait");
+    }
+
+    #[test]
+    fn curve_versions_monotone() {
+        let tc = quick_tc(UpdateStrategy::Agwu, PartitionStrategy::Udpa);
+        let cluster = ClusterConfig::homogeneous(2);
+        let report = train_native(&tc, &cluster);
+        for w in report.curve.windows(2) {
+            assert!(w[1].version > w[0].version);
+        }
+        assert!(report.accuracy_auc > 0.0 && report.accuracy_auc <= 1.0);
+    }
+}

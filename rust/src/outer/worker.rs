@@ -1,0 +1,208 @@
+//! Computing-node worker (§3.2.2): owns a growing data shard (IDPA batches),
+//! trains the local weight set for one epoch at a time, and reports the
+//! outcome to the cluster driver.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::NetworkConfig;
+use crate::data::Dataset;
+use crate::nn::Network;
+use crate::tensor::WeightSet;
+
+/// Result of one local epoch (one "iteration" in the paper's terms: a full
+/// pass over the node's current subset, updating the local weight set after
+/// every sample batch — Fig. 4).
+#[derive(Debug, Clone)]
+pub struct EpochOutcome {
+    pub weights: WeightSet,
+    /// Mean training loss over the epoch.
+    pub loss: f64,
+    /// Training accuracy Q_j of Eq. 7 / Eq. 10 (fraction correct).
+    pub accuracy: f64,
+    pub samples: usize,
+    /// Pure compute seconds (excludes communication).
+    pub compute_s: f64,
+}
+
+/// A node-local trainer: the compute side of a worker. Implementations:
+/// [`NativeTrainer`] (pure Rust) and `runtime::XlaTrainer` (PJRT artifacts).
+pub trait LocalTrainer: Send {
+    /// Train one epoch over the current shard starting from `start`.
+    fn train_epoch(&mut self, start: WeightSet) -> EpochOutcome;
+    /// IDPA incremental allocation: extend the shard with dataset indices.
+    fn add_samples(&mut self, range: Range<usize>);
+    fn sample_count(&self) -> usize;
+}
+
+/// Pure-Rust local trainer over the native network.
+pub struct NativeTrainer {
+    cfg: NetworkConfig,
+    data: Arc<Dataset>,
+    indices: Vec<usize>,
+    lr: f32,
+    /// Artificial slowdown factor ≥ 1.0 emulating a slower node (in-process
+    /// heterogeneity): the worker sleeps (factor−1)× its compute time.
+    pub slowdown: f64,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: &NetworkConfig, data: Arc<Dataset>, lr: f32) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            data,
+            indices: Vec::new(),
+            lr,
+            slowdown: 1.0,
+        }
+    }
+
+    pub fn with_slowdown(mut self, factor: f64) -> Self {
+        assert!(factor >= 1.0);
+        self.slowdown = factor;
+        self
+    }
+
+    /// Gather a batch (x, one-hot y) from shard-local positions, wrapping.
+    fn gather(&self, offset: usize, bsz: usize) -> (Vec<f32>, Vec<f32>) {
+        let pix = self.data.hw * self.data.hw * self.data.channels;
+        let classes = self.data.num_classes;
+        let mut x = Vec::with_capacity(bsz * pix);
+        let mut y = vec![0.0f32; bsz * classes];
+        for i in 0..bsz {
+            let idx = self.indices[(offset + i) % self.indices.len()];
+            x.extend_from_slice(&self.data.images[idx]);
+            y[i * classes + self.data.labels[idx]] = 1.0;
+        }
+        (x, y)
+    }
+}
+
+impl LocalTrainer for NativeTrainer {
+    fn train_epoch(&mut self, start: WeightSet) -> EpochOutcome {
+        assert!(!self.indices.is_empty(), "worker has no samples (allocate first)");
+        let t0 = Instant::now();
+        let mut net = Network::with_weights(&self.cfg, start);
+        let bsz = self.cfg.batch_size.min(self.indices.len().max(1));
+        let mut seen = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut batches = 0usize;
+        while seen < self.indices.len() {
+            let take = bsz.min(self.indices.len() - seen);
+            // Gather a full `bsz` batch (wrapping) so the XLA path's fixed
+            // batch shape and the native path behave identically.
+            let (x, y) = self.gather(seen, bsz);
+            let (l, c) = net.train_batch(&x, &y, bsz, self.lr);
+            loss_sum += l as f64;
+            correct += c.min(take);
+            seen += take;
+            batches += 1;
+        }
+        let compute = t0.elapsed().as_secs_f64();
+        if self.slowdown > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                compute * (self.slowdown - 1.0),
+            ));
+        }
+        EpochOutcome {
+            weights: net.weights,
+            loss: loss_sum / batches.max(1) as f64,
+            accuracy: correct as f64 / self.indices.len() as f64,
+            samples: self.indices.len(),
+            compute_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    fn add_samples(&mut self, range: Range<usize>) {
+        self.indices.extend(range);
+    }
+
+    fn sample_count(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (NetworkConfig, Arc<Dataset>) {
+        let cfg = NetworkConfig::quickstart();
+        let ds = Arc::new(Dataset::synthetic(&cfg, 64, 0.2, 21));
+        (cfg, ds)
+    }
+
+    #[test]
+    fn epoch_trains_and_reports() {
+        let (cfg, ds) = setup();
+        let mut w = NativeTrainer::new(&cfg, ds, 0.2);
+        w.add_samples(0..32);
+        assert_eq!(w.sample_count(), 32);
+        let start = Network::init(&cfg, 1).weights;
+        let out = w.train_epoch(start.clone());
+        assert_eq!(out.samples, 32);
+        assert!(out.loss > 0.0);
+        assert!((0.0..=1.0).contains(&out.accuracy));
+        // Weights actually moved.
+        assert!(out.weights.max_abs_diff(&start) > 0.0);
+    }
+
+    #[test]
+    fn repeated_epochs_reduce_loss() {
+        let (cfg, ds) = setup();
+        let mut w = NativeTrainer::new(&cfg, ds, 0.3);
+        w.add_samples(0..32);
+        let mut weights = Network::init(&cfg, 2).weights;
+        let mut losses = Vec::new();
+        for _ in 0..8 {
+            let out = w.train_epoch(weights);
+            weights = out.weights.clone();
+            losses.push(out.loss);
+        }
+        assert!(
+            losses.last().unwrap() < &(0.8 * losses[0]),
+            "no improvement: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn incremental_allocation_grows_shard() {
+        let (cfg, ds) = setup();
+        let mut w = NativeTrainer::new(&cfg, ds, 0.1);
+        w.add_samples(0..10);
+        w.add_samples(10..25);
+        assert_eq!(w.sample_count(), 25);
+    }
+
+    #[test]
+    fn slowdown_increases_wall_time() {
+        let (cfg, ds) = setup();
+        let start = Network::init(&cfg, 3).weights;
+        let mut fast = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.1);
+        fast.add_samples(0..16);
+        let mut slow = NativeTrainer::new(&cfg, ds, 0.1).with_slowdown(3.0);
+        slow.add_samples(0..16);
+        let t_fast = {
+            let t = Instant::now();
+            fast.train_epoch(start.clone());
+            t.elapsed().as_secs_f64()
+        };
+        let t_slow = {
+            let t = Instant::now();
+            slow.train_epoch(start);
+            t.elapsed().as_secs_f64()
+        };
+        assert!(t_slow > 1.8 * t_fast, "slowdown ineffective: {t_slow} vs {t_fast}");
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn empty_shard_panics() {
+        let (cfg, ds) = setup();
+        let mut w = NativeTrainer::new(&cfg, ds, 0.1);
+        let start = Network::init(&cfg, 1).weights;
+        w.train_epoch(start);
+    }
+}

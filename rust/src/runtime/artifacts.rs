@@ -1,0 +1,180 @@
+//! Artifact manifests: the `meta.json` each AOT-compiled model directory
+//! carries (written by `python/compile/aot.py`). The manifest is the wire
+//! contract between the coordinator and the HLO programs: parameter order,
+//! shapes, batch geometry.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::NetworkConfig;
+use crate::util::json::Json;
+
+/// Parsed `meta.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub config: NetworkConfig,
+    /// Ordered (name, shape) parameter manifest.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub param_count: usize,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {}", meta_path.display()))?;
+        let config = NetworkConfig::from_json(json.get("config"))?;
+        let params_json = json
+            .get("params")
+            .as_arr()
+            .context("meta.json: missing params[]")?;
+        let mut params = Vec::with_capacity(params_json.len());
+        for p in params_json {
+            let name = p.get("name").as_str().context("param missing name")?.to_string();
+            let shape: Vec<usize> = p
+                .get("shape")
+                .as_arr()
+                .context("param missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("non-integer dim"))
+                .collect::<Result<_>>()?;
+            params.push((name, shape));
+        }
+        let param_count = json
+            .get("param_count")
+            .as_usize()
+            .context("meta.json: missing param_count")?;
+        let manifest = Self { config, params, param_count, dir: dir.to_path_buf() };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Cross-check the manifest against the Rust-side config derivation —
+    /// catches drift between `model.py::param_shapes` and
+    /// `NetworkConfig::param_shapes`.
+    pub fn validate(&self) -> Result<()> {
+        let expect = self.config.param_shapes();
+        if expect.len() != self.params.len() {
+            bail!(
+                "manifest lists {} params, config derives {}",
+                self.params.len(),
+                expect.len()
+            );
+        }
+        for ((en, es), (mn, ms)) in expect.iter().zip(self.params.iter()) {
+            if en != mn || es != ms {
+                bail!("param mismatch: manifest {mn}{ms:?} vs config {en}{es:?}");
+            }
+        }
+        let total: usize = self
+            .params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        if total != self.param_count {
+            bail!("param_count {} != shapes total {}", self.param_count, total);
+        }
+        Ok(())
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> PathBuf {
+        self.dir.join(format!("{entry}.hlo.txt"))
+    }
+}
+
+/// Root artifacts directory: `$BPTCNN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("BPTCNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Directory for a named model config, if its artifacts exist.
+pub fn find_model_dir(name: &str) -> Option<PathBuf> {
+    let dir = artifacts_root().join(name);
+    if dir.join("meta.json").exists() && dir.join("train_step.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("meta.json"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bptcnn_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("valid");
+        // quickstart config: conv0 3x3x1x4 + bias + fc0 64x32 + bias + out 32x10 + bias.
+        write_manifest(
+            &dir,
+            r#"{
+              "config": {"name":"quickstart","input_hw":8,"in_channels":1,
+                "conv_layers":1,"filters":4,"kernel_hw":3,"fc_layers":1,
+                "fc_neurons":32,"num_classes":10,"batch_size":8,"pool_window":2},
+              "params": [
+                {"name":"conv0.filter","shape":[3,3,1,4]},
+                {"name":"conv0.bias","shape":[4]},
+                {"name":"fc0.weight","shape":[64,32]},
+                {"name":"fc0.bias","shape":[32]},
+                {"name":"out.weight","shape":[32,10]},
+                {"name":"out.bias","shape":[10]}
+              ],
+              "param_count": 2450
+            }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.config.name, "quickstart");
+        assert_eq!(m.param_count, 2450);
+        assert_eq!(m.params.len(), 6);
+        assert!(m.hlo_path("train_step").ends_with("train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_mismatched_manifest() {
+        let dir = tmpdir("bad");
+        write_manifest(
+            &dir,
+            r#"{
+              "config": {"name":"quickstart","input_hw":8,"in_channels":1,
+                "conv_layers":1,"filters":4,"kernel_hw":3,"fc_layers":1,
+                "fc_neurons":32,"num_classes":10,"batch_size":8,"pool_window":2},
+              "params": [{"name":"conv0.filter","shape":[3,3,1,8]}],
+              "param_count": 72
+            }"#,
+        );
+        assert!(ArtifactManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(ArtifactManifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_validate_when_present() {
+        for name in ["quickstart", "e2e"] {
+            if let Some(dir) = find_model_dir(name) {
+                let m = ArtifactManifest::load(&dir).unwrap();
+                assert_eq!(m.config.name, name);
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime layer: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them via the PJRT C API (`xla`
+//! crate). The device service thread owns the non-`Send` PJRT objects;
+//! workers use cloneable handles. `XlaTrainer` plugs the artifacts into the
+//! outer-layer cluster as a drop-in [`crate::outer::LocalTrainer`].
+
+pub mod artifacts;
+pub mod program;
+pub mod service;
+pub mod xla_trainer;
+
+pub use artifacts::{artifacts_root, find_model_dir, ArtifactManifest};
+pub use program::{Program, ProgramInput, XlaContext};
+pub use service::{XlaHandle, XlaService};
+pub use xla_trainer::XlaTrainer;

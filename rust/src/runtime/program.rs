@@ -1,0 +1,138 @@
+//! PJRT program loading and execution (the AOT bridge).
+//!
+//! Loads HLO **text** (the 0.5.1-safe interchange format — see
+//! /opt/xla-example/README.md), compiles it on the PJRT CPU client, and
+//! executes it with [`Tensor`] inputs/outputs. All programs were lowered
+//! with `return_tuple=True`, so every result is a tuple literal that gets
+//! unpacked into a `Vec<Tensor>`.
+//!
+//! These types wrap raw PJRT pointers and are **not** `Send`; cross-thread
+//! access goes through [`super::service::XlaService`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Owner of the PJRT client (one per process/device).
+pub struct XlaContext {
+    client: xla::PjRtClient,
+}
+
+impl XlaContext {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file.
+    pub fn load_program(&self, path: &Path) -> Result<Program> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Program { exe })
+    }
+}
+
+/// One compiled XLA executable.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Program {
+    /// Execute with tensor inputs; returns the unpacked output tuple.
+    pub fn run(&self, inputs: &[ProgramInput<'_>]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| inp.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().context("non-array output")?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().context("output not f32")?;
+                Ok(Tensor::from_vec(&dims, data))
+            })
+            .collect()
+    }
+}
+
+/// An input value: an f32 tensor, an f32 scalar, or an i32 scalar (seed).
+pub enum ProgramInput<'a> {
+    Tensor(&'a Tensor),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl ProgramInput<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ProgramInput::Tensor(t) => {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(t.data());
+                Ok(lit.reshape(&dims)?)
+            }
+            ProgramInput::ScalarF32(v) => Ok(xla::Literal::scalar(*v)),
+            ProgramInput::ScalarI32(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::find_model_dir;
+
+    /// End-to-end PJRT smoke test against the real quickstart artifacts
+    /// (skips when `make artifacts` has not run).
+    #[test]
+    fn quickstart_init_and_eval_execute() {
+        let Some(dir) = find_model_dir("quickstart") else {
+            eprintln!("skipping: quickstart artifacts not built");
+            return;
+        };
+        let manifest = crate::runtime::artifacts::ArtifactManifest::load(&dir).unwrap();
+        let ctx = XlaContext::cpu().unwrap();
+        let init = ctx.load_program(&manifest.hlo_path("init")).unwrap();
+        let weights = init.run(&[ProgramInput::ScalarI32(0)]).unwrap();
+        assert_eq!(weights.len(), manifest.params.len());
+        for (t, (name, shape)) in weights.iter().zip(&manifest.params) {
+            assert_eq!(t.shape(), &shape[..], "{name}");
+        }
+        // Determinism in the seed.
+        let weights2 = init.run(&[ProgramInput::ScalarI32(0)]).unwrap();
+        for (a, b) in weights.iter().zip(&weights2) {
+            assert_eq!(a.data(), b.data());
+        }
+
+        let eval = ctx.load_program(&manifest.hlo_path("eval_step")).unwrap();
+        let cfg = &manifest.config;
+        let x = Tensor::zeros(&[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels]);
+        let mut y = Tensor::zeros(&[cfg.batch_size, cfg.num_classes]);
+        for i in 0..cfg.batch_size {
+            y.data_mut()[i * cfg.num_classes] = 1.0;
+        }
+        let mut inputs: Vec<ProgramInput> = weights.iter().map(ProgramInput::Tensor).collect();
+        inputs.push(ProgramInput::Tensor(&x));
+        inputs.push(ProgramInput::Tensor(&y));
+        let out = eval.run(&inputs).unwrap();
+        assert_eq!(out.len(), 2); // (loss, correct)
+        let loss = out[0].data()[0];
+        assert!(loss.is_finite() && loss >= 0.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! The XLA device service: a dedicated thread owns the (non-`Send`) PJRT
+//! client and compiled programs; worker threads talk to it through a
+//! cloneable [`XlaHandle`]. This mirrors a real deployment where every
+//! computing node has one accelerator runtime serving its training threads.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{Tensor, WeightSet};
+
+use super::artifacts::ArtifactManifest;
+use super::program::{Program, ProgramInput, XlaContext};
+
+enum Request {
+    Init {
+        seed: i32,
+        resp: Sender<Result<WeightSet>>,
+    },
+    TrainStep {
+        weights: WeightSet,
+        x: Tensor,
+        y: Tensor,
+        lr: f32,
+        resp: Sender<Result<(WeightSet, f32, f32)>>,
+    },
+    EvalStep {
+        weights: WeightSet,
+        x: Tensor,
+        y: Tensor,
+        resp: Sender<Result<(f32, f32)>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the service; cheap to clone and `Send`.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: Sender<Request>,
+    pub manifest: ArtifactManifest,
+}
+
+// Sender<Request> is Send but not Sync; wrap usage accordingly: each worker
+// clones its own handle.
+impl XlaHandle {
+    /// Run the `init` program → initial weight set.
+    pub fn init_weights(&self, seed: i32) -> Result<WeightSet> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::Init { seed, resp: tx })
+            .map_err(|_| anyhow!("xla service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+
+    /// Run one SGD step: returns (new weights, loss, correct-count).
+    pub fn train_step(
+        &self,
+        weights: WeightSet,
+        x: Tensor,
+        y: Tensor,
+        lr: f32,
+    ) -> Result<(WeightSet, f32, f32)> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::TrainStep { weights, x, y, lr, resp: tx })
+            .map_err(|_| anyhow!("xla service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+
+    /// Evaluate one batch: (loss, correct-count).
+    pub fn eval_step(&self, weights: WeightSet, x: Tensor, y: Tensor) -> Result<(f32, f32)> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::EvalStep { weights, x, y, resp: tx })
+            .map_err(|_| anyhow!("xla service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+}
+
+/// The service thread plus its handle.
+pub struct XlaService {
+    handle: XlaHandle,
+    join: Option<JoinHandle<()>>,
+    shutdown_tx: Sender<Request>,
+}
+
+impl XlaService {
+    /// Load the model artifacts in `dir` and start the device thread.
+    pub fn start(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let (tx, rx) = channel::<Request>();
+        let m2 = manifest.clone();
+        // Compile on the service thread (the context is not Send); report
+        // readiness (or failure) through a one-shot channel.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::spawn(move || {
+            let setup = (|| -> Result<(Program, Program, Program)> {
+                let ctx = XlaContext::cpu()?;
+                let init = ctx.load_program(&m2.hlo_path("init"))?;
+                let train = ctx.load_program(&m2.hlo_path("train_step"))?;
+                let eval = ctx.load_program(&m2.hlo_path("eval_step"))?;
+                Ok((init, train, eval))
+            })();
+            let (init, train, eval) = match setup {
+                Ok(p) => {
+                    let _ = ready_tx.send(Ok(()));
+                    p
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let nparams = m2.params.len();
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Request::Shutdown => break,
+                    Request::Init { seed, resp } => {
+                        let r = init
+                            .run(&[ProgramInput::ScalarI32(seed)])
+                            .map(WeightSet::new);
+                        let _ = resp.send(r);
+                    }
+                    Request::TrainStep { weights, x, y, lr, resp } => {
+                        let r = (|| {
+                            let mut inputs: Vec<ProgramInput> =
+                                weights.tensors().iter().map(ProgramInput::Tensor).collect();
+                            inputs.push(ProgramInput::Tensor(&x));
+                            inputs.push(ProgramInput::Tensor(&y));
+                            inputs.push(ProgramInput::ScalarF32(lr));
+                            let mut out = train.run(&inputs)?;
+                            if out.len() != nparams + 2 {
+                                anyhow::bail!(
+                                    "train_step returned {} outputs, want {}",
+                                    out.len(),
+                                    nparams + 2
+                                );
+                            }
+                            let correct = out.pop().unwrap().data()[0];
+                            let loss = out.pop().unwrap().data()[0];
+                            Ok((WeightSet::new(out), loss, correct))
+                        })();
+                        let _ = resp.send(r);
+                    }
+                    Request::EvalStep { weights, x, y, resp } => {
+                        let r = (|| {
+                            let mut inputs: Vec<ProgramInput> =
+                                weights.tensors().iter().map(ProgramInput::Tensor).collect();
+                            inputs.push(ProgramInput::Tensor(&x));
+                            inputs.push(ProgramInput::Tensor(&y));
+                            let out = eval.run(&inputs)?;
+                            anyhow::ensure!(out.len() == 2, "eval_step must return 2 outputs");
+                            Ok((out[0].data()[0], out[1].data()[0]))
+                        })();
+                        let _ = resp.send(r);
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .context("xla service thread died during setup")??;
+        Ok(Self {
+            handle: XlaHandle { tx: tx.clone(), manifest },
+            join: Some(join),
+            shutdown_tx: tx,
+        })
+    }
+
+    pub fn handle(&self) -> XlaHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.shutdown_tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::find_model_dir;
+
+    #[test]
+    fn service_roundtrip_on_quickstart() {
+        let Some(dir) = find_model_dir("quickstart") else {
+            eprintln!("skipping: quickstart artifacts not built");
+            return;
+        };
+        let service = XlaService::start(&dir).unwrap();
+        let h = service.handle();
+        let cfg = h.manifest.config.clone();
+        let w0 = h.init_weights(7).unwrap();
+        assert_eq!(w0.param_count(), cfg.param_count());
+
+        let x = Tensor::filled(
+            &[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels],
+            0.1,
+        );
+        let mut y = Tensor::zeros(&[cfg.batch_size, cfg.num_classes]);
+        for i in 0..cfg.batch_size {
+            y.data_mut()[i * cfg.num_classes + i % cfg.num_classes] = 1.0;
+        }
+        let (l0, _c0) = h.eval_step(w0.clone(), x.clone(), y.clone()).unwrap();
+        // Several SGD steps must reduce the loss on the fixed batch.
+        let mut w = w0;
+        let mut last = l0;
+        for _ in 0..10 {
+            let (nw, l, _) = h.train_step(w, x.clone(), y.clone(), 0.5).unwrap();
+            w = nw;
+            last = l;
+        }
+        assert!(last < l0, "XLA training did not reduce loss: {l0} → {last}");
+    }
+
+    #[test]
+    fn handles_usable_from_other_threads() {
+        let Some(dir) = find_model_dir("quickstart") else {
+            eprintln!("skipping: quickstart artifacts not built");
+            return;
+        };
+        let service = XlaService::start(&dir).unwrap();
+        let handles: Vec<_> = (0..3)
+            .map(|seed| {
+                let h = service.handle();
+                std::thread::spawn(move || h.init_weights(seed).unwrap().param_count())
+            })
+            .collect();
+        for th in handles {
+            assert_eq!(th.join().unwrap(), service.handle().manifest.param_count);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! [`LocalTrainer`] backed by the AOT-compiled XLA artifacts: the production
+//! compute path. Each worker drives the shared device service through its
+//! own [`XlaHandle`]; Python never runs.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::outer::worker::{EpochOutcome, LocalTrainer};
+use crate::tensor::{Tensor, WeightSet};
+
+use super::service::XlaHandle;
+
+/// XLA-backed node-local trainer.
+pub struct XlaTrainer {
+    handle: XlaHandle,
+    data: Arc<Dataset>,
+    indices: Vec<usize>,
+    lr: f32,
+    pub slowdown: f64,
+}
+
+impl XlaTrainer {
+    pub fn new(handle: XlaHandle, data: Arc<Dataset>, lr: f32) -> Self {
+        Self { handle, data, indices: Vec::new(), lr, slowdown: 1.0 }
+    }
+
+    pub fn with_slowdown(mut self, factor: f64) -> Self {
+        assert!(factor >= 1.0);
+        self.slowdown = factor;
+        self
+    }
+
+    fn gather(&self, offset: usize, bsz: usize) -> (Tensor, Tensor) {
+        let cfg = &self.handle.manifest.config;
+        let pix = self.data.hw * self.data.hw * self.data.channels;
+        let classes = self.data.num_classes;
+        let mut x = Vec::with_capacity(bsz * pix);
+        let mut y = vec![0.0f32; bsz * classes];
+        for i in 0..bsz {
+            let idx = self.indices[(offset + i) % self.indices.len()];
+            x.extend_from_slice(&self.data.images[idx]);
+            y[i * classes + self.data.labels[idx]] = 1.0;
+        }
+        (
+            Tensor::from_vec(&[bsz, cfg.input_hw, cfg.input_hw, cfg.in_channels], x),
+            Tensor::from_vec(&[bsz, classes], y),
+        )
+    }
+}
+
+impl LocalTrainer for XlaTrainer {
+    fn train_epoch(&mut self, start: WeightSet) -> EpochOutcome {
+        assert!(!self.indices.is_empty(), "worker has no samples (allocate first)");
+        let t0 = Instant::now();
+        let bsz = self.handle.manifest.config.batch_size;
+        let mut weights = start;
+        let mut seen = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut batches = 0usize;
+        while seen < self.indices.len() {
+            let take = bsz.min(self.indices.len() - seen);
+            let (x, y) = self.gather(seen, bsz);
+            let (w, loss, corr) = self
+                .handle
+                .train_step(weights, x, y, self.lr)
+                .expect("xla train_step failed");
+            weights = w;
+            loss_sum += loss as f64;
+            correct += (corr as f64).min(take as f64);
+            seen += take;
+            batches += 1;
+        }
+        let compute = t0.elapsed().as_secs_f64();
+        if self.slowdown > 1.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                compute * (self.slowdown - 1.0),
+            ));
+        }
+        EpochOutcome {
+            weights,
+            loss: loss_sum / batches.max(1) as f64,
+            accuracy: correct / self.indices.len() as f64,
+            samples: self.indices.len(),
+            compute_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    fn add_samples(&mut self, range: Range<usize>) {
+        self.indices.extend(range);
+    }
+
+    fn sample_count(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::nn::Network;
+    use crate::runtime::artifacts::find_model_dir;
+    use crate::runtime::service::XlaService;
+
+    #[test]
+    fn xla_trainer_epoch_learns() {
+        let Some(dir) = find_model_dir("quickstart") else {
+            eprintln!("skipping: quickstart artifacts not built");
+            return;
+        };
+        let service = XlaService::start(&dir).unwrap();
+        let cfg = service.handle().manifest.config.clone();
+        let ds = Arc::new(Dataset::synthetic(&cfg, 64, 0.2, 51));
+        let mut w = XlaTrainer::new(service.handle(), ds, 0.3);
+        w.add_samples(0..32);
+        let mut weights = service.handle().init_weights(1).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            let out = w.train_epoch(weights);
+            weights = out.weights.clone();
+            losses.push(out.loss);
+        }
+        assert!(
+            losses.last().unwrap() < &losses[0],
+            "XLA epochs did not learn: {losses:?}"
+        );
+    }
+
+    /// Cross-backend parity: the XLA artifacts and the native Rust network
+    /// implement the same model — same weights + same batch ⇒ same loss.
+    #[test]
+    fn xla_eval_matches_native_eval() {
+        let Some(dir) = find_model_dir("quickstart") else {
+            eprintln!("skipping: quickstart artifacts not built");
+            return;
+        };
+        let service = XlaService::start(&dir).unwrap();
+        let h = service.handle();
+        let cfg: NetworkConfig = h.manifest.config.clone();
+        let ds = Dataset::synthetic(&cfg, 32, 0.2, 52);
+        let weights = h.init_weights(3).unwrap();
+
+        let (xv, yv, _) = ds.batch(0, cfg.batch_size);
+        let x = Tensor::from_vec(
+            &[cfg.batch_size, cfg.input_hw, cfg.input_hw, cfg.in_channels],
+            xv.clone(),
+        );
+        let y = Tensor::from_vec(&[cfg.batch_size, cfg.num_classes], yv.clone());
+        let (xla_loss, xla_correct) = h.eval_step(weights.clone(), x, y).unwrap();
+
+        let net = Network::with_weights(&cfg, weights);
+        let (native_loss, native_correct) = net.eval_batch(&xv, &yv, cfg.batch_size);
+
+        assert!(
+            (xla_loss - native_loss).abs() < 1e-3,
+            "loss mismatch: xla={xla_loss} native={native_loss}"
+        );
+        assert_eq!(xla_correct as usize, native_correct, "correct-count mismatch");
+    }
+}

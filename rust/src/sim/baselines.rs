@@ -1,0 +1,296 @@
+//! Baseline comparator models: TensorFlow-, DistBelief- and DC-CNN-like
+//! policies (§5's comparison algorithms), expressed against the same node
+//! performance model as BPT-CNN.
+//!
+//! These are *policy models*, calibrated to the qualitative shapes the paper
+//! reports (who wins, where the crossovers fall), not re-implementations of
+//! the actual frameworks:
+//!
+//! * **tensorflow-like** — synchronous data parallelism over a uniform
+//!   split, efficient compute, but dynamic resource scheduling makes the
+//!   coordination traffic grow superlinearly with cluster size (paper
+//!   Fig. 15a: 2.73 MB @ 5 nodes → 45.23 MB @ 35 nodes).
+//! * **distbelief-like** — asynchronous parameter server with *data
+//!   migration* for load balancing (heavy traffic, Fig. 15a) and
+//!   coordination overhead that erodes scaling past ~25 nodes (Fig. 13).
+//! * **dccnn-like** — a dynamically configurable coprocessor design: strong
+//!   single-node throughput, but little distributed scaling; execution time
+//!   *rises* with cluster size beyond ~20 nodes (Figs. 12b/13).
+
+use crate::config::{PartitionStrategy, UpdateStrategy};
+use crate::outer::comm::TransferModel;
+use crate::outer::partition::udpa_partition;
+use crate::util::stats;
+
+use super::node::NodeModel;
+use super::runner::{simulate, SimConfig, SimResult};
+
+/// Comparison algorithms of §5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// The paper's system with a choice of strategies.
+    BptCnn(UpdateStrategy, PartitionStrategy),
+    TensorflowLike,
+    DistBeliefLike,
+    DcCnnLike,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::BptCnn(u, p) => format!("BPT-CNN({}+{})", u.name(), p.name()),
+            Algorithm::TensorflowLike => "Tensorflow".into(),
+            Algorithm::DistBeliefLike => "DisBelief".into(),
+            Algorithm::DcCnnLike => "DC-CNN".into(),
+        }
+    }
+
+    pub fn paper_set() -> [Algorithm; 4] {
+        [
+            Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+            Algorithm::TensorflowLike,
+            Algorithm::DistBeliefLike,
+            Algorithm::DcCnnLike,
+        ]
+    }
+}
+
+/// Simulate any comparison algorithm under the given scenario.
+pub fn simulate_algorithm(alg: Algorithm, cfg: &SimConfig) -> SimResult {
+    match alg {
+        Algorithm::BptCnn(update, partition) => {
+            simulate(&SimConfig { update, partition, ..cfg.clone() })
+        }
+        Algorithm::TensorflowLike => simulate_tensorflow_like(cfg),
+        Algorithm::DistBeliefLike => simulate_distbelief_like(cfg),
+        Algorithm::DcCnnLike => simulate_dccnn_like(cfg),
+    }
+}
+
+fn node_models(cfg: &SimConfig) -> Vec<NodeModel> {
+    cfg.cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(j, p)| NodeModel::new(p, &cfg.network, cfg.threads_per_node, cfg.seed ^ j as u64))
+        .collect()
+}
+
+fn link(cfg: &SimConfig) -> TransferModel {
+    TransferModel::new(cfg.cluster.bandwidth_bytes_per_s, cfg.cluster.link_latency_s)
+}
+
+fn mb(bytes: f64) -> f64 {
+    bytes / (1024.0 * 1024.0)
+}
+
+/// Synchronous uniform data parallelism with dataflow-graph compute
+/// (≈5% faster per sample than our reference implementation) and dynamic
+/// resource scheduling traffic that grows ∝ m².
+fn simulate_tensorflow_like(cfg: &SimConfig) -> SimResult {
+    let m = cfg.cluster.size();
+    let mut models = node_models(cfg);
+    let sizes = udpa_partition(cfg.samples, m);
+    let xfer = link(cfg).transfer_time(cfg.network.weight_bytes());
+    let mut clock = 0.0;
+    let mut compute = vec![0.0f64; m];
+    let mut sync_wait = 0.0;
+    for _ in 0..cfg.iterations {
+        let times: Vec<f64> = (0..m)
+            .map(|j| models[j].iteration_time(sizes[j]) * 0.95)
+            .collect();
+        let t_max = times.iter().copied().fold(0.0f64, f64::max);
+        for (j, &t) in times.iter().enumerate() {
+            compute[j] += t;
+            sync_wait += t_max - t;
+        }
+        clock += t_max + 2.0 * xfer;
+    }
+    // Weight sync (Eq. 11 analogue) + per-round dynamic-placement metadata
+    // exchanged all-to-all: grows quadratically with m.
+    let cw = cfg.network.weight_bytes() as f64;
+    let comm_bytes =
+        2.0 * cw * m as f64 * cfg.iterations as f64 * (0.45 + 0.022 * m as f64 * m as f64 / 5.0);
+    SimResult {
+        total_s: clock,
+        balance_index: stats::balance_index(&compute),
+        compute_s: compute,
+        sync_wait_s: sync_wait,
+        comm_mb: mb(comm_bytes),
+        comm_time_s: 2.0 * xfer * m as f64 * cfg.iterations as f64,
+        versions: cfg.iterations,
+        mean_staleness: 0.0,
+        allocations: sizes,
+    }
+}
+
+/// Asynchronous PS with data-migration load balancing: no sync wait, but
+/// migration traffic and coordination overhead that dominates past ~25
+/// nodes (the Fig. 13 turn-up).
+fn simulate_distbelief_like(cfg: &SimConfig) -> SimResult {
+    let m = cfg.cluster.size();
+    let mut models = node_models(cfg);
+    let sizes = udpa_partition(cfg.samples, m);
+    let xfer = link(cfg).transfer_time(cfg.network.weight_bytes());
+    let mut compute = vec![0.0f64; m];
+    let mut per_node_clock = vec![0.0f64; m];
+    for j in 0..m {
+        for _ in 0..cfg.iterations {
+            let t = models[j].iteration_time(sizes[j]);
+            compute[j] += t;
+            // Coordination overhead grows with cluster size (replica
+            // management + migration decisions).
+            per_node_clock[j] += t * (1.0 + 0.004 * m as f64 * m as f64 / 5.0) + 2.0 * xfer;
+        }
+    }
+    // Weight traffic + sample migration between nodes each rebalancing
+    // round (the paper attributes DisBelief's heavy communication to this).
+    let cw = cfg.network.weight_bytes() as f64;
+    let sample_bytes = (cfg.network.input_hw * cfg.network.input_hw * 4) as f64;
+    let migrated = 0.02 * cfg.samples as f64 * (m as f64 / 5.0);
+    let comm_bytes =
+        2.0 * cw * m as f64 * cfg.iterations as f64 + migrated * sample_bytes * 3.0;
+    SimResult {
+        total_s: per_node_clock.iter().copied().fold(0.0, f64::max),
+        balance_index: stats::balance_index(&compute),
+        compute_s: compute,
+        sync_wait_s: 0.0,
+        comm_mb: mb(comm_bytes),
+        comm_time_s: 2.0 * xfer * m as f64 * cfg.iterations as f64,
+        versions: m * cfg.iterations,
+        mean_staleness: (m as f64 - 1.0) / 2.0,
+        allocations: sizes,
+    }
+}
+
+/// Coprocessor-style design: excellent single-device throughput (2× our
+/// per-core model) but near-flat distributed scaling — the effective
+/// parallelism saturates quickly and synchronization overhead grows, so
+/// execution time *increases* for large clusters (Fig. 12b / Fig. 13).
+fn simulate_dccnn_like(cfg: &SimConfig) -> SimResult {
+    let m = cfg.cluster.size();
+    let models = node_models(cfg);
+    let mean_ps: f64 =
+        models.iter().map(|mo| mo.per_sample_s).sum::<f64>() / m as f64;
+    // Effective speedup saturates at ~6 devices.
+    let eff = (m as f64).min(6.0 + (m as f64 - 6.0).max(0.0).sqrt() * 0.5);
+    let per_iter = cfg.samples as f64 * (mean_ps / 2.0) / eff;
+    // Cross-device sync cost grows quadratically.
+    let xfer = link(cfg).transfer_time(cfg.network.weight_bytes());
+    let sync = xfer * m as f64 * (1.0 + 0.01 * m as f64 * m as f64);
+    let total = (per_iter + sync) * cfg.iterations as f64;
+    let compute: Vec<f64> = models
+        .iter()
+        .map(|mo| per_iter * cfg.iterations as f64 * (mean_ps / mo.per_sample_s) / m as f64)
+        .collect();
+    let cw = cfg.network.weight_bytes() as f64;
+    let comm_bytes = 2.0 * cw * m as f64 * cfg.iterations as f64
+        * (0.8 + 0.05 * m as f64);
+    SimResult {
+        total_s: total,
+        balance_index: stats::balance_index(&compute),
+        compute_s: compute,
+        sync_wait_s: sync * cfg.iterations as f64,
+        comm_mb: mb(comm_bytes),
+        comm_time_s: sync * cfg.iterations as f64,
+        versions: cfg.iterations,
+        mean_staleness: 0.0,
+        allocations: udpa_partition(cfg.samples, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn scenario(m: usize, samples: usize) -> SimConfig {
+        SimConfig {
+            cluster: ClusterConfig::heterogeneous(m, 9),
+            samples,
+            iterations: 100,
+            ..SimConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn all_algorithms_produce_results() {
+        let cfg = scenario(10, 100_000);
+        for alg in Algorithm::paper_set() {
+            let r = simulate_algorithm(alg, &cfg);
+            assert!(r.total_s > 0.0, "{}", alg.name());
+            assert!(r.comm_mb > 0.0, "{}", alg.name());
+        }
+    }
+
+    #[test]
+    fn fig15a_comm_shape_bptcnn_flattest() {
+        // BPT-CNN's traffic grows ~linearly in m; TF and DisBelief grow much
+        // faster (paper: 11.44 vs 45.23 MB at 35 nodes).
+        let bpt_5 = simulate_algorithm(
+            Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+            &scenario(5, 600_000),
+        );
+        let bpt_35 = simulate_algorithm(
+            Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+            &scenario(35, 600_000),
+        );
+        let tf_5 = simulate_algorithm(Algorithm::TensorflowLike, &scenario(5, 600_000));
+        let tf_35 = simulate_algorithm(Algorithm::TensorflowLike, &scenario(35, 600_000));
+        let bpt_growth = bpt_35.comm_mb / bpt_5.comm_mb;
+        let tf_growth = tf_35.comm_mb / tf_5.comm_mb;
+        assert!(
+            tf_growth > 1.5 * bpt_growth,
+            "tf {tf_growth:.1}× vs bpt {bpt_growth:.1}×"
+        );
+        assert!(tf_35.comm_mb > 2.0 * bpt_35.comm_mb);
+    }
+
+    #[test]
+    fn fig12b_dccnn_degrades_with_scale() {
+        let small = simulate_algorithm(Algorithm::DcCnnLike, &scenario(10, 100_000));
+        let large = simulate_algorithm(Algorithm::DcCnnLike, &scenario(35, 100_000));
+        // DC-CNN barely improves (or worsens) with more nodes…
+        assert!(large.total_s > 0.6 * small.total_s);
+        // …while BPT-CNN keeps improving.
+        let b_small = simulate_algorithm(
+            Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+            &scenario(10, 100_000),
+        );
+        let b_large = simulate_algorithm(
+            Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+            &scenario(35, 100_000),
+        );
+        assert!(b_large.total_s < 0.6 * b_small.total_s);
+    }
+
+    #[test]
+    fn fig15b_bptcnn_best_balance() {
+        let cfg = scenario(20, 600_000);
+        let bpt = simulate_algorithm(
+            Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa),
+            &cfg,
+        );
+        for alg in [Algorithm::TensorflowLike, Algorithm::DistBeliefLike, Algorithm::DcCnnLike] {
+            let other = simulate_algorithm(alg, &cfg);
+            assert!(
+                bpt.balance_index >= other.balance_index - 1e-9,
+                "{}: {} > bpt {}",
+                alg.name(),
+                other.balance_index,
+                bpt.balance_index
+            );
+        }
+        // Paper band: 0.80–0.89 (we assert the stable-high property).
+        assert!(bpt.balance_index > 0.8, "bpt balance {}", bpt.balance_index);
+    }
+
+    #[test]
+    fn names_and_paper_set() {
+        assert_eq!(Algorithm::paper_set().len(), 4);
+        assert_eq!(Algorithm::TensorflowLike.name(), "Tensorflow");
+        assert!(Algorithm::BptCnn(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+            .name()
+            .contains("AGWU"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Discrete-event cluster simulator — the 30-node testbed substitute behind
+//! the paper's performance evaluation (Figs. 12–15). `event` is the DES
+//! engine, `node` the calibrated performance model, `runner` the BPT-CNN
+//! policy simulation ({SGWU,AGWU} × {IDPA,UDPA}), and `baselines` the
+//! TensorFlow/DistBelief/DC-CNN comparator models.
+
+pub mod baselines;
+pub mod event;
+pub mod node;
+pub mod runner;
+
+pub use baselines::{simulate_algorithm, Algorithm};
+pub use event::{secs, to_secs, EventQueue, SimTime};
+pub use node::{thread_speedup, NodeModel, PARALLEL_FRACTION};
+pub use runner::{simulate, SimConfig, SimResult};

@@ -1,0 +1,139 @@
+//! Node performance model — the simulator's substitute for the paper's
+//! Nehalem-EX testbed (DESIGN.md §2).
+//!
+//! Per-sample training time = FLOPs / effective-throughput, where effective
+//! throughput combines nominal frequency, background load, and the
+//! inner-layer multi-thread speedup. The multi-thread model is Amdahl's law
+//! with the paper's own measurement as the parallel fraction: convolutional
+//! layers take >85% of training time (§4.1.1) and are fully task-parallel
+//! (Algorithm 4.1), the FC/loss spine is the serial remainder.
+
+use crate::config::{NetworkConfig, NodeProfile};
+use crate::util::rng::Xoshiro256;
+
+/// Fraction of a training step that the inner layer parallelizes (conv
+/// forward + conv backward, §4.1.1).
+pub const PARALLEL_FRACTION: f64 = 0.88;
+
+/// Effective FLOPs per cycle for a Nehalem-class core running the training
+/// loop (includes memory stalls — well below the 4-wide SIMD peak),
+/// calibrated so the e2e network lands near the paper's absolute scale
+/// (~62.77 s for 100 iterations over 100 k samples on 30 nodes, Fig. 12a;
+/// ≈0.13 ms/sample-visit per node). See EXPERIMENTS.md §Fig12.
+pub const FLOPS_PER_HZ: f64 = 0.75;
+
+/// Amdahl speedup of `threads` threads on `cores` cores.
+pub fn thread_speedup(threads: usize, cores: usize) -> f64 {
+    let t = threads.min(cores).max(1) as f64;
+    1.0 / ((1.0 - PARALLEL_FRACTION) + PARALLEL_FRACTION / t)
+}
+
+/// Deterministic per-node performance model.
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    /// Mean per-sample time (seconds) at the configured thread count.
+    pub per_sample_s: f64,
+    /// Lognormal-ish jitter σ applied per iteration (OS noise, "other
+    /// employers' applications", §3.3.1).
+    pub jitter_sigma: f64,
+    rng: Xoshiro256,
+}
+
+impl NodeModel {
+    pub fn new(
+        profile: &NodeProfile,
+        network: &NetworkConfig,
+        threads: usize,
+        seed: u64,
+    ) -> Self {
+        let flops = network.flops_per_sample();
+        let core_rate = profile.freq_ghz * 1e9 * FLOPS_PER_HZ * profile.background_load;
+        let speedup = thread_speedup(threads, profile.cores);
+        Self {
+            per_sample_s: flops / (core_rate * speedup),
+            jitter_sigma: 0.05,
+            rng: Xoshiro256::new(seed),
+        }
+    }
+
+    /// Time for one local iteration over `samples` samples, with jitter.
+    pub fn iteration_time(&mut self, samples: usize) -> f64 {
+        let jitter = (self.rng.normal(0.0, self.jitter_sigma)).exp();
+        self.per_sample_s * samples as f64 * jitter
+    }
+
+    /// Deterministic (jitter-free) iteration time — used by the IDPA oracle.
+    pub fn mean_iteration_time(&self, samples: usize) -> f64 {
+        self.per_sample_s * samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn profile() -> NodeProfile {
+        NodeProfile { freq_ghz: 2.3, cores: 8, background_load: 1.0 }
+    }
+
+    #[test]
+    fn speedup_monotone_saturates_at_cores() {
+        let s1 = thread_speedup(1, 8);
+        let s4 = thread_speedup(4, 8);
+        let s8 = thread_speedup(8, 8);
+        let s16 = thread_speedup(16, 8);
+        assert!((s1 - 1.0).abs() < 1e-12);
+        assert!(s4 > s1 && s8 > s4);
+        assert_eq!(s8, s16, "cannot exceed physical cores");
+        // Amdahl ceiling: 1/(1-p) ≈ 8.3.
+        assert!(s8 < 1.0 / (1.0 - PARALLEL_FRACTION));
+    }
+
+    #[test]
+    fn faster_node_smaller_per_sample_time() {
+        let net = NetworkConfig::default();
+        let slow = NodeModel::new(
+            &NodeProfile { freq_ghz: 1.6, ..profile() },
+            &net,
+            8,
+            1,
+        );
+        let fast = NodeModel::new(
+            &NodeProfile { freq_ghz: 3.2, ..profile() },
+            &net,
+            8,
+            1,
+        );
+        assert!((slow.per_sample_s / fast.per_sample_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn larger_network_slower() {
+        let small = NodeModel::new(&profile(), &NetworkConfig::table2_case(1), 8, 1);
+        let large = NodeModel::new(&profile(), &NetworkConfig::table2_case(7), 8, 1);
+        assert!(large.per_sample_s > 2.0 * small.per_sample_s);
+    }
+
+    #[test]
+    fn jitter_centered_on_mean() {
+        let mut m = NodeModel::new(&profile(), &NetworkConfig::default(), 8, 7);
+        let mean_t = m.mean_iteration_time(1000);
+        let n = 2000;
+        let avg: f64 = (0..n).map(|_| m.iteration_time(1000)).sum::<f64>() / n as f64;
+        assert!((avg / mean_t - 1.0).abs() < 0.02, "avg={avg} mean={mean_t}");
+    }
+
+    #[test]
+    fn absolute_scale_near_paper() {
+        // Paper Fig. 12a: ~62.77 s for 100 iterations over 100 k samples on
+        // the 30-node cluster ⇒ ~0.19 ms per sample-visit per node.
+        let cluster = ClusterConfig::homogeneous(30);
+        let m = NodeModel::new(&cluster.nodes[0], &NetworkConfig::default(), 8, 1);
+        assert!(
+            m.per_sample_s > 1e-5 && m.per_sample_s < 1e-3,
+            "per-sample time {} outside plausible band",
+            m.per_sample_s
+        );
+    }
+}

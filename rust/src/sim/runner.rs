@@ -1,0 +1,351 @@
+//! Discrete-event simulation of BPT-CNN's outer layer at paper scale
+//! (5–35 nodes, 10⁵–10⁶ samples) — regenerates the timing/communication/
+//! balance phenomena of Figs. 12–15 that a single host cannot measure
+//! directly.
+//!
+//! The simulator executes the *same policies* as the in-process cluster
+//! (IDPA/UDPA allocation, SGWU barrier rounds with Eq. 8 waiting, AGWU
+//! free-running submissions with version staleness) against the calibrated
+//! node performance model of [`super::node`].
+
+use crate::config::{
+    ClusterConfig, NetworkConfig, PartitionStrategy, UpdateStrategy,
+};
+use crate::outer::comm::TransferModel;
+use crate::outer::partition::{udpa_partition, IdpaPartitioner};
+use crate::util::stats;
+
+use super::event::{secs, to_secs, EventQueue};
+use super::node::NodeModel;
+
+/// Simulation scenario.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub network: NetworkConfig,
+    pub cluster: ClusterConfig,
+    pub update: UpdateStrategy,
+    pub partition: PartitionStrategy,
+    /// N — total training samples.
+    pub samples: usize,
+    /// K — training iterations.
+    pub iterations: usize,
+    /// A — IDPA batches.
+    pub idpa_batches: usize,
+    /// Inner-layer threads per node.
+    pub threads_per_node: usize,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn paper_default() -> Self {
+        Self {
+            network: NetworkConfig::default(),
+            cluster: ClusterConfig::heterogeneous(30, 7),
+            update: UpdateStrategy::Agwu,
+            partition: PartitionStrategy::Idpa,
+            samples: 100_000,
+            iterations: 100,
+            idpa_batches: 10,
+            threads_per_node: 8,
+            seed: 7,
+        }
+    }
+}
+
+/// Simulation outcome (the Figs. 12–15 measurement bundle).
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Makespan: wall-clock seconds to finish all iterations.
+    pub total_s: f64,
+    /// Busy compute seconds per node.
+    pub compute_s: Vec<f64>,
+    /// Eq. 8 synchronization wait summed over nodes and iterations.
+    pub sync_wait_s: f64,
+    /// Weight traffic (Eq. 11), MB.
+    pub comm_mb: f64,
+    /// Time spent in transfers (sum over nodes).
+    pub comm_time_s: f64,
+    pub balance_index: f64,
+    /// Global versions produced.
+    pub versions: usize,
+    /// AGWU only: mean (i − k) staleness across submissions.
+    pub mean_staleness: f64,
+    /// Final per-node sample allocation.
+    pub allocations: Vec<usize>,
+}
+
+/// Per-node sample counts per iteration index (IDPA ramps over the first A
+/// iterations; UDPA is constant).
+fn allocation_schedule(cfg: &SimConfig, models: &[NodeModel]) -> (Vec<Vec<usize>>, usize) {
+    let m = cfg.cluster.size();
+    match cfg.partition {
+        PartitionStrategy::Udpa => {
+            let sizes = udpa_partition(cfg.samples, m);
+            (vec![sizes], cfg.iterations)
+        }
+        PartitionStrategy::Idpa => {
+            let freqs: Vec<f64> = cfg.cluster.nodes.iter().map(|n| n.freq_ghz).collect();
+            let mut part = IdpaPartitioner::new(cfg.samples, cfg.idpa_batches, &freqs);
+            part.run_with_oracle(|j| models[j].per_sample_s);
+            let mut cumulative = vec![0usize; m];
+            let mut per_iter = Vec::with_capacity(part.batches_done());
+            for batch in part.allocations() {
+                for (c, &b) in cumulative.iter_mut().zip(batch.iter()) {
+                    *c += b;
+                }
+                per_iter.push(cumulative.clone());
+            }
+            let iters = part.corrected_iterations(cfg.iterations);
+            (per_iter, iters)
+        }
+    }
+}
+
+/// Samples held by node j at iteration `it` under the ramp schedule.
+fn samples_at(schedule: &[Vec<usize>], it: usize, j: usize) -> usize {
+    let idx = it.min(schedule.len() - 1);
+    schedule[idx][j]
+}
+
+/// Run the simulation.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let m = cfg.cluster.size();
+    assert!(m > 0);
+    let mut models: Vec<NodeModel> = cfg
+        .cluster
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(j, p)| NodeModel::new(p, &cfg.network, cfg.threads_per_node, cfg.seed ^ j as u64))
+        .collect();
+    let (schedule, iterations) = allocation_schedule(cfg, &models);
+    let link = TransferModel::new(
+        cfg.cluster.bandwidth_bytes_per_s,
+        cfg.cluster.link_latency_s,
+    );
+    let cw = cfg.network.weight_bytes();
+    let xfer = link.transfer_time(cw);
+
+    match cfg.update {
+        UpdateStrategy::Sgwu => {
+            simulate_sgwu(cfg, &mut models, &schedule, iterations, xfer, cw)
+        }
+        UpdateStrategy::Agwu => {
+            simulate_agwu(cfg, &mut models, &schedule, iterations, xfer, cw)
+        }
+    }
+}
+
+fn simulate_sgwu(
+    _cfg: &SimConfig,
+    models: &mut [NodeModel],
+    schedule: &[Vec<usize>],
+    iterations: usize,
+    xfer: f64,
+    cw: usize,
+) -> SimResult {
+    let m = models.len();
+    let mut clock = 0.0f64;
+    let mut compute = vec![0.0f64; m];
+    let mut comm_time = 0.0f64;
+    let mut sync_wait = 0.0f64;
+    for it in 0..iterations {
+        // Fetch (parallel links), compute, submit; the barrier waits for the
+        // slowest node (Eq. 8), then the PS merges (Eq. 7).
+        let times: Vec<f64> = (0..m)
+            .map(|j| models[j].iteration_time(samples_at(schedule, it, j)))
+            .collect();
+        let t_max = times.iter().copied().fold(0.0f64, f64::max);
+        for (j, &t) in times.iter().enumerate() {
+            compute[j] += t;
+            sync_wait += t_max - t;
+        }
+        comm_time += 2.0 * xfer * m as f64;
+        clock += xfer + t_max + xfer; // fetch ∥ compute ∥ submit round
+    }
+    let comm_bytes = 2 * cw * m * iterations;
+    SimResult {
+        total_s: clock,
+        balance_index: stats::balance_index(&compute),
+        compute_s: compute,
+        sync_wait_s: sync_wait,
+        comm_mb: comm_bytes as f64 / (1024.0 * 1024.0),
+        comm_time_s: comm_time,
+        versions: iterations,
+        mean_staleness: 0.0,
+        allocations: schedule.last().unwrap().clone(),
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// Node finished compute for its local iteration `it`.
+    Done { node: usize, it: usize },
+}
+
+fn simulate_agwu(
+    _cfg: &SimConfig,
+    models: &mut [NodeModel],
+    schedule: &[Vec<usize>],
+    iterations: usize,
+    xfer: f64,
+    cw: usize,
+) -> SimResult {
+    let m = models.len();
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut compute = vec![0.0f64; m];
+    let mut comm_time = 0.0f64;
+    let mut version = 0usize; // global version i
+    let mut base_version = vec![0usize; m]; // version each node trained from
+    let mut staleness_sum = 0.0f64;
+    let mut submissions = 0usize;
+
+    // Every node fetches v0 and starts iteration 0.
+    for (j, model) in models.iter_mut().enumerate() {
+        let t = model.iteration_time(samples_at(schedule, 0, j));
+        compute[j] += t;
+        comm_time += xfer;
+        q.schedule_at(secs(xfer + t), Ev::Done { node: j, it: 0 });
+    }
+    while let Some((_, Ev::Done { node, it })) = q.pop() {
+        // Submit: the PS immediately produces version i+1 (Alg. 3.2).
+        version += 1;
+        staleness_sum += (version - 1 - base_version[node]) as f64;
+        submissions += 1;
+        comm_time += xfer;
+        if it + 1 < iterations {
+            // Fetch the fresh version and start the next local iteration.
+            base_version[node] = version;
+            let t = models[node].iteration_time(samples_at(schedule, it + 1, node));
+            compute[node] += t;
+            comm_time += xfer;
+            q.schedule_in(secs(xfer + t + xfer), Ev::Done { node, it: it + 1 });
+        }
+    }
+    let comm_bytes = 2 * cw * m * iterations;
+    SimResult {
+        total_s: to_secs(q.now()),
+        balance_index: stats::balance_index(&compute),
+        compute_s: compute,
+        sync_wait_s: 0.0,
+        comm_mb: comm_bytes as f64 / (1024.0 * 1024.0),
+        comm_time_s: comm_time,
+        versions: version,
+        mean_staleness: staleness_sum / submissions.max(1) as f64,
+        allocations: schedule.last().unwrap().clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base(update: UpdateStrategy, partition: PartitionStrategy) -> SimConfig {
+        SimConfig {
+            cluster: ClusterConfig::heterogeneous(10, 3),
+            update,
+            partition,
+            samples: 50_000,
+            iterations: 20,
+            idpa_batches: 5,
+            ..SimConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = base(UpdateStrategy::Agwu, PartitionStrategy::Idpa);
+        let a = simulate(&cfg);
+        let b = simulate(&cfg);
+        assert_eq!(a.total_s, b.total_s);
+        assert_eq!(a.versions, b.versions);
+    }
+
+    #[test]
+    fn agwu_has_no_sync_wait_sgwu_does() {
+        let s = simulate(&base(UpdateStrategy::Sgwu, PartitionStrategy::Udpa));
+        let a = simulate(&base(UpdateStrategy::Agwu, PartitionStrategy::Udpa));
+        assert!(s.sync_wait_s > 0.0);
+        assert_eq!(a.sync_wait_s, 0.0);
+    }
+
+    #[test]
+    fn agwu_faster_than_sgwu_on_heterogeneous_cluster() {
+        // Fig. 14's core claim.
+        let s = simulate(&base(UpdateStrategy::Sgwu, PartitionStrategy::Udpa));
+        let a = simulate(&base(UpdateStrategy::Agwu, PartitionStrategy::Udpa));
+        assert!(
+            a.total_s < s.total_s,
+            "AGWU {} not faster than SGWU {}",
+            a.total_s,
+            s.total_s
+        );
+    }
+
+    #[test]
+    fn idpa_balances_better_than_udpa() {
+        // Fig. 15b's core claim.
+        let u = simulate(&base(UpdateStrategy::Sgwu, PartitionStrategy::Udpa));
+        let i = simulate(&base(UpdateStrategy::Sgwu, PartitionStrategy::Idpa));
+        assert!(
+            i.balance_index > u.balance_index,
+            "IDPA balance {} <= UDPA balance {}",
+            i.balance_index,
+            u.balance_index
+        );
+        // And it cuts the sync wait (§3.3.1's objective).
+        assert!(i.sync_wait_s < u.sync_wait_s);
+    }
+
+    #[test]
+    fn comm_volume_matches_eq11() {
+        let cfg = base(UpdateStrategy::Agwu, PartitionStrategy::Idpa);
+        let r = simulate(&cfg);
+        // Eq. 11: 2·c_w·m·K' with K' = K + A/2 − 1 = 20+2-1 = 21.
+        let expected =
+            (2 * cfg.network.weight_bytes() * 10 * 21) as f64 / (1024.0 * 1024.0);
+        assert!((r.comm_mb - expected).abs() < 1e-9, "{} vs {expected}", r.comm_mb);
+    }
+
+    #[test]
+    fn agwu_staleness_positive_and_bounded() {
+        let r = simulate(&base(UpdateStrategy::Agwu, PartitionStrategy::Udpa));
+        assert!(r.mean_staleness > 0.0, "async must observe staleness");
+        assert!(r.mean_staleness < 10.0 * 2.0, "staleness unreasonably large");
+    }
+
+    #[test]
+    fn time_scales_with_data_and_inverse_with_nodes() {
+        let small = simulate(&SimConfig {
+            samples: 50_000,
+            ..base(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+        });
+        let big = simulate(&SimConfig {
+            samples: 200_000,
+            ..base(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+        });
+        assert!(big.total_s > 2.0 * small.total_s);
+        let few_nodes = simulate(&SimConfig {
+            cluster: ClusterConfig::heterogeneous(5, 3),
+            ..base(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+        });
+        let many_nodes = simulate(&SimConfig {
+            cluster: ClusterConfig::heterogeneous(30, 3),
+            ..base(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+        });
+        assert!(many_nodes.total_s < few_nodes.total_s);
+    }
+
+    #[test]
+    fn more_threads_faster() {
+        let t1 = simulate(&SimConfig {
+            threads_per_node: 1,
+            ..base(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+        });
+        let t8 = simulate(&SimConfig {
+            threads_per_node: 8,
+            ..base(UpdateStrategy::Agwu, PartitionStrategy::Idpa)
+        });
+        assert!(t8.total_s < t1.total_s / 3.0, "t8={} t1={}", t8.total_s, t1.total_s);
+    }
+}

@@ -1,0 +1,228 @@
+//! Host tensors and weight-set algebra.
+//!
+//! The Rust coordinator treats model parameters the way the paper does: as a
+//! **weight set** (Definition 1/2, §3.3.2) — an ordered list of tensors. The
+//! parameter-server math (Eq. 7 SGWU averaging, Eq. 10 AGWU increments) runs
+//! on [`WeightSet`]; [`Tensor`] also provides the dense ops the native NN
+//! backend needs (conv/pool/matmul live in `nn/`).
+
+mod weightset;
+
+pub use weightset::WeightSet;
+
+/// A dense, row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: &[usize], value: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Fill with N(mean, std) noise from the given RNG.
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Xoshiro256, mean: f32, std: f32) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal(mean as f64, std as f64) as f32).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape element mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- index helpers (up to 4-D, the layouts the CNN uses) -------------
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d] = v;
+    }
+
+    #[inline]
+    pub fn add4(&mut self, a: usize, b: usize, c: usize, d: usize, v: f32) {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d] += v;
+    }
+
+    // ---- element-wise algebra (the weight-update hot path) ---------------
+
+    /// `self += alpha * other` (axpy) — the core of Eq. 10's
+    /// `W + γ·Q·(W_j − W)` update.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Element-wise `self - other` into a new tensor.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        debug_assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn dot(&self, other: &Tensor) -> f64 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Max |a-b| across elements (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_validates_length() {
+        Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    fn index_4d_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        t.set4(1, 2, 3, 4, 7.0);
+        assert_eq!(t.at4(1, 2, 3, 4), 7.0);
+        // Row-major: last axis contiguous.
+        assert_eq!(t.data()[((1 * 3 + 2) * 4 + 3) * 5 + 4], 7.0);
+        t.add4(1, 2, 3, 4, 1.0);
+        assert_eq!(t.at4(1, 2, 3, 4), 8.0);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::filled(&[4], 1.0);
+        let b = Tensor::filled(&[4], 2.0);
+        a.axpy(0.5, &b);
+        assert!(a.data().iter().all(|&x| x == 2.0));
+        a.scale(0.25);
+        assert!(a.data().iter().all(|&x| x == 0.5));
+    }
+
+    #[test]
+    fn sub_dot_norm() {
+        let a = Tensor::from_vec(&[3], vec![3.0, 4.0, 0.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]);
+        let d = a.sub(&b);
+        assert_eq!(d.data(), &[2.0, 3.0, -1.0]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-9);
+        assert!((a.dot(&b) - 7.0).abs() < 1e-9);
+        assert_eq!(a.max_abs_diff(&b), 3.0);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Xoshiro256::new(9);
+        let t = Tensor::randn(&[10_000], &mut rng, 1.0, 2.0);
+        let mean: f64 = t.data().iter().map(|&x| x as f64).sum::<f64>() / 10_000.0;
+        assert!((mean - 1.0).abs() < 0.1, "mean={mean}");
+    }
+}

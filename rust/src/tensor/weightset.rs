@@ -1,0 +1,199 @@
+//! The paper's *weight set* (Definitions 1 & 2, §3.3.2): the ordered list of
+//! all weight tensors of a CNN (sub)network. Local weight sets live on
+//! workers; the global weight set lives on the parameter server. The order
+//! matches the artifact manifest (`meta.json: params[]`) — it is the wire
+//! format between the coordinator and the compiled XLA programs.
+
+use super::Tensor;
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WeightSet {
+    tensors: Vec<Tensor>,
+}
+
+impl WeightSet {
+    pub fn new(tensors: Vec<Tensor>) -> Self {
+        Self { tensors }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+        }
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        &mut self.tensors
+    }
+
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        self.tensors
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total number of scalar parameters.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Size in bytes when transmitted (f32) — the paper's unit communication
+    /// cost `c_w` of Eq. 11 is `byte_size()` for one weight-set transfer.
+    pub fn byte_size(&self) -> usize {
+        self.param_count() * std::mem::size_of::<f32>()
+    }
+
+    /// `self += alpha * other`, element-wise over the whole set.
+    pub fn axpy(&mut self, alpha: f32, other: &WeightSet) {
+        assert_eq!(self.tensors.len(), other.tensors.len(), "weight set arity mismatch");
+        for (a, b) in self.tensors.iter_mut().zip(other.tensors.iter()) {
+            a.axpy(alpha, b);
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for t in self.tensors.iter_mut() {
+            t.scale(alpha);
+        }
+    }
+
+    /// `self - other` as a new set — the AGWU increment `(W_j^(k) − W^(k))`
+    /// of Eq. 10.
+    pub fn sub(&self, other: &WeightSet) -> WeightSet {
+        assert_eq!(self.tensors.len(), other.tensors.len(), "weight set arity mismatch");
+        WeightSet {
+            tensors: self
+                .tensors
+                .iter()
+                .zip(other.tensors.iter())
+                .map(|(a, b)| a.sub(b))
+                .collect(),
+        }
+    }
+
+    /// Accuracy-weighted mean of several sets — SGWU's Eq. 7:
+    /// `W^(i) = Σ_j W_j · Q_j / Σ_k Q_k`.
+    pub fn weighted_mean(sets: &[(&WeightSet, f64)]) -> WeightSet {
+        assert!(!sets.is_empty(), "weighted_mean of zero sets");
+        let total: f64 = sets.iter().map(|(_, q)| q).sum();
+        assert!(total > 0.0, "total weight must be positive");
+        let mut acc = sets[0].0.zeros_like();
+        for (ws, q) in sets {
+            acc.axpy((*q / total) as f32, ws);
+        }
+        acc
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .map(|t| {
+                let n = t.l2_norm();
+                n * n
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &WeightSet) -> f32 {
+        self.tensors
+            .iter()
+            .zip(other.tensors.iter())
+            .fold(0.0f32, |m, (a, b)| m.max(a.max_abs_diff(b)))
+    }
+
+    /// Flatten to one contiguous vector (metrics/serialization helper).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for t in &self.tensors {
+            out.extend_from_slice(t.data());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ws(values: &[&[f32]]) -> WeightSet {
+        WeightSet::new(
+            values
+                .iter()
+                .map(|v| Tensor::from_vec(&[v.len()], v.to_vec()))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn counting() {
+        let w = ws(&[&[1.0, 2.0], &[3.0, 4.0, 5.0]]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.param_count(), 5);
+        assert_eq!(w.byte_size(), 20);
+    }
+
+    #[test]
+    fn axpy_applies_to_all_tensors() {
+        let mut a = ws(&[&[1.0], &[2.0, 2.0]]);
+        let b = ws(&[&[10.0], &[10.0, 20.0]]);
+        a.axpy(0.1, &b);
+        assert_eq!(a.tensors()[0].data(), &[2.0]);
+        assert_eq!(a.tensors()[1].data(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn sub_is_agwu_increment() {
+        let local = ws(&[&[3.0, 5.0]]);
+        let base = ws(&[&[1.0, 2.0]]);
+        let inc = local.sub(&base);
+        assert_eq!(inc.tensors()[0].data(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_mean_equal_weights_is_mean() {
+        let a = ws(&[&[0.0, 4.0]]);
+        let b = ws(&[&[2.0, 0.0]]);
+        let m = WeightSet::weighted_mean(&[(&a, 1.0), (&b, 1.0)]);
+        assert_eq!(m.tensors()[0].data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn weighted_mean_respects_accuracy_weights() {
+        // Eq. 7 with Q = (3, 1): W = (3·a + 1·b) / 4.
+        let a = ws(&[&[4.0]]);
+        let b = ws(&[&[0.0]]);
+        let m = WeightSet::weighted_mean(&[(&a, 3.0), (&b, 1.0)]);
+        assert_eq!(m.tensors()[0].data(), &[3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut a = ws(&[&[1.0]]);
+        let b = ws(&[&[1.0], &[2.0]]);
+        a.axpy(1.0, &b);
+    }
+
+    #[test]
+    fn flatten_concatenates_in_order() {
+        let w = ws(&[&[1.0, 2.0], &[3.0]]);
+        assert_eq!(w.flatten(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn l2_norm_across_set() {
+        let w = ws(&[&[3.0], &[4.0]]);
+        assert!((w.l2_norm() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,227 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::from_env("bench_inner");
+//! b.bench("conv_tasks/seq", || { run_sequential(); });
+//! b.bench_with_throughput("ps_update/agwu", weight_bytes as f64, || { ... });
+//! b.finish();
+//! ```
+//! Each benchmark is warmed up, then timed for a fixed wall-clock budget;
+//! mean / p50 / p95 / std-dev and optional throughput are printed in aligned
+//! rows so `cargo bench | tee` output is directly pasteable into
+//! EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark's summary statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+    /// Optional bytes (or items) processed per iteration, for throughput.
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.mean_ns / 1e9))
+    }
+}
+
+/// Harness configuration. `QUICK_BENCH=1` in the environment shrinks the
+/// measurement budget (used by `cargo test`-adjacent smoke runs).
+pub struct Bench {
+    suite: String,
+    warmup: Duration,
+    budget: Duration,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str, warmup: Duration, budget: Duration) -> Self {
+        Self {
+            suite: suite.to_string(),
+            warmup,
+            budget,
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Standard settings: 0.2 s warmup, 1 s measurement (0.05/0.2 s when
+    /// `QUICK_BENCH=1`).
+    pub fn from_env(suite: &str) -> Self {
+        let quick = std::env::var("QUICK_BENCH").map(|v| v == "1").unwrap_or(false);
+        if quick {
+            Self::new(suite, Duration::from_millis(50), Duration::from_millis(200))
+        } else {
+            Self::new(suite, Duration::from_millis(200), Duration::from_secs(1))
+        }
+    }
+
+    /// Time `f` and record the result under `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_inner(name, None, f)
+    }
+
+    /// Time `f`, additionally reporting `units / s` throughput (units =
+    /// bytes, samples, events … processed per call).
+    pub fn bench_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        f: F,
+    ) -> &BenchResult {
+        self.bench_inner(name, Some(units_per_iter), f)
+    }
+
+    fn bench_inner<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: Option<f64>,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure individual iterations until the budget is exhausted.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && (samples_ns.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            iters: samples_ns.len() as u64,
+            mean_ns: stats::mean(&samples_ns),
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            std_ns: stats::std_dev(&samples_ns),
+            units_per_iter: units,
+        };
+        println!("{}", format_row(&result));
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print the footer; returns all results for programmatic use.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!(
+            "[{}] {} benchmark(s) complete",
+            self.suite,
+            self.results.len()
+        );
+        self.results
+    }
+}
+
+/// Render nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:7.1} ns")
+    } else if ns < 1e6 {
+        format!("{:7.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:7.2} ms", ns / 1e6)
+    } else {
+        format!("{:7.2} s ", ns / 1e9)
+    }
+}
+
+fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:6.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:6.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:6.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:6.1} /s")
+    }
+}
+
+fn format_row(r: &BenchResult) -> String {
+    let mut row = format!(
+        "{:<44} {:>8} iters  mean {}  p50 {}  p95 {}  ±{}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p95_ns),
+        fmt_ns(r.std_ns),
+    );
+    if let Some(rate) = r.throughput_per_sec() {
+        row.push_str(&format!("  {}", fmt_rate(rate)));
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> Bench {
+        Bench::new("test", Duration::from_millis(1), Duration::from_millis(10))
+    }
+
+    #[test]
+    fn records_iterations() {
+        let mut b = quick();
+        let r = b.bench("noop", || {}).clone();
+        assert!(r.iters > 10);
+        assert!(r.mean_ns >= 0.0);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].name, "test/noop");
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = quick();
+        let r = b.bench_with_throughput("bytes", 1024.0, || {
+            std::hint::black_box([0u8; 64]);
+        });
+        let rate = r.throughput_per_sec().unwrap();
+        assert!(rate > 0.0);
+    }
+
+    #[test]
+    fn slower_function_measures_slower() {
+        let mut b = quick();
+        let fast = b
+            .bench("fast", || {
+                std::hint::black_box(1 + 1);
+            })
+            .mean_ns;
+        let slow = b
+            .bench("slow", || {
+                let mut acc = 0u64;
+                for i in 0..20_000u64 {
+                    acc = acc.wrapping_add(std::hint::black_box(i));
+                }
+                std::hint::black_box(acc);
+            })
+            .mean_ns;
+        assert!(slow > fast * 5.0, "slow={slow} fast={fast}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains("s"));
+    }
+}

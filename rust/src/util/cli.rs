@@ -1,0 +1,262 @@
+//! Declarative command-line flag parser (clap is not available offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults,
+//! required flags, and auto-generated `--help` text. Used by `main.rs`,
+//! the examples and the bench binaries.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Builder + parser for one command's flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("missing required flag --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    HelpRequested,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required value flag.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (false unless present).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nFlags:");
+        for spec in &self.specs {
+            let default = match (&spec.default, spec.is_bool) {
+                (_, true) => String::new(),
+                (Some(d), false) => format!(" (default: {d})"),
+                (None, false) => " (required)".to_string(),
+            };
+            let _ = writeln!(s, "  --{:<18} {}{}", spec.name, spec.help, default);
+        }
+        s
+    }
+
+    /// Parse the given argv tail (without the program name).
+    pub fn parse(mut self, argv: &[String]) -> Result<Parsed, CliError> {
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?
+                    .clone();
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, check required.
+        for spec in &self.specs {
+            if !self.values.contains_key(&spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        self.values.insert(spec.name.clone(), d.clone());
+                    }
+                    None => return Err(CliError::MissingRequired(spec.name.clone())),
+                }
+            }
+        }
+        Ok(Parsed { values: self.values, positional: self.positional })
+    }
+}
+
+/// Parsed flag values with typed accessors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.to_string(), self.str(name).to_string()))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.to_string(), self.str(name).to_string()))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError::Invalid(name.to_string(), self.str(name).to_string()))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.str(name) == "true"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn sample() -> Args {
+        Args::new("test", "a test command")
+            .opt("nodes", "8", "number of nodes")
+            .opt("strategy", "agwu", "update strategy")
+            .flag("verbose", "log more")
+            .req("out", "output path")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = sample().parse(&argv(&["--out", "x.json"])).unwrap();
+        assert_eq!(p.usize("nodes").unwrap(), 8);
+        assert_eq!(p.str("strategy"), "agwu");
+        assert!(!p.bool("verbose"));
+        assert_eq!(p.str("out"), "x.json");
+    }
+
+    #[test]
+    fn explicit_values_and_equals_syntax() {
+        let p = sample()
+            .parse(&argv(&["--nodes=32", "--verbose", "--out=o", "--strategy", "sgwu"]))
+            .unwrap();
+        assert_eq!(p.usize("nodes").unwrap(), 32);
+        assert!(p.bool("verbose"));
+        assert_eq!(p.str("strategy"), "sgwu");
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert_eq!(
+            sample().parse(&argv(&["--nodes", "4"])),
+            Err(CliError::MissingRequired("out".into()))
+        );
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert_eq!(
+            sample().parse(&argv(&["--out", "x", "--bogus", "1"])),
+            Err(CliError::Unknown("bogus".into()))
+        );
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert_eq!(
+            sample().parse(&argv(&["--out"])),
+            Err(CliError::MissingValue("out".into()))
+        );
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = sample().parse(&argv(&["run", "--out", "x", "fast"])).unwrap();
+        assert_eq!(p.positional, vec!["run".to_string(), "fast".to_string()]);
+    }
+
+    #[test]
+    fn help_requested() {
+        assert_eq!(sample().parse(&argv(&["-h"])), Err(CliError::HelpRequested));
+        assert!(sample().usage().contains("--nodes"));
+    }
+
+    #[test]
+    fn invalid_numeric() {
+        let p = sample().parse(&argv(&["--nodes", "abc", "--out", "x"])).unwrap();
+        assert!(p.usize("nodes").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, statistics, CLI parsing, thread pool, bench harness, and a
+//! mini property-testing framework.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

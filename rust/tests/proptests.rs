@@ -1,0 +1,303 @@
+//! Property-based tests over the system's invariants, via the hand-rolled
+//! `util::prop` harness (seeded, sized, reproducible with PROP_SEED).
+
+use bptcnn::config::NetworkConfig;
+use bptcnn::inner::{execute_dag, mark_priorities, TaskDag};
+use bptcnn::nn::ops::{self, ConvDims};
+use bptcnn::outer::{udpa_partition, IdpaPartitioner, ParamServer};
+use bptcnn::tensor::{Tensor, WeightSet};
+use bptcnn::util::json::Json;
+use bptcnn::util::prop::{self, assert_close, assert_eq_msg, assert_true};
+use bptcnn::util::stats;
+use bptcnn::util::threadpool::ThreadPool;
+
+/// IDPA conservation: every batch allocates exactly ⌊N/A⌋ samples, totals
+/// sum to A·⌊N/A⌋, and no allocation is negative — for random cluster
+/// shapes, speeds and batch counts.
+#[test]
+fn prop_idpa_conserves_quota() {
+    prop::check("idpa conservation", 150, |g| {
+        let m = g.usize_full(1, 12);
+        let a = g.usize_full(1, 8);
+        let n = g.usize(a * m, 50_000).max(a * m);
+        let freqs: Vec<f64> = (0..m).map(|_| g.f64(0.5, 4.0)).collect();
+        let speeds: Vec<f64> = (0..m).map(|_| g.f64(1e-4, 1e-2)).collect();
+        let mut p = IdpaPartitioner::new(n, a, &freqs);
+        let totals = p.run_with_oracle(|j| speeds[j]);
+        let quota = n / a;
+        for (i, batch) in p.allocations().iter().enumerate() {
+            assert_eq_msg(batch.iter().sum::<usize>(), quota, &format!("batch {i}"))?;
+        }
+        assert_eq_msg(totals.iter().sum::<usize>(), a * quota, "grand total")
+    });
+}
+
+/// UDPA: uniform within ±1, conserves N exactly.
+#[test]
+fn prop_udpa_uniform() {
+    prop::check("udpa uniform", 200, |g| {
+        let n = g.usize(0, 1_000_000);
+        let m = g.usize_full(1, 40);
+        let sizes = udpa_partition(n, m);
+        assert_eq_msg(sizes.iter().sum::<usize>(), n, "conservation")?;
+        let mx = *sizes.iter().max().unwrap();
+        let mn = *sizes.iter().min().unwrap();
+        assert_true(mx - mn <= 1, "uniformity within 1")
+    });
+}
+
+/// SGWU with equal accuracies is the arithmetic mean; with one dominant
+/// accuracy it converges to that node's weights (Eq. 7 limits).
+#[test]
+fn prop_sgwu_weighted_mean_limits() {
+    prop::check("sgwu limits", 100, |g| {
+        let m = g.usize_full(2, 6);
+        let len = g.usize_full(1, 64);
+        let sets: Vec<WeightSet> = (0..m)
+            .map(|_| WeightSet::new(vec![Tensor::from_vec(&[len], g.vec_f32(len, -2.0, 2.0))]))
+            .collect();
+        // Equal accuracies → mean.
+        let mut ps = ParamServer::new(sets[0].zeros_like(), m);
+        let locals: Vec<(WeightSet, f64)> = sets.iter().map(|s| (s.clone(), 0.7)).collect();
+        ps.update_sgwu(&locals);
+        for i in 0..len {
+            let mean: f64 = sets.iter().map(|s| s.tensors()[0].data()[i] as f64).sum::<f64>() / m as f64;
+            assert_close(ps.global().tensors()[0].data()[i] as f64, mean, 1e-5, "mean")?;
+        }
+        // Dominant accuracy → near that set.
+        let mut ps2 = ParamServer::new(sets[0].zeros_like(), m);
+        let mut locals2: Vec<(WeightSet, f64)> = sets.iter().map(|s| (s.clone(), 1e-9)).collect();
+        locals2[0].1 = 1.0;
+        ps2.update_sgwu(&locals2);
+        assert_true(
+            ps2.global().max_abs_diff(&sets[0]) < 1e-3,
+            "dominant accuracy wins",
+        )
+    });
+}
+
+/// AGWU γ weights (Eq. 9): positive, and monotone in the base version —
+/// fresher bases never get *less* weight.
+#[test]
+fn prop_gamma_monotone_in_freshness() {
+    prop::check("gamma monotone", 100, |g| {
+        let m = g.usize_full(2, 8);
+        let len = 4;
+        let init = WeightSet::new(vec![Tensor::zeros(&[len])]);
+        let mut ps = ParamServer::new(init, m);
+        // Random update history.
+        let rounds = g.usize_full(1, 20);
+        for _ in 0..rounds {
+            let node = g.usize_full(0, m - 1);
+            let (w, k) = ps.fetch(node);
+            ps.update_agwu(node, &w, k, g.f64(0.1, 1.0));
+        }
+        let v = ps.version();
+        let k1 = g.usize_full(0, v);
+        let k2 = g.usize_full(k1, v);
+        let g1 = ps.gamma(0, k1);
+        let g2 = ps.gamma(0, k2);
+        assert_true(g1 > 0.0 && g2 > 0.0, "positive")?;
+        assert_true(g2 >= g1 - 1e-12, "monotone in freshness")
+    });
+}
+
+/// The Algorithm-4.2 scheduler never violates dependency order on random
+/// layered DAGs, and every task runs exactly once.
+#[test]
+fn prop_scheduler_topological_safety() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    prop::check("scheduler safety", 30, |g| {
+        let layers = g.usize_full(1, 4);
+        let width = g.usize_full(1, 10);
+        let threads = g.usize_full(1, 4);
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        let mut prev: Vec<usize> = Vec::new();
+        let mut id = 0usize;
+        for l in 0..layers {
+            let mut cur = Vec::new();
+            for _ in 0..width {
+                let deps: Vec<usize> = if l == 0 || prev.is_empty() {
+                    vec![]
+                } else {
+                    let k = g.usize_full(0, prev.len().min(3));
+                    (0..k).map(|_| *g.choose(&prev)).collect()
+                };
+                cur.push(dag.add("t", g.f64(0.5, 2.0), &deps, id));
+                id += 1;
+            }
+            prev = cur;
+        }
+        let n = dag.len();
+        let deps: Vec<Vec<usize>> = dag.nodes().iter().map(|nd| nd.deps.clone()).collect();
+        let pool = ThreadPool::new(threads);
+        let seq = Arc::new(AtomicUsize::new(0));
+        let pos: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(usize::MAX)).collect());
+        {
+            let seq = Arc::clone(&seq);
+            let pos = Arc::clone(&pos);
+            execute_dag(&pool, dag, move |&tid| {
+                pos[tid].store(seq.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
+            });
+        }
+        for (tid, dl) in deps.iter().enumerate() {
+            let my = pos[tid].load(Ordering::SeqCst);
+            assert_true(my != usize::MAX, "task ran")?;
+            for &d in dl {
+                assert_true(
+                    pos[d].load(Ordering::SeqCst) < my,
+                    &format!("dep {d} before task {tid}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Priority marking: priorities strictly decrease along any edge.
+#[test]
+fn prop_priorities_decrease_along_edges() {
+    prop::check("priority edges", 100, |g| {
+        let n = g.usize_full(1, 40);
+        let mut dag: TaskDag<()> = TaskDag::new();
+        for i in 0..n {
+            let deps: Vec<usize> = if i == 0 {
+                vec![]
+            } else {
+                let k = g.usize_full(0, 3.min(i));
+                (0..k).map(|_| g.usize_full(0, i - 1)).collect()
+            };
+            dag.add("t", 1.0, &deps, ());
+        }
+        let pri = mark_priorities(&dag);
+        for node in dag.nodes() {
+            for &d in &node.deps {
+                assert_true(pri[d] > pri[node.id], "upstream higher priority")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Conv forward/backward algebra: ⟨conv(x), dy⟩ == ⟨x, conv_bwd_input(dy)⟩
+/// (adjoint identity) for random shapes.
+#[test]
+fn prop_conv_adjoint_identity() {
+    prop::check("conv adjoint", 40, |g| {
+        let d = ConvDims {
+            n: g.usize_full(1, 3),
+            h: g.usize_full(3, 8),
+            w: g.usize_full(3, 8),
+            c: g.usize_full(1, 3),
+            k: 3,
+            co: g.usize_full(1, 3),
+        };
+        let x = g.vec_f32(d.x_len(), -1.0, 1.0);
+        let f = g.vec_f32(d.f_len(), -1.0, 1.0);
+        let dy = g.vec_f32(d.y_len(), -1.0, 1.0);
+        let zero_bias = vec![0.0f32; d.co];
+        let mut y = vec![0.0f32; d.y_len()];
+        ops::conv2d_same_fwd(&d, &x, &f, &zero_bias, &mut y);
+        let mut dx = vec![0.0f32; d.x_len()];
+        ops::conv2d_same_bwd_input(&d, &dy, &f, &mut dx);
+        let lhs: f64 = y.iter().zip(&dy).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.iter().zip(&dx).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert_close(lhs, rhs, 1e-3, "⟨Ax,y⟩=⟨x,Aᵀy⟩")
+    });
+}
+
+/// JSON round-trip on random values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut prop::Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_full(0, 3) } else { g.usize_full(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize_full(0, 12))
+                    .map(|_| *g.choose(&['a', 'π', '"', '\\', '\n', 'z', ' ']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_full(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize_full(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    prop::check("json roundtrip", 200, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("reparse failed: {e} on {text}"))?;
+        assert_eq_msg(back, v, "roundtrip")
+    });
+}
+
+/// Balance index: bounded in (0, 1], equals 1 for uniform loads, and is
+/// scale-invariant.
+#[test]
+fn prop_balance_index_properties() {
+    prop::check("balance index", 200, |g| {
+        let n = g.usize_full(1, 30);
+        let loads = g.vec_f64(n, 0.1, 100.0);
+        let b = stats::balance_index(&loads);
+        assert_true(b > 0.0 && b <= 1.0 + 1e-12, "bounded")?;
+        let scaled: Vec<f64> = loads.iter().map(|x| x * 7.5).collect();
+        assert_close(stats::balance_index(&scaled), b, 1e-9, "scale invariant")?;
+        let uniform = vec![g.f64(0.1, 10.0); n];
+        assert_close(stats::balance_index(&uniform), 1.0, 1e-9, "uniform = 1")
+    });
+}
+
+/// Weight-set algebra: axpy/sub/scale satisfy vector-space identities.
+#[test]
+fn prop_weightset_vector_space() {
+    prop::check("weightset algebra", 150, |g| {
+        let len = g.usize_full(1, 100);
+        let a = WeightSet::new(vec![Tensor::from_vec(&[len], g.vec_f32(len, -5.0, 5.0))]);
+        let b = WeightSet::new(vec![Tensor::from_vec(&[len], g.vec_f32(len, -5.0, 5.0))]);
+        // (a − b) + b == a
+        let mut r = a.sub(&b);
+        r.axpy(1.0, &b);
+        assert_true(r.max_abs_diff(&a) < 1e-4, "(a−b)+b = a")?;
+        // a + 0·b == a
+        let mut r2 = a.clone();
+        r2.axpy(0.0, &b);
+        assert_eq_msg(r2.max_abs_diff(&a), 0.0, "a+0b = a")?;
+        // ‖a‖ ≥ 0 and byte size consistent.
+        assert_true(a.l2_norm() >= 0.0, "norm")?;
+        assert_eq_msg(a.byte_size(), len * 4, "bytes")
+    });
+}
+
+/// Network config ↔ manifest consistency across the whole Table-2 space:
+/// param counting is exact for arbitrary well-formed configs.
+#[test]
+fn prop_param_count_matches_shapes() {
+    prop::check("param manifest", 100, |g| {
+        let cfg = NetworkConfig {
+            name: "prop".into(),
+            input_hw: *g.choose(&[8usize, 12, 16]),
+            in_channels: g.usize_full(1, 3),
+            conv_layers: g.usize_full(0, 4),
+            filters: g.usize_full(1, 8),
+            kernel_hw: *g.choose(&[1usize, 3, 5]),
+            fc_layers: g.usize_full(0, 3),
+            fc_neurons: g.usize_full(1, 64),
+            num_classes: g.usize_full(2, 10),
+            batch_size: 4,
+            pool_window: 2,
+        };
+        let total: usize = cfg
+            .param_shapes()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum();
+        assert_eq_msg(cfg.param_count(), total, "count = Σ shapes")?;
+        assert_eq_msg(cfg.weight_bytes(), total * 4, "bytes = 4·count")
+    });
+}
