@@ -1,26 +1,123 @@
 //! Inner-layer benchmarks: conv task decomposition + Algorithm-4.2
-//! scheduling vs sequential execution (paper Fig. 14d micro-scale), task
-//! granularity ablation, and DAG machinery overheads.
+//! scheduling vs sequential execution (paper Fig. 14d micro-scale), the
+//! im2col+GEMM fast path vs the seed's direct loops (the PR-1 acceptance
+//! comparison), task granularity ablation, and DAG machinery overheads.
+//!
+//! Headline rows: `conv_fwd_bwd/quickstart_*` — one conv layer at quickstart
+//! shapes (batch 8, 8×8×1 → 4 filters, k=3), forward + filter-gradient
+//! backward, comparing the seed direct loops, the serial im2col+GEMM path,
+//! and the Algorithm-4.1/4.2 task-parallel path on a 4-worker pool.
 
+use bptcnn::inner::bp_tasks::conv_bwd_parallel;
 use bptcnn::inner::{conv2d_parallel, conv_task_dag, execute_dag, TaskDag};
 use bptcnn::nn::ops::{self, ConvDims};
 use bptcnn::util::bench::Bench;
 use bptcnn::util::rng::Xoshiro256;
 use bptcnn::util::threadpool::ThreadPool;
 
+struct ConvSetup {
+    d: ConvDims,
+    x: Vec<f32>,
+    f: Vec<f32>,
+    bias: Vec<f32>,
+    dy: Vec<f32>,
+}
+
+fn setup(d: ConvDims, seed: u64) -> ConvSetup {
+    let mut rng = Xoshiro256::new(seed);
+    let mut rand = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    };
+    ConvSetup {
+        x: rand(d.x_len()),
+        f: rand(d.f_len()),
+        bias: rand(d.co),
+        dy: rand(d.y_len()),
+        d,
+    }
+}
+
+/// fwd + bwd-filter + bwd-input FLOPs for one conv layer (the quantity the
+/// ≥2× acceptance criterion is measured over).
+fn fwd_bwd_flops(d: &ConvDims) -> f64 {
+    (d.y_len() * d.k * d.k * d.c * 2) as f64 * 3.0
+}
+
+/// Which conv implementation a `conv_fwd_bwd/*` row exercises.
+enum ConvImpl<'a> {
+    /// The seed's direct loops (the ≥2× acceptance baseline).
+    SeedNaive,
+    /// Serial im2col + blocked GEMM.
+    GemmSerial,
+    /// Algorithm-4.1/4.2 task-parallel GEMM tiles on the given pool.
+    GemmTasks(&'a ThreadPool),
+}
+
+fn bench_conv_fwd_bwd(b: &mut Bench, label: &str, s: &ConvSetup, imp: ConvImpl<'_>) {
+    let d = &s.d;
+    let flops = fwd_bwd_flops(d);
+    let mut out = vec![0.0f32; d.y_len()];
+    let mut df = vec![0.0f32; d.f_len()];
+    let mut db = vec![0.0f32; d.co];
+    let mut dx = vec![0.0f32; d.x_len()];
+    match imp {
+        ConvImpl::SeedNaive => {
+            b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
+                ops::conv2d_same_fwd_naive(d, &s.x, &s.f, &s.bias, &mut out);
+                ops::conv2d_same_bwd_filter_naive(d, &s.x, &s.dy, &mut df, &mut db);
+                ops::conv2d_same_bwd_input_naive(d, &s.dy, &s.f, &mut dx);
+            });
+        }
+        ConvImpl::GemmSerial => {
+            b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
+                ops::conv2d_same_fwd(d, &s.x, &s.f, &s.bias, &mut out);
+                ops::conv2d_same_bwd_filter(d, &s.x, &s.dy, &mut df, &mut db);
+                ops::conv2d_same_bwd_input(d, &s.dy, &s.f, &mut dx);
+            });
+        }
+        ConvImpl::GemmTasks(pool) => {
+            let rows = (d.h / 2).max(1); // 2 row-tiles per image
+            b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
+                conv2d_parallel(pool, d, &s.x, &s.f, &s.bias, &mut out, rows);
+                conv_bwd_parallel(pool, d, &s.x, &s.f, &s.dy, &mut df, &mut db, Some(&mut dx));
+            });
+        }
+    }
+}
+
 fn main() {
     let mut b = Bench::from_env("inner");
+
+    // ---- acceptance comparison: quickstart conv layer, fwd+bwd -----------
+    // quickstart: batch 8, 8×8 input, 1→4 channels, 3×3 kernels.
+    let quickstart = setup(ConvDims { n: 8, h: 8, w: 8, c: 1, k: 3, co: 4 }, 1);
+    let pool4 = ThreadPool::new(4);
+    bench_conv_fwd_bwd(&mut b, "quickstart_seed_naive", &quickstart, ConvImpl::SeedNaive);
+    bench_conv_fwd_bwd(&mut b, "quickstart_gemm_serial", &quickstart, ConvImpl::GemmSerial);
+    bench_conv_fwd_bwd(
+        &mut b,
+        "quickstart_gemm_tasks_4t",
+        &quickstart,
+        ConvImpl::GemmTasks(&pool4),
+    );
+
+    // Same comparison at the heavier e2e layer-1 shape (8→8 channels, 16×16).
+    let e2e = setup(ConvDims { n: 32, h: 16, w: 16, c: 8, k: 3, co: 8 }, 2);
+    bench_conv_fwd_bwd(&mut b, "e2e_seed_naive", &e2e, ConvImpl::SeedNaive);
+    bench_conv_fwd_bwd(&mut b, "e2e_gemm_serial", &e2e, ConvImpl::GemmSerial);
+    bench_conv_fwd_bwd(&mut b, "e2e_gemm_tasks_4t", &e2e, ConvImpl::GemmTasks(&pool4));
+
+    // ---- forward-only sweeps (granularity/thread ablation) ---------------
     let d = ConvDims { n: 8, h: 32, w: 32, c: 8, k: 3, co: 16 };
-    let mut rng = Xoshiro256::new(1);
-    let x: Vec<f32> = (0..d.x_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
-    let f: Vec<f32> = (0..d.f_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
-    let bias = vec![0.0f32; d.co];
+    let s = setup(d, 3);
     let flops = (d.y_len() * d.k * d.k * d.c * 2) as f64;
 
-    // Sequential conv (the inner-layer baseline).
     let mut out = vec![0.0f32; d.y_len()];
-    b.bench_with_throughput("conv_fwd/sequential", flops, || {
-        ops::conv2d_same_fwd(&d, &x, &f, &bias, &mut out);
+    b.bench_with_throughput("conv_fwd/seed_naive", flops, || {
+        ops::conv2d_same_fwd_naive(&d, &s.x, &s.f, &s.bias, &mut out);
+    });
+    b.bench_with_throughput("conv_fwd/gemm_serial", flops, || {
+        ops::conv2d_same_fwd(&d, &s.x, &s.f, &s.bias, &mut out);
     });
 
     // Task-parallel conv at several granularities (Alg. 4.1 + 4.2).
@@ -32,7 +129,7 @@ fn main() {
                 &format!("conv_fwd/tasks_{threads}t_{rows}rows"),
                 flops,
                 || {
-                    conv2d_parallel(&pool, &d, &x, &f, &bias, &mut out, rows);
+                    conv2d_parallel(&pool, &d, &s.x, &s.f, &s.bias, &mut out, rows);
                 },
             );
         }

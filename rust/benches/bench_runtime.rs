@@ -17,7 +17,14 @@ fn main() {
         println!("runtime benches skipped: artifacts not built (run `make artifacts`)");
         return;
     };
-    let service = XlaService::start(&dir).expect("service");
+    let service = match XlaService::start(&dir) {
+        Ok(s) => s,
+        Err(e) => {
+            // Default builds stub out PJRT (`xla-pjrt` feature off).
+            println!("runtime benches skipped: {e}");
+            return;
+        }
+    };
     let h = service.handle();
     let cfg = h.manifest.config.clone();
     let ds = Arc::new(Dataset::synthetic(&cfg, 128, 0.2, 1));

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{ClusterConfig, NetworkConfig};
+use crate::config::NetworkConfig;
 use crate::data::Dataset;
 use crate::metrics::Table;
 use crate::nn::Network;

@@ -51,12 +51,22 @@ pub fn conv_bwd_parallel(
         dag.add(format!("conv_bwd[n{n}]"), cost, &[], n);
     }
     let per_image = ConvDims { n: 1, ..*d };
+    // Input-gradient setup hoisted out of the per-image tasks: the flipped/
+    // transposed filter (odd k rides the fwd im2col+GEMM path) is built once
+    // and shared, not re-flipped per image.
+    let per_image_swapped = ConvDims { c: d.co, co: d.c, ..per_image };
+    let want_dx = dx.is_some();
+    let flipped: Option<Vec<f32>> = if want_dx && d.k % 2 == 1 {
+        Some(ops::flip_transpose_filter(d, f))
+    } else {
+        None
+    };
+    let zero_bias = vec![0.0f32; per_image_swapped.co];
     let x: Arc<[f32]> = Arc::from(x);
     let f: Arc<[f32]> = Arc::from(f);
     let dy: Arc<[f32]> = Arc::from(dy);
     let partials: Arc<Mutex<(Vec<f32>, Vec<f32>)>> =
         Arc::new(Mutex::new((vec![0.0; d.f_len()], vec![0.0; d.co])));
-    let want_dx = dx.is_some();
     let mut dx_holder = dx;
     let dx_buf = dx_holder
         .as_deref_mut()
@@ -73,7 +83,12 @@ pub fn conv_bwd_parallel(
         if want_dx {
             // SAFETY: image n exclusively owns dx[n·x_img .. (n+1)·x_img).
             let dxs = unsafe { dx_buf.as_ref().unwrap().slice_mut(n * x_img, x_img) };
-            ops::conv2d_same_bwd_input(&per_image, dys, &f, dxs);
+            match &flipped {
+                Some(ff) => {
+                    ops::conv2d_same_fwd(&per_image_swapped, dys, ff, &zero_bias, dxs)
+                }
+                None => ops::conv2d_same_bwd_input_naive(&per_image, dys, &f, dxs),
+            }
         }
         // Reduce partials (the only shared-write section).
         let mut guard = partials2.lock().unwrap();

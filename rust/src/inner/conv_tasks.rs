@@ -8,6 +8,11 @@
 //! into one task (`rows_per_task` tunes the granularity; `1` row ≈ `W_a`
 //! paper-tasks fused — the ablation bench sweeps this knob).
 //!
+//! Each task executes its row tile through the im2col + blocked-GEMM fast
+//! path ([`crate::nn::ops::conv2d_same_rows_gemm`]) with task-private patch
+//! scratch, dispatched onto [`ThreadPool::execute_on`] by the Algorithm-4.2
+//! scheduler — thread-level load balancing over GEMM tiles.
+//!
 //! Tasks write disjoint row slices of the shared output buffer through
 //! [`DisjointBuf`], the lock-free analogue of the paper's observation that
 //! "different tasks can access different convolution areas simultaneously…
@@ -101,15 +106,18 @@ pub fn conv2d_parallel(
     let f: Arc<[f32]> = Arc::from(f);
     let bias: Arc<[f32]> = Arc::from(bias);
     let dd = *d;
+    let kkc = dd.k * dd.k * dd.c;
     execute_dag(pool, dag, move |task: &ConvTask| {
-        for r in 0..task.rows {
-            let y = task.y0 + r;
-            let offset = (task.n * dd.h + y) * row_len;
-            // SAFETY: task (n, y) exclusively owns output rows [y0, y0+rows)
-            // of image n; ranges never overlap across tasks.
-            let row = unsafe { shared.slice_mut(offset, row_len) };
-            ops::conv2d_same_row(&dd, &x, &f, &bias, task.n, y, row);
-        }
+        let offset = (task.n * dd.h + task.y0) * row_len;
+        let len = task.rows * row_len;
+        // SAFETY: task (n, y0, rows) exclusively owns output rows
+        // [y0, y0+rows) of image n; ranges never overlap across tasks.
+        let tile = unsafe { shared.slice_mut(offset, len) };
+        // Task-private im2col scratch: concurrent tiles never share it.
+        let mut cols = vec![0.0f32; task.rows * dd.w * kkc];
+        ops::conv2d_same_rows_gemm(
+            &dd, &x, &f, &bias, task.n, task.y0, task.rows, &mut cols, tile,
+        );
     })
 }
 

@@ -1,9 +1,15 @@
-//! Dense NN primitives (serial reference implementations).
+//! Dense NN primitives.
 //!
 //! Layouts match the Layer-1/Layer-2 Python side exactly: images NHWC,
-//! filters HWIO, FC row-major `(B, I) @ (I, O)`. The inner-layer task
-//! decomposition (`inner/conv_tasks.rs`) re-uses the per-row helpers here so
-//! the parallel and serial paths share one numeric core.
+//! filters HWIO, FC row-major `(B, I) @ (I, O)`.
+//!
+//! Convolutions run as **im2col + blocked GEMM**: each row tile of the output
+//! is lowered to a patch matrix and contracted with the HWIO filter viewed as
+//! a `(k²·C, C_o)` matrix. The seed's direct loops are retained as the
+//! `*_naive` reference oracle (and the benches' baseline). The inner-layer
+//! task decomposition (`inner/conv_tasks.rs`) dispatches the same row tiles
+//! onto the thread pool, so the parallel and serial paths share one numeric
+//! core.
 
 /// Dimensions of a SAME convolution (stride 1, P = (k−1)/2 per Eq. 12).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,7 +64,8 @@ fn fi(d: &ConvDims, ky: usize, kx: usize, c: usize, o: usize) -> usize {
 /// Compute one output row `(image n, row y)` of a SAME convolution — this is
 /// the granularity of the paper's Eq.-13/14 convolution tasks (a row of
 /// `a_{i,j}` values; one scalar per task would drown in scheduling overhead,
-/// see DESIGN.md §Hardware-Adaptation).
+/// see DESIGN.md §Hardware-Adaptation). Direct-loop implementation, kept as
+/// the per-row reference alongside the im2col+GEMM fast path below.
 pub fn conv2d_same_row(
     d: &ConvDims,
     x: &[f32],
@@ -98,8 +105,11 @@ pub fn conv2d_same_row(
     }
 }
 
-/// Full SAME convolution forward: Eq. (1) with zero padding, stride 1.
-pub fn conv2d_same_fwd(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &mut [f32]) {
+// ---- naive reference path (the seed's direct loops, retained as oracle) ---
+
+/// Direct-loop SAME conv forward — the retained reference for the
+/// im2col+GEMM fast path (and the seed baseline the benches compare against).
+pub fn conv2d_same_fwd_naive(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), d.x_len());
     debug_assert_eq!(f.len(), d.f_len());
     debug_assert_eq!(bias.len(), d.co);
@@ -113,9 +123,8 @@ pub fn conv2d_same_fwd(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &m
     }
 }
 
-/// Backward of SAME conv w.r.t. input (Eq. 18): full correlation with the
-/// flipped filter.
-pub fn conv2d_same_bwd_input(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]) {
+/// Direct-loop backward w.r.t. input (Eq. 18) — retained reference.
+pub fn conv2d_same_bwd_input_naive(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]) {
     debug_assert_eq!(dy.len(), d.y_len());
     debug_assert_eq!(dx.len(), d.x_len());
     dx.fill(0.0);
@@ -151,8 +160,9 @@ pub fn conv2d_same_bwd_input(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]
     }
 }
 
-/// Backward of SAME conv w.r.t. the filter (Eq. 21) and bias (Eq. 22).
-pub fn conv2d_same_bwd_filter(
+/// Direct-loop backward w.r.t. filter (Eq. 21) and bias (Eq. 22) — retained
+/// reference.
+pub fn conv2d_same_bwd_filter_naive(
     d: &ConvDims,
     x: &[f32],
     dy: &[f32],
@@ -193,6 +203,240 @@ pub fn conv2d_same_bwd_filter(
                     }
                 }
             }
+        }
+    }
+}
+
+// ---- im2col + blocked-GEMM fast path ---------------------------------------
+
+/// Output rows per im2col block: bounds the patch-matrix scratch to
+/// `TILE · W · k²C` floats while amortizing the GEMM over whole tiles.
+pub const IM2COL_TILE_ROWS: usize = 32;
+
+/// Lower output rows `[y0, y0+rows)` of image `n` into the patch matrix
+/// `cols` of shape `(rows·W, k²·C)` (row-major, zero-padded borders).
+/// Column index `(ky·k + kx)·C + c` matches the HWIO filter layout, so the
+/// convolution becomes `cols · f` with `f` viewed as a `(k²·C, C_o)` matrix.
+pub fn im2col_rows(d: &ConvDims, x: &[f32], n: usize, y0: usize, rows: usize, cols: &mut [f32]) {
+    let kkc = d.k * d.k * d.c;
+    debug_assert!(y0 + rows <= d.h);
+    debug_assert_eq!(cols.len(), rows * d.w * kkc);
+    cols.fill(0.0);
+    let p = d.pad() as isize;
+    let kc = d.k * d.c;
+    for r in 0..rows {
+        let y = y0 + r;
+        for ky in 0..d.k {
+            let iy = y as isize + ky as isize - p;
+            if iy < 0 || iy >= d.h as isize {
+                continue;
+            }
+            let xrow = xi(d, n, iy as usize, 0, 0);
+            for ox in 0..d.w {
+                let dst = (r * d.w + ox) * kkc + ky * kc;
+                let ix0 = ox as isize - p;
+                if ix0 >= 0 && ix0 as usize + d.k <= d.w {
+                    // Whole kx window in-bounds: one contiguous copy of k·C.
+                    let src = xrow + ix0 as usize * d.c;
+                    cols[dst..dst + kc].copy_from_slice(&x[src..src + kc]);
+                } else {
+                    for kx in 0..d.k {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= d.w as isize {
+                            continue;
+                        }
+                        let src = xrow + ix as usize * d.c;
+                        let dst = dst + kx * d.c;
+                        cols[dst..dst + d.c].copy_from_slice(&x[src..src + d.c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C (m×n) += A (m×kk) · B (kk×n)`, all row-major. Blocked over the shared
+/// dimension so the active `B` panel stays cache-resident; the `j` loop is a
+/// bounds-check-free slice zip the compiler auto-vectorizes. Accumulation
+/// order over `kk` matches the naive loops (ky-major, kx, c), so results are
+/// bit-identical to the reference for the forward pass.
+fn gemm_acc(m: usize, kk: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kk);
+    debug_assert_eq!(b.len(), kk * n);
+    debug_assert_eq!(c.len(), m * n);
+    const KC: usize = 256;
+    let mut l0 = 0;
+    while l0 < kk {
+        let lb = KC.min(kk - l0);
+        for i in 0..m {
+            let arow = &a[i * kk + l0..i * kk + l0 + lb];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (dl, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // zero-padded border columns
+                }
+                let brow = &b[(l0 + dl) * n..(l0 + dl + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        l0 += lb;
+    }
+}
+
+/// `C (kk×n) += Aᵀ · B` where `A` is `(m×kk)` and `B` is `(m×n)` — the
+/// Eq. 21 filter-gradient contraction (patchesᵀ · dy).
+fn gemm_tn_acc(m: usize, kk: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * kk);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), kk * n);
+    for i in 0..m {
+        let arow = &a[i * kk..(i + 1) * kk];
+        let brow = &b[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[l * n..(l + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Forward row-tile via im2col + GEMM: computes output rows `[y0, y0+rows)`
+/// of image `n` into `out` (length `rows·W·C_o`). `cols` is caller-provided
+/// scratch of length `rows·W·k²·C` — the inner-layer conv tasks
+/// (`inner/conv_tasks.rs`) each own one and run tiles concurrently on the
+/// thread pool.
+pub fn conv2d_same_rows_gemm(
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    bias: &[f32],
+    n: usize,
+    y0: usize,
+    rows: usize,
+    cols: &mut [f32],
+    out: &mut [f32],
+) {
+    let kkc = d.k * d.k * d.c;
+    debug_assert_eq!(out.len(), rows * d.w * d.co);
+    debug_assert_eq!(cols.len(), rows * d.w * kkc);
+    for px in 0..rows * d.w {
+        out[px * d.co..(px + 1) * d.co].copy_from_slice(bias);
+    }
+    im2col_rows(d, x, n, y0, rows, cols);
+    gemm_acc(rows * d.w, kkc, d.co, cols, f, out);
+}
+
+/// Full SAME convolution forward: Eq. (1) with zero padding, stride 1.
+/// im2col + blocked GEMM over row tiles; numerically identical to
+/// [`conv2d_same_fwd_naive`] (same accumulation order).
+pub fn conv2d_same_fwd(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), d.x_len());
+    debug_assert_eq!(f.len(), d.f_len());
+    debug_assert_eq!(bias.len(), d.co);
+    debug_assert_eq!(out.len(), d.y_len());
+    let kkc = d.k * d.k * d.c;
+    let row = d.w * d.co;
+    let tile = d.h.min(IM2COL_TILE_ROWS);
+    let mut cols = vec![0.0f32; tile * d.w * kkc];
+    for n in 0..d.n {
+        let mut y0 = 0;
+        while y0 < d.h {
+            let rows = tile.min(d.h - y0);
+            let start = (n * d.h + y0) * row;
+            conv2d_same_rows_gemm(
+                d,
+                x,
+                f,
+                bias,
+                n,
+                y0,
+                rows,
+                &mut cols[..rows * d.w * kkc],
+                &mut out[start..start + rows * row],
+            );
+            y0 += rows;
+        }
+    }
+}
+
+/// Backward of SAME conv w.r.t. input (Eq. 18): full correlation with the
+/// flipped filter. For odd kernels (P = (k−1)/2 symmetric) this is exactly a
+/// SAME forward conv of `dy` with the spatially-flipped, channel-transposed
+/// filter, so it rides the same im2col+GEMM path; even kernels (asymmetric
+/// implicit padding) fall back to the direct loops.
+pub fn conv2d_same_bwd_input(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]) {
+    debug_assert_eq!(dy.len(), d.y_len());
+    debug_assert_eq!(dx.len(), d.x_len());
+    if d.k % 2 == 0 {
+        return conv2d_same_bwd_input_naive(d, dy, f, dx);
+    }
+    let ff = flip_transpose_filter(d, f);
+    let dd = ConvDims { c: d.co, co: d.c, ..*d };
+    let zero_bias = vec![0.0f32; dd.co];
+    conv2d_same_fwd(&dd, dy, &ff, &zero_bias, dx);
+}
+
+/// The spatially-flipped, channel-transposed filter the input-gradient conv
+/// uses: `ff[ky, kx, o, c] = f[k−1−ky, k−1−kx, c, o]` (HWIO in, HW"OI" out).
+/// Exposed so batch-parallel callers (`inner/bp_tasks.rs`) can build it once
+/// and share it across per-image tasks instead of re-flipping per task.
+pub fn flip_transpose_filter(d: &ConvDims, f: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(f.len(), d.f_len());
+    let mut ff = vec![0.0f32; d.f_len()];
+    for ky in 0..d.k {
+        for kx in 0..d.k {
+            for c in 0..d.c {
+                for o in 0..d.co {
+                    ff[((ky * d.k + kx) * d.co + o) * d.c + c] =
+                        f[fi(d, d.k - 1 - ky, d.k - 1 - kx, c, o)];
+                }
+            }
+        }
+    }
+    ff
+}
+
+/// Backward of SAME conv w.r.t. the filter (Eq. 21) and bias (Eq. 22):
+/// `df = im2col(x)ᵀ · dy` accumulated tile by tile (blocked GEMM), `db` the
+/// column sums of `dy`.
+pub fn conv2d_same_bwd_filter(
+    d: &ConvDims,
+    x: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), d.x_len());
+    debug_assert_eq!(dy.len(), d.y_len());
+    debug_assert_eq!(df.len(), d.f_len());
+    debug_assert_eq!(db.len(), d.co);
+    df.fill(0.0);
+    db.fill(0.0);
+    let kkc = d.k * d.k * d.c;
+    let tile = d.h.min(IM2COL_TILE_ROWS);
+    let mut cols = vec![0.0f32; tile * d.w * kkc];
+    for n in 0..d.n {
+        let mut y0 = 0;
+        while y0 < d.h {
+            let rows = tile.min(d.h - y0);
+            let patches = rows * d.w;
+            im2col_rows(d, x, n, y0, rows, &mut cols[..patches * kkc]);
+            let dy0 = (n * d.h + y0) * d.w * d.co;
+            let dyb = &dy[dy0..dy0 + patches * d.co];
+            gemm_tn_acc(patches, kkc, d.co, &cols[..patches * kkc], dyb, df);
+            for px in 0..patches {
+                let dyr = &dyb[px * d.co..(px + 1) * d.co];
+                for (acc, &v) in db.iter_mut().zip(dyr.iter()) {
+                    *acc += v;
+                }
+            }
+            y0 += rows;
         }
     }
 }
@@ -456,6 +700,110 @@ mod tests {
         for (a, b) in out.iter().zip(naive.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn gemm_fwd_matches_naive_across_kernels() {
+        let mut rng = Xoshiro256::new(7);
+        for (k, h, w) in [(1usize, 5usize, 4usize), (3, 6, 5), (5, 7, 7), (3, 33, 3)] {
+            let d = ConvDims { n: 2, h, w, c: 3, k, co: 4 };
+            let x = rand_vec(&mut rng, d.x_len());
+            let f = rand_vec(&mut rng, d.f_len());
+            let b = rand_vec(&mut rng, d.co);
+            let mut fast = vec![0.0; d.y_len()];
+            let mut naive = vec![0.0; d.y_len()];
+            conv2d_same_fwd(&d, &x, &f, &b, &mut fast);
+            conv2d_same_fwd_naive(&d, &x, &f, &b, &mut naive);
+            for (a, bb) in fast.iter().zip(naive.iter()) {
+                assert!((a - bb).abs() < 1e-4, "k={k}: {a} vs {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bwd_matches_naive() {
+        let mut rng = Xoshiro256::new(8);
+        for k in [1usize, 3, 5] {
+            let d = ConvDims { n: 2, h: 6, w: 5, c: 2, k, co: 3 };
+            let x = rand_vec(&mut rng, d.x_len());
+            let f = rand_vec(&mut rng, d.f_len());
+            let dy = rand_vec(&mut rng, d.y_len());
+            let mut dx_fast = vec![0.0; d.x_len()];
+            let mut dx_naive = vec![0.0; d.x_len()];
+            conv2d_same_bwd_input(&d, &dy, &f, &mut dx_fast);
+            conv2d_same_bwd_input_naive(&d, &dy, &f, &mut dx_naive);
+            for (a, b) in dx_fast.iter().zip(dx_naive.iter()) {
+                assert!((a - b).abs() < 1e-4, "k={k} dx: {a} vs {b}");
+            }
+            let mut df_fast = vec![0.0; d.f_len()];
+            let mut db_fast = vec![0.0; d.co];
+            let mut df_naive = vec![0.0; d.f_len()];
+            let mut db_naive = vec![0.0; d.co];
+            conv2d_same_bwd_filter(&d, &x, &dy, &mut df_fast, &mut db_fast);
+            conv2d_same_bwd_filter_naive(&d, &x, &dy, &mut df_naive, &mut db_naive);
+            for (a, b) in df_fast.iter().zip(df_naive.iter()) {
+                assert!((a - b).abs() < 1e-4, "k={k} df: {a} vs {b}");
+            }
+            for (a, b) in db_fast.iter().zip(db_naive.iter()) {
+                assert!((a - b).abs() < 1e-4, "k={k} db: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn even_kernel_falls_back_consistently() {
+        // Even k has asymmetric implicit padding; the fast path must defer
+        // to the naive loops and all three ops must stay mutually consistent
+        // via the adjoint identity ⟨conv(x), dy⟩ = ⟨x, bwd_input(dy)⟩.
+        let mut rng = Xoshiro256::new(9);
+        let d = ConvDims { n: 1, h: 5, w: 5, c: 2, k: 2, co: 3 };
+        let x = rand_vec(&mut rng, d.x_len());
+        let f = rand_vec(&mut rng, d.f_len());
+        let dy = rand_vec(&mut rng, d.y_len());
+        let zero_bias = vec![0.0f32; d.co];
+        let mut y = vec![0.0; d.y_len()];
+        conv2d_same_fwd(&d, &x, &f, &zero_bias, &mut y);
+        let mut dx = vec![0.0; d.x_len()];
+        conv2d_same_bwd_input(&d, &dy, &f, &mut dx);
+        let lhs: f64 = y.iter().zip(&dy).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.iter().zip(&dx).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn im2col_lowers_patches_exactly() {
+        // 1×3×3×1 image, k=3: the centre patch is the whole image; corner
+        // patches are zero-padded.
+        let d = ConvDims { n: 1, h: 3, w: 3, c: 1, k: 3, co: 1 };
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut cols = vec![0.0f32; 3 * 3 * 9];
+        im2col_rows(&d, &x, 0, 0, 3, &mut cols);
+        // Patch at (y=1, x=1) (row-major patch index 4) == the image.
+        assert_eq!(&cols[4 * 9..5 * 9], &x[..]);
+        // Patch at (0, 0): top row and left column zero-padded.
+        assert_eq!(
+            &cols[0..9],
+            &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn conv_rows_gemm_tile_matches_full() {
+        let mut rng = Xoshiro256::new(11);
+        let d = ConvDims { n: 2, h: 7, w: 4, c: 2, k: 3, co: 3 };
+        let x = rand_vec(&mut rng, d.x_len());
+        let f = rand_vec(&mut rng, d.f_len());
+        let b = rand_vec(&mut rng, d.co);
+        let mut full = vec![0.0; d.y_len()];
+        conv2d_same_fwd(&d, &x, &f, &b, &mut full);
+        let kkc = d.k * d.k * d.c;
+        // Rows [2, 5) of image 1 via the tile entry point.
+        let (n, y0, rows) = (1usize, 2usize, 3usize);
+        let mut cols = vec![0.0f32; rows * d.w * kkc];
+        let mut tile = vec![0.0f32; rows * d.w * d.co];
+        conv2d_same_rows_gemm(&d, &x, &f, &b, n, y0, rows, &mut cols, &mut tile);
+        let start = (n * d.h + y0) * d.w * d.co;
+        assert_eq!(&tile[..], &full[start..start + rows * d.w * d.co]);
     }
 
     #[test]

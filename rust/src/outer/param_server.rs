@@ -22,6 +22,11 @@ pub struct CommStats {
     pub fetches: usize,
     pub submits: usize,
     pub bytes: u64,
+    /// Submissions whose AGWU base version had already been evicted from the
+    /// retained history (cap `2m+2`) and fell back to the oldest retained
+    /// version — extreme stragglers. Nonzero values mean the increment was
+    /// computed against an older base than the node actually trained from.
+    pub evicted_base_fallbacks: usize,
 }
 
 impl CommStats {
@@ -128,8 +133,9 @@ impl ParamServer {
     ) -> usize {
         self.comm.submits += 1;
         self.comm.bytes += local.byte_size() as u64;
-        // Increment computed against a borrowed history entry — no copy.
-        let base = self.lookup(base_version).unwrap_or_else(|| self.oldest_retained());
+        // Increment computed against a borrowed history entry — no copy, one
+        // history scan (falls back to the oldest retained version, counted).
+        let base = self.base_for(base_version);
         let mut increment = local.sub(base);
         increment.scale(1.0 / self.nodes() as f32);
         // In-place apply + one inherent clone for the history entry.
@@ -151,7 +157,7 @@ impl ParamServer {
         let gamma = self.gamma(node, base_version);
         // ΔW_j^{k→i} = γ_j^(k) · Q_j^(k) · (W_j^(k) − W^(k)), computed
         // against a borrowed history entry (no base copy — §Perf L3-1).
-        let base = self.lookup(base_version).unwrap_or_else(|| self.oldest_retained());
+        let base = self.base_for(base_version);
         let mut increment = local.sub(base);
         increment.scale((gamma * accuracy.max(1e-9)) as f32);
         self.global.axpy(1.0, &increment);
@@ -179,6 +185,22 @@ impl ParamServer {
             .iter()
             .find(|(v, _)| *v == version)
             .map(|(_, w)| w)
+    }
+
+    /// Resolve an update's base weight set in one history scan. When the
+    /// base version has been evicted from the window (cap `2m+2`) — an
+    /// extreme straggler — the defined behavior is to fall back to the
+    /// oldest retained version, recorded in `CommStats` so runs can audit
+    /// how often it happens.
+    fn base_for(&mut self, base_version: usize) -> &WeightSet {
+        let idx = self.history.iter().position(|(v, _)| *v == base_version);
+        match idx {
+            Some(i) => &self.history[i].1,
+            None => {
+                self.comm.evicted_base_fallbacks += 1;
+                self.oldest_retained()
+            }
+        }
     }
 
     fn oldest_retained(&self) -> &WeightSet {
@@ -310,6 +332,46 @@ mod tests {
         let local = ws(&[1.0]);
         let v = ps.update_agwu(0, &local, 1, 1.0);
         assert_eq!(v, 51);
+    }
+
+    #[test]
+    fn straggler_submitting_against_evicted_base_falls_back_and_is_logged() {
+        // 2-node cluster → history cap 2·2+2 = 6. Node 1 fetches v0, then
+        // node 0 races far ahead so v0 is evicted; node 1's late submission
+        // must fall back to the oldest retained base (not panic) and be
+        // counted in CommStats.
+        let mut ps = ParamServer::new(ws(&[0.0]), 2);
+        let (w_straggler, k_straggler) = ps.fetch(1);
+        for _ in 0..20 {
+            let (w, k) = ps.fetch(0);
+            ps.update_agwu(0, &w, k, 1.0);
+        }
+        assert!(ps.history.len() <= 6);
+        assert!(ps.lookup(k_straggler).is_none(), "base must be evicted for this test");
+        assert_eq!(ps.comm.evicted_base_fallbacks, 0);
+        let before = v0(&ps)[0];
+        let mut local = w_straggler.clone();
+        local.tensors_mut()[0].data_mut()[0] = before + 1.0;
+        let v = ps.update_agwu(1, &local, k_straggler, 1.0);
+        assert_eq!(v, 21);
+        assert_eq!(ps.comm.evicted_base_fallbacks, 1);
+        // A fresh-base submission does not bump the counter.
+        let (w, k) = ps.fetch(0);
+        ps.update_agwu(0, &w, k, 1.0);
+        assert_eq!(ps.comm.evicted_base_fallbacks, 1);
+    }
+
+    #[test]
+    fn plain_async_evicted_base_also_logged() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 1);
+        let (w, k) = ps.fetch(0);
+        for _ in 0..10 {
+            let (wf, kf) = ps.fetch(0);
+            ps.update_async_plain(0, &wf, kf);
+        }
+        assert!(ps.lookup(k).is_none());
+        ps.update_async_plain(0, &w, k);
+        assert_eq!(ps.comm.evicted_base_fallbacks, 1);
     }
 
     #[test]

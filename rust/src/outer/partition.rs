@@ -7,8 +7,10 @@
 //!   using measured per-sample times from the previous iteration.
 //! * **UDPA** (§5.3.3 baseline): uniform split, all at once.
 //!
-//! Invariants (tested): every batch conserves exactly ⌊N/A⌋ samples; the
-//! total over A batches is A·⌊N/A⌋; allocations are non-negative.
+//! Invariants (tested): batches 1..A−1 each conserve exactly ⌊N/A⌋ samples,
+//! the final batch additionally absorbs the remainder N mod A (allocated by
+//! the same predicted-finish-time rule), so Σ totals == N exactly;
+//! allocations are non-negative.
 
 /// Per-batch allocation state of the IDPA strategy.
 #[derive(Debug, Clone)]
@@ -43,9 +45,33 @@ impl IdpaPartitioner {
         self.freqs.len()
     }
 
-    /// ⌊N/A⌋ — samples distributed per batch.
+    /// ⌊N/A⌋ — samples distributed per non-final batch.
     pub fn batch_quota(&self) -> usize {
         self.total_samples / self.batches
+    }
+
+    /// Samples distributed in batch `a` (1-indexed): ⌊N/A⌋, plus the
+    /// remainder N mod A folded into the final batch so no sample is
+    /// silently dropped.
+    pub fn quota_for_batch(&self, a: usize) -> usize {
+        debug_assert!((1..=self.batches).contains(&a));
+        let base = self.batch_quota();
+        if a == self.batches {
+            base + self.total_samples % self.batches
+        } else {
+            base
+        }
+    }
+
+    /// Σ quota over batches 1..=a — the cumulative sample target after
+    /// batch `a` (equals N when a == A).
+    fn distributed_after(&self, a: usize) -> usize {
+        let base = self.batch_quota();
+        if a == self.batches {
+            self.total_samples
+        } else {
+            a * base
+        }
     }
 
     pub fn batches_done(&self) -> usize {
@@ -63,7 +89,7 @@ impl IdpaPartitioner {
     /// First batch — Eq. 2: proportional to μ_j, remainder to node m.
     pub fn first_batch(&mut self) -> Vec<usize> {
         assert!(self.allocations.is_empty(), "first_batch called twice");
-        let quota = self.batch_quota();
+        let quota = self.quota_for_batch(1);
         let m = self.nodes();
         let total_freq: f64 = self.freqs.iter().sum();
         let mut alloc = vec![0usize; m];
@@ -87,7 +113,7 @@ impl IdpaPartitioner {
         assert!(a >= 2, "call first_batch first");
         assert!(a <= self.batches, "all {} batches already allocated", self.batches);
         assert_eq!(measured_times.len(), self.nodes());
-        let quota = self.batch_quota();
+        let quota = self.quota_for_batch(a);
         let m = self.nodes();
 
         // t̄_j = T_j / n_j (average per-sample time on node j).
@@ -100,11 +126,13 @@ impl IdpaPartitioner {
         // paper's arithmetic mean: with the arithmetic mean, Σ_j T_a/t̄_j =
         // (⌊N/A⌋·a/m)·t̄·Σ 1/t̄_j ≥ ⌊N/A⌋·a (AM–HM inequality), so Eq. 5
         // systematically over-allocates nodes 1..m−1 and starves node m.
-        // The harmonic mean makes Σ_j n'_j = ⌊N/A⌋·a exactly, which is the
-        // stated objective ("all nodes complete each iteration as close as
-        // possible"). Documented in DESIGN.md §2.
+        // The harmonic mean makes Σ_j n'_j equal the cumulative target
+        // exactly, which is the stated objective ("all nodes complete each
+        // iteration as close as possible"). Documented in DESIGN.md §2. The
+        // cumulative target includes the N mod A remainder on the final
+        // batch, so the full schedule distributes exactly N samples.
         let h_mean = m as f64 / tbar.iter().map(|t| 1.0 / t).sum::<f64>();
-        let t_a = quota as f64 * a as f64 * h_mean / m as f64;
+        let t_a = self.distributed_after(a) as f64 * h_mean / m as f64;
 
         // n'_j = T_a / t̄_j (Eq. 4) → n_j^(a) = n'_j − Σ n_j^(a') (Eq. 5),
         // clamped at 0 (a node already over its equal-time share receives
@@ -222,6 +250,30 @@ mod tests {
         let times: Vec<f64> = totals.iter().zip(speeds.iter()).map(|(&n, &s)| n as f64 * s).collect();
         let balance = crate::util::stats::balance_index(&times);
         assert!(balance > 0.9, "finish times unbalanced: {times:?} (balance {balance})");
+    }
+
+    #[test]
+    fn remainder_folded_into_final_batch_conserves_n() {
+        // N = 10_007, A = 5 → base quota 2001, remainder 2 lands in batch 5.
+        let mut p = IdpaPartitioner::new(10_007, 5, &[2.0, 3.0, 1.5, 2.5]);
+        let totals = p.run_with_oracle(|j| 0.001 * (1.0 + j as f64));
+        assert_eq!(totals.iter().sum::<usize>(), 10_007, "Σ totals == N");
+        for (a, batch) in p.allocations().iter().enumerate() {
+            let expect = if a == 4 { 2001 + 2 } else { 2001 };
+            assert_eq!(batch.iter().sum::<usize>(), expect, "batch {}", a + 1);
+        }
+    }
+
+    #[test]
+    fn single_batch_distributes_everything() {
+        // A = 1 previously dropped N mod 1 = 0, but A = 3 with N = 100
+        // dropped 1 sample; both must now conserve N exactly.
+        let mut p = IdpaPartitioner::new(100, 3, &[1.0, 1.0]);
+        let totals = p.run_with_oracle(|_| 0.001);
+        assert_eq!(totals.iter().sum::<usize>(), 100);
+        let mut p1 = IdpaPartitioner::new(77, 1, &[1.0, 2.0, 3.0]);
+        let alloc = p1.first_batch();
+        assert_eq!(alloc.iter().sum::<usize>(), 77);
     }
 
     #[test]

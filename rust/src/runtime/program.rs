@@ -1,76 +1,27 @@
 //! PJRT program loading and execution (the AOT bridge).
 //!
-//! Loads HLO **text** (the 0.5.1-safe interchange format — see
-//! /opt/xla-example/README.md), compiles it on the PJRT CPU client, and
-//! executes it with [`Tensor`] inputs/outputs. All programs were lowered
-//! with `return_tuple=True`, so every result is a tuple literal that gets
-//! unpacked into a `Vec<Tensor>`.
+//! The real implementation (feature `xla-pjrt`) loads HLO **text** (the
+//! 0.5.1-safe interchange format), compiles it on the PJRT CPU client via the
+//! `xla` bindings, and executes it with [`Tensor`] inputs/outputs. All
+//! programs were lowered with `return_tuple=True`, so every result is a tuple
+//! literal that gets unpacked into a `Vec<Tensor>`.
+//!
+//! The default build has no PJRT bindings available (the `xla` crate is not
+//! in the offline registry), so it ships the stub below: identical API, but
+//! [`XlaContext::cpu`] reports the backend as unavailable. Everything
+//! downstream (service, trainer, examples, benches) is artifact-gated and
+//! skips or errors gracefully. Enabling `xla-pjrt` additionally requires a
+//! manual `xla = { path = "..." }` dependency (see Cargo.toml's feature
+//! comment) — the feature flag alone cannot pull in an unpublished crate.
 //!
 //! These types wrap raw PJRT pointers and are **not** `Send`; cross-thread
 //! access goes through [`super::service::XlaService`].
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::tensor::Tensor;
-
-/// Owner of the PJRT client (one per process/device).
-pub struct XlaContext {
-    client: xla::PjRtClient,
-}
-
-impl XlaContext {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO text file.
-    pub fn load_program(&self, path: &Path) -> Result<Program> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Program { exe })
-    }
-}
-
-/// One compiled XLA executable.
-pub struct Program {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Program {
-    /// Execute with tensor inputs; returns the unpacked output tuple.
-    pub fn run(&self, inputs: &[ProgramInput<'_>]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|inp| inp.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let out = result[0][0].to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape().context("non-array output")?;
-                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-                let data = lit.to_vec::<f32>().context("output not f32")?;
-                Ok(Tensor::from_vec(&dims, data))
-            })
-            .collect()
-    }
-}
 
 /// An input value: an f32 tensor, an f32 scalar, or an i32 scalar (seed).
 pub enum ProgramInput<'a> {
@@ -79,21 +30,126 @@ pub enum ProgramInput<'a> {
     ScalarI32(i32),
 }
 
-impl ProgramInput<'_> {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            ProgramInput::Tensor(t) => {
-                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-                let lit = xla::Literal::vec1(t.data());
-                Ok(lit.reshape(&dims)?)
+#[cfg(feature = "xla-pjrt")]
+mod imp {
+    use super::*;
+    use anyhow::Context;
+
+    /// Owner of the PJRT client (one per process/device).
+    pub struct XlaContext {
+        client: xla::PjRtClient,
+    }
+
+    impl XlaContext {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Self { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO text file.
+        pub fn load_program(&self, path: &Path) -> Result<Program> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Program { exe })
+        }
+    }
+
+    /// One compiled XLA executable.
+    pub struct Program {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Program {
+        /// Execute with tensor inputs; returns the unpacked output tuple.
+        pub fn run(&self, inputs: &[ProgramInput<'_>]) -> Result<Vec<Tensor>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|inp| inp.to_literal())
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let out = result[0][0].to_literal_sync()?;
+            let parts = out.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    let shape = lit.array_shape().context("non-array output")?;
+                    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                    let data = lit.to_vec::<f32>().context("output not f32")?;
+                    Ok(Tensor::from_vec(&dims, data))
+                })
+                .collect()
+        }
+    }
+
+    impl ProgramInput<'_> {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            match self {
+                ProgramInput::Tensor(t) => {
+                    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                    let lit = xla::Literal::vec1(t.data());
+                    Ok(lit.reshape(&dims)?)
+                }
+                ProgramInput::ScalarF32(v) => Ok(xla::Literal::scalar(*v)),
+                ProgramInput::ScalarI32(v) => Ok(xla::Literal::scalar(*v)),
             }
-            ProgramInput::ScalarF32(v) => Ok(xla::Literal::scalar(*v)),
-            ProgramInput::ScalarI32(v) => Ok(xla::Literal::scalar(*v)),
         }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "xla-pjrt"))]
+mod imp {
+    use super::*;
+
+    const UNAVAILABLE: &str = "XLA/PJRT backend unavailable: this build was compiled without the \
+         `xla-pjrt` feature (the PJRT bindings are not in the offline registry). \
+         Use the native backend instead (`--backend native`).";
+
+    /// Stub owner of the PJRT client. [`XlaContext::cpu`] always errors.
+    pub struct XlaContext {
+        _private: (),
+    }
+
+    impl XlaContext {
+        pub fn cpu() -> Result<Self> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Unreachable in practice (no context can be constructed).
+        pub fn load_program(&self, _path: &Path) -> Result<Program> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+    }
+
+    /// Stub executable; cannot be constructed outside this module.
+    pub struct Program {
+        _private: (),
+    }
+
+    impl Program {
+        pub fn run(&self, _inputs: &[ProgramInput<'_>]) -> Result<Vec<Tensor>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+    }
+}
+
+pub use imp::{Program, XlaContext};
+
+#[cfg(all(test, feature = "xla-pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::artifacts::find_model_dir;

@@ -183,7 +183,10 @@ impl Drop for XlaService {
     }
 }
 
-#[cfg(test)]
+// Gated on the real PJRT backend: with the default stub, `XlaContext::cpu`
+// always errors, so these would fail (not skip) on machines that do have
+// artifacts built.
+#[cfg(all(test, feature = "xla-pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::artifacts::find_model_dir;

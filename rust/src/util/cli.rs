@@ -25,19 +25,28 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("missing required flag --{0}")]
     MissingRequired(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
-    #[error("help requested")]
     HelpRequested,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown flag --{name}"),
+            CliError::MissingValue(name) => write!(f, "flag --{name} requires a value"),
+            CliError::MissingRequired(name) => write!(f, "missing required flag --{name}"),
+            CliError::Invalid(name, value) => write!(f, "invalid value for --{name}: {value}"),
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn new(program: &str, about: &str) -> Self {
