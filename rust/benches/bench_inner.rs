@@ -1,14 +1,25 @@
 //! Inner-layer benchmarks: conv task decomposition + Algorithm-4.2
 //! scheduling vs sequential execution (paper Fig. 14d micro-scale), the
-//! im2col+GEMM fast path vs the seed's direct loops (the PR-1 acceptance
-//! comparison), task granularity ablation, and DAG machinery overheads.
+//! packed-GEMM engine vs the seed's direct loops *and* vs the PR-1 unpacked
+//! GEMM task path (the ISSUE-2 acceptance comparison), task granularity
+//! ablation, gradient-reduction contention, and DAG machinery overheads.
 //!
 //! Headline rows: `conv_fwd_bwd/quickstart_*` — one conv layer at quickstart
-//! shapes (batch 8, 8×8×1 → 4 filters, k=3), forward + filter-gradient
-//! backward, comparing the seed direct loops, the serial im2col+GEMM path,
-//! and the Algorithm-4.1/4.2 task-parallel path on a 4-worker pool.
+//! shapes (batch 8, 8×8×1 → 4 filters, k=3), forward + backward, comparing
+//! the seed direct loops, the serial packed-GEMM path, the **legacy** PR-1
+//! task path (per-task heap scratch, `Arc::from` tensor copies, per-image
+//! backward with a mutex-serialized gradient reduction — reconstructed here
+//! from the retained legacy kernels) and the packed task path (worker
+//! arenas, zero-copy dispatch, row-tile backward) on a 4-worker pool.
+//! Acceptance: packed tasks ≥ 1.5× the legacy task row.
+//!
+//! `conv_bwd/e2e_*` is the contention-sensitive pair: backward only at the
+//! heavier e2e shape, mutex-reduction legacy vs arena row-tile.
+
+use std::sync::{Arc, Mutex};
 
 use bptcnn::inner::bp_tasks::conv_bwd_parallel;
+use bptcnn::inner::conv_tasks::DisjointBuf;
 use bptcnn::inner::{conv2d_parallel, conv_task_dag, execute_dag, TaskDag};
 use bptcnn::nn::ops::{self, ConvDims};
 use bptcnn::util::bench::Bench;
@@ -38,19 +49,110 @@ fn setup(d: ConvDims, seed: u64) -> ConvSetup {
 }
 
 /// fwd + bwd-filter + bwd-input FLOPs for one conv layer (the quantity the
-/// ≥2× acceptance criterion is measured over).
+/// acceptance criteria are measured over).
 fn fwd_bwd_flops(d: &ConvDims) -> f64 {
     (d.y_len() * d.k * d.k * d.c * 2) as f64 * 3.0
 }
 
+// ---- legacy PR-1 task path (reconstructed baseline) -----------------------
+//
+// Reproduces the pre-ISSUE-2 cost profile: full-tensor `Arc::from` copies at
+// dispatch, a fresh `vec![0.0; …]` im2col scratch in every task body, the
+// unpacked blocked GEMM, and (backward) per-image tasks that allocate
+// per-task partial gradients and serialize on one mutex to reduce them.
+
+fn legacy_conv2d_parallel(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    rows_per_task: usize,
+) {
+    let dag = conv_task_dag(d, rows_per_task);
+    let shared = DisjointBuf::new(out);
+    let row_len = d.w * d.co;
+    let x: Arc<[f32]> = Arc::from(x);
+    let f: Arc<[f32]> = Arc::from(f);
+    let bias: Arc<[f32]> = Arc::from(bias);
+    let dd = *d;
+    let kkc = dd.k * dd.k * dd.c;
+    execute_dag(pool, dag, move |_, task| {
+        let offset = (task.n * dd.h + task.y0) * row_len;
+        // SAFETY: row tiles of distinct tasks never overlap.
+        let tile = unsafe { shared.slice_mut(offset, task.rows * row_len) };
+        let mut cols = vec![0.0f32; task.rows * dd.w * kkc];
+        ops::conv2d_same_rows_gemm(
+            &dd, &x, &f, &bias, task.n, task.y0, task.rows, &mut cols, tile,
+        );
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn legacy_conv_bwd_parallel(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+) {
+    let mut dag: TaskDag<usize> = TaskDag::new();
+    let cost = (d.h * d.w * d.k * d.k * d.c * d.co) as f64;
+    for n in 0..d.n {
+        dag.add(format!("legacy_bwd[n{n}]"), cost, &[], n);
+    }
+    let per_image = ConvDims { n: 1, ..*d };
+    let swapped = ConvDims { c: d.co, co: d.c, ..per_image };
+    let flipped = ops::flip_transpose_filter(d, f);
+    let zero_bias = vec![0.0f32; swapped.co];
+    let x: Arc<[f32]> = Arc::from(x);
+    let dy: Arc<[f32]> = Arc::from(dy);
+    let _f: Arc<[f32]> = Arc::from(f);
+    let partials: Arc<Mutex<(Vec<f32>, Vec<f32>)>> =
+        Arc::new(Mutex::new((vec![0.0; d.f_len()], vec![0.0; d.co])));
+    let dx_buf = DisjointBuf::new(dx);
+    let x_img = d.h * d.w * d.c;
+    let y_img = d.h * d.w * d.co;
+    let p2 = Arc::clone(&partials);
+    execute_dag(pool, dag, move |_, &n| {
+        let xs = &x[n * x_img..(n + 1) * x_img];
+        let dys = &dy[n * y_img..(n + 1) * y_img];
+        let mut df_p = vec![0.0f32; per_image.f_len()];
+        let mut db_p = vec![0.0f32; per_image.co];
+        ops::conv2d_same_bwd_filter(&per_image, xs, dys, &mut df_p, &mut db_p);
+        // SAFETY: image n exclusively owns its dx slice.
+        let dxs = unsafe { dx_buf.slice_mut(n * x_img, x_img) };
+        ops::conv2d_same_fwd(&swapped, dys, &flipped, &zero_bias, dxs);
+        // Mutex-serialized reduction (the ISSUE-2 contention bug).
+        let mut guard = p2.lock().unwrap();
+        for (a, b) in guard.0.iter_mut().zip(df_p.iter()) {
+            *a += b;
+        }
+        for (a, b) in guard.1.iter_mut().zip(db_p.iter()) {
+            *a += b;
+        }
+    });
+    let guard = partials.lock().unwrap();
+    df.copy_from_slice(&guard.0);
+    db.copy_from_slice(&guard.1);
+}
+
 /// Which conv implementation a `conv_fwd_bwd/*` row exercises.
 enum ConvImpl<'a> {
-    /// The seed's direct loops (the ≥2× acceptance baseline).
+    /// The seed's direct loops (the original acceptance baseline).
     SeedNaive,
-    /// Serial im2col + blocked GEMM.
-    GemmSerial,
-    /// Algorithm-4.1/4.2 task-parallel GEMM tiles on the given pool.
-    GemmTasks(&'a ThreadPool),
+    /// Serial im2col + packed micro-kernel GEMM.
+    PackedSerial,
+    /// Legacy PR-1 task path: unpacked GEMM, per-task allocs, Arc copies,
+    /// per-image mutex-reduced backward.
+    LegacyTasks(&'a ThreadPool),
+    /// ISSUE-2 engine: packed GEMM tiles, worker arenas, zero-copy dispatch,
+    /// row-tile backward with arena-reduced gradients.
+    PackedTasks(&'a ThreadPool),
 }
 
 fn bench_conv_fwd_bwd(b: &mut Bench, label: &str, s: &ConvSetup, imp: ConvImpl<'_>) {
@@ -60,6 +162,7 @@ fn bench_conv_fwd_bwd(b: &mut Bench, label: &str, s: &ConvSetup, imp: ConvImpl<'
     let mut df = vec![0.0f32; d.f_len()];
     let mut db = vec![0.0f32; d.co];
     let mut dx = vec![0.0f32; d.x_len()];
+    let rows = (d.h / 2).max(1); // 2 row-tiles per image
     match imp {
         ConvImpl::SeedNaive => {
             b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
@@ -68,18 +171,24 @@ fn bench_conv_fwd_bwd(b: &mut Bench, label: &str, s: &ConvSetup, imp: ConvImpl<'
                 ops::conv2d_same_bwd_input_naive(d, &s.dy, &s.f, &mut dx);
             });
         }
-        ConvImpl::GemmSerial => {
+        ConvImpl::PackedSerial => {
             b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
                 ops::conv2d_same_fwd(d, &s.x, &s.f, &s.bias, &mut out);
                 ops::conv2d_same_bwd_filter(d, &s.x, &s.dy, &mut df, &mut db);
                 ops::conv2d_same_bwd_input(d, &s.dy, &s.f, &mut dx);
             });
         }
-        ConvImpl::GemmTasks(pool) => {
-            let rows = (d.h / 2).max(1); // 2 row-tiles per image
+        ConvImpl::LegacyTasks(pool) => {
+            b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
+                legacy_conv2d_parallel(pool, d, &s.x, &s.f, &s.bias, &mut out, rows);
+                legacy_conv_bwd_parallel(pool, d, &s.x, &s.f, &s.dy, &mut df, &mut db, &mut dx);
+            });
+        }
+        ConvImpl::PackedTasks(pool) => {
             b.bench_with_throughput(&format!("conv_fwd_bwd/{label}"), flops, || {
                 conv2d_parallel(pool, d, &s.x, &s.f, &s.bias, &mut out, rows);
-                conv_bwd_parallel(pool, d, &s.x, &s.f, &s.dy, &mut df, &mut db, Some(&mut dx));
+                let dx = Some(&mut dx[..]);
+                conv_bwd_parallel(pool, d, &s.x, &s.f, &s.dy, &mut df, &mut db, dx, rows);
             });
         }
     }
@@ -93,19 +202,43 @@ fn main() {
     let quickstart = setup(ConvDims { n: 8, h: 8, w: 8, c: 1, k: 3, co: 4 }, 1);
     let pool4 = ThreadPool::new(4);
     bench_conv_fwd_bwd(&mut b, "quickstart_seed_naive", &quickstart, ConvImpl::SeedNaive);
-    bench_conv_fwd_bwd(&mut b, "quickstart_gemm_serial", &quickstart, ConvImpl::GemmSerial);
+    bench_conv_fwd_bwd(&mut b, "quickstart_packed_serial", &quickstart, ConvImpl::PackedSerial);
     bench_conv_fwd_bwd(
         &mut b,
-        "quickstart_gemm_tasks_4t",
+        "quickstart_gemm_legacy_tasks_4t",
         &quickstart,
-        ConvImpl::GemmTasks(&pool4),
+        ConvImpl::LegacyTasks(&pool4),
+    );
+    bench_conv_fwd_bwd(
+        &mut b,
+        "quickstart_packed_tasks_4t",
+        &quickstart,
+        ConvImpl::PackedTasks(&pool4),
     );
 
     // Same comparison at the heavier e2e layer-1 shape (8→8 channels, 16×16).
     let e2e = setup(ConvDims { n: 32, h: 16, w: 16, c: 8, k: 3, co: 8 }, 2);
     bench_conv_fwd_bwd(&mut b, "e2e_seed_naive", &e2e, ConvImpl::SeedNaive);
-    bench_conv_fwd_bwd(&mut b, "e2e_gemm_serial", &e2e, ConvImpl::GemmSerial);
-    bench_conv_fwd_bwd(&mut b, "e2e_gemm_tasks_4t", &e2e, ConvImpl::GemmTasks(&pool4));
+    bench_conv_fwd_bwd(&mut b, "e2e_packed_serial", &e2e, ConvImpl::PackedSerial);
+    bench_conv_fwd_bwd(&mut b, "e2e_gemm_legacy_tasks_4t", &e2e, ConvImpl::LegacyTasks(&pool4));
+    bench_conv_fwd_bwd(&mut b, "e2e_packed_tasks_4t", &e2e, ConvImpl::PackedTasks(&pool4));
+
+    // ---- gradient-reduction contention (backward only, many small tasks) --
+    {
+        let d = e2e.d;
+        let bwd_flops = (d.y_len() * d.k * d.k * d.c * 2) as f64 * 2.0;
+        let mut df = vec![0.0f32; d.f_len()];
+        let mut db = vec![0.0f32; d.co];
+        let mut dx = vec![0.0f32; d.x_len()];
+        b.bench_with_throughput("conv_bwd/e2e_mutex_legacy_4t", bwd_flops, || {
+            let (x, f, dy) = (&e2e.x, &e2e.f, &e2e.dy);
+            legacy_conv_bwd_parallel(&pool4, &d, x, f, dy, &mut df, &mut db, &mut dx);
+        });
+        b.bench_with_throughput("conv_bwd/e2e_rowtile_4t", bwd_flops, || {
+            let (x, f, dy) = (&e2e.x, &e2e.f, &e2e.dy);
+            conv_bwd_parallel(&pool4, &d, x, f, dy, &mut df, &mut db, Some(&mut dx), 4);
+        });
+    }
 
     // ---- forward-only sweeps (granularity/thread ablation) ---------------
     let d = ConvDims { n: 8, h: 32, w: 32, c: 8, k: 3, co: 16 };
@@ -116,7 +249,7 @@ fn main() {
     b.bench_with_throughput("conv_fwd/seed_naive", flops, || {
         ops::conv2d_same_fwd_naive(&d, &s.x, &s.f, &s.bias, &mut out);
     });
-    b.bench_with_throughput("conv_fwd/gemm_serial", flops, || {
+    b.bench_with_throughput("conv_fwd/packed_serial", flops, || {
         ops::conv2d_same_fwd(&d, &s.x, &s.f, &s.bias, &mut out);
     });
 
@@ -145,7 +278,7 @@ fn main() {
         for _ in 0..512 {
             dag.add("noop", 1.0, &[], ());
         }
-        execute_dag(&pool, dag, |_| {});
+        execute_dag(&pool, dag, |_, _| {});
     });
 
     b.finish();

@@ -8,19 +8,22 @@
 //! * forward conv layers — Algorithm 4.1 row tasks ([`conv_tasks`]);
 //! * pool / FC / loss — the serial spine of the DAG (<15% of the time,
 //!   §4.1.1);
-//! * backward conv — per-*image* tasks: each computes a private partial
-//!   filter gradient (Eq. 21 restricted to one sample) plus its disjoint
-//!   slice of `dx` (Eq. 18); partials are then reduced. This is the
-//!   thread-safe realization of Fig. 8's per-neuron parallelism.
-
-use std::sync::{Arc, Mutex};
+//! * backward conv — the same **row-tile** decomposition as forward: each
+//!   task lowers its tile's patches once, accumulates its partial filter /
+//!   bias gradient (Eq. 21 restricted to the tile) into the *executing
+//!   worker's* persistent arena, and writes its disjoint rows of `dx`
+//!   (Eq. 18, as a flipped-filter packed-GEMM forward for odd k). Per-worker
+//!   partials are reduced sequentially after the barrier — there is **no
+//!   mutex in the task body** and no per-task allocation. This is the
+//!   thread-safe realization of Fig. 8's per-neuron parallelism with the
+//!   synchronization overhead driven to zero.
 
 use crate::config::NetworkConfig;
-use crate::nn::ops::{self, ConvDims};
+use crate::nn::ops::{self, ConvDims, PackedB};
 use crate::nn::Network;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{ScratchArena, ThreadPool};
 
-use super::conv_tasks::{conv2d_parallel, DisjointBuf};
+use super::conv_tasks::{conv2d_parallel, ConvTask, DisjointBuf};
 use super::dag::TaskDag;
 use super::scheduler::{execute_dag, ScheduleStats};
 
@@ -31,10 +34,24 @@ pub struct ParallelStepResult {
     pub stats: ScheduleStats,
 }
 
-/// Backward of one conv layer with per-image tasks: filter/bias gradients
-/// reduced from per-task partials, input gradient written into disjoint
-/// per-image slices. Numerically ≡ `ops::conv2d_same_bwd_*`
-/// (per-image partial sums commute with the full-batch sums of Eq. 21).
+/// One backward task: a row tile (df/db always; dx too when the kernel is
+/// odd), or a whole-image input-gradient task on the even-kernel fallback
+/// path (asymmetric implicit padding doesn't ride the flipped-forward conv).
+enum BwdTask {
+    Tile(ConvTask),
+    DxImage(usize),
+}
+
+/// Backward of one conv layer with row-tile tasks (granularity mirrors the
+/// forward decomposition via `rows_per_task`): filter/bias gradients are
+/// accumulated into per-worker arenas and reduced once at the end, the input
+/// gradient is written into disjoint row slices. Numerically ≡
+/// `ops::conv2d_same_bwd_*` to f32 reduction-order tolerance (per-tile
+/// partial sums commute with the full-batch sums of Eq. 21).
+///
+/// Zero-copy / zero-alloc: `x`/`f`/`dy` are borrowed by the tasks, im2col
+/// scratch and gradient partials live in the workers' [`ScratchArena`]s.
+#[allow(clippy::too_many_arguments)]
 pub fn conv_bwd_parallel(
     pool: &ThreadPool,
     d: &ConvDims,
@@ -44,64 +61,129 @@ pub fn conv_bwd_parallel(
     df: &mut [f32],
     db: &mut [f32],
     dx: Option<&mut [f32]>,
+    rows_per_task: usize,
 ) -> ScheduleStats {
-    let mut dag: TaskDag<usize> = TaskDag::new();
-    let cost = (d.h * d.w * d.k * d.k * d.c * d.co) as f64;
-    for n in 0..d.n {
-        dag.add(format!("conv_bwd[n{n}]"), cost, &[], n);
-    }
-    let per_image = ConvDims { n: 1, ..*d };
-    // Input-gradient setup hoisted out of the per-image tasks: the flipped/
-    // transposed filter (odd k rides the fwd im2col+GEMM path) is built once
-    // and shared, not re-flipped per image.
-    let per_image_swapped = ConvDims { c: d.co, co: d.c, ..per_image };
+    assert!(rows_per_task >= 1);
+    assert_eq!(x.len(), d.x_len());
+    assert_eq!(dy.len(), d.y_len());
+    assert_eq!(df.len(), d.f_len());
+    assert_eq!(db.len(), d.co);
     let want_dx = dx.is_some();
-    let flipped: Option<Vec<f32>> = if want_dx && d.k % 2 == 1 {
-        Some(ops::flip_transpose_filter(d, f))
+    let odd_k = d.k % 2 == 1;
+
+    // Task list: row tiles for df/db (+ dx when odd k), plus per-image dx
+    // fallback tasks for even kernels. All level-0 (independent).
+    let mut dag: TaskDag<BwdTask> = TaskDag::new();
+    let cost_per_row = (d.w * d.k * d.k * d.c * d.co) as f64;
+    for n in 0..d.n {
+        let mut y = 0;
+        while y < d.h {
+            let rows = rows_per_task.min(d.h - y);
+            // A tile does the filter-gradient contraction and (odd k) the
+            // input-gradient conv: ~2× the forward cost per row.
+            dag.add(
+                format!("conv_bwd[n{n},y{y}+{rows}]"),
+                2.0 * cost_per_row * rows as f64,
+                &[],
+                BwdTask::Tile(ConvTask { n, y0: y, rows }),
+            );
+            y += rows;
+        }
+        if want_dx && !odd_k {
+            dag.add(
+                format!("conv_bwd_dx[n{n}]"),
+                cost_per_row * d.h as f64,
+                &[],
+                BwdTask::DxImage(n),
+            );
+        }
+    }
+
+    let dd = *d;
+    let kkc = dd.k * dd.k * dd.c;
+    let kkco = dd.k * dd.k * dd.co;
+    // Input gradient = SAME forward conv of dy with the spatially-flipped,
+    // channel-transposed filter (odd k): built and packed once per layer
+    // call, shared read-only by all tiles.
+    let swapped = ConvDims { c: dd.co, co: dd.c, ..dd };
+    let per_image = ConvDims { n: 1, ..dd };
+    let flip_packed: Option<PackedB> = if want_dx && odd_k {
+        Some(ops::pack_filter(&swapped, &ops::flip_transpose_filter(d, f)))
     } else {
         None
     };
-    let zero_bias = vec![0.0f32; per_image_swapped.co];
-    let x: Arc<[f32]> = Arc::from(x);
-    let f: Arc<[f32]> = Arc::from(f);
-    let dy: Arc<[f32]> = Arc::from(dy);
-    let partials: Arc<Mutex<(Vec<f32>, Vec<f32>)>> =
-        Arc::new(Mutex::new((vec![0.0; d.f_len()], vec![0.0; d.co])));
-    let mut dx_holder = dx;
-    let dx_buf = dx_holder
-        .as_deref_mut()
-        .map(|b| Arc::new(DisjointBuf::new(b)));
-    let x_img = d.h * d.w * d.c;
-    let y_img = d.h * d.w * d.co;
-    let partials2 = Arc::clone(&partials);
-    let stats = execute_dag(pool, dag, move |&n: &usize| {
-        let xs = &x[n * x_img..(n + 1) * x_img];
-        let dys = &dy[n * y_img..(n + 1) * y_img];
-        let mut df_p = vec![0.0f32; per_image.f_len()];
-        let mut db_p = vec![0.0f32; per_image.co];
-        ops::conv2d_same_bwd_filter(&per_image, xs, dys, &mut df_p, &mut db_p);
-        if want_dx {
-            // SAFETY: image n exclusively owns dx[n·x_img .. (n+1)·x_img).
-            let dxs = unsafe { dx_buf.as_ref().unwrap().slice_mut(n * x_img, x_img) };
-            match &flipped {
-                Some(ff) => {
-                    ops::conv2d_same_fwd(&per_image_swapped, dys, ff, &zero_bias, dxs)
+    let zero_bias = vec![0.0f32; dd.c];
+    let dx_buf = dx.map(DisjointBuf::new);
+    let x_img = dd.h * dd.w * dd.c;
+    let y_img = dd.h * dd.w * dd.co;
+
+    // Size + zero each worker's gradient accumulators for this layer call.
+    for arena in pool.arenas() {
+        let mut g = arena.lock().unwrap();
+        ScratchArena::grow_zeroed(&mut g.grad_f, dd.f_len());
+        ScratchArena::grow_zeroed(&mut g.grad_b, dd.co);
+    }
+
+    let arenas = pool.arenas();
+    let stats = execute_dag(pool, dag, move |worker: usize, task: &BwdTask| {
+        match *task {
+            BwdTask::Tile(t) => {
+                let patches = t.rows * dd.w;
+                let mut arena = arenas[worker].lock().unwrap();
+                let arena = &mut *arena;
+                // Eq. 21 tile: df_worker += im2col(x tile)ᵀ · dy tile.
+                let cols = ScratchArena::grow(&mut arena.cols, patches * kkc);
+                ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
+                let dy0 = (t.n * dd.h + t.y0) * dd.w * dd.co;
+                let dyt = &dy[dy0..dy0 + patches * dd.co];
+                ops::gemm_tn_acc(patches, kkc, dd.co, cols, dyt, &mut arena.grad_f[..dd.f_len()]);
+                // Eq. 22 tile: db_worker += column sums of the dy tile.
+                let gb = &mut arena.grad_b[..dd.co];
+                for px in 0..patches {
+                    let row = &dyt[px * dd.co..(px + 1) * dd.co];
+                    for (acc, &v) in gb.iter_mut().zip(row.iter()) {
+                        *acc += v;
+                    }
                 }
-                None => ops::conv2d_same_bwd_input_naive(&per_image, dys, &f, dxs),
+                // Eq. 18 tile (odd k): dx rows [y0, y0+rows) of image n via
+                // the packed flipped-filter forward.
+                if let Some(pf) = &flip_packed {
+                    let cols2 = ScratchArena::grow(&mut arena.cols2, patches * kkco);
+                    // SAFETY: tile (n, y0, rows) exclusively owns dx rows
+                    // [y0, y0+rows) of image n; tiles never overlap.
+                    let dxt = unsafe {
+                        dx_buf
+                            .as_ref()
+                            .unwrap()
+                            .slice_mut((t.n * dd.h + t.y0) * dd.w * dd.c, patches * dd.c)
+                    };
+                    ops::conv2d_same_rows_packed(
+                        &swapped, dy, pf, &zero_bias, t.n, t.y0, t.rows, cols2, dxt,
+                    );
+                }
+            }
+            BwdTask::DxImage(n) => {
+                let dys = &dy[n * y_img..(n + 1) * y_img];
+                // SAFETY: image task n exclusively owns dx[n·x_img, (n+1)·x_img).
+                let dxs = unsafe { dx_buf.as_ref().unwrap().slice_mut(n * x_img, x_img) };
+                ops::conv2d_same_bwd_input_naive(&per_image, dys, f, dxs);
             }
         }
-        // Reduce partials (the only shared-write section).
-        let mut guard = partials2.lock().unwrap();
-        for (a, b) in guard.0.iter_mut().zip(df_p.iter()) {
-            *a += b;
-        }
-        for (a, b) in guard.1.iter_mut().zip(db_p.iter()) {
-            *a += b;
-        }
     });
-    let guard = partials.lock().unwrap();
-    df.copy_from_slice(&guard.0);
-    db.copy_from_slice(&guard.1);
+
+    // Sequential reduce of the per-worker partials (the paper's Fig.-9
+    // "reduce" node) — the only cross-worker aggregation, outside the tasks.
+    df.fill(0.0);
+    db.fill(0.0);
+    for arena in pool.arenas() {
+        let g = arena.lock().unwrap();
+        for (acc, &v) in df.iter_mut().zip(g.grad_f.iter()) {
+            *acc += v;
+        }
+        for (acc, &v) in db.iter_mut().zip(g.grad_b.iter()) {
+            *acc += v;
+        }
+    }
     stats
 }
 
@@ -225,7 +307,7 @@ pub fn parallel_train_step(
     let mut dconv = vec![0.0f32; batch * hw * hw * c];
     ops::mean_pool_bwd(batch, hw, hw, c, win, &dfeat, &mut dconv);
 
-    // ---- Backward: conv stack with per-image tasks (Fig. 8) ----------------
+    // ---- Backward: conv stack with row-tile tasks (Fig. 8) -----------------
     for l in (0..cfg.conv_layers).rev() {
         ops::relu_bwd(&conv_outs[l], &mut dconv);
         let cin = if l == 0 { cfg.in_channels } else { cfg.filters };
@@ -244,6 +326,7 @@ pub fn parallel_train_step(
                 a[w_idx].data_mut(),
                 b[0].data_mut(),
                 dprev.as_deref_mut(),
+                rows_per_task,
             )
         };
         agg = Some(merge_stats(agg, s));
@@ -374,10 +457,42 @@ mod tests {
         ops::conv2d_same_bwd_filter(&d, &x, &dy, &mut df_s, &mut db_s);
         ops::conv2d_same_bwd_input(&d, &dy, &f, &mut dx_s);
         let pool = ThreadPool::new(4);
+        for rows in [1usize, 2, 4, 6] {
+            let mut df_p = vec![0.0; d.f_len()];
+            let mut db_p = vec![0.0; d.co];
+            let mut dx_p = vec![0.0; d.x_len()];
+            conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, Some(&mut dx_p), rows);
+            for (a, b) in df_s.iter().zip(df_p.iter()) {
+                assert!((a - b).abs() < 1e-4, "rows={rows}");
+            }
+            for (a, b) in db_s.iter().zip(db_p.iter()) {
+                assert!((a - b).abs() < 1e-4, "rows={rows}");
+            }
+            for (a, b) in dx_s.iter().zip(dx_p.iter()) {
+                assert!((a - b).abs() < 1e-4, "rows={rows}");
+            }
+        }
+    }
+
+    /// Even kernels take the per-image naive fallback for dx while df/db
+    /// still run the row-tile path — all three must match the references.
+    #[test]
+    fn conv_bwd_parallel_even_kernel_fallback() {
+        let mut rng = Xoshiro256::new(22);
+        let d = ConvDims { n: 3, h: 5, w: 5, c: 2, k: 2, co: 3 };
+        let x: Vec<f32> = (0..d.x_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let f: Vec<f32> = (0..d.f_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let dy: Vec<f32> = (0..d.y_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let mut df_s = vec![0.0; d.f_len()];
+        let mut db_s = vec![0.0; d.co];
+        let mut dx_s = vec![0.0; d.x_len()];
+        ops::conv2d_same_bwd_filter_naive(&d, &x, &dy, &mut df_s, &mut db_s);
+        ops::conv2d_same_bwd_input_naive(&d, &dy, &f, &mut dx_s);
+        let pool = ThreadPool::new(2);
         let mut df_p = vec![0.0; d.f_len()];
         let mut db_p = vec![0.0; d.co];
         let mut dx_p = vec![0.0; d.x_len()];
-        conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, Some(&mut dx_p));
+        conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, Some(&mut dx_p), 2);
         for (a, b) in df_s.iter().zip(df_p.iter()) {
             assert!((a - b).abs() < 1e-4);
         }
@@ -385,6 +500,29 @@ mod tests {
             assert!((a - b).abs() < 1e-4);
         }
         for (a, b) in dx_s.iter().zip(dx_p.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    /// No dx requested: df/db alone must still reduce correctly.
+    #[test]
+    fn conv_bwd_parallel_without_dx() {
+        let mut rng = Xoshiro256::new(23);
+        let d = ConvDims { n: 2, h: 4, w: 7, c: 3, k: 3, co: 2 };
+        let x: Vec<f32> = (0..d.x_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let f: Vec<f32> = (0..d.f_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let dy: Vec<f32> = (0..d.y_len()).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let mut df_s = vec![0.0; d.f_len()];
+        let mut db_s = vec![0.0; d.co];
+        ops::conv2d_same_bwd_filter(&d, &x, &dy, &mut df_s, &mut db_s);
+        let pool = ThreadPool::new(3);
+        let mut df_p = vec![0.0; d.f_len()];
+        let mut db_p = vec![0.0; d.co];
+        conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, None, 1);
+        for (a, b) in df_s.iter().zip(df_p.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in db_s.iter().zip(db_p.iter()) {
             assert!((a - b).abs() < 1e-4);
         }
     }

@@ -8,20 +8,22 @@
 //! into one task (`rows_per_task` tunes the granularity; `1` row ≈ `W_a`
 //! paper-tasks fused — the ablation bench sweeps this knob).
 //!
-//! Each task executes its row tile through the im2col + blocked-GEMM fast
-//! path ([`crate::nn::ops::conv2d_same_rows_gemm`]) with task-private patch
-//! scratch, dispatched onto [`ThreadPool::execute_on`] by the Algorithm-4.2
-//! scheduler — thread-level load balancing over GEMM tiles.
+//! Each task executes its row tile through the im2col + packed-GEMM fast
+//! path ([`crate::nn::ops::conv2d_same_rows_packed`]): the filter is packed
+//! once per layer call ([`crate::nn::ops::pack_filter`]) and shared
+//! read-only by every task, patch scratch comes from the executing worker's
+//! persistent [`ScratchArena`], and the input/filter/bias tensors are
+//! **borrowed** by the tasks (the scheduler's completion barrier makes that
+//! sound) — the task body performs no heap allocation and dispatch copies no
+//! tensor.
 //!
 //! Tasks write disjoint row slices of the shared output buffer through
 //! [`DisjointBuf`], the lock-free analogue of the paper's observation that
 //! "different tasks can access different convolution areas simultaneously…
 //! without data dependence".
 
-use std::sync::Arc;
-
 use crate::nn::ops::{self, ConvDims};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{ScratchArena, ThreadPool};
 
 use super::dag::TaskDag;
 use super::scheduler::{execute_dag, ScheduleStats};
@@ -89,6 +91,10 @@ pub fn conv_task_dag(d: &ConvDims, rows_per_task: usize) -> TaskDag<ConvTask> {
 
 /// Execute a SAME conv layer with the task-parallel decomposition on the
 /// pool; numerically identical to `ops::conv2d_same_fwd`.
+///
+/// Dispatch is zero-copy (`x`/`f`/`bias` are borrowed by the tasks, the
+/// filter is packed once and shared) and the task body is allocation-free
+/// (im2col scratch comes from the executing worker's [`ScratchArena`]).
 pub fn conv2d_parallel(
     pool: &ThreadPool,
     d: &ConvDims,
@@ -99,24 +105,26 @@ pub fn conv2d_parallel(
     rows_per_task: usize,
 ) -> ScheduleStats {
     assert_eq!(out.len(), d.y_len());
+    assert_eq!(x.len(), d.x_len());
     let dag = conv_task_dag(d, rows_per_task);
-    let shared = Arc::new(DisjointBuf::new(out));
+    let shared = DisjointBuf::new(out);
     let row_len = d.w * d.co;
-    let x: Arc<[f32]> = Arc::from(x);
-    let f: Arc<[f32]> = Arc::from(f);
-    let bias: Arc<[f32]> = Arc::from(bias);
+    let packed = ops::pack_filter(d, f);
     let dd = *d;
     let kkc = dd.k * dd.k * dd.c;
-    execute_dag(pool, dag, move |task: &ConvTask| {
+    let arenas = pool.arenas();
+    execute_dag(pool, dag, move |worker: usize, task: &ConvTask| {
         let offset = (task.n * dd.h + task.y0) * row_len;
         let len = task.rows * row_len;
         // SAFETY: task (n, y0, rows) exclusively owns output rows
         // [y0, y0+rows) of image n; ranges never overlap across tasks.
         let tile = unsafe { shared.slice_mut(offset, len) };
-        // Task-private im2col scratch: concurrent tiles never share it.
-        let mut cols = vec![0.0f32; task.rows * dd.w * kkc];
-        ops::conv2d_same_rows_gemm(
-            &dd, &x, &f, &bias, task.n, task.y0, task.rows, &mut cols, tile,
+        // Worker-persistent im2col scratch (uncontended: only worker
+        // `worker` runs tasks pinned to it, one at a time).
+        let mut arena = arenas[worker].lock().unwrap();
+        let cols = ScratchArena::grow(&mut arena.cols, task.rows * dd.w * kkc);
+        ops::conv2d_same_rows_packed(
+            &dd, x, &packed, bias, task.n, task.y0, task.rows, cols, tile,
         );
     })
 }
@@ -172,6 +180,34 @@ mod tests {
         // Critical path == one task's cost (full parallelism, Eq. 15).
         let max_cost = dag.nodes().iter().map(|n| n.cost).fold(0.0, f64::max);
         assert_eq!(dag.critical_path_cost(), max_cost);
+    }
+
+    /// Scratch contents left behind by a previous (larger) layer call must
+    /// not leak into later results: run a big conv to fill every worker's
+    /// arena with data, then a smaller conv on the same pool, and check the
+    /// small conv against the serial reference.
+    #[test]
+    fn arena_reuse_does_not_leak_between_layer_calls() {
+        let mut rng = Xoshiro256::new(21);
+        let pool = ThreadPool::new(4);
+        let big = ConvDims { n: 4, h: 12, w: 10, c: 5, k: 5, co: 7 };
+        let bx = rand_vec(&mut rng, big.x_len());
+        let bf = rand_vec(&mut rng, big.f_len());
+        let bb = rand_vec(&mut rng, big.co);
+        let mut bout = vec![0.0; big.y_len()];
+        conv2d_parallel(&pool, &big, &bx, &bf, &bb, &mut bout, 1);
+
+        let small = ConvDims { n: 2, h: 5, w: 4, c: 2, k: 3, co: 3 };
+        let sx = rand_vec(&mut rng, small.x_len());
+        let sf = rand_vec(&mut rng, small.f_len());
+        let sb = rand_vec(&mut rng, small.co);
+        let mut serial = vec![0.0; small.y_len()];
+        ops::conv2d_same_fwd(&small, &sx, &sf, &sb, &mut serial);
+        let mut par = vec![0.0; small.y_len()];
+        conv2d_parallel(&pool, &small, &sx, &sf, &sb, &mut par, 2);
+        for (a, b) in par.iter().zip(serial.iter()) {
+            assert!((a - b).abs() < 1e-5, "stale arena contents leaked: {a} vs {b}");
+        }
     }
 
     #[test]

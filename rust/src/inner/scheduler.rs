@@ -5,9 +5,16 @@
 //! ready tasks are assigned to the thread with minimal accumulated workload
 //! (line 8). Execution happens on [`ThreadPool`] workers via their pinned
 //! per-thread queues, so "assignment to thread k" is real, not advisory.
+//!
+//! Dispatch is **zero-copy**: the runner (and the task payloads) may borrow
+//! the caller's tensors directly — `execute_dag` blocks until every
+//! dispatched task has completed (even on unwind, via a completion guard), so
+//! no borrow can escape the call. The runner also receives the index of the
+//! worker a task was assigned to, which is how conv tasks reach that worker's
+//! persistent [`crate::util::threadpool::ScratchArena`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::util::stats;
@@ -41,37 +48,80 @@ impl ScheduleStats {
     }
 }
 
+struct DoneState {
+    /// Per-task completion flags (dependency waits key off these). A
+    /// panicked task is also marked done so dependents and the barrier can
+    /// make progress; the panic is re-raised on the dispatching thread.
+    flags: Vec<bool>,
+    /// Number of completed tasks (the completion barrier keys off this).
+    completed: usize,
+    /// First panic payload caught in a task, re-thrown after the barrier.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
 struct DispatchState {
-    done: Mutex<(Vec<bool>, usize)>, // (per-task done flags, remaining)
+    done: Mutex<DoneState>,
     cv: Condvar,
 }
 
-/// Execute a task DAG per Algorithm 4.2. `runner` is invoked with each
-/// task's payload on the assigned worker thread.
-pub fn execute_dag<P, F>(pool: &ThreadPool, dag: TaskDag<P>, runner: F) -> ScheduleStats
+/// Poison-tolerant lock: task panics are caught inside the job (they never
+/// unwind through this mutex), but tolerate poisoning anyway so the
+/// completion guard can always observe the counters instead of
+/// double-panicking.
+fn lock(m: &Mutex<DoneState>) -> MutexGuard<'_, DoneState> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn wait<'a>(cv: &Condvar, g: MutexGuard<'a, DoneState>) -> MutexGuard<'a, DoneState> {
+    cv.wait(g).unwrap_or_else(|p| p.into_inner())
+}
+
+/// Blocks (on drop) until every job dispatched so far has completed. This is
+/// what makes borrowed task payloads sound: even if the dispatch loop
+/// unwinds, no borrow of the `execute_dag` frame can outlive the frame.
+struct CompletionGuard {
+    state: Arc<DispatchState>,
+    dispatched: usize,
+}
+
+impl Drop for CompletionGuard {
+    fn drop(&mut self) {
+        let mut g = lock(&self.state.done);
+        while g.completed < self.dispatched {
+            g = wait(&self.state.cv, g);
+        }
+    }
+}
+
+/// Execute a task DAG per Algorithm 4.2. `runner` is invoked as
+/// `runner(worker, payload)` on the assigned worker thread; `worker` indexes
+/// the pool's workers (and their scratch arenas). Payloads and the runner may
+/// borrow caller data — `execute_dag` returns only after all tasks finished.
+pub fn execute_dag<'env, P, F>(pool: &ThreadPool, dag: TaskDag<P>, runner: F) -> ScheduleStats
 where
-    P: Send + Sync + 'static,
-    F: Fn(&P) + Send + Sync + 'static,
+    P: Send + Sync + 'env,
+    F: Fn(usize, &P) + Send + Sync + 'env,
 {
     let n = dag.len();
     let order = priority_order(&dag);
-    let nodes = Arc::new(dag.into_nodes());
-    let runner = Arc::new(runner);
+    let nodes = dag.into_nodes();
     let state = Arc::new(DispatchState {
-        done: Mutex::new((vec![false; n], n)),
+        done: Mutex::new(DoneState { flags: vec![false; n], completed: 0, panic: None }),
         cv: Condvar::new(),
     });
     let busy_ns: Arc<Vec<AtomicU64>> =
         Arc::new((0..pool.size()).map(|_| AtomicU64::new(0)).collect());
     let mut assigned = vec![0.0f64; pool.size()];
+    // Declared after `nodes`/`assigned` so it drops (and thus waits) first.
+    let mut completion = CompletionGuard { state: Arc::clone(&state), dispatched: 0 };
 
     let t0 = Instant::now();
     for &tid in &order {
         // Line 5–7: wait until every dependency of the top task is complete.
         {
-            let mut guard = state.done.lock().unwrap();
-            while !nodes[tid].deps.iter().all(|&d| guard.0[d]) {
-                guard = state.cv.wait(guard).unwrap();
+            let mut guard = lock(&state.done);
+            while !nodes[tid].deps.iter().all(|&d| guard.flags[d]) {
+                guard = wait(&state.cv, guard);
             }
         }
         // Line 8: thread with minimal (assigned) workload.
@@ -82,26 +132,45 @@ where
             .map(|(i, _)| i)
             .unwrap();
         assigned[k] += nodes[tid].cost;
-        // Line 9: assignment.
-        let nodes2 = Arc::clone(&nodes);
-        let runner2 = Arc::clone(&runner);
+        // Line 9: assignment. The job borrows `nodes` and `runner` from this
+        // frame — no Arc clones of payload data.
+        let node = &nodes[tid];
+        let runner_ref = &runner;
         let state2 = Arc::clone(&state);
         let busy2 = Arc::clone(&busy_ns);
-        pool.execute_on(k, move || {
+        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
             let start = Instant::now();
-            runner2(&nodes2[tid].payload);
+            // Catch task panics so the worker thread, the pool's inflight
+            // accounting and this DAG's completion barrier all stay intact;
+            // the payload is re-thrown on the dispatching thread below.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                runner_ref(k, &node.payload);
+            }));
             busy2[k].fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            let mut guard = state2.done.lock().unwrap();
-            guard.0[tid] = true;
-            guard.1 -= 1;
+            let mut guard = lock(&state2.done);
+            guard.flags[tid] = true;
+            guard.completed += 1;
+            if let Err(payload) = result {
+                guard.panic.get_or_insert(payload);
+            }
             state2.cv.notify_all();
         });
+        // SAFETY: the completion guard (and the barrier below) guarantee the
+        // job finishes before this frame — hence before `nodes`, `runner`
+        // and anything the payloads borrow — is invalidated.
+        unsafe { pool.execute_on_borrowed(k, job) };
+        completion.dispatched += 1;
     }
-    // Wait for all tasks to complete.
+    // Wait for all tasks to complete; re-raise the first task panic here on
+    // the dispatching thread (after the barrier, so borrows stay sound).
     {
-        let mut guard = state.done.lock().unwrap();
-        while guard.1 != 0 {
-            guard = state.cv.wait(guard).unwrap();
+        let mut guard = lock(&state.done);
+        while guard.completed != n {
+            guard = wait(&state.cv, guard);
+        }
+        if let Some(payload) = guard.panic.take() {
+            drop(guard);
+            std::panic::resume_unwind(payload);
         }
     }
     let makespan = t0.elapsed().as_secs_f64();
@@ -168,7 +237,7 @@ mod tests {
         {
             let seq = Arc::clone(&seq);
             let fp = Arc::clone(&finish_pos);
-            execute_dag(&pool, dag, move |&tid| {
+            execute_dag(&pool, dag, move |_, &tid| {
                 let p = seq.fetch_add(1, Ordering::SeqCst);
                 fp[tid].store(p, Ordering::SeqCst);
             });
@@ -193,13 +262,91 @@ mod tests {
         let counts: Arc<Vec<AtomicUsize>> =
             Arc::new((0..50).map(|_| AtomicUsize::new(0)).collect());
         let c2 = Arc::clone(&counts);
-        let stats = execute_dag(&pool, dag, move |&i| {
+        let stats = execute_dag(&pool, dag, move |_, &i| {
             c2[i].fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(stats.tasks, 50);
         for c in counts.iter() {
             assert_eq!(c.load(Ordering::SeqCst), 1);
         }
+    }
+
+    /// The runner's worker index matches the worker the task actually ran on
+    /// (pinned queues) — the invariant the per-worker arenas rely on.
+    #[test]
+    fn worker_index_matches_executing_thread() {
+        let pool = ThreadPool::new(3);
+        // Map each worker index to the thread id observed running it.
+        let seen: Arc<Mutex<std::collections::HashMap<usize, Vec<std::thread::ThreadId>>>> =
+            Arc::new(Mutex::new(std::collections::HashMap::new()));
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for i in 0..48 {
+            dag.add("t", 1.0, &[], i);
+        }
+        let s2 = Arc::clone(&seen);
+        execute_dag(&pool, dag, move |worker, _| {
+            s2.lock()
+                .unwrap()
+                .entry(worker)
+                .or_default()
+                .push(std::thread::current().id());
+        });
+        let seen = seen.lock().unwrap();
+        for ids in seen.values() {
+            assert!(ids.iter().all(|&id| id == ids[0]), "one worker index, several threads");
+        }
+        // Distinct worker indices ran on distinct threads.
+        let firsts: Vec<_> = seen.values().map(|v| v[0]).collect();
+        let mut dedup = firsts.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), firsts.len());
+    }
+
+    /// Tasks may borrow caller-local data (zero-copy dispatch).
+    #[test]
+    fn tasks_borrow_caller_data() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..100).collect();
+        let total = std::sync::atomic::AtomicU64::new(0);
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for i in 0..data.len() {
+            dag.add("t", 1.0, &[], i);
+        }
+        let d: &[u64] = &data;
+        let t = &total;
+        execute_dag(&pool, dag, move |_, &i| {
+            t.fetch_add(d[i], Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    /// A panicking task must not deadlock the barrier or wedge the pool: the
+    /// panic is re-raised on the dispatching thread and the pool stays
+    /// usable for the next DAG.
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for i in 0..8 {
+            dag.add("t", 1.0, &[], i);
+        }
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_dag(&pool, dag, |_, &i| {
+                if i == 3 {
+                    panic!("task 3 exploded");
+                }
+            })
+        }));
+        assert!(res.is_err(), "task panic was swallowed");
+        // Pool and scheduler still fully functional afterwards.
+        let mut dag2: TaskDag<usize> = TaskDag::new();
+        for i in 0..4 {
+            dag2.add("t", 1.0, &[], i);
+        }
+        let stats = execute_dag(&pool, dag2, |_, _| {});
+        assert_eq!(stats.tasks, 4);
+        pool.wait_idle();
     }
 
     #[test]
@@ -209,7 +356,7 @@ mod tests {
         for _ in 0..64 {
             dag.add("t", 1.0, &[], ());
         }
-        let stats = execute_dag(&pool, dag, |_| {});
+        let stats = execute_dag(&pool, dag, |_, _| {});
         // 64 equal tasks over 4 threads → exactly 16 cost units each.
         assert!(stats.assigned_balance_index() > 0.99, "{:?}", stats.thread_assigned_cost);
     }
@@ -223,7 +370,7 @@ mod tests {
         for _ in 0..3 {
             dag.add("small", 1.0, &[], ());
         }
-        let stats = execute_dag(&pool, dag, |_| {});
+        let stats = execute_dag(&pool, dag, |_, _| {});
         let mut costs = stats.thread_assigned_cost.clone();
         costs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(costs, vec![3.0, 3.0]);
@@ -246,7 +393,7 @@ mod tests {
         let mut dag: TaskDag<usize> = TaskDag::new();
         let a = dag.add("a", 1.0, &[], 0);
         dag.add("b", 1.0, &[a], 1);
-        let stats = execute_dag(&pool, dag, |_| {});
+        let stats = execute_dag(&pool, dag, |_, _| {});
         assert_eq!(stats.tasks, 2);
         assert_eq!(stats.thread_assigned_cost.len(), 1);
     }

@@ -140,7 +140,7 @@ fn prop_scheduler_topological_safety() {
         {
             let seq = Arc::clone(&seq);
             let pos = Arc::clone(&pos);
-            execute_dag(&pool, dag, move |&tid| {
+            execute_dag(&pool, dag, move |_, &tid| {
                 pos[tid].store(seq.fetch_add(1, Ordering::SeqCst), Ordering::SeqCst);
             });
         }
@@ -183,17 +183,18 @@ fn prop_priorities_decrease_along_edges() {
     });
 }
 
-/// The im2col + blocked-GEMM conv forward matches the retained naive
-/// reference across randomized `ConvDims`: odd kernels {1, 3, 5}, C_in/C_out
-/// up to 8, batch up to 4, rectangular spatial dims.
+/// The im2col + packed-GEMM conv forward matches the retained naive
+/// reference across randomized `ConvDims`: kernels {1, …, 5} (odd *and*
+/// even), C_in/C_out up to 8 (crossing the NR=8 panel width), batch up to 4,
+/// rectangular spatial dims down to 1×1 (including W < k, heavy padding).
 #[test]
 fn prop_im2col_gemm_fwd_matches_naive() {
     prop::check("im2col gemm fwd parity", 60, |g| {
-        let k = *g.choose(&[1usize, 3, 5]);
+        let k = *g.choose(&[1usize, 2, 3, 4, 5]);
         let d = ConvDims {
             n: g.usize_full(1, 4),
-            h: g.usize_full(k.max(2), 12),
-            w: g.usize_full(k.max(2), 12),
+            h: g.usize_full(1, 12),
+            w: g.usize_full(1, 12),
             c: g.usize_full(1, 8),
             k,
             co: g.usize_full(1, 8),
@@ -217,11 +218,11 @@ fn prop_im2col_gemm_fwd_matches_naive() {
 #[test]
 fn prop_im2col_gemm_bwd_matches_naive() {
     prop::check("im2col gemm bwd parity", 40, |g| {
-        let k = *g.choose(&[1usize, 3, 5]);
+        let k = *g.choose(&[1usize, 2, 3, 4, 5]);
         let d = ConvDims {
             n: g.usize_full(1, 4),
-            h: g.usize_full(k.max(2), 10),
-            w: g.usize_full(k.max(2), 10),
+            h: g.usize_full(1, 10),
+            w: g.usize_full(1, 10),
             c: g.usize_full(1, 8),
             k,
             co: g.usize_full(1, 8),
@@ -258,11 +259,11 @@ fn prop_im2col_gemm_bwd_matches_naive() {
 fn prop_conv_parallel_matches_naive() {
     use bptcnn::inner::conv2d_parallel;
     prop::check("parallel conv parity", 25, |g| {
-        let k = *g.choose(&[1usize, 3, 5]);
+        let k = *g.choose(&[1usize, 2, 3, 4, 5]);
         let d = ConvDims {
             n: g.usize_full(1, 4),
-            h: g.usize_full(k.max(2), 10),
-            w: g.usize_full(k.max(2), 10),
+            h: g.usize_full(1, 10),
+            w: g.usize_full(1, 10),
             c: g.usize_full(1, 6),
             k,
             co: g.usize_full(1, 6),
@@ -278,6 +279,54 @@ fn prop_conv_parallel_matches_naive() {
         conv2d_parallel(&pool, &d, &x, &f, &bias, &mut par, rows);
         for (i, (a, b)) in par.iter().zip(naive.iter()).enumerate() {
             assert_close(*a as f64, *b as f64, 1e-4, &format!("y[{i}] rows={rows}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// The row-tile backward (per-worker arena accumulation, no mutex) matches
+/// the serial oracles for random shapes (odd *and* even kernels, W < k),
+/// granularities and pool sizes — and a second, differently-shaped layer
+/// call on the *same pool* still matches, proving scratch/partial contents
+/// of a previous layer call cannot leak through the arenas.
+#[test]
+fn prop_conv_bwd_parallel_matches_naive_and_arenas_do_not_leak() {
+    use bptcnn::inner::bp_tasks::conv_bwd_parallel;
+    prop::check("row-tile bwd parity + arena reuse", 15, |g| {
+        let pool = ThreadPool::new(g.usize_full(1, 4));
+        for round in 0..2 {
+            let k = *g.choose(&[1usize, 2, 3, 4, 5]);
+            let d = ConvDims {
+                n: g.usize_full(1, 4),
+                h: g.usize_full(1, 9),
+                w: g.usize_full(1, 9),
+                c: g.usize_full(1, 5),
+                k,
+                co: g.usize_full(1, 5),
+            };
+            let x = g.vec_f32(d.x_len(), -1.0, 1.0);
+            let f = g.vec_f32(d.f_len(), -1.0, 1.0);
+            let dy = g.vec_f32(d.y_len(), -1.0, 1.0);
+            let mut df_s = vec![0.0f32; d.f_len()];
+            let mut db_s = vec![0.0f32; d.co];
+            let mut dx_s = vec![0.0f32; d.x_len()];
+            ops::conv2d_same_bwd_filter_naive(&d, &x, &dy, &mut df_s, &mut db_s);
+            ops::conv2d_same_bwd_input_naive(&d, &dy, &f, &mut dx_s);
+            let rows = g.usize_full(1, d.h);
+            let mut df_p = vec![0.0f32; d.f_len()];
+            let mut db_p = vec![0.0f32; d.co];
+            let mut dx_p = vec![0.0f32; d.x_len()];
+            conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, Some(&mut dx_p), rows);
+            for (i, (a, b)) in df_p.iter().zip(df_s.iter()).enumerate() {
+                let msg = format!("df[{i}] round={round} ({d:?})");
+                assert_close(*a as f64, *b as f64, 1e-3, &msg)?;
+            }
+            for (i, (a, b)) in db_p.iter().zip(db_s.iter()).enumerate() {
+                assert_close(*a as f64, *b as f64, 1e-3, &format!("db[{i}] round={round}"))?;
+            }
+            for (i, (a, b)) in dx_p.iter().zip(dx_s.iter()).enumerate() {
+                assert_close(*a as f64, *b as f64, 1e-3, &format!("dx[{i}] round={round}"))?;
+            }
         }
         Ok(())
     });
