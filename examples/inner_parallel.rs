@@ -12,7 +12,7 @@ use bptcnn::inner::{
     conv2d_parallel, conv_task_dag, parallel_train_step, train_step_dag,
 };
 use bptcnn::nn::ops::{self, ConvDims};
-use bptcnn::nn::Network;
+use bptcnn::nn::{Network, StepWorkspace};
 use bptcnn::util::rng::Xoshiro256;
 use bptcnn::util::threadpool::ThreadPool;
 
@@ -76,7 +76,8 @@ fn main() {
     let mut par = serial.clone();
     let pool = ThreadPool::new(4);
     let (sl, _) = serial.train_batch(&xb, &yb, cfg.batch_size, 0.1);
-    let r = parallel_train_step(&pool, &mut par, &xb, &yb, cfg.batch_size, 0.1, 2);
+    let mut ws = StepWorkspace::new();
+    let r = parallel_train_step(&pool, &mut par, &xb, &yb, cfg.batch_size, 0.1, 2, &mut ws);
     println!(
         "\nparallel train step: loss {:.5} (serial {:.5}), weight max|Δ| {:.1e}, {} tasks",
         r.loss,

@@ -18,10 +18,13 @@
 
 use std::sync::{Arc, Mutex};
 
+use bptcnn::config::NetworkConfig;
+use bptcnn::data::Dataset;
 use bptcnn::inner::bp_tasks::conv_bwd_parallel;
 use bptcnn::inner::conv_tasks::DisjointBuf;
-use bptcnn::inner::{conv2d_parallel, conv_task_dag, execute_dag, TaskDag};
+use bptcnn::inner::{conv2d_parallel, conv_task_dag, execute_dag, parallel_train_step, TaskDag};
 use bptcnn::nn::ops::{self, ConvDims};
+use bptcnn::nn::{Network, StepWorkspace};
 use bptcnn::util::bench::Bench;
 use bptcnn::util::rng::Xoshiro256;
 use bptcnn::util::threadpool::ThreadPool;
@@ -141,6 +144,154 @@ fn legacy_conv_bwd_parallel(
     db.copy_from_slice(&guard.1);
 }
 
+/// Reconstructed ISSUE-3 legacy end-to-end step (the PR-2 spine): conv
+/// layers ride the task-parallel packed engine, but the FC stack runs the
+/// serial naive triple loops, every activation / delta / gradient buffer is
+/// heap-allocated per batch (including the `conv_ins` input clones and the
+/// full weight-set clone), and the loss allocates its softmax scratch. This
+/// is the baseline the `train_step/packed_4t` acceptance row is measured
+/// against.
+fn legacy_train_step(
+    pool: &ThreadPool,
+    net: &mut Network,
+    x: &[f32],
+    y: &[f32],
+    batch: usize,
+    lr: f32,
+    rows_per_task: usize,
+) -> f32 {
+    let cfg = net.cfg.clone();
+    let hw = cfg.input_hw;
+    let ws = net.weights.clone();
+    let mut grads = net.weights.zeros_like();
+
+    let mut conv_ins: Vec<Vec<f32>> = Vec::with_capacity(cfg.conv_layers);
+    let mut conv_outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.conv_layers);
+    let mut cur = x.to_vec();
+    for l in 0..cfg.conv_layers {
+        let c = if l == 0 { cfg.in_channels } else { cfg.filters };
+        let d = ConvDims { n: batch, h: hw, w: hw, c, k: cfg.kernel_hw, co: cfg.filters };
+        conv_ins.push(cur.clone());
+        let mut out = vec![0.0f32; d.y_len()];
+        conv2d_parallel(
+            pool,
+            &d,
+            &cur,
+            ws.tensors()[2 * l].data(),
+            ws.tensors()[2 * l + 1].data(),
+            &mut out,
+            rows_per_task,
+        );
+        ops::relu_fwd(&mut out);
+        conv_outs.push(out.clone());
+        cur = out;
+    }
+
+    let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
+    let win = cfg.pool_window;
+    let hp = hw / win;
+    let mut pooled = vec![0.0f32; batch * hp * hp * c];
+    ops::mean_pool_fwd(batch, hw, hw, c, win, &cur, &mut pooled);
+    let mut feat = pooled.clone();
+    let mut fan_in = hp * hp * c;
+    let mut fc_outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.fc_layers);
+    let mut pi = 2 * cfg.conv_layers;
+    for _ in 0..cfg.fc_layers {
+        let w = &ws.tensors()[pi];
+        let b = &ws.tensors()[pi + 1];
+        pi += 2;
+        let out_dim = w.shape()[1];
+        let mut out = vec![0.0f32; batch * out_dim];
+        ops::dense_fwd(batch, fan_in, out_dim, &feat, w.data(), b.data(), &mut out);
+        ops::relu_fwd(&mut out);
+        fc_outs.push(out.clone());
+        feat = out;
+        fan_in = out_dim;
+    }
+    let w_out = &ws.tensors()[pi];
+    let b_out = &ws.tensors()[pi + 1];
+    let mut logits = vec![0.0f32; batch * cfg.num_classes];
+    ops::dense_fwd(batch, fan_in, cfg.num_classes, &feat, w_out.data(), b_out.data(), &mut logits);
+
+    let mut dlogits = vec![0.0f32; batch * cfg.num_classes];
+    let (loss, _) = ops::mse_softmax_loss(batch, cfg.num_classes, &logits, y, &mut dlogits);
+
+    let pooled_dim = hp * hp * c;
+    let out_w_idx = 2 * cfg.conv_layers + 2 * cfg.fc_layers;
+    let last_feat: &[f32] = if cfg.fc_layers > 0 { &fc_outs[cfg.fc_layers - 1] } else { &pooled };
+    let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
+    let mut dfeat = vec![0.0f32; batch * last_dim];
+    {
+        let gts = grads.tensors_mut();
+        let (a, b) = gts.split_at_mut(out_w_idx + 1);
+        ops::dense_bwd(
+            batch,
+            last_dim,
+            cfg.num_classes,
+            last_feat,
+            ws.tensors()[out_w_idx].data(),
+            &dlogits,
+            &mut dfeat,
+            a[out_w_idx].data_mut(),
+            b[0].data_mut(),
+        );
+    }
+    for l in (0..cfg.fc_layers).rev() {
+        ops::relu_bwd(&fc_outs[l], &mut dfeat);
+        let in_feat: &[f32] = if l == 0 { &pooled } else { &fc_outs[l - 1] };
+        let in_dim = if l == 0 { pooled_dim } else { cfg.fc_neurons };
+        let w_idx = 2 * cfg.conv_layers + 2 * l;
+        let mut dprev = vec![0.0f32; batch * in_dim];
+        {
+            let gts = grads.tensors_mut();
+            let (a, b) = gts.split_at_mut(w_idx + 1);
+            ops::dense_bwd(
+                batch,
+                in_dim,
+                cfg.fc_neurons,
+                in_feat,
+                ws.tensors()[w_idx].data(),
+                &dfeat,
+                &mut dprev,
+                a[w_idx].data_mut(),
+                b[0].data_mut(),
+            );
+        }
+        dfeat = dprev;
+    }
+    let mut dconv = vec![0.0f32; batch * hw * hw * c];
+    ops::mean_pool_bwd(batch, hw, hw, c, win, &dfeat, &mut dconv);
+
+    for l in (0..cfg.conv_layers).rev() {
+        ops::relu_bwd(&conv_outs[l], &mut dconv);
+        let cin = if l == 0 { cfg.in_channels } else { cfg.filters };
+        let d = ConvDims { n: batch, h: hw, w: hw, c: cin, k: cfg.kernel_hw, co: cfg.filters };
+        let w_idx = 2 * l;
+        let mut dprev = if l > 0 { Some(vec![0.0f32; d.x_len()]) } else { None };
+        {
+            let gts = grads.tensors_mut();
+            let (a, b) = gts.split_at_mut(w_idx + 1);
+            conv_bwd_parallel(
+                pool,
+                &d,
+                &conv_ins[l],
+                ws.tensors()[w_idx].data(),
+                &dconv,
+                a[w_idx].data_mut(),
+                b[0].data_mut(),
+                dprev.as_deref_mut(),
+                rows_per_task,
+            );
+        }
+        if let Some(dp) = dprev {
+            dconv = dp;
+        }
+    }
+
+    net.weights.axpy(-lr, &grads);
+    loss
+}
+
 /// Which conv implementation a `conv_fwd_bwd/*` row exercises.
 enum ConvImpl<'a> {
     /// The seed's direct loops (the original acceptance baseline).
@@ -237,6 +388,56 @@ fn main() {
         b.bench_with_throughput("conv_bwd/e2e_rowtile_4t", bwd_flops, || {
             let (x, f, dy) = (&e2e.x, &e2e.f, &e2e.dy);
             conv_bwd_parallel(&pool4, &d, x, f, dy, &mut df, &mut db, Some(&mut dx), 4);
+        });
+    }
+
+    // ---- end-to-end train step: ISSUE-3 acceptance comparison -------------
+    // Table-2-flavored shape (the paper's nets are FC-heavy): conv 2×8ch on
+    // 16×16 plus fc 2×256 → packed+workspace+parallel-FC step vs the
+    // reconstructed legacy spine (serial naive dense, per-batch allocations,
+    // weight-set clone). Acceptance: packed ≥ 1.3× legacy at 4 threads.
+    {
+        let cfg = NetworkConfig {
+            name: "bench_step".into(),
+            input_hw: 16,
+            in_channels: 1,
+            conv_layers: 2,
+            filters: 8,
+            kernel_hw: 3,
+            fc_layers: 2,
+            fc_neurons: 256,
+            num_classes: 10,
+            batch_size: 32,
+            pool_window: 2,
+        };
+        let ds = Dataset::synthetic(&cfg, 64, 0.2, 5);
+        let (x, y, _) = ds.batch(0, cfg.batch_size);
+        let flops = cfg.flops_per_sample() * cfg.batch_size as f64;
+        let conv_rows = cfg.input_hw / 2; // two row tiles per image
+        let mut legacy_net = Network::init(&cfg, 9);
+        b.bench_with_throughput("train_step/legacy_4t", flops, || {
+            legacy_train_step(&pool4, &mut legacy_net, &x, &y, cfg.batch_size, 0.02, conv_rows);
+        });
+        let mut packed_net = Network::init(&cfg, 9);
+        let mut step_ws = StepWorkspace::new();
+        b.bench_with_throughput("train_step/packed_4t", flops, || {
+            parallel_train_step(
+                &pool4,
+                &mut packed_net,
+                &x,
+                &y,
+                cfg.batch_size,
+                0.02,
+                conv_rows,
+                &mut step_ws,
+            );
+        });
+        // Serial workspace step (no pool): isolates the packed-dense +
+        // zero-alloc win from the inner-parallel win.
+        let mut serial_net = Network::init(&cfg, 9);
+        let mut serial_ws = StepWorkspace::new();
+        b.bench_with_throughput("train_step/serial_ws", flops, || {
+            serial_net.train_batch_ws(&x, &y, cfg.batch_size, 0.02, &mut serial_ws);
         });
     }
 

@@ -30,6 +30,31 @@ fn main() {
             ps.update_agwu(0, &local, base.min(ps.version()), 0.8);
         });
 
+        // Fetch: Arc snapshot (refcount bump) vs the legacy clone-per-fetch
+        // the server used to pay (reconstructed as fetch + forced deep copy).
+        let mut ps = ParamServer::new(init.clone(), 4);
+        b.bench_with_throughput(&format!("fetch/case{case}_legacy_clone"), bytes, || {
+            let (w, _) = ps.fetch(0);
+            std::hint::black_box((*w).clone());
+        });
+        b.bench_with_throughput(&format!("fetch/case{case}_arc_snapshot"), bytes, || {
+            std::hint::black_box(ps.fetch(0));
+        });
+
+        // Full fetch→train(elided)→submit cycle: legacy (worker owns a deep
+        // copy of the fetched set) vs Arc snapshots end to end.
+        let mut ps = ParamServer::new(init.clone(), 4);
+        b.bench_with_throughput(&format!("agwu_cycle/case{case}_legacy"), 2.0 * bytes, || {
+            let (w, k) = ps.fetch(0);
+            let owned = (*w).clone();
+            ps.update_agwu(0, &owned, k, 0.8);
+        });
+        let mut ps = ParamServer::new(init.clone(), 4);
+        b.bench_with_throughput(&format!("agwu_cycle/case{case}_arc"), 2.0 * bytes, || {
+            let (w, k) = ps.fetch(0);
+            ps.update_agwu(0, &w, k, 0.8);
+        });
+
         // Weight-set algebra hot path.
         let mut acc = init.clone();
         b.bench_with_throughput(&format!("weightset_axpy/case{case}"), bytes, || {

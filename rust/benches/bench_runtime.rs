@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use bptcnn::data::Dataset;
-use bptcnn::nn::Network;
+use bptcnn::nn::{Network, StepWorkspace};
 use bptcnn::runtime::{find_model_dir, XlaService};
 use bptcnn::tensor::Tensor;
 use bptcnn::util::bench::Bench;
@@ -44,14 +44,17 @@ fn main() {
         h.eval_step(weights.clone(), x.clone(), y.clone()).unwrap();
     });
 
-    // Native backend equivalents for the same step (the backend ablation).
+    // Native backend equivalents for the same step (the backend ablation),
+    // on the allocation-free workspace path the epoch trainers use.
     let mut net = Network::with_weights(&cfg, weights.clone());
+    let mut step_ws = StepWorkspace::new();
     b.bench_with_throughput("native/train_step_quickstart", batch_samples, || {
-        net.train_batch(&xv, &yv, cfg.batch_size, 0.1);
+        net.train_batch_ws(&xv, &yv, cfg.batch_size, 0.1, &mut step_ws);
     });
     let net_eval = Network::with_weights(&cfg, weights.clone());
+    let mut eval_ws = StepWorkspace::new();
     b.bench_with_throughput("native/eval_step_quickstart", batch_samples, || {
-        net_eval.eval_batch(&xv, &yv, cfg.batch_size);
+        net_eval.eval_batch_ws(&xv, &yv, cfg.batch_size, &mut eval_ws);
     });
 
     // e2e model, if built.

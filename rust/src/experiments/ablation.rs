@@ -45,10 +45,11 @@ fn run_mode(mode: AsyncMode, straggler_slowdown: f64, seed: u64) -> AblationResu
     let eval_hook = move |ws: &crate::tensor::WeightSet| -> (f64, f64) {
         let net = Network::with_weights(&cfg2, ws.clone());
         let bsz = cfg2.batch_size;
+        let mut step_ws = crate::nn::StepWorkspace::new();
         let (mut correct, mut batches, mut seen) = (0usize, 0usize, 0usize);
         while seen < eval_ds.len() {
             let (x, y, _) = eval_ds.batch(seen, bsz);
-            let (_, c) = net.eval_batch(&x, &y, bsz);
+            let (_, c) = net.eval_batch_ws(&x, &y, bsz, &mut step_ws);
             correct += c;
             seen += bsz;
             batches += 1;

@@ -122,13 +122,14 @@ pub fn train_strategy(
     let eval_hook = move |ws: &crate::tensor::WeightSet| -> (f64, f64) {
         let net = Network::with_weights(&cfg2, ws.clone());
         let bsz = cfg2.batch_size;
+        let mut step_ws = crate::nn::StepWorkspace::new();
         let mut correct = 0usize;
         let mut loss = 0.0f64;
         let mut batches = 0usize;
         let mut seen = 0usize;
         while seen < eval_ds.len() {
             let (x, y, _) = eval_ds.batch(seen, bsz);
-            let (l, c) = net.eval_batch(&x, &y, bsz);
+            let (l, c) = net.eval_batch_ws(&x, &y, bsz, &mut step_ws);
             loss += l as f64;
             correct += c;
             seen += bsz;

@@ -6,8 +6,10 @@
 //! task DAGs mirroring Fig. 9:
 //!
 //! * forward conv layers — Algorithm 4.1 row tasks ([`conv_tasks`]);
-//! * pool / FC / loss — the serial spine of the DAG (<15% of the time,
-//!   §4.1.1);
+//! * pool / FC / ReLU / loss — batch-row, per-image and chunk tasks from
+//!   [`super::fc_tasks`], so the spine stages ride the pool too (they are
+//!   <15% of the time per §4.1.1 on conv-heavy nets, but dominate the
+//!   paper's FC-heavy Table-2 configurations);
 //! * backward conv — the same **row-tile** decomposition as forward: each
 //!   task lowers its tile's patches once, accumulates its partial filter /
 //!   bias gradient (Eq. 21 restricted to the tile) into the *executing
@@ -20,11 +22,12 @@
 
 use crate::config::NetworkConfig;
 use crate::nn::ops::{self, ConvDims, PackedB};
-use crate::nn::Network;
+use crate::nn::{Network, StepWorkspace};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
-use super::conv_tasks::{conv2d_parallel, ConvTask, DisjointBuf};
+use super::conv_tasks::{conv2d_parallel_packed, ConvTask, DisjointBuf};
 use super::dag::TaskDag;
+use super::fc_tasks;
 use super::scheduler::{execute_dag, ScheduleStats};
 
 /// Result of one task-parallel train step.
@@ -61,6 +64,31 @@ pub fn conv_bwd_parallel(
     df: &mut [f32],
     db: &mut [f32],
     dx: Option<&mut [f32]>,
+    rows_per_task: usize,
+) -> ScheduleStats {
+    let flip = if dx.is_some() && d.k % 2 == 1 {
+        let swapped = ConvDims { c: d.co, co: d.c, ..*d };
+        Some(ops::pack_filter(&swapped, &ops::flip_transpose_filter(d, f)))
+    } else {
+        None
+    };
+    conv_bwd_parallel_packed(pool, d, x, f, dy, df, db, dx, flip.as_ref(), rows_per_task)
+}
+
+/// [`conv_bwd_parallel`] on a caller-provided flipped-filter pack (from the
+/// network's [`crate::nn::WeightPacks`] cache); `flip_packed` is required
+/// exactly when `dx` is wanted and the kernel is odd.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd_parallel_packed(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+    flip_packed: Option<&PackedB>,
     rows_per_task: usize,
 ) -> ScheduleStats {
     assert!(rows_per_task >= 1);
@@ -103,16 +131,21 @@ pub fn conv_bwd_parallel(
     let kkc = dd.k * dd.k * dd.c;
     let kkco = dd.k * dd.k * dd.co;
     // Input gradient = SAME forward conv of dy with the spatially-flipped,
-    // channel-transposed filter (odd k): built and packed once per layer
-    // call, shared read-only by all tiles.
+    // channel-transposed filter (odd k): packed once per weight mutation in
+    // the caller's pack cache, shared read-only by all tiles.
     let swapped = ConvDims { c: dd.co, co: dd.c, ..dd };
     let per_image = ConvDims { n: 1, ..dd };
-    let flip_packed: Option<PackedB> = if want_dx && odd_k {
-        Some(ops::pack_filter(&swapped, &ops::flip_transpose_filter(d, f)))
+    let flip_packed: Option<&PackedB> = if want_dx && odd_k {
+        let pf = flip_packed.expect("flip_packed required for odd-kernel dx");
+        debug_assert_eq!(pf.kk(), kkco);
+        debug_assert_eq!(pf.n(), dd.c);
+        Some(pf)
     } else {
         None
     };
-    let zero_bias = vec![0.0f32; dd.c];
+    // Only the packed flip-forward path reads the zero bias; skip the
+    // allocation entirely on df/db-only and even-kernel calls.
+    let zero_bias = if flip_packed.is_some() { vec![0.0f32; dd.c] } else { Vec::new() };
     let dx_buf = dx.map(DisjointBuf::new);
     let x_img = dd.h * dd.w * dd.c;
     let y_img = dd.h * dd.w * dd.co;
@@ -147,7 +180,7 @@ pub fn conv_bwd_parallel(
                 }
                 // Eq. 18 tile (odd k): dx rows [y0, y0+rows) of image n via
                 // the packed flipped-filter forward.
-                if let Some(pf) = &flip_packed {
+                if let Some(pf) = flip_packed {
                     let cols2 = ScratchArena::grow(&mut arena.cols2, patches * kkco);
                     // SAFETY: tile (n, y0, rows) exclusively owns dx rows
                     // [y0, y0+rows) of image n; tiles never overlap.
@@ -188,8 +221,15 @@ pub fn conv_bwd_parallel(
 }
 
 /// One full training step (forward + backward + SGD, Eq. 23) executed with
-/// the inner-layer task decomposition on the thread pool. Numerically
-/// identical to `Network::train_batch`.
+/// the inner-layer task decomposition on the thread pool: Algorithm-4.1 row
+/// tiles for the conv stack **and** `fc_tasks` batch-row tiles for the FC
+/// stack, per-image pool tasks, chunked ReLU tasks and row-tile loss tasks
+/// — the whole pipeline is inner-parallel, not just conv. Intermediate
+/// buffers live in the caller-owned [`StepWorkspace`] (no per-layer `vec!`
+/// or activation clones; steady-state heap traffic is the scheduler's task
+/// boxes only) and weight panels come from the network's pack cache.
+/// Numerically ≡ `Network::train_batch` to f32 reduction-order tolerance.
+#[allow(clippy::too_many_arguments)]
 pub fn parallel_train_step(
     pool: &ThreadPool,
     net: &mut Network,
@@ -198,145 +238,201 @@ pub fn parallel_train_step(
     batch: usize,
     lr: f32,
     rows_per_task: usize,
+    ws: &mut StepWorkspace,
 ) -> ParallelStepResult {
-    let cfg = net.cfg.clone();
+    let cfg = &net.cfg;
     let hw = cfg.input_hw;
-    let ws = net.weights.clone();
-    let mut grads = net.weights.zeros_like();
+    ws.prepare(cfg, batch, &net.weights);
+    net.packs.borrow_mut().ensure(cfg, &net.weights);
     let mut agg: Option<ScheduleStats> = None;
+    // FC/loss granularity: ~2 batch-row tiles per worker.
+    let fc_rows = (batch / (2 * pool.size())).max(1);
 
-    // ---- Forward: conv stack (Algorithm 4.1 tasks per layer) -------------
-    let mut conv_ins: Vec<Vec<f32>> = Vec::with_capacity(cfg.conv_layers);
-    let mut conv_outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.conv_layers);
-    let mut cur = x.to_vec();
-    for l in 0..cfg.conv_layers {
-        let c = if l == 0 { cfg.in_channels } else { cfg.filters };
-        let d = ConvDims { n: batch, h: hw, w: hw, c, k: cfg.kernel_hw, co: cfg.filters };
-        conv_ins.push(cur.clone());
-        let mut out = vec![0.0f32; d.y_len()];
-        let s = conv2d_parallel(
-            pool,
-            &d,
-            &cur,
-            ws.tensors()[2 * l].data(),
-            ws.tensors()[2 * l + 1].data(),
-            &mut out,
-            rows_per_task,
-        );
-        agg = Some(merge_stats(agg, s));
-        ops::relu_fwd(&mut out);
-        conv_outs.push(out.clone());
-        cur = out;
-    }
+    let (loss, correct) = {
+        let packs = net.packs.borrow();
+        let wts = net.weights.tensors();
 
-    // ---- Forward: pool + FC + logits (serial spine) -----------------------
-    let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
-    let win = cfg.pool_window;
-    let hp = hw / win;
-    let mut pooled = vec![0.0f32; batch * hp * hp * c];
-    ops::mean_pool_fwd(batch, hw, hw, c, win, &cur, &mut pooled);
-    let mut feat = pooled.clone();
-    let mut fan_in = hp * hp * c;
-    let mut fc_outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.fc_layers);
-    let mut pi = 2 * cfg.conv_layers;
-    for _ in 0..cfg.fc_layers {
-        let w = &ws.tensors()[pi];
-        let b = &ws.tensors()[pi + 1];
-        pi += 2;
-        let out_dim = w.shape()[1];
-        let mut out = vec![0.0f32; batch * out_dim];
-        ops::dense_fwd(batch, fan_in, out_dim, &feat, w.data(), b.data(), &mut out);
-        ops::relu_fwd(&mut out);
-        fc_outs.push(out.clone());
-        feat = out;
-        fan_in = out_dim;
-    }
-    let w_out = &ws.tensors()[pi];
-    let b_out = &ws.tensors()[pi + 1];
-    let mut logits = vec![0.0f32; batch * cfg.num_classes];
-    ops::dense_fwd(batch, fan_in, cfg.num_classes, &feat, w_out.data(), b_out.data(), &mut logits);
-
-    // ---- Loss (Eq. 16) -----------------------------------------------------
-    let mut dlogits = vec![0.0f32; batch * cfg.num_classes];
-    let (loss, correct) = ops::mse_softmax_loss(batch, cfg.num_classes, &logits, y, &mut dlogits);
-
-    // ---- Backward: FC spine -------------------------------------------------
-    let pooled_dim = hp * hp * c;
-    let out_w_idx = 2 * cfg.conv_layers + 2 * cfg.fc_layers;
-    let last_feat: &[f32] = if cfg.fc_layers > 0 { &fc_outs[cfg.fc_layers - 1] } else { &pooled };
-    let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
-    let mut dfeat = vec![0.0f32; batch * last_dim];
-    {
-        let gts = grads.tensors_mut();
-        let (a, b) = gts.split_at_mut(out_w_idx + 1);
-        ops::dense_bwd(
-            batch,
-            last_dim,
-            cfg.num_classes,
-            last_feat,
-            ws.tensors()[out_w_idx].data(),
-            &dlogits,
-            &mut dfeat,
-            a[out_w_idx].data_mut(),
-            b[0].data_mut(),
-        );
-    }
-    for l in (0..cfg.fc_layers).rev() {
-        ops::relu_bwd(&fc_outs[l], &mut dfeat);
-        let in_feat: &[f32] = if l == 0 { &pooled } else { &fc_outs[l - 1] };
-        let in_dim = if l == 0 { pooled_dim } else { cfg.fc_neurons };
-        let w_idx = 2 * cfg.conv_layers + 2 * l;
-        let mut dprev = vec![0.0f32; batch * in_dim];
-        {
-            let gts = grads.tensors_mut();
-            let (a, b) = gts.split_at_mut(w_idx + 1);
-            ops::dense_bwd(
-                batch,
-                in_dim,
-                cfg.fc_neurons,
-                in_feat,
-                ws.tensors()[w_idx].data(),
-                &dfeat,
-                &mut dprev,
-                a[w_idx].data_mut(),
-                b[0].data_mut(),
-            );
-        }
-        dfeat = dprev;
-    }
-    let mut dconv = vec![0.0f32; batch * hw * hw * c];
-    ops::mean_pool_bwd(batch, hw, hw, c, win, &dfeat, &mut dconv);
-
-    // ---- Backward: conv stack with row-tile tasks (Fig. 8) -----------------
-    for l in (0..cfg.conv_layers).rev() {
-        ops::relu_bwd(&conv_outs[l], &mut dconv);
-        let cin = if l == 0 { cfg.in_channels } else { cfg.filters };
-        let d = ConvDims { n: batch, h: hw, w: hw, c: cin, k: cfg.kernel_hw, co: cfg.filters };
-        let w_idx = 2 * l;
-        let mut dprev = if l > 0 { Some(vec![0.0f32; d.x_len()]) } else { None };
-        let s = {
-            let gts = grads.tensors_mut();
-            let (a, b) = gts.split_at_mut(w_idx + 1);
-            conv_bwd_parallel(
+        // ---- Forward: conv stack (Algorithm 4.1 tasks per layer) ---------
+        for l in 0..cfg.conv_layers {
+            let c = if l == 0 { cfg.in_channels } else { cfg.filters };
+            let d = ConvDims { n: batch, h: hw, w: hw, c, k: cfg.kernel_hw, co: cfg.filters };
+            let (prev, cur) = ws.conv_outs.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
+            let out = &mut cur[0][..];
+            let s = conv2d_parallel_packed(
                 pool,
                 &d,
-                &conv_ins[l],
-                ws.tensors()[w_idx].data(),
-                &dconv,
-                a[w_idx].data_mut(),
-                b[0].data_mut(),
-                dprev.as_deref_mut(),
+                input,
+                &packs.conv[l],
+                wts[2 * l + 1].data(),
+                out,
                 rows_per_task,
-            )
-        };
-        agg = Some(merge_stats(agg, s));
-        if let Some(dp) = dprev {
-            dconv = dp;
+            );
+            agg = Some(merge_stats(agg, s));
+            let s = fc_tasks::relu_fwd_parallel(pool, out, pool.size());
+            agg = Some(merge_stats(agg, s));
         }
-    }
+
+        // ---- Forward: pool (per-image tasks) + FC row tiles --------------
+        let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
+        let win = cfg.pool_window;
+        let hp = hw / win;
+        let cur: &[f32] = if cfg.conv_layers == 0 {
+            x
+        } else {
+            &ws.conv_outs[cfg.conv_layers - 1]
+        };
+        let s = fc_tasks::mean_pool_fwd_parallel(pool, batch, hw, hw, c, win, cur, &mut ws.pooled);
+        agg = Some(merge_stats(agg, s));
+        for l in 0..cfg.fc_layers {
+            let (prev, cur) = ws.fc_outs.split_at_mut(l);
+            let feat: &[f32] = if l == 0 { &ws.pooled } else { &prev[l - 1] };
+            let b = wts[2 * cfg.conv_layers + 2 * l + 1].data();
+            let s = fc_tasks::dense_fwd_parallel(
+                pool,
+                batch,
+                feat,
+                &packs.fc_w[l],
+                b,
+                &mut cur[0][..],
+                true,
+                fc_rows,
+            );
+            agg = Some(merge_stats(agg, s));
+        }
+        let last: &[f32] = if cfg.fc_layers == 0 {
+            &ws.pooled
+        } else {
+            &ws.fc_outs[cfg.fc_layers - 1]
+        };
+        let ob = wts[2 * cfg.conv_layers + 2 * cfg.fc_layers + 1].data();
+        let s = fc_tasks::dense_fwd_parallel(
+            pool,
+            batch,
+            last,
+            &packs.fc_w[cfg.fc_layers],
+            ob,
+            &mut ws.logits,
+            false,
+            fc_rows,
+        );
+        agg = Some(merge_stats(agg, s));
+
+        // ---- Loss (Eq. 16), row tiles ------------------------------------
+        let (loss, correct, s) = fc_tasks::loss_parallel(
+            pool,
+            batch,
+            cfg.num_classes,
+            &ws.logits,
+            y,
+            &mut ws.dlogits,
+            &mut ws.probs,
+            &mut ws.loss_parts,
+            fc_rows,
+        );
+        agg = Some(merge_stats(agg, s));
+
+        // ---- Backward: FC row tiles (ReLU masks fused into the tiles) ----
+        let pooled_dim = hp * hp * c;
+        let out_w_idx = 2 * cfg.conv_layers + 2 * cfg.fc_layers;
+        let grads = ws.grads.as_mut().expect("workspace prepared");
+        let gts = grads.tensors_mut();
+        let last_feat: &[f32] = if cfg.fc_layers > 0 {
+            &ws.fc_outs[cfg.fc_layers - 1]
+        } else {
+            &ws.pooled
+        };
+        let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
+        {
+            let (a, b) = gts.split_at_mut(out_w_idx + 1);
+            let s = fc_tasks::dense_bwd_parallel(
+                pool,
+                batch,
+                last_dim,
+                cfg.num_classes,
+                last_feat,
+                &packs.fc_wt[cfg.fc_layers],
+                &mut ws.dlogits,
+                None,
+                &mut ws.dfeat[..batch * last_dim],
+                a[out_w_idx].data_mut(),
+                b[0].data_mut(),
+                fc_rows,
+            );
+            agg = Some(merge_stats(agg, s));
+        }
+        for l in (0..cfg.fc_layers).rev() {
+            let in_feat: &[f32] = if l == 0 { &ws.pooled } else { &ws.fc_outs[l - 1] };
+            let in_dim = if l == 0 { pooled_dim } else { cfg.fc_neurons };
+            let w_idx = 2 * cfg.conv_layers + 2 * l;
+            {
+                let (a, b) = gts.split_at_mut(w_idx + 1);
+                let s = fc_tasks::dense_bwd_parallel(
+                    pool,
+                    batch,
+                    in_dim,
+                    cfg.fc_neurons,
+                    in_feat,
+                    &packs.fc_wt[l],
+                    &mut ws.dfeat[..batch * cfg.fc_neurons],
+                    Some(&ws.fc_outs[l]),
+                    &mut ws.dfeat2[..batch * in_dim],
+                    a[w_idx].data_mut(),
+                    b[0].data_mut(),
+                    fc_rows,
+                );
+                agg = Some(merge_stats(agg, s));
+            }
+            std::mem::swap(&mut ws.dfeat, &mut ws.dfeat2);
+        }
+
+        // ---- Backward: pool (per-image) + conv row tiles (Fig. 8) --------
+        let s = fc_tasks::mean_pool_bwd_parallel(
+            pool,
+            batch,
+            hw,
+            hw,
+            c,
+            win,
+            &ws.dfeat[..batch * pooled_dim],
+            &mut ws.dconv,
+        );
+        agg = Some(merge_stats(agg, s));
+        for l in (0..cfg.conv_layers).rev() {
+            let s = fc_tasks::relu_bwd_parallel(pool, &ws.conv_outs[l], &mut ws.dconv, pool.size());
+            agg = Some(merge_stats(agg, s));
+            let cin = if l == 0 { cfg.in_channels } else { cfg.filters };
+            let d = ConvDims { n: batch, h: hw, w: hw, c: cin, k: cfg.kernel_hw, co: cfg.filters };
+            let w_idx = 2 * l;
+            let in_act: &[f32] = if l == 0 { x } else { &ws.conv_outs[l - 1] };
+            let want_dx = l > 0;
+            let s = {
+                let (a, b) = gts.split_at_mut(w_idx + 1);
+                let dx = if want_dx { Some(&mut ws.dconv2[..d.x_len()]) } else { None };
+                let flip = if want_dx && d.k % 2 == 1 { Some(&packs.conv_flip[l]) } else { None };
+                conv_bwd_parallel_packed(
+                    pool,
+                    &d,
+                    in_act,
+                    wts[w_idx].data(),
+                    &ws.dconv,
+                    a[w_idx].data_mut(),
+                    b[0].data_mut(),
+                    dx,
+                    flip,
+                    rows_per_task,
+                )
+            };
+            agg = Some(merge_stats(agg, s));
+            if want_dx {
+                std::mem::swap(&mut ws.dconv, &mut ws.dconv2);
+            }
+        }
+        (loss, correct)
+    };
 
     // ---- SGD (Eq. 23) -------------------------------------------------------
-    net.weights.axpy(-lr, &grads);
+    net.weights.axpy(-lr, ws.grads());
     let stats = agg.unwrap_or(ScheduleStats {
         makespan_s: 0.0,
         thread_busy_s: vec![0.0; pool.size()],
@@ -535,8 +631,9 @@ mod tests {
         let mut serial = Network::init(&cfg, 12);
         let mut par = serial.clone();
         let pool = ThreadPool::new(4);
+        let mut ws = StepWorkspace::new();
         let (sl, sc) = serial.train_batch(&x, &y, 4, 0.1);
-        let r = parallel_train_step(&pool, &mut par, &x, &y, 4, 0.1, 2);
+        let r = parallel_train_step(&pool, &mut par, &x, &y, 4, 0.1, 2, &mut ws);
         assert!((sl - r.loss).abs() < 1e-5, "loss {sl} vs {}", r.loss);
         assert_eq!(sc, r.correct);
         assert!(
@@ -553,14 +650,38 @@ mod tests {
         let (x, y, _) = ds.batch(0, 4);
         let mut net = Network::init(&cfg, 14);
         let pool = ThreadPool::new(2);
+        let mut ws = StepWorkspace::new();
         let mut first = None;
         let mut last = 0.0;
         for _ in 0..40 {
-            let r = parallel_train_step(&pool, &mut net, &x, &y, 4, 0.3, 2);
+            let r = parallel_train_step(&pool, &mut net, &x, &y, 4, 0.3, 2, &mut ws);
             first.get_or_insert(r.loss);
             last = r.loss;
         }
         assert!(last < 0.5 * first.unwrap());
+    }
+
+    /// The workspace survives across differently-shaped parallel steps on
+    /// the same pool (re-keying) without corrupting results.
+    #[test]
+    fn parallel_step_workspace_rekeys_across_configs() {
+        let big = cfg();
+        let small = NetworkConfig { fc_neurons: 8, filters: 2, ..cfg() };
+        let pool = ThreadPool::new(3);
+        let mut ws = StepWorkspace::new();
+        let ds_big = Dataset::synthetic(&big, 8, 0.1, 15);
+        let (xb, yb, _) = ds_big.batch(0, 4);
+        let mut nb = Network::init(&big, 16);
+        parallel_train_step(&pool, &mut nb, &xb, &yb, 4, 0.1, 2, &mut ws);
+        // Now a smaller network through the *same* workspace.
+        let ds_small = Dataset::synthetic(&small, 8, 0.1, 17);
+        let (xs, ys, _) = ds_small.batch(0, 4);
+        let mut np = Network::init(&small, 18);
+        let mut ns = np.clone();
+        let (sl, _) = ns.train_batch(&xs, &ys, 4, 0.1);
+        let r = parallel_train_step(&pool, &mut np, &xs, &ys, 4, 0.1, 2, &mut ws);
+        assert!((sl - r.loss).abs() < 1e-5, "stale workspace leaked: {sl} vs {}", r.loss);
+        assert!(ns.weights.max_abs_diff(&np.weights) < 1e-5);
     }
 
     #[test]

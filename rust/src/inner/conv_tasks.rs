@@ -104,12 +104,28 @@ pub fn conv2d_parallel(
     out: &mut [f32],
     rows_per_task: usize,
 ) -> ScheduleStats {
+    let packed = ops::pack_filter(d, f);
+    conv2d_parallel_packed(pool, d, x, &packed, bias, out, rows_per_task)
+}
+
+/// [`conv2d_parallel`] on a caller-provided filter pack — the form the
+/// workspace train step uses, so the per-layer pack comes from the
+/// network's [`crate::nn::WeightPacks`] cache instead of being rebuilt
+/// every call.
+pub fn conv2d_parallel_packed(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    packed: &ops::PackedB,
+    bias: &[f32],
+    out: &mut [f32],
+    rows_per_task: usize,
+) -> ScheduleStats {
     assert_eq!(out.len(), d.y_len());
     assert_eq!(x.len(), d.x_len());
     let dag = conv_task_dag(d, rows_per_task);
     let shared = DisjointBuf::new(out);
     let row_len = d.w * d.co;
-    let packed = ops::pack_filter(d, f);
     let dd = *d;
     let kkc = dd.k * dd.k * dd.c;
     let arenas = pool.arenas();
@@ -124,7 +140,7 @@ pub fn conv2d_parallel(
         let mut arena = arenas[worker].lock().unwrap();
         let cols = ScratchArena::grow(&mut arena.cols, task.rows * dd.w * kkc);
         ops::conv2d_same_rows_packed(
-            &dd, x, &packed, bias, task.n, task.y0, task.rows, cols, tile,
+            &dd, x, packed, bias, task.n, task.y0, task.rows, cols, tile,
         );
     })
 }

@@ -1,0 +1,517 @@
+//! Dense-layer / pool / ReLU / loss task decomposition — the §4.1.2 stages
+//! that are *not* convolutions, so the **full** local weight-training step
+//! rides the thread pool, not just the conv stack (Dryden et al.,
+//! arXiv:1903.06681, make the case that fine-grained parallelism across all
+//! layer types is what unlocks strong scaling; Jia et al., arXiv:1802.04924,
+//! specifically for FC layers).
+//!
+//! Decomposition mirrors `conv_tasks`/`bp_tasks`:
+//! * **FC forward/backward** — batch-row tiles contracted on the shared
+//!   packed-B 4×8 micro-kernel (`gemm_packed_acc` over a weight pack cached
+//!   in the network's [`crate::nn::WeightPacks`]); backward tiles accumulate
+//!   their dW/db partials into the *executing worker's* persistent
+//!   [`ScratchArena`] and a sequential post-barrier reduce combines them —
+//!   no mutex in any task body, no per-task allocation.
+//! * **ReLU** — fused into the producing/consuming tile where possible
+//!   (forward tiles apply it before writing; backward tiles mask their `dy`
+//!   rows in place), with standalone chunk tasks for the conv activations.
+//! * **Pool** — one task per image, disjoint output slices.
+//! * **Loss** — row tiles write disjoint `dlogits`/`probs` rows and report
+//!   per-task (Σerr², correct) partials into caller-provided slots.
+
+use crate::nn::ops::{self, PackedB};
+use crate::util::threadpool::{ScratchArena, ThreadPool};
+
+use super::conv_tasks::DisjointBuf;
+use super::dag::TaskDag;
+use super::scheduler::{execute_dag, ScheduleStats};
+
+/// One batch-row tile: rows `[i0, i0+rows)` of a `(m, ·)` matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct RowTask {
+    pub i0: usize,
+    pub rows: usize,
+}
+
+fn row_tile_dag(
+    m: usize,
+    rows_per_task: usize,
+    cost_per_row: f64,
+    label: &str,
+) -> TaskDag<RowTask> {
+    assert!(rows_per_task >= 1);
+    let mut dag = TaskDag::new();
+    let mut i = 0;
+    while i < m {
+        let rows = rows_per_task.min(m - i);
+        dag.add(
+            format!("{label}[i{i}+{rows}]"),
+            cost_per_row * rows as f64,
+            &[],
+            RowTask { i0: i, rows },
+        );
+        i += rows;
+    }
+    dag
+}
+
+/// Typed analogue of [`DisjointBuf`] for the loss stage's per-task result
+/// slots. Safety contract: concurrent tasks write distinct indices.
+struct DisjointSlots<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for DisjointSlots<T> {}
+unsafe impl<T: Send> Sync for DisjointSlots<T> {}
+
+impl<T> DisjointSlots<T> {
+    fn new(s: &mut [T]) -> Self {
+        Self { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// Concurrent calls must use distinct `i`.
+    unsafe fn set(&self, i: usize, v: T) {
+        assert!(i < self.len, "slot out of bounds");
+        *self.ptr.add(i) = v;
+    }
+}
+
+/// Dense forward `out = x · W + b` (optionally fused ReLU) as batch-row
+/// tiles on the pool. `w` is the layer's cached weight pack, shared
+/// read-only by every tile; tiles write disjoint row slices, task bodies
+/// allocate nothing. Numerically ≡ [`ops::dense_fwd_packed`].
+#[allow(clippy::too_many_arguments)]
+pub fn dense_fwd_parallel(
+    pool: &ThreadPool,
+    m: usize,
+    x: &[f32],
+    w: &PackedB,
+    bias: &[f32],
+    out: &mut [f32],
+    relu: bool,
+    rows_per_task: usize,
+) -> ScheduleStats {
+    let (k, n) = (w.kk(), w.n());
+    assert_eq!(x.len(), m * k);
+    assert_eq!(bias.len(), n);
+    assert_eq!(out.len(), m * n);
+    let dag = row_tile_dag(m, rows_per_task, (2 * k * n) as f64, "dense_fwd");
+    let shared = DisjointBuf::new(out);
+    execute_dag(pool, dag, move |_worker, task: &RowTask| {
+        // SAFETY: tile (i0, rows) exclusively owns out rows [i0, i0+rows).
+        let tile = unsafe { shared.slice_mut(task.i0 * n, task.rows * n) };
+        let xt = &x[task.i0 * k..(task.i0 + task.rows) * k];
+        ops::dense_fwd_packed(task.rows, xt, w, bias, tile);
+        if relu {
+            ops::relu_fwd(tile);
+        }
+    })
+}
+
+/// Dense backward as batch-row tiles: each tile (optionally) applies the
+/// ReLU mask to its `dy` rows in place, computes its `dx` rows on the
+/// packed transpose (`dx = dy · Wᵀ`), and accumulates its dW/db partial
+/// into the executing worker's [`ScratchArena`]; the partials are reduced
+/// sequentially after the barrier, exactly like `bp_tasks`. Numerically ≡
+/// `relu_bwd` (when `relu_out` is given) followed by
+/// [`ops::dense_bwd_packed`], to f32 reduction-order tolerance in dW/db.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_bwd_parallel(
+    pool: &ThreadPool,
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    wt: &PackedB,
+    dy: &mut [f32],
+    relu_out: Option<&[f32]>,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    rows_per_task: usize,
+) -> ScheduleStats {
+    assert_eq!(wt.kk(), n, "wt must be the transposed pack");
+    assert_eq!(wt.n(), k, "wt must be the transposed pack");
+    assert_eq!(x.len(), m * k);
+    assert_eq!(dy.len(), m * n);
+    assert_eq!(dx.len(), m * k);
+    assert_eq!(dw.len(), k * n);
+    assert_eq!(db.len(), n);
+    if let Some(r) = relu_out {
+        assert_eq!(r.len(), m * n);
+    }
+    // Size + zero each worker's gradient accumulators for this layer call.
+    for arena in pool.arenas() {
+        let mut g = arena.lock().unwrap();
+        ScratchArena::grow_zeroed(&mut g.grad_f, k * n);
+        ScratchArena::grow_zeroed(&mut g.grad_b, n);
+    }
+    let dag = row_tile_dag(m, rows_per_task, (4 * k * n) as f64, "dense_bwd");
+    let dy_buf = DisjointBuf::new(dy);
+    let dx_buf = DisjointBuf::new(dx);
+    let arenas = pool.arenas();
+    let stats = execute_dag(pool, dag, move |worker, task: &RowTask| {
+        // SAFETY: tile (i0, rows) exclusively owns its dy and dx rows.
+        let dyt = unsafe { dy_buf.slice_mut(task.i0 * n, task.rows * n) };
+        let dxt = unsafe { dx_buf.slice_mut(task.i0 * k, task.rows * k) };
+        if let Some(out) = relu_out {
+            ops::relu_bwd(&out[task.i0 * n..(task.i0 + task.rows) * n], dyt);
+        }
+        let xt = &x[task.i0 * k..(task.i0 + task.rows) * k];
+        let mut arena = arenas[worker].lock().unwrap();
+        let arena = &mut *arena;
+        dxt.fill(0.0);
+        ops::gemm_packed_acc(task.rows, dyt, wt, dxt);
+        ops::gemm_tn_acc(task.rows, k, n, xt, dyt, &mut arena.grad_f[..k * n]);
+        let gb = &mut arena.grad_b[..n];
+        for row in dyt.chunks_exact(n) {
+            for (acc, &v) in gb.iter_mut().zip(row.iter()) {
+                *acc += v;
+            }
+        }
+    });
+    // Sequential reduce of the per-worker partials (the Fig.-9 reduce node).
+    dw.fill(0.0);
+    db.fill(0.0);
+    for arena in pool.arenas() {
+        let g = arena.lock().unwrap();
+        for (acc, &v) in dw.iter_mut().zip(g.grad_f.iter()) {
+            *acc += v;
+        }
+        for (acc, &v) in db.iter_mut().zip(g.grad_b.iter()) {
+            *acc += v;
+        }
+    }
+    stats
+}
+
+/// Mean-pool forward, one task per image (disjoint output slices).
+#[allow(clippy::too_many_arguments)]
+pub fn mean_pool_fwd_parallel(
+    pool: &ThreadPool,
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+    x: &[f32],
+    out: &mut [f32],
+) -> ScheduleStats {
+    let (ho, wo) = (h / win, w / win);
+    assert_eq!(x.len(), n * h * w * c);
+    assert_eq!(out.len(), n * ho * wo * c);
+    let mut dag: TaskDag<usize> = TaskDag::new();
+    for i in 0..n {
+        dag.add(format!("pool_fwd[{i}]"), (h * w * c) as f64, &[], i);
+    }
+    let img_in = h * w * c;
+    let img_out = ho * wo * c;
+    let shared = DisjointBuf::new(out);
+    execute_dag(pool, dag, move |_, &i| {
+        // SAFETY: image task i exclusively owns its output slice.
+        let tile = unsafe { shared.slice_mut(i * img_out, img_out) };
+        ops::mean_pool_fwd(1, h, w, c, win, &x[i * img_in..(i + 1) * img_in], tile);
+    })
+}
+
+/// Mean-pool backward, one task per image (disjoint `dx` slices).
+#[allow(clippy::too_many_arguments)]
+pub fn mean_pool_bwd_parallel(
+    pool: &ThreadPool,
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    win: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+) -> ScheduleStats {
+    let (ho, wo) = (h / win, w / win);
+    assert_eq!(dy.len(), n * ho * wo * c);
+    assert_eq!(dx.len(), n * h * w * c);
+    let mut dag: TaskDag<usize> = TaskDag::new();
+    for i in 0..n {
+        dag.add(format!("pool_bwd[{i}]"), (h * w * c) as f64, &[], i);
+    }
+    let img_in = h * w * c;
+    let img_out = ho * wo * c;
+    let shared = DisjointBuf::new(dx);
+    execute_dag(pool, dag, move |_, &i| {
+        // SAFETY: image task i exclusively owns its dx slice.
+        let tile = unsafe { shared.slice_mut(i * img_in, img_in) };
+        ops::mean_pool_bwd(1, h, w, c, win, &dy[i * img_out..(i + 1) * img_out], tile);
+    })
+}
+
+/// Standalone ReLU stages for the conv activations (elementwise, chunked
+/// across the pool; FC ReLUs are fused into their dense tiles instead).
+pub fn relu_fwd_parallel(pool: &ThreadPool, buf: &mut [f32], chunks: usize) -> ScheduleStats {
+    let n = buf.len();
+    let per = (n / chunks.max(1)).max(1);
+    let mut dag: TaskDag<(usize, usize)> = TaskDag::new();
+    let mut i = 0;
+    while i < n {
+        let len = per.min(n - i);
+        dag.add("relu_fwd", len as f64, &[], (i, len));
+        i += len;
+    }
+    let shared = DisjointBuf::new(buf);
+    execute_dag(pool, dag, move |_, &(off, len)| {
+        // SAFETY: chunks tile the buffer disjointly.
+        ops::relu_fwd(unsafe { shared.slice_mut(off, len) });
+    })
+}
+
+/// Chunked `dx = dy · (out > 0)` mask (conv ReLU backward).
+pub fn relu_bwd_parallel(
+    pool: &ThreadPool,
+    out: &[f32],
+    dy: &mut [f32],
+    chunks: usize,
+) -> ScheduleStats {
+    assert_eq!(out.len(), dy.len());
+    let n = dy.len();
+    let per = (n / chunks.max(1)).max(1);
+    let mut dag: TaskDag<(usize, usize)> = TaskDag::new();
+    let mut i = 0;
+    while i < n {
+        let len = per.min(n - i);
+        dag.add("relu_bwd", len as f64, &[], (i, len));
+        i += len;
+    }
+    let shared = DisjointBuf::new(dy);
+    execute_dag(pool, dag, move |_, &(off, len)| {
+        // SAFETY: chunks tile the buffer disjointly.
+        ops::relu_bwd(&out[off..off + len], unsafe { shared.slice_mut(off, len) });
+    })
+}
+
+/// Parallel Eq.-16 loss: row tiles write disjoint `dlogits`/`probs` rows
+/// and per-task (Σerr², correct) partials into `parts`; the partials are
+/// summed sequentially after the barrier. Numerically ≡
+/// [`ops::mse_softmax_loss_into`] up to the f64 loss-sum grouping
+/// (`dlogits` is bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn loss_parallel(
+    pool: &ThreadPool,
+    m: usize,
+    n: usize,
+    logits: &[f32],
+    y: &[f32],
+    dlogits: &mut [f32],
+    probs: &mut [f32],
+    parts: &mut Vec<(f64, usize)>,
+    rows_per_task: usize,
+) -> (f32, usize, ScheduleStats) {
+    assert!(rows_per_task >= 1);
+    assert_eq!(logits.len(), m * n);
+    assert_eq!(y.len(), m * n);
+    assert_eq!(dlogits.len(), m * n);
+    assert_eq!(probs.len(), m * n);
+    let mut dag: TaskDag<(usize, RowTask)> = TaskDag::new();
+    let mut i = 0;
+    let mut slots = 0;
+    while i < m {
+        let rows = rows_per_task.min(m - i);
+        dag.add(
+            format!("loss[i{i}+{rows}]"),
+            (rows * n) as f64,
+            &[],
+            (slots, RowTask { i0: i, rows }),
+        );
+        i += rows;
+        slots += 1;
+    }
+    parts.clear();
+    parts.resize(slots, (0.0, 0));
+    let dl_buf = DisjointBuf::new(dlogits);
+    let p_buf = DisjointBuf::new(probs);
+    let part_slots = DisjointSlots::new(parts);
+    let inv_b = 1.0 / m as f32;
+    let stats = execute_dag(pool, dag, move |_, &(slot, task)| {
+        let r0 = task.i0 * n;
+        let rl = task.rows * n;
+        // SAFETY: tiles own disjoint dlogits/probs rows and distinct slots.
+        let dlt = unsafe { dl_buf.slice_mut(r0, rl) };
+        let pt = unsafe { p_buf.slice_mut(r0, rl) };
+        let lt = &logits[r0..r0 + rl];
+        pt.copy_from_slice(lt);
+        ops::softmax_rows(task.rows, n, pt);
+        let part = ops::mse_softmax_rows(task.rows, n, lt, &y[r0..r0 + rl], dlt, pt, inv_b);
+        unsafe { part_slots.set(slot, part) };
+    });
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for &(l, c) in parts.iter() {
+        loss += l;
+        correct += c;
+    }
+    ((loss / m as f64) as f32, correct, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn dense_fwd_parallel_matches_serial_all_granularities() {
+        let mut rng = Xoshiro256::new(41);
+        let (m, k, n) = (7usize, 10usize, 9usize); // ragged on purpose
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let b = rand_vec(&mut rng, n);
+        let packed = PackedB::pack(k, n, &w);
+        let mut serial = vec![0.0f32; m * n];
+        ops::dense_fwd_packed(m, &x, &packed, &b, &mut serial);
+        let pool = ThreadPool::new(4);
+        for rows in [1usize, 2, 3, 7] {
+            let mut par = vec![0.0f32; m * n];
+            let stats = dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, false, rows);
+            assert_eq!(stats.tasks, (m + rows - 1) / rows);
+            assert_eq!(par, serial, "rows={rows}");
+        }
+        // Fused ReLU == serial ReLU after the fact.
+        ops::relu_fwd(&mut serial);
+        let mut par = vec![0.0f32; m * n];
+        dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, true, 2);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn dense_bwd_parallel_matches_serial() {
+        let mut rng = Xoshiro256::new(43);
+        let (m, k, n) = (6usize, 11usize, 5usize);
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let dy0 = rand_vec(&mut rng, m * n);
+        let wt = PackedB::pack_transposed(k, n, &w);
+        let mut dx_s = vec![0.0f32; m * k];
+        let mut dw_s = vec![0.0f32; k * n];
+        let mut db_s = vec![0.0f32; n];
+        ops::dense_bwd_packed(m, k, n, &x, &wt, &dy0, &mut dx_s, &mut dw_s, &mut db_s);
+        let pool = ThreadPool::new(3);
+        for rows in [1usize, 2, 6] {
+            let mut dy = dy0.clone();
+            let mut dx_p = vec![0.0f32; m * k];
+            let mut dw_p = vec![0.0f32; k * n];
+            let mut db_p = vec![0.0f32; n];
+            dense_bwd_parallel(
+                &pool, m, k, n, &x, &wt, &mut dy, None, &mut dx_p, &mut dw_p, &mut db_p, rows,
+            );
+            assert_eq!(dx_p, dx_s, "rows={rows}");
+            for (a, b) in dw_p.iter().zip(dw_s.iter()) {
+                assert!((a - b).abs() < 1e-4, "dw rows={rows}: {a} vs {b}");
+            }
+            for (a, b) in db_p.iter().zip(db_s.iter()) {
+                assert!((a - b).abs() < 1e-4, "db rows={rows}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_bwd_parallel_fused_relu_matches_explicit_mask() {
+        let mut rng = Xoshiro256::new(47);
+        let (m, k, n) = (5usize, 4usize, 6usize);
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let out = {
+            // A plausible post-ReLU activation: clamp random values at 0.
+            let mut o = rand_vec(&mut rng, m * n);
+            ops::relu_fwd(&mut o);
+            o
+        };
+        let dy0 = rand_vec(&mut rng, m * n);
+        let wt = PackedB::pack_transposed(k, n, &w);
+        // Serial reference: explicit mask, then packed backward.
+        let mut dy_s = dy0.clone();
+        ops::relu_bwd(&out, &mut dy_s);
+        let mut dx_s = vec![0.0f32; m * k];
+        let mut dw_s = vec![0.0f32; k * n];
+        let mut db_s = vec![0.0f32; n];
+        ops::dense_bwd_packed(m, k, n, &x, &wt, &dy_s, &mut dx_s, &mut dw_s, &mut db_s);
+        let pool = ThreadPool::new(2);
+        let mut dy_p = dy0.clone();
+        let mut dx_p = vec![0.0f32; m * k];
+        let mut dw_p = vec![0.0f32; k * n];
+        let mut db_p = vec![0.0f32; n];
+        dense_bwd_parallel(
+            &pool, m, k, n, &x, &wt, &mut dy_p, Some(&out), &mut dx_p, &mut dw_p, &mut db_p, 2,
+        );
+        assert_eq!(dy_p, dy_s, "fused mask must equal explicit mask");
+        assert_eq!(dx_p, dx_s);
+        for (a, b) in dw_p.iter().zip(dw_s.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in db_p.iter().zip(db_s.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pool_and_relu_parallel_match_serial() {
+        let mut rng = Xoshiro256::new(53);
+        let (n, h, w, c, win) = (3usize, 6usize, 4usize, 2usize, 2usize);
+        let x = rand_vec(&mut rng, n * h * w * c);
+        let pool = ThreadPool::new(4);
+        let (ho, wo) = (h / win, w / win);
+        let mut fwd_s = vec![0.0f32; n * ho * wo * c];
+        ops::mean_pool_fwd(n, h, w, c, win, &x, &mut fwd_s);
+        let mut fwd_p = vec![0.0f32; n * ho * wo * c];
+        mean_pool_fwd_parallel(&pool, n, h, w, c, win, &x, &mut fwd_p);
+        assert_eq!(fwd_p, fwd_s);
+        let dy = rand_vec(&mut rng, n * ho * wo * c);
+        let mut bwd_s = vec![0.0f32; n * h * w * c];
+        ops::mean_pool_bwd(n, h, w, c, win, &dy, &mut bwd_s);
+        let mut bwd_p = vec![0.0f32; n * h * w * c];
+        mean_pool_bwd_parallel(&pool, n, h, w, c, win, &dy, &mut bwd_p);
+        assert_eq!(bwd_p, bwd_s);
+        // ReLU chunk tasks.
+        let mut a = rand_vec(&mut rng, 101);
+        let mut b = a.clone();
+        ops::relu_fwd(&mut a);
+        relu_fwd_parallel(&pool, &mut b, 4);
+        assert_eq!(a, b);
+        let out = a;
+        let mut da = rand_vec(&mut rng, 101);
+        let mut db = da.clone();
+        ops::relu_bwd(&out, &mut da);
+        relu_bwd_parallel(&pool, &out, &mut db, 3);
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn loss_parallel_matches_serial() {
+        let mut rng = Xoshiro256::new(59);
+        let (m, n) = (7usize, 5usize);
+        let logits = rand_vec(&mut rng, m * n);
+        let mut y = vec![0.0f32; m * n];
+        for i in 0..m {
+            y[i * n + i % n] = 1.0;
+        }
+        let mut dl_s = vec![0.0f32; m * n];
+        let mut probs_s = vec![0.0f32; m * n];
+        let (loss_s, correct_s) =
+            ops::mse_softmax_loss_into(m, n, &logits, &y, &mut dl_s, &mut probs_s);
+        let pool = ThreadPool::new(4);
+        for rows in [1usize, 3, 7] {
+            let mut dl_p = vec![0.0f32; m * n];
+            let mut probs_p = vec![0.0f32; m * n];
+            let mut parts = Vec::new();
+            let (loss_p, correct_p, stats) = loss_parallel(
+                &pool, m, n, &logits, &y, &mut dl_p, &mut probs_p, &mut parts, rows,
+            );
+            assert_eq!(stats.tasks, (m + rows - 1) / rows, "rows={rows}");
+            assert_eq!(correct_p, correct_s, "rows={rows}");
+            assert!((loss_p - loss_s).abs() < 1e-6, "rows={rows}: {loss_p} vs {loss_s}");
+            assert_eq!(dl_p, dl_s, "dlogits must be bit-identical");
+            assert_eq!(probs_p, probs_s);
+        }
+    }
+}

@@ -7,11 +7,13 @@
 pub mod bp_tasks;
 pub mod conv_tasks;
 pub mod dag;
+pub mod fc_tasks;
 pub mod priority;
 pub mod scheduler;
 
 pub use bp_tasks::{parallel_train_step, train_step_dag, ParallelStepResult};
-pub use conv_tasks::{conv2d_parallel, conv_task_dag, ConvTask};
+pub use conv_tasks::{conv2d_parallel, conv2d_parallel_packed, conv_task_dag, ConvTask};
 pub use dag::{TaskDag, TaskId, TaskNode};
+pub use fc_tasks::{dense_bwd_parallel, dense_fwd_parallel, loss_parallel, RowTask};
 pub use priority::{mark_priorities, priority_order};
 pub use scheduler::{execute_dag, execute_sequential, ScheduleStats};

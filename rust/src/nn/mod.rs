@@ -7,6 +7,8 @@
 
 pub mod network;
 pub mod ops;
+pub mod workspace;
 
-pub use network::{Activations, Network};
+pub use network::Network;
 pub use ops::ConvDims;
+pub use workspace::{StepWorkspace, WeightPacks};

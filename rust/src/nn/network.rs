@@ -6,34 +6,53 @@
 //!   and the simulator calibration;
 //! * the task source for the inner-layer parallel scheduler (`inner/`),
 //!   which re-executes the conv/backprop loops as DAG tasks (§4.1/4.2).
+//!
+//! The whole step — conv *and* dense layers — runs on the packed-B 4×8
+//! micro-kernel, with every intermediate buffer living in a caller-owned
+//! [`StepWorkspace`] and the weight panels cached in [`WeightPacks`]
+//! (repacked in place once per weight mutation). A warmed-up
+//! [`Network::train_batch_ws`] performs zero heap allocations — pinned by
+//! the `alloc_regression` integration test.
+
+use std::cell::RefCell;
 
 use crate::config::NetworkConfig;
 use crate::tensor::{Tensor, WeightSet};
 use crate::util::rng::Xoshiro256;
 
-use super::ops::{self, ConvDims};
-
-/// Cached per-layer activations from one forward pass (needed by backward).
-#[derive(Debug, Clone)]
-pub struct Activations {
-    /// Input batch (NHWC flattened).
-    pub input: Vec<f32>,
-    /// Post-ReLU output of each conv layer.
-    pub conv_outs: Vec<Vec<f32>>,
-    /// Output of the pooling layer (flattened features).
-    pub pooled: Vec<f32>,
-    /// Post-ReLU output of each hidden FC layer.
-    pub fc_outs: Vec<Vec<f32>>,
-    /// Final logits.
-    pub logits: Vec<f32>,
-    pub batch: usize,
-}
+use super::ops;
+use super::workspace::{StepWorkspace, WeightPacks};
+use super::ConvDims;
 
 /// A CNN (sub)network with its local weight set (paper Definition 1).
-#[derive(Debug, Clone)]
 pub struct Network {
     pub cfg: NetworkConfig,
     pub weights: WeightSet,
+    /// Packed-GEMM panels derived from `weights`; rebuilt lazily (in place)
+    /// whenever the weight generation changes — once per SGD step, once per
+    /// AGWU fetch, never across eval batches on frozen weights.
+    pub(crate) packs: RefCell<WeightPacks>,
+}
+
+impl Clone for Network {
+    fn clone(&self) -> Self {
+        // The pack cache is value-derived; clones start cold and repack on
+        // first use.
+        Self {
+            cfg: self.cfg.clone(),
+            weights: self.weights.clone(),
+            packs: RefCell::new(WeightPacks::default()),
+        }
+    }
+}
+
+impl std::fmt::Debug for Network {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Network")
+            .field("cfg", &self.cfg)
+            .field("weights", &self.weights)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Network {
@@ -54,7 +73,7 @@ impl Network {
                 }
             })
             .collect();
-        Self { cfg: cfg.clone(), weights: WeightSet::new(tensors) }
+        Self::with_weights(cfg, WeightSet::new(tensors))
     }
 
     /// Wrap an existing weight set (e.g. fetched from the parameter server
@@ -65,10 +84,14 @@ impl Network {
             cfg.param_shapes().len(),
             "weight set arity does not match config"
         );
-        Self { cfg: cfg.clone(), weights }
+        Self {
+            cfg: cfg.clone(),
+            weights,
+            packs: RefCell::new(WeightPacks::default()),
+        }
     }
 
-    fn conv_dims(&self, layer: usize, batch: usize) -> ConvDims {
+    pub(crate) fn conv_dims(&self, layer: usize, batch: usize) -> ConvDims {
         let c = if layer == 0 { self.cfg.in_channels } else { self.cfg.filters };
         ConvDims {
             n: batch,
@@ -80,180 +103,221 @@ impl Network {
         }
     }
 
-    /// Forward pass, caching activations for backward.
-    pub fn forward(&self, x: &[f32], batch: usize) -> Activations {
+    /// Forward pass into the workspace (activations cached for backward).
+    /// Allocation-free once `ws` is warmed for `(cfg, batch)` and the weight
+    /// packs are sized.
+    pub fn forward_ws(&self, x: &[f32], batch: usize, ws: &mut StepWorkspace) {
         let cfg = &self.cfg;
         let hw = cfg.input_hw;
         assert_eq!(x.len(), batch * hw * hw * cfg.in_channels, "bad input length");
-        let ws = self.weights.tensors();
-        let mut cur = x.to_vec();
-        let mut conv_outs = Vec::with_capacity(cfg.conv_layers);
-        let mut pi = 0;
-        for layer in 0..cfg.conv_layers {
-            let d = self.conv_dims(layer, batch);
-            let mut out = vec![0.0f32; d.y_len()];
-            ops::conv2d_same_fwd(&d, &cur, ws[pi].data(), ws[pi + 1].data(), &mut out);
-            pi += 2;
-            ops::relu_fwd(&mut out);
-            conv_outs.push(out.clone());
-            cur = out;
+        ws.prepare(cfg, batch, &self.weights);
+        self.packs.borrow_mut().ensure(cfg, &self.weights);
+        let packs = self.packs.borrow();
+        let wts = self.weights.tensors();
+
+        // Conv stack on the packed micro-kernel.
+        for l in 0..cfg.conv_layers {
+            let d = self.conv_dims(l, batch);
+            let (prev, cur) = ws.conv_outs.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
+            let out = &mut cur[0][..];
+            ops::conv2d_same_fwd_packed(
+                &d,
+                input,
+                &packs.conv[l],
+                wts[2 * l + 1].data(),
+                &mut ws.cols,
+                out,
+            );
+            ops::relu_fwd(out);
         }
+
         // Pool.
-        let win = cfg.pool_window;
         let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
-        let hp = hw / win;
-        let mut pooled = vec![0.0f32; batch * hp * hp * c];
-        ops::mean_pool_fwd(batch, hw, hw, c, win, &cur, &mut pooled);
-        // FC stack.
-        let mut feat = pooled.clone();
-        let mut fan_in = hp * hp * c;
-        let mut fc_outs = Vec::with_capacity(cfg.fc_layers);
-        for _ in 0..cfg.fc_layers {
-            let w = &ws[pi];
-            let b = &ws[pi + 1];
-            pi += 2;
-            let out_dim = w.shape()[1];
-            let mut out = vec![0.0f32; batch * out_dim];
-            ops::dense_fwd(batch, fan_in, out_dim, &feat, w.data(), b.data(), &mut out);
-            ops::relu_fwd(&mut out);
-            fc_outs.push(out.clone());
-            feat = out;
-            fan_in = out_dim;
+        let cur: &[f32] = if cfg.conv_layers == 0 {
+            x
+        } else {
+            &ws.conv_outs[cfg.conv_layers - 1]
+        };
+        ops::mean_pool_fwd(batch, hw, hw, c, cfg.pool_window, cur, &mut ws.pooled);
+
+        // FC stack on the same micro-kernel (cached per-layer packs).
+        for l in 0..cfg.fc_layers {
+            let (prev, cur) = ws.fc_outs.split_at_mut(l);
+            let feat: &[f32] = if l == 0 { &ws.pooled } else { &prev[l - 1] };
+            let out = &mut cur[0][..];
+            let b = wts[2 * cfg.conv_layers + 2 * l + 1].data();
+            ops::dense_fwd_packed(batch, feat, &packs.fc_w[l], b, out);
+            ops::relu_fwd(out);
         }
-        let w = &ws[pi];
-        let b = &ws[pi + 1];
-        let mut logits = vec![0.0f32; batch * cfg.num_classes];
-        ops::dense_fwd(batch, fan_in, cfg.num_classes, &feat, w.data(), b.data(), &mut logits);
-        Activations {
-            input: x.to_vec(),
-            conv_outs,
-            pooled,
-            fc_outs,
-            logits,
-            batch,
-        }
+        let last: &[f32] = if cfg.fc_layers == 0 {
+            &ws.pooled
+        } else {
+            &ws.fc_outs[cfg.fc_layers - 1]
+        };
+        let ob = wts[2 * cfg.conv_layers + 2 * cfg.fc_layers + 1].data();
+        ops::dense_fwd_packed(batch, last, &packs.fc_w[cfg.fc_layers], ob, &mut ws.logits);
     }
 
-    /// Backward pass from one-hot labels: returns (loss, correct, gradients).
-    pub fn backward(&self, acts: &Activations, y: &[f32]) -> (f32, usize, WeightSet) {
+    /// Backward pass from one-hot labels, reading the activations the last
+    /// [`Network::forward_ws`] left in `ws` and writing the gradients into
+    /// `ws.grads()`. Returns (loss, correct).
+    pub fn backward_ws(&self, x: &[f32], y: &[f32], ws: &mut StepWorkspace) -> (f32, usize) {
         let cfg = &self.cfg;
-        let batch = acts.batch;
-        let ws = self.weights.tensors();
-        let mut grads = self.weights.zeros_like();
+        let batch = ws.batch;
+        let packs = self.packs.borrow();
+        let wts = self.weights.tensors();
+        let nc = cfg.num_classes;
 
         // Loss layer (Eq. 16 + softmax Jacobian).
-        let mut dlogits = vec![0.0f32; batch * cfg.num_classes];
         let (loss, correct) =
-            ops::mse_softmax_loss(batch, cfg.num_classes, &acts.logits, y, &mut dlogits);
+            ops::mse_softmax_loss_into(batch, nc, &ws.logits, y, &mut ws.dlogits, &mut ws.probs);
 
-        // FC stack backward (Eqs. 17–23 for dense layers).
         let hw = cfg.input_hw;
         let win = cfg.pool_window;
         let c = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
         let hp = hw / win;
         let pooled_dim = hp * hp * c;
-
         let out_w_idx = 2 * cfg.conv_layers + 2 * cfg.fc_layers;
+        let grads = ws.grads.as_mut().expect("workspace prepared by forward_ws");
         let gts = grads.tensors_mut();
 
-        // Output layer.
+        // Output layer (Eqs. 17–23 for dense layers), packed transpose GEMM.
         let last_feat: &[f32] = if cfg.fc_layers > 0 {
-            &acts.fc_outs[cfg.fc_layers - 1]
+            &ws.fc_outs[cfg.fc_layers - 1]
         } else {
-            &acts.pooled
+            &ws.pooled
         };
         let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
-        let mut dfeat = vec![0.0f32; batch * last_dim];
         {
-            let (dw, db_slice) = {
-                let (a, b) = gts.split_at_mut(out_w_idx + 1);
-                (&mut a[out_w_idx], &mut b[0])
-            };
-            ops::dense_bwd(
+            let (a, b) = gts.split_at_mut(out_w_idx + 1);
+            ops::dense_bwd_packed(
                 batch,
                 last_dim,
-                cfg.num_classes,
+                nc,
                 last_feat,
-                ws[out_w_idx].data(),
-                &dlogits,
-                &mut dfeat,
-                dw.data_mut(),
-                db_slice.data_mut(),
+                &packs.fc_wt[cfg.fc_layers],
+                &ws.dlogits,
+                &mut ws.dfeat[..batch * last_dim],
+                a[out_w_idx].data_mut(),
+                b[0].data_mut(),
             );
         }
 
-        // Hidden FC layers, last to first.
+        // Hidden FC layers, last to first (ping-pong delta buffers).
         for l in (0..cfg.fc_layers).rev() {
-            // ReLU backward through this layer's output.
-            ops::relu_bwd(&acts.fc_outs[l], &mut dfeat);
-            let in_feat: &[f32] = if l == 0 { &acts.pooled } else { &acts.fc_outs[l - 1] };
+            ops::relu_bwd(&ws.fc_outs[l], &mut ws.dfeat[..batch * cfg.fc_neurons]);
+            let in_feat: &[f32] = if l == 0 { &ws.pooled } else { &ws.fc_outs[l - 1] };
             let in_dim = if l == 0 { pooled_dim } else { cfg.fc_neurons };
             let w_idx = 2 * cfg.conv_layers + 2 * l;
-            let mut dprev = vec![0.0f32; batch * in_dim];
-            let (dw, db_slice) = {
+            {
                 let (a, b) = gts.split_at_mut(w_idx + 1);
-                (&mut a[w_idx], &mut b[0])
-            };
-            ops::dense_bwd(
-                batch,
-                in_dim,
-                cfg.fc_neurons,
-                in_feat,
-                ws[w_idx].data(),
-                &dfeat,
-                &mut dprev,
-                dw.data_mut(),
-                db_slice.data_mut(),
-            );
-            dfeat = dprev;
+                ops::dense_bwd_packed(
+                    batch,
+                    in_dim,
+                    cfg.fc_neurons,
+                    in_feat,
+                    &packs.fc_wt[l],
+                    &ws.dfeat[..batch * cfg.fc_neurons],
+                    &mut ws.dfeat2[..batch * in_dim],
+                    a[w_idx].data_mut(),
+                    b[0].data_mut(),
+                );
+            }
+            std::mem::swap(&mut ws.dfeat, &mut ws.dfeat2);
         }
 
         // Pool backward.
-        let mut dconv = vec![0.0f32; batch * hw * hw * c];
-        ops::mean_pool_bwd(batch, hw, hw, c, win, &dfeat, &mut dconv);
+        ops::mean_pool_bwd(batch, hw, hw, c, win, &ws.dfeat[..batch * pooled_dim], &mut ws.dconv);
 
         // Conv stack backward, last to first (Eqs. 18, 21, 22).
         for l in (0..cfg.conv_layers).rev() {
-            ops::relu_bwd(&acts.conv_outs[l], &mut dconv);
+            ops::relu_bwd(&ws.conv_outs[l], &mut ws.dconv);
             let d = self.conv_dims(l, batch);
-            let in_act: &[f32] = if l == 0 { &acts.input } else { &acts.conv_outs[l - 1] };
+            let in_act: &[f32] = if l == 0 { x } else { &ws.conv_outs[l - 1] };
             let w_idx = 2 * l;
             {
-                let (dw, db_slice) = {
-                    let (a, b) = gts.split_at_mut(w_idx + 1);
-                    (&mut a[w_idx], &mut b[0])
-                };
-                ops::conv2d_same_bwd_filter(
+                let (a, b) = gts.split_at_mut(w_idx + 1);
+                ops::conv2d_same_bwd_filter_ws(
                     &d,
                     in_act,
-                    &dconv,
-                    dw.data_mut(),
-                    db_slice.data_mut(),
+                    &ws.dconv,
+                    a[w_idx].data_mut(),
+                    b[0].data_mut(),
+                    &mut ws.cols,
                 );
             }
             if l > 0 {
-                let mut dprev = vec![0.0f32; d.x_len()];
-                ops::conv2d_same_bwd_input(&d, &dconv, ws[w_idx].data(), &mut dprev);
-                dconv = dprev;
+                if d.k % 2 == 1 {
+                    ops::conv2d_same_bwd_input_packed(
+                        &d,
+                        &ws.dconv,
+                        &packs.conv_flip[l],
+                        &mut ws.dconv2[..d.x_len()],
+                        &mut ws.cols,
+                    );
+                } else {
+                    ops::conv2d_same_bwd_input_naive(
+                        &d,
+                        &ws.dconv,
+                        wts[w_idx].data(),
+                        &mut ws.dconv2[..d.x_len()],
+                    );
+                }
+                std::mem::swap(&mut ws.dconv, &mut ws.dconv2);
             }
         }
 
-        (loss, correct, grads)
-    }
-
-    /// One SGD step on one batch (Eq. 23): returns (loss, correct).
-    pub fn train_batch(&mut self, x: &[f32], y: &[f32], batch: usize, lr: f32) -> (f32, usize) {
-        let acts = self.forward(x, batch);
-        let (loss, correct, grads) = self.backward(&acts, y);
-        self.weights.axpy(-lr, &grads);
         (loss, correct)
     }
 
-    /// Evaluate one batch without updating weights.
+    /// One SGD step on one batch (Eq. 23) through a caller-owned workspace:
+    /// allocation-free once warmed. Returns (loss, correct).
+    pub fn train_batch_ws(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        batch: usize,
+        lr: f32,
+        ws: &mut StepWorkspace,
+    ) -> (f32, usize) {
+        self.forward_ws(x, batch, ws);
+        let (loss, correct) = self.backward_ws(x, y, ws);
+        self.weights.axpy(-lr, ws.grads());
+        (loss, correct)
+    }
+
+    /// Evaluate one batch without updating weights (workspace form).
+    pub fn eval_batch_ws(
+        &self,
+        x: &[f32],
+        y: &[f32],
+        batch: usize,
+        ws: &mut StepWorkspace,
+    ) -> (f32, usize) {
+        self.forward_ws(x, batch, ws);
+        ops::mse_softmax_loss_into(
+            batch,
+            self.cfg.num_classes,
+            &ws.logits,
+            y,
+            &mut ws.dlogits,
+            &mut ws.probs,
+        )
+    }
+
+    /// Convenience wrapper over [`Network::train_batch_ws`] with a
+    /// throwaway workspace. Hot loops (epoch trainers, benches) should own
+    /// a [`StepWorkspace`] instead.
+    pub fn train_batch(&mut self, x: &[f32], y: &[f32], batch: usize, lr: f32) -> (f32, usize) {
+        let mut ws = StepWorkspace::new();
+        self.train_batch_ws(x, y, batch, lr, &mut ws)
+    }
+
+    /// Convenience wrapper over [`Network::eval_batch_ws`].
     pub fn eval_batch(&self, x: &[f32], y: &[f32], batch: usize) -> (f32, usize) {
-        let acts = self.forward(x, batch);
-        let mut scratch = vec![0.0f32; batch * self.cfg.num_classes];
-        ops::mse_softmax_loss(batch, self.cfg.num_classes, &acts.logits, y, &mut scratch)
+        let mut ws = StepWorkspace::new();
+        self.eval_batch_ws(x, y, batch, &mut ws)
     }
 }
 
@@ -298,11 +362,12 @@ mod tests {
         let cfg = tiny_cfg();
         let net = Network::init(&cfg, 1);
         let x = vec![0.5f32; 4 * 6 * 6];
-        let acts = net.forward(&x, 4);
-        assert_eq!(acts.logits.len(), 4 * 3);
-        assert_eq!(acts.conv_outs.len(), 1);
-        assert_eq!(acts.conv_outs[0].len(), 4 * 6 * 6 * 2);
-        assert_eq!(acts.pooled.len(), 4 * 3 * 3 * 2);
+        let mut ws = StepWorkspace::new();
+        net.forward_ws(&x, 4, &mut ws);
+        assert_eq!(ws.logits().len(), 4 * 3);
+        assert_eq!(ws.conv_outs.len(), 1);
+        assert_eq!(ws.conv_outs[0].len(), 4 * 6 * 6 * 2);
+        assert_eq!(ws.pooled.len(), 4 * 3 * 3 * 2);
     }
 
     #[test]
@@ -314,8 +379,10 @@ mod tests {
         let mut y = vec![0.0f32; 2 * 3];
         y[0] = 1.0;
         y[3 + 2] = 1.0;
-        let acts = net.forward(&x, 2);
-        let (_, _, grads) = net.backward(&acts, &y);
+        let mut ws = StepWorkspace::new();
+        net.forward_ws(&x, 2, &mut ws);
+        let _ = net.backward_ws(&x, &y, &mut ws);
+        let grads = ws.grads().clone();
 
         let loss_at = |net: &Network| -> f64 {
             let (l, _) = net.eval_batch(&x, &y, 2);
@@ -351,10 +418,11 @@ mod tests {
             5,
         );
         let (x, y, _) = ds.batch(0, 4);
-        let (first, _) = net.eval_batch(&x, &y, 4);
+        let mut ws = StepWorkspace::new();
+        let (first, _) = net.eval_batch_ws(&x, &y, 4, &mut ws);
         let mut last = first;
         for _ in 0..60 {
-            let (l, _) = net.train_batch(&x, &y, 4, 0.5);
+            let (l, _) = net.train_batch_ws(&x, &y, 4, 0.5, &mut ws);
             last = l;
         }
         assert!(last < 0.5 * first, "no learning: first={first} last={last}");
@@ -377,17 +445,18 @@ mod tests {
         };
         let ds = Dataset::synthetic(&cfg, 256, 0.3, 6);
         let mut net = Network::init(&cfg, 7);
+        let mut ws = StepWorkspace::new();
         for epoch in 0..6 {
             let _ = epoch;
             for start in (0..256).step_by(8) {
                 let (x, y, _) = ds.batch(start, 8);
-                net.train_batch(&x, &y, 8, 0.2);
+                net.train_batch_ws(&x, &y, 8, 0.2, &mut ws);
             }
         }
         let mut correct = 0;
         for start in (0..256).step_by(8) {
             let (x, y, _) = ds.batch(start, 8);
-            let (_, c) = net.eval_batch(&x, &y, 8);
+            let (_, c) = net.eval_batch_ws(&x, &y, 8, &mut ws);
             correct += c;
         }
         let acc = correct as f64 / 256.0;
@@ -412,5 +481,27 @@ mod tests {
         let w = net.weights.clone();
         let net2 = Network::with_weights(&cfg, w);
         assert_eq!(net2.weights.param_count(), cfg.param_count());
+    }
+
+    /// The workspace path and the throwaway-workspace wrapper agree — and a
+    /// workspace reused across differently-shaped calls re-keys correctly.
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        let cfg = tiny_cfg();
+        let ds = Dataset::synthetic(&cfg, 16, 0.1, 10);
+        let (x, y, _) = ds.batch(0, 4);
+        let mut a = Network::init(&cfg, 11);
+        let mut b = a.clone();
+        let mut ws = StepWorkspace::new();
+        // Warm the workspace on a different batch size first (re-key path).
+        let (x2, y2, _) = ds.batch(4, 2);
+        let _ = a.eval_batch_ws(&x2, &y2, 2, &mut ws);
+        for _ in 0..5 {
+            let (la, ca) = a.train_batch_ws(&x, &y, 4, 0.2, &mut ws);
+            let (lb, cb) = b.train_batch(&x, &y, 4, 0.2);
+            assert_eq!(la, lb);
+            assert_eq!(ca, cb);
+        }
+        assert_eq!(a.weights.max_abs_diff(&b.weights), 0.0);
     }
 }

@@ -282,8 +282,10 @@ pub const NR: usize = 8;
 /// so kernels can always load full `NR` lanes.
 ///
 /// For convolutions B is the HWIO filter viewed as a `(k²·C, C_o)` matrix
-/// ([`pack_filter`]); it is packed **once per layer call** and shared
-/// read-only by every row-tile task of every image in the batch.
+/// ([`pack_filter`]); it is packed **once per weight mutation** (cached in
+/// [`crate::nn::WeightPacks`]) and shared read-only by every row-tile task
+/// of every image in the batch.
+#[derive(Debug)]
 pub struct PackedB {
     data: Vec<f32>,
     kk: usize,
@@ -291,6 +293,13 @@ pub struct PackedB {
 }
 
 impl PackedB {
+    /// An empty pack slot, to be filled by [`PackedB::repack`] /
+    /// [`PackedB::repack_transposed`] (the weight-pack cache pre-sizes its
+    /// slot vectors with these).
+    pub fn empty() -> Self {
+        PackedB { data: Vec::new(), kk: 0, n: 0 }
+    }
+
     /// Pack `b` (`kk × n`, row-major).
     pub fn pack(kk: usize, n: usize, b: &[f32]) -> Self {
         let mut p = PackedB { data: Vec::new(), kk: 0, n: 0 };
@@ -314,6 +323,36 @@ impl PackedB {
             let panel = &mut self.data[p * NR * kk..(p + 1) * NR * kk];
             for l in 0..kk {
                 panel[l * NR..l * NR + w].copy_from_slice(&b[l * n + j0..l * n + j0 + w]);
+            }
+        }
+    }
+
+    /// Pack `bᵀ` given `b` (`rows × cols`, row-major) without materializing
+    /// the transpose: the result contracts over `cols` and produces `rows`
+    /// output columns. This is how the dense backward's `dx = dy · Wᵀ`
+    /// reuses the forward micro-kernel on the same `(k, n)` weight matrix.
+    pub fn pack_transposed(rows: usize, cols: usize, b: &[f32]) -> Self {
+        let mut p = PackedB { data: Vec::new(), kk: 0, n: 0 };
+        p.repack_transposed(rows, cols, b);
+        p
+    }
+
+    /// Transposed analogue of [`PackedB::repack`] (arena-style reuse).
+    pub fn repack_transposed(&mut self, rows: usize, cols: usize, b: &[f32]) {
+        debug_assert_eq!(b.len(), rows * cols);
+        self.kk = cols;
+        self.n = rows;
+        let panels = (rows + NR - 1) / NR;
+        self.data.clear();
+        self.data.resize(panels * NR * cols, 0.0);
+        for p in 0..panels {
+            let j0 = p * NR;
+            let w = NR.min(rows - j0);
+            let panel = &mut self.data[p * NR * cols..(p + 1) * NR * cols];
+            for l in 0..cols {
+                for j in 0..w {
+                    panel[l * NR + j] = b[(j0 + j) * cols + l];
+                }
             }
         }
     }
@@ -617,15 +656,33 @@ pub fn conv2d_same_rows_gemm(
 /// tolerance (the register tile accumulates before adding the bias-seeded
 /// output, and the optional FMA kernel fuses the multiply-add rounding).
 pub fn conv2d_same_fwd(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(x.len(), d.x_len());
     debug_assert_eq!(f.len(), d.f_len());
+    let packed = pack_filter(d, f);
+    let mut cols = Vec::new();
+    conv2d_same_fwd_packed(d, x, &packed, bias, &mut cols, out);
+}
+
+/// [`conv2d_same_fwd`] on a pre-packed filter and caller-owned im2col
+/// scratch — the allocation-free form the [`crate::nn::StepWorkspace`] train
+/// step uses (the filter pack comes from the network's weight-pack cache,
+/// `cols` grows once and is reused across batches).
+pub fn conv2d_same_fwd_packed(
+    d: &ConvDims,
+    x: &[f32],
+    packed: &PackedB,
+    bias: &[f32],
+    cols: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), d.x_len());
     debug_assert_eq!(bias.len(), d.co);
     debug_assert_eq!(out.len(), d.y_len());
     let kkc = d.k * d.k * d.c;
+    debug_assert_eq!(packed.kk(), kkc);
+    debug_assert_eq!(packed.n(), d.co);
     let row = d.w * d.co;
     let tile = d.h.min(IM2COL_TILE_ROWS);
-    let packed = pack_filter(d, f);
-    let mut cols = vec![0.0f32; tile * d.w * kkc];
+    cols.resize(tile * d.w * kkc, 0.0);
     for n in 0..d.n {
         let mut y0 = 0;
         while y0 < d.h {
@@ -634,7 +691,7 @@ pub fn conv2d_same_fwd(d: &ConvDims, x: &[f32], f: &[f32], bias: &[f32], out: &m
             conv2d_same_rows_packed(
                 d,
                 x,
-                &packed,
+                packed,
                 bias,
                 n,
                 y0,
@@ -658,10 +715,45 @@ pub fn conv2d_same_bwd_input(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]
     if d.k % 2 == 0 {
         return conv2d_same_bwd_input_naive(d, dy, f, dx);
     }
-    let ff = flip_transpose_filter(d, f);
     let dd = ConvDims { c: d.co, co: d.c, ..*d };
-    let zero_bias = vec![0.0f32; dd.co];
-    conv2d_same_fwd(&dd, dy, &ff, &zero_bias, dx);
+    let packed = pack_filter(&dd, &flip_transpose_filter(d, f));
+    let mut cols = Vec::new();
+    conv2d_same_bwd_input_packed(d, dy, &packed, dx, &mut cols);
+}
+
+/// Odd-kernel input gradient on a pre-packed flipped/transposed filter
+/// (`pack_filter(&swapped, &flip_transpose_filter(d, f))` with
+/// `swapped = {c: co, co: c}`) and caller-owned im2col scratch — the
+/// allocation-free form the workspace train step uses.
+pub fn conv2d_same_bwd_input_packed(
+    d: &ConvDims,
+    dy: &[f32],
+    flip_packed: &PackedB,
+    dx: &mut [f32],
+    cols: &mut Vec<f32>,
+) {
+    debug_assert!(d.k % 2 == 1, "even kernels take the naive fallback");
+    debug_assert_eq!(dy.len(), d.y_len());
+    debug_assert_eq!(dx.len(), d.x_len());
+    let dd = ConvDims { c: d.co, co: d.c, ..*d };
+    let kkc = dd.k * dd.k * dd.c;
+    debug_assert_eq!(flip_packed.kk(), kkc);
+    debug_assert_eq!(flip_packed.n(), dd.co);
+    let row = dd.w * dd.co;
+    let tile = dd.h.min(IM2COL_TILE_ROWS);
+    cols.resize(tile * dd.w * kkc, 0.0);
+    for n in 0..dd.n {
+        let mut y0 = 0;
+        while y0 < dd.h {
+            let rows = tile.min(dd.h - y0);
+            let start = (n * dd.h + y0) * row;
+            let out = &mut dx[start..start + rows * row];
+            out.fill(0.0);
+            im2col_rows(&dd, dy, n, y0, rows, &mut cols[..rows * dd.w * kkc]);
+            gemm_packed_acc(rows * dd.w, &cols[..rows * dd.w * kkc], flip_packed, out);
+            y0 += rows;
+        }
+    }
 }
 
 /// The spatially-flipped, channel-transposed filter the input-gradient conv
@@ -669,8 +761,16 @@ pub fn conv2d_same_bwd_input(d: &ConvDims, dy: &[f32], f: &[f32], dx: &mut [f32]
 /// Exposed so batch-parallel callers (`inner/bp_tasks.rs`) can build it once
 /// and share it across per-image tasks instead of re-flipping per task.
 pub fn flip_transpose_filter(d: &ConvDims, f: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(f.len(), d.f_len());
     let mut ff = vec![0.0f32; d.f_len()];
+    flip_transpose_filter_into(d, f, &mut ff);
+    ff
+}
+
+/// [`flip_transpose_filter`] into a caller-owned buffer (allocation-free
+/// form for the workspace/pack-cache path).
+pub fn flip_transpose_filter_into(d: &ConvDims, f: &[f32], ff: &mut [f32]) {
+    debug_assert_eq!(f.len(), d.f_len());
+    debug_assert_eq!(ff.len(), d.f_len());
     for ky in 0..d.k {
         for kx in 0..d.k {
             for c in 0..d.c {
@@ -681,7 +781,6 @@ pub fn flip_transpose_filter(d: &ConvDims, f: &[f32]) -> Vec<f32> {
             }
         }
     }
-    ff
 }
 
 /// Backward of SAME conv w.r.t. the filter (Eq. 21) and bias (Eq. 22):
@@ -694,6 +793,20 @@ pub fn conv2d_same_bwd_filter(
     df: &mut [f32],
     db: &mut [f32],
 ) {
+    let mut cols = Vec::new();
+    conv2d_same_bwd_filter_ws(d, x, dy, df, db, &mut cols);
+}
+
+/// [`conv2d_same_bwd_filter`] on caller-owned im2col scratch — the
+/// allocation-free form the workspace train step uses.
+pub fn conv2d_same_bwd_filter_ws(
+    d: &ConvDims,
+    x: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+    cols: &mut Vec<f32>,
+) {
     debug_assert_eq!(x.len(), d.x_len());
     debug_assert_eq!(dy.len(), d.y_len());
     debug_assert_eq!(df.len(), d.f_len());
@@ -702,7 +815,7 @@ pub fn conv2d_same_bwd_filter(
     db.fill(0.0);
     let kkc = d.k * d.k * d.c;
     let tile = d.h.min(IM2COL_TILE_ROWS);
-    let mut cols = vec![0.0f32; tile * d.w * kkc];
+    cols.resize(tile * d.w * kkc, 0.0);
     for n in 0..d.n {
         let mut y0 = 0;
         while y0 < d.h {
@@ -858,6 +971,58 @@ pub fn dense_bwd(
     }
 }
 
+/// Dense forward on a pre-packed weight: `out = x · W + b` with `W` (k×n)
+/// packed once per step ([`PackedB::pack`]) and shared across all batch rows
+/// — FC layers ride the same 4×8 micro-kernel as the conv stack. Matches
+/// [`dense_fwd`] to f32 reduction-order tolerance (register-tile
+/// accumulation vs the naive row-at-a-time loop).
+pub fn dense_fwd_packed(m: usize, x: &[f32], w: &PackedB, b: &[f32], out: &mut [f32]) {
+    let (k, n) = (w.kk(), w.n());
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    for row in out.chunks_exact_mut(n) {
+        row.copy_from_slice(b);
+    }
+    gemm_packed_acc(m, x, w, out);
+}
+
+/// Dense backward on packed operands: `dx = dy · Wᵀ` rides the packed
+/// micro-kernel with `wt` the *transposed* pack of the same `(k, n)` weight
+/// ([`PackedB::pack_transposed`], so `wt.kk() == n`, `wt.n() == k`);
+/// `dw = xᵀ · dy` rides [`gemm_tn_acc`] exactly like the conv filter
+/// gradient; `db = Σ dy`. Matches [`dense_bwd`] to f32 reduction-order
+/// tolerance.
+pub fn dense_bwd_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    x: &[f32],
+    wt: &PackedB,
+    dy: &[f32],
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(wt.kk(), n, "wt must be the transposed pack");
+    debug_assert_eq!(wt.n(), k, "wt must be the transposed pack");
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dx.len(), m * k);
+    debug_assert_eq!(dw.len(), k * n);
+    debug_assert_eq!(db.len(), n);
+    dx.fill(0.0);
+    gemm_packed_acc(m, dy, wt, dx);
+    dw.fill(0.0);
+    gemm_tn_acc(m, k, n, x, dy, dw);
+    db.fill(0.0);
+    for dyrow in dy.chunks_exact(n) {
+        for (acc, &v) in db.iter_mut().zip(dyrow.iter()) {
+            *acc += v;
+        }
+    }
+}
+
 /// Softmax over the last axis of a `(m, n)` matrix, in place.
 pub fn softmax_rows(m: usize, n: usize, x: &mut [f32]) {
     for i in 0..m {
@@ -887,13 +1052,48 @@ pub fn mse_softmax_loss(
     y: &[f32],
     dlogits: &mut [f32],
 ) -> (f32, usize) {
+    let mut probs = vec![0.0f32; m * n];
+    mse_softmax_loss_into(m, n, logits, y, dlogits, &mut probs)
+}
+
+/// [`mse_softmax_loss`] with caller-owned softmax scratch (`probs`, length
+/// `m·n`) — the allocation-free form the workspace train step uses. Also
+/// the row-range building block of the parallel loss stage
+/// (`inner/fc_tasks.rs`): the sums it returns are per-call, so callers
+/// aggregating tiles divide by the *full* batch themselves.
+pub fn mse_softmax_loss_into(
+    m: usize,
+    n: usize,
+    logits: &[f32],
+    y: &[f32],
+    dlogits: &mut [f32],
+    probs: &mut [f32],
+) -> (f32, usize) {
     debug_assert_eq!(logits.len(), m * n);
     debug_assert_eq!(y.len(), m * n);
-    let mut probs = logits.to_vec();
-    softmax_rows(m, n, &mut probs);
+    debug_assert_eq!(dlogits.len(), m * n);
+    debug_assert_eq!(probs.len(), m * n);
+    probs.copy_from_slice(logits);
+    softmax_rows(m, n, probs);
+    let (loss, correct) = mse_softmax_rows(m, n, logits, y, dlogits, probs, 1.0 / m as f32);
+    ((loss / m as f64) as f32, correct)
+}
+
+/// Loss/gradient core over `m` rows whose softmax `probs` are already
+/// computed: returns the *unnormalized* squared-error sum and correct count.
+/// `inv_b` is 1/B of the gradient's batch normalization (the full batch
+/// size, which for a row tile differs from `m`).
+pub(crate) fn mse_softmax_rows(
+    m: usize,
+    n: usize,
+    logits: &[f32],
+    y: &[f32],
+    dlogits: &mut [f32],
+    probs: &[f32],
+    inv_b: f32,
+) -> (f64, usize) {
     let mut loss = 0.0f64;
     let mut correct = 0usize;
-    let inv_b = 1.0 / m as f32;
     for i in 0..m {
         let p = &probs[i * n..(i + 1) * n];
         let yy = &y[i * n..(i + 1) * n];
@@ -909,15 +1109,14 @@ pub fn mse_softmax_loss(
         if pred == truth {
             correct += 1;
         }
-        // gradient
-        let g: Vec<f32> = (0..n).map(|j| 2.0 * (p[j] - yy[j]) * inv_b).collect();
-        let gp: f32 = (0..n).map(|j| g[j] * p[j]).sum();
+        // gradient: g_j = 2(p_j − y_j)/B computed in place (no scratch row)
+        let gp: f32 = (0..n).map(|j| 2.0 * (p[j] - yy[j]) * inv_b * p[j]).sum();
         let drow = &mut dlogits[i * n..(i + 1) * n];
         for j in 0..n {
-            drow[j] = p[j] * (g[j] - gp);
+            drow[j] = p[j] * (2.0 * (p[j] - yy[j]) * inv_b - gp);
         }
     }
-    ((loss / m as f64) as f32, correct)
+    (loss, correct)
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -1297,6 +1496,108 @@ mod tests {
             let fd = (loss(&x, &wp, &b) - loss(&x, &wm, &b)) / (2.0 * eps as f64);
             assert!((fd - dw[idx] as f64).abs() < 2e-2);
         }
+    }
+
+    #[test]
+    fn pack_transposed_matches_packing_the_transpose() {
+        let mut rng = Xoshiro256::new(19);
+        for (rows, cols) in [(1usize, 1usize), (3, 5), (8, 8), (13, 4), (9, 17)] {
+            let b = rand_vec(&mut rng, rows * cols);
+            // Materialize bᵀ and pack it the ordinary way.
+            let mut bt = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    bt[c * rows + r] = b[r * cols + c];
+                }
+            }
+            let direct = PackedB::pack(cols, rows, &bt);
+            let transposed = PackedB::pack_transposed(rows, cols, &b);
+            assert_eq!(transposed.kk(), cols);
+            assert_eq!(transposed.n(), rows);
+            assert_eq!(direct.data, transposed.data, "rows={rows} cols={cols}");
+        }
+    }
+
+    #[test]
+    fn dense_fwd_packed_matches_naive() {
+        let mut rng = Xoshiro256::new(23);
+        // Ragged shapes: n not a multiple of NR, k < MR, single-row batches.
+        for (m, k, n) in [(1usize, 2usize, 3usize), (4, 3, 8), (5, 7, 9), (3, 16, 10), (8, 1, 1)] {
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let b = rand_vec(&mut rng, n);
+            let mut naive = vec![0.0f32; m * n];
+            dense_fwd(m, k, n, &x, &w, &b, &mut naive);
+            let packed = PackedB::pack(k, n, &w);
+            let mut fast = vec![0.0f32; m * n];
+            dense_fwd_packed(m, &x, &packed, &b, &mut fast);
+            for (a, bb) in fast.iter().zip(naive.iter()) {
+                assert!((a - bb).abs() < 1e-4, "m={m} k={k} n={n}: {a} vs {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_bwd_packed_matches_naive() {
+        let mut rng = Xoshiro256::new(29);
+        for (m, k, n) in [(1usize, 2usize, 3usize), (4, 3, 8), (5, 7, 9), (3, 16, 10)] {
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let dy = rand_vec(&mut rng, m * n);
+            let mut dx_n = vec![0.0f32; m * k];
+            let mut dw_n = vec![0.0f32; k * n];
+            let mut db_n = vec![0.0f32; n];
+            dense_bwd(m, k, n, &x, &w, &dy, &mut dx_n, &mut dw_n, &mut db_n);
+            let wt = PackedB::pack_transposed(k, n, &w);
+            let mut dx_p = vec![0.0f32; m * k];
+            let mut dw_p = vec![0.0f32; k * n];
+            let mut db_p = vec![0.0f32; n];
+            dense_bwd_packed(m, k, n, &x, &wt, &dy, &mut dx_p, &mut dw_p, &mut db_p);
+            for (a, b) in dx_p.iter().zip(dx_n.iter()) {
+                assert!((a - b).abs() < 1e-4, "dx m={m} k={k} n={n}: {a} vs {b}");
+            }
+            for (a, b) in dw_p.iter().zip(dw_n.iter()) {
+                assert!((a - b).abs() < 1e-4, "dw m={m} k={k} n={n}: {a} vs {b}");
+            }
+            for (a, b) in db_p.iter().zip(db_n.iter()) {
+                assert!((a - b).abs() < 1e-4, "db m={m} k={k} n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn loss_into_matches_allocating_wrapper() {
+        let mut rng = Xoshiro256::new(31);
+        let (m, n) = (3, 5);
+        let logits = rand_vec(&mut rng, m * n);
+        let mut y = vec![0.0f32; m * n];
+        y[2] = 1.0;
+        y[n] = 1.0;
+        y[2 * n + 4] = 1.0;
+        let mut dl_a = vec![0.0f32; m * n];
+        let mut dl_b = vec![0.0f32; m * n];
+        let mut probs = vec![0.0f32; m * n];
+        let (la, ca) = mse_softmax_loss(m, n, &logits, &y, &mut dl_a);
+        let (lb, cb) = mse_softmax_loss_into(m, n, &logits, &y, &mut dl_b, &mut probs);
+        assert_eq!(la, lb);
+        assert_eq!(ca, cb);
+        assert_eq!(dl_a, dl_b);
+    }
+
+    #[test]
+    fn bwd_input_packed_matches_wrapper() {
+        let mut rng = Xoshiro256::new(37);
+        let d = ConvDims { n: 2, h: 5, w: 6, c: 3, k: 3, co: 4 };
+        let f = rand_vec(&mut rng, d.f_len());
+        let dy = rand_vec(&mut rng, d.y_len());
+        let mut dx_a = vec![0.0f32; d.x_len()];
+        conv2d_same_bwd_input(&d, &dy, &f, &mut dx_a);
+        let dd = ConvDims { c: d.co, co: d.c, ..d };
+        let packed = pack_filter(&dd, &flip_transpose_filter(&d, &f));
+        let mut dx_b = vec![0.0f32; d.x_len()];
+        let mut cols = Vec::new();
+        conv2d_same_bwd_input_packed(&d, &dy, &packed, &mut dx_b, &mut cols);
+        assert_eq!(dx_a, dx_b);
     }
 
     #[test]

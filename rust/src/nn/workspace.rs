@@ -1,0 +1,280 @@
+//! Persistent training-step state: the [`StepWorkspace`] activation /
+//! gradient arenas and the [`WeightPacks`] packed-GEMM panel cache.
+//!
+//! Both exist so that, after one warmup step, the whole native train step —
+//! forward, loss, backward, SGD — performs **zero heap allocations** and
+//! every FLOP-heavy stage runs on the shared 4×8 micro-kernel:
+//!
+//! * [`StepWorkspace`] owns every intermediate buffer one step needs
+//!   (per-layer activations, logits, softmax/loss scratch, ping-pong delta
+//!   buffers, im2col scratch, and the reusable gradient [`WeightSet`]).
+//!   It is **caller-owned** — a worker holds one across its whole epoch
+//!   loop — and keyed by `(cfg, batch)`: the first call per key sizes the
+//!   buffers, later calls reuse them (Vec capacity only ever grows).
+//! * [`WeightPacks`] caches the [`PackedB`] panels derived from the weight
+//!   values: per conv layer the HWIO filter (and its flipped/transposed
+//!   form for the odd-kernel input gradient), per dense layer the `(k, n)`
+//!   weight and its transpose (for `dx = dy · Wᵀ`). The cache is keyed on
+//!   [`WeightSet::generation`] — any weight mutation (an SGD step, an AGWU
+//!   fetch installing new weights) invalidates it, and the next forward
+//!   repacks **in place** (one repack per train step, amortized across all
+//!   row tiles and batch rows; no repack at all across consecutive
+//!   evaluation batches on frozen weights).
+
+use crate::config::NetworkConfig;
+use crate::tensor::WeightSet;
+
+use super::ops::{self, ConvDims, PackedB};
+
+/// Caller-owned, reusable buffers for one train/eval step (see module docs).
+#[derive(Debug, Default)]
+pub struct StepWorkspace {
+    key: Option<(NetworkConfig, usize)>,
+    pub(crate) batch: usize,
+    /// Post-ReLU output of each conv layer.
+    pub(crate) conv_outs: Vec<Vec<f32>>,
+    /// Output of the pooling layer (flattened features).
+    pub(crate) pooled: Vec<f32>,
+    /// Post-ReLU output of each hidden FC layer.
+    pub(crate) fc_outs: Vec<Vec<f32>>,
+    /// Final logits.
+    pub(crate) logits: Vec<f32>,
+    /// Softmax probabilities (loss scratch).
+    pub(crate) probs: Vec<f32>,
+    /// Loss gradient w.r.t. the logits.
+    pub(crate) dlogits: Vec<f32>,
+    /// Ping-pong FC delta buffers (sized for the widest feature vector).
+    pub(crate) dfeat: Vec<f32>,
+    pub(crate) dfeat2: Vec<f32>,
+    /// Ping-pong conv delta buffers.
+    pub(crate) dconv: Vec<f32>,
+    pub(crate) dconv2: Vec<f32>,
+    /// Serial-path im2col scratch (grown by the conv entry points).
+    pub(crate) cols: Vec<f32>,
+    /// Per-task (loss, correct) partials of the parallel loss stage.
+    pub(crate) loss_parts: Vec<(f64, usize)>,
+    /// Reusable gradient accumulator, written by every backward pass.
+    pub(crate) grads: Option<WeightSet>,
+}
+
+impl StepWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size every buffer for `(cfg, batch)`. Idempotent per key: a repeat
+    /// call with the same key returns immediately, so warmed-up steps pay
+    /// one key comparison and zero allocations.
+    pub fn prepare(&mut self, cfg: &NetworkConfig, batch: usize, weights: &WeightSet) {
+        if let Some((c, b)) = &self.key {
+            if c == cfg && *b == batch {
+                return;
+            }
+        }
+        let hw = cfg.input_hw;
+        let c_pool = if cfg.conv_layers == 0 { cfg.in_channels } else { cfg.filters };
+        let hp = hw / cfg.pool_window;
+        let pooled_dim = hp * hp * c_pool;
+        self.batch = batch;
+        self.conv_outs.resize_with(cfg.conv_layers, Vec::new);
+        for out in self.conv_outs.iter_mut() {
+            out.resize(batch * hw * hw * cfg.filters, 0.0);
+        }
+        self.pooled.resize(batch * pooled_dim, 0.0);
+        self.fc_outs.resize_with(cfg.fc_layers, Vec::new);
+        for out in self.fc_outs.iter_mut() {
+            out.resize(batch * cfg.fc_neurons, 0.0);
+        }
+        self.logits.resize(batch * cfg.num_classes, 0.0);
+        self.probs.resize(batch * cfg.num_classes, 0.0);
+        self.dlogits.resize(batch * cfg.num_classes, 0.0);
+        let feat_max = pooled_dim.max(cfg.fc_neurons).max(cfg.num_classes);
+        self.dfeat.resize(batch * feat_max, 0.0);
+        self.dfeat2.resize(batch * feat_max, 0.0);
+        self.dconv.resize(batch * hw * hw * c_pool, 0.0);
+        self.dconv2.resize(batch * hw * hw * c_pool, 0.0);
+        self.loss_parts.clear();
+        // The gradient set survives re-keys whose parameter shapes are
+        // unchanged (e.g. the same cfg at a different batch size): every
+        // backward pass fully overwrites it, so only an arity/shape change
+        // forces a rebuild.
+        let grads_stale = self.grads.as_ref().map_or(true, |g| {
+            g.len() != weights.len()
+                || g.tensors()
+                    .iter()
+                    .zip(weights.tensors())
+                    .any(|(a, b)| a.shape() != b.shape())
+        });
+        if grads_stale {
+            self.grads = Some(weights.zeros_like());
+        }
+        self.key = Some((cfg.clone(), batch));
+    }
+
+    /// The gradients computed by the most recent backward pass.
+    pub fn grads(&self) -> &WeightSet {
+        self.grads.as_ref().expect("workspace not prepared (run a forward/backward first)")
+    }
+
+    /// Logits of the most recent forward pass.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+}
+
+/// Packed micro-kernel panels derived from one weight generation (see
+/// module docs). Lives inside [`crate::nn::Network`] behind a `RefCell`;
+/// `ensure` is a no-op while the weight generation is unchanged.
+#[derive(Debug, Default)]
+pub struct WeightPacks {
+    generation: Option<u64>,
+    /// Per conv layer: the HWIO filter as a `(k²·C, C_o)` pack.
+    pub(crate) conv: Vec<PackedB>,
+    /// Per conv layer (odd k only): flipped/transposed filter pack for the
+    /// input gradient; even kernels take the naive fallback and skip it.
+    pub(crate) conv_flip: Vec<PackedB>,
+    /// Per dense layer (hidden FCs then the output layer): `(k, n)` pack.
+    pub(crate) fc_w: Vec<PackedB>,
+    /// Per dense layer: transposed pack for `dx = dy · Wᵀ`.
+    pub(crate) fc_wt: Vec<PackedB>,
+    flip_scratch: Vec<f32>,
+}
+
+fn grow_slots(v: &mut Vec<PackedB>, len: usize) {
+    v.truncate(len);
+    while v.len() < len {
+        v.push(PackedB::empty());
+    }
+}
+
+impl WeightPacks {
+    /// Repack every panel iff `weights` mutated since the cached
+    /// generation. Packs are refilled in place ([`PackedB::repack`]), so a
+    /// warmed-up repack allocates nothing.
+    pub fn ensure(&mut self, cfg: &NetworkConfig, weights: &WeightSet) {
+        let gen = weights.generation();
+        if self.generation == Some(gen) {
+            return;
+        }
+        let ts = weights.tensors();
+        grow_slots(&mut self.conv, cfg.conv_layers);
+        grow_slots(&mut self.conv_flip, cfg.conv_layers);
+        let dense_layers = cfg.fc_layers + 1;
+        grow_slots(&mut self.fc_w, dense_layers);
+        grow_slots(&mut self.fc_wt, dense_layers);
+        for l in 0..cfg.conv_layers {
+            let c = if l == 0 { cfg.in_channels } else { cfg.filters };
+            let d = ConvDims {
+                n: 1,
+                h: cfg.input_hw,
+                w: cfg.input_hw,
+                c,
+                k: cfg.kernel_hw,
+                co: cfg.filters,
+            };
+            let f = ts[2 * l].data();
+            self.conv[l].repack(d.k * d.k * d.c, d.co, f);
+            if d.k % 2 == 1 {
+                self.flip_scratch.resize(d.f_len(), 0.0);
+                ops::flip_transpose_filter_into(&d, f, &mut self.flip_scratch[..d.f_len()]);
+                self.conv_flip[l].repack(d.k * d.k * d.co, d.c, &self.flip_scratch[..d.f_len()]);
+            }
+        }
+        let mut pi = 2 * cfg.conv_layers;
+        for i in 0..dense_layers {
+            let w = &ts[pi];
+            pi += 2;
+            let (k, n) = (w.shape()[0], w.shape()[1]);
+            self.fc_w[i].repack(k, n, w.data());
+            self.fc_wt[i].repack_transposed(k, n, w.data());
+        }
+        self.generation = Some(gen);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Network;
+
+    fn tiny_cfg() -> NetworkConfig {
+        NetworkConfig {
+            name: "ws".into(),
+            input_hw: 6,
+            in_channels: 1,
+            conv_layers: 1,
+            filters: 2,
+            kernel_hw: 3,
+            fc_layers: 1,
+            fc_neurons: 8,
+            num_classes: 3,
+            batch_size: 4,
+            pool_window: 2,
+        }
+    }
+
+    #[test]
+    fn prepare_is_idempotent_and_rekeys() {
+        let cfg = tiny_cfg();
+        let net = Network::init(&cfg, 1);
+        let mut ws = StepWorkspace::new();
+        ws.prepare(&cfg, 4, &net.weights);
+        assert_eq!(ws.logits.len(), 4 * 3);
+        assert_eq!(ws.conv_outs.len(), 1);
+        assert_eq!(ws.conv_outs[0].len(), 4 * 6 * 6 * 2);
+        let ptr = ws.logits.as_ptr();
+        ws.prepare(&cfg, 4, &net.weights);
+        assert_eq!(ws.logits.as_ptr(), ptr, "same key must not touch buffers");
+        // Re-key to a smaller batch: lengths shrink, allocations are reused,
+        // and the gradient set survives (same parameter shapes).
+        let grads_ptr = ws.grads().tensors()[0].data().as_ptr();
+        ws.prepare(&cfg, 2, &net.weights);
+        assert_eq!(ws.logits.len(), 2 * 3);
+        assert_eq!(ws.grads().len(), net.weights.len());
+        assert_eq!(
+            ws.grads().tensors()[0].data().as_ptr(),
+            grads_ptr,
+            "batch re-key must not rebuild the gradient set"
+        );
+    }
+
+    #[test]
+    fn packs_invalidate_on_weight_mutation_only() {
+        let cfg = tiny_cfg();
+        let mut net = Network::init(&cfg, 2);
+        let mut packs = WeightPacks::default();
+        packs.ensure(&cfg, &net.weights);
+        let gen = packs.generation;
+        assert_eq!(packs.conv.len(), 1);
+        assert_eq!(packs.fc_w.len(), 2);
+        assert_eq!(packs.fc_wt.len(), 2);
+        // Unchanged weights: no re-keying.
+        packs.ensure(&cfg, &net.weights);
+        assert_eq!(packs.generation, gen);
+        // Mutation invalidates.
+        let delta = net.weights.zeros_like();
+        net.weights.axpy(0.0, &delta);
+        packs.ensure(&cfg, &net.weights);
+        assert_ne!(packs.generation, gen);
+    }
+
+    #[test]
+    fn fc_pack_shapes_match_manifest() {
+        let cfg = tiny_cfg();
+        let net = Network::init(&cfg, 3);
+        let mut packs = WeightPacks::default();
+        packs.ensure(&cfg, &net.weights);
+        // Hidden FC: pooled_dim (3·3·2 = 18) × 8; output: 8 × 3.
+        assert_eq!(packs.fc_w[0].kk(), 18);
+        assert_eq!(packs.fc_w[0].n(), 8);
+        assert_eq!(packs.fc_wt[0].kk(), 8);
+        assert_eq!(packs.fc_wt[0].n(), 18);
+        assert_eq!(packs.fc_w[1].kk(), 8);
+        assert_eq!(packs.fc_w[1].n(), 3);
+        // Conv: (3·3·1, 2) pack + flipped (3·3·2, 1).
+        assert_eq!(packs.conv[0].kk(), 9);
+        assert_eq!(packs.conv[0].n(), 2);
+        assert_eq!(packs.conv_flip[0].kk(), 18);
+        assert_eq!(packs.conv_flip[0].n(), 1);
+    }
+}

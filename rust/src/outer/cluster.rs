@@ -78,8 +78,9 @@ pub fn run_sgwu(
                 w.add_samples(schedule[iter][j].clone());
             }
         }
-        // Every node fetches the same global version (m transfers).
-        let globals: Vec<WeightSet> = (0..m).map(|j| ps.fetch(j).0).collect();
+        // Every node fetches the same global version (m logical transfers;
+        // in-process they share one Arc snapshot).
+        let globals: Vec<Arc<WeightSet>> = (0..m).map(|j| ps.fetch(j).0).collect();
         // Parallel local epochs.
         let outcomes: Vec<(super::worker::EpochOutcome, f64)> = std::thread::scope(|scope| {
             let handles: Vec<_> = workers
@@ -207,7 +208,9 @@ pub fn run_async(
                                     guard.update_async_plain(j, &out.weights, base)
                                 }
                             };
-                            (v, eval.map(|_| guard.global().clone()))
+                            // Snapshot is a refcount bump — no weight copy
+                            // while holding the server lock.
+                            (v, eval.map(|_| guard.global_arc()))
                         };
                         // Eval outside the lock so stragglers don't serialize.
                         let eval_point = match (eval, snapshot) {
@@ -320,7 +323,7 @@ mod tests {
         w.add_samples(0..16);
         let mut cur = init;
         for _ in 0..3 {
-            cur = w.train_epoch(cur).weights;
+            cur = w.train_epoch(Arc::new(cur)).weights;
         }
         assert!(
             report.final_weights.max_abs_diff(&cur) < 1e-6,

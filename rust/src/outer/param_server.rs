@@ -12,6 +12,7 @@
 //! be formed for any base version still in flight.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::tensor::WeightSet;
 
@@ -36,13 +37,20 @@ impl CommStats {
 }
 
 /// The parameter server holding the global weight set (Definition 2).
+///
+/// Versions are immutable [`Arc`] snapshots: the history stores refcounted
+/// handles, `fetch` hands out a refcount bump (workers deep-copy only when
+/// they mutate), and each update pays exactly one weight-set copy (the new
+/// version) instead of the old clone-per-fetch **and** clone-per-submit.
+/// [`CommStats`] keeps accounting logical transfer sizes (Eq. 11), not
+/// refcount traffic.
 #[derive(Debug)]
 pub struct ParamServer {
-    global: WeightSet,
+    global: Arc<WeightSet>,
     /// Current global version `i`.
     version: usize,
     /// Retained past versions for AGWU's `(W_j^(k) − W^(k))`.
-    history: VecDeque<(usize, WeightSet)>,
+    history: VecDeque<(usize, Arc<WeightSet>)>,
     history_cap: usize,
     /// Base version each node last fetched (k_{j'} in Eq. 9's denominator).
     node_base: Vec<usize>,
@@ -51,10 +59,11 @@ pub struct ParamServer {
 
 impl ParamServer {
     pub fn new(init: WeightSet, nodes: usize) -> Self {
+        let global = Arc::new(init);
         let mut history = VecDeque::new();
-        history.push_back((0, init.clone()));
+        history.push_back((0, Arc::clone(&global)));
         Self {
-            global: init,
+            global,
             version: 0,
             history,
             history_cap: 2 * nodes.max(1) + 2,
@@ -68,7 +77,13 @@ impl ParamServer {
     }
 
     pub fn global(&self) -> &WeightSet {
-        &self.global
+        self.global.as_ref()
+    }
+
+    /// The current global version as a shared snapshot (refcount bump, no
+    /// copy) — e.g. for evaluation hooks that must not hold the server lock.
+    pub fn global_arc(&self) -> Arc<WeightSet> {
+        Arc::clone(&self.global)
     }
 
     pub fn nodes(&self) -> usize {
@@ -76,12 +91,15 @@ impl ParamServer {
     }
 
     /// Share the current global set with node `j` (counts communication,
-    /// records the node's base version for staleness tracking).
-    pub fn fetch(&mut self, node: usize) -> (WeightSet, usize) {
+    /// records the node's base version for staleness tracking). The
+    /// returned snapshot is a refcount bump; a node that mutates it copies
+    /// on write ([`Arc::try_unwrap`] succeeds without a copy once the
+    /// server has evicted the version).
+    pub fn fetch(&mut self, node: usize) -> (Arc<WeightSet>, usize) {
         self.node_base[node] = self.version;
         self.comm.fetches += 1;
         self.comm.bytes += self.global.byte_size() as u64;
-        (self.global.clone(), self.version)
+        (Arc::clone(&self.global), self.version)
     }
 
     /// SGWU — Eq. 7: all m local sets + accuracies arrive together; the new
@@ -138,9 +156,10 @@ impl ParamServer {
         let base = self.base_for(base_version);
         let mut increment = local.sub(base);
         increment.scale(1.0 / self.nodes() as f32);
-        // In-place apply + one inherent clone for the history entry.
-        self.global.axpy(1.0, &increment);
-        self.install_current()
+        // One inherent copy: the new immutable version snapshot.
+        let mut next = (*self.global).clone();
+        next.axpy(1.0, &increment);
+        self.install(next)
     }
 
     /// AGWU — Algorithm 3.2 / Eq. 10: apply one node's increment
@@ -160,20 +179,20 @@ impl ParamServer {
         let base = self.base_for(base_version);
         let mut increment = local.sub(base);
         increment.scale((gamma * accuracy.max(1e-9)) as f32);
-        self.global.axpy(1.0, &increment);
-        self.install_current()
+        // One inherent copy: the new immutable version snapshot.
+        let mut next = (*self.global).clone();
+        next.axpy(1.0, &increment);
+        self.install(next)
     }
 
+    /// Install `ws` as the next global version. The history entry is a
+    /// refcount bump on the same snapshot — versions are immutable, so one
+    /// `Arc` serves the global pointer, the history window, and every
+    /// outstanding fetch.
     fn install(&mut self, ws: WeightSet) -> usize {
-        self.global = ws;
-        self.install_current()
-    }
-
-    /// Record the (already-updated) current global as a new version. One
-    /// weight-set copy — inherent, since history must own a snapshot.
-    fn install_current(&mut self) -> usize {
+        self.global = Arc::new(ws);
         self.version += 1;
-        self.history.push_back((self.version, self.global.clone()));
+        self.history.push_back((self.version, Arc::clone(&self.global)));
         while self.history.len() > self.history_cap {
             self.history.pop_front();
         }
@@ -184,7 +203,7 @@ impl ParamServer {
         self.history
             .iter()
             .find(|(v, _)| *v == version)
-            .map(|(_, w)| w)
+            .map(|(_, w)| w.as_ref())
     }
 
     /// Resolve an update's base weight set in one history scan. When the
@@ -195,7 +214,7 @@ impl ParamServer {
     fn base_for(&mut self, base_version: usize) -> &WeightSet {
         let idx = self.history.iter().position(|(v, _)| *v == base_version);
         match idx {
-            Some(i) => &self.history[i].1,
+            Some(i) => self.history[i].1.as_ref(),
             None => {
                 self.comm.evicted_base_fallbacks += 1;
                 self.oldest_retained()
@@ -204,7 +223,7 @@ impl ParamServer {
     }
 
     fn oldest_retained(&self) -> &WeightSet {
-        &self.history.front().expect("history never empty").1
+        self.history.front().expect("history never empty").1.as_ref()
     }
 }
 
@@ -242,8 +261,9 @@ mod tests {
         let mut ps = ParamServer::new(ws(&[1.0]), 1);
         let (w, k) = ps.fetch(0);
         assert_eq!(k, 0);
-        // Node trains 1.0 → 3.0; single node ⇒ γ = 1; Q = 0.5.
-        let mut local = w.clone();
+        // Node trains 1.0 → 3.0; single node ⇒ γ = 1; Q = 0.5. Mutating a
+        // fetched snapshot copies on write (the server retains the Arc).
+        let mut local = (*w).clone();
         local.tensors_mut()[0].data_mut()[0] = 3.0;
         let v = ps.update_agwu(0, &local, k, 0.5);
         assert_eq!(v, 1);
@@ -263,7 +283,7 @@ mod tests {
         for round in 0..4 {
             for node in [1usize, 2] {
                 let (w, k) = ps.fetch(node);
-                let mut local = w.clone();
+                let mut local = (*w).clone();
                 local.tensors_mut()[0].data_mut()[0] += 0.1;
                 ps.update_agwu(node, &local, k, 0.8);
                 let _ = round;
@@ -280,7 +300,7 @@ mod tests {
         );
         // Stale submission still applies, scaled.
         let before = v0(&ps)[0];
-        let mut local = w0.clone();
+        let mut local = (*w0).clone();
         local.tensors_mut()[0].data_mut()[0] = 100.0;
         ps.update_agwu(0, &local, k0, 1.0);
         let after = v0(&ps)[0];
@@ -350,7 +370,7 @@ mod tests {
         assert!(ps.lookup(k_straggler).is_none(), "base must be evicted for this test");
         assert_eq!(ps.comm.evicted_base_fallbacks, 0);
         let before = v0(&ps)[0];
-        let mut local = w_straggler.clone();
+        let mut local = (*w_straggler).clone();
         local.tensors_mut()[0].data_mut()[0] = before + 1.0;
         let v = ps.update_agwu(1, &local, k_straggler, 1.0);
         assert_eq!(v, 21);
@@ -372,6 +392,22 @@ mod tests {
         assert!(ps.lookup(k).is_none());
         ps.update_async_plain(0, &w, k);
         assert_eq!(ps.comm.evicted_base_fallbacks, 1);
+    }
+
+    #[test]
+    fn fetch_is_a_refcount_bump_not_a_copy() {
+        let mut ps = ParamServer::new(ws(&[1.0, 2.0]), 2);
+        let (a, _) = ps.fetch(0);
+        let (b, _) = ps.fetch(1);
+        assert!(Arc::ptr_eq(&a, &b), "fetches must share one snapshot");
+        assert!(Arc::ptr_eq(&a, &ps.global_arc()));
+        // An update installs a NEW snapshot; outstanding fetches keep the
+        // old immutable version (and its byte accounting stayed logical).
+        let bytes_per_transfer = a.byte_size() as u64;
+        assert_eq!(ps.comm.bytes, 2 * bytes_per_transfer);
+        ps.update_agwu(0, &a, 0, 1.0);
+        assert!(!Arc::ptr_eq(&a, &ps.global_arc()));
+        assert_eq!(a.tensors()[0].data(), &[1.0, 2.0]);
     }
 
     #[test]

@@ -129,13 +129,15 @@ pub fn train_native(tc: &TrainConfig, cluster_cfg: &ClusterConfig) -> TrainRepor
     let eval_hook = move |ws: &crate::tensor::WeightSet| -> (f64, f64) {
         let net = Network::with_weights(&net_cfg, ws.clone());
         let bsz = net_cfg.batch_size;
+        // One workspace (and one weight-pack build) across all eval batches.
+        let mut step_ws = crate::nn::StepWorkspace::new();
         let mut loss = 0.0f64;
         let mut correct = 0usize;
         let mut batches = 0usize;
         let mut seen = 0usize;
         while seen < eval_ds.len() {
             let (x, y, _) = eval_ds.batch(seen, bsz);
-            let (l, c) = net.eval_batch(&x, &y, bsz);
+            let (l, c) = net.eval_batch_ws(&x, &y, bsz, &mut step_ws);
             loss += l as f64;
             correct += c;
             seen += bsz;

@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use crate::config::NetworkConfig;
 use crate::data::Dataset;
-use crate::nn::Network;
+use crate::nn::{Network, StepWorkspace};
 use crate::tensor::WeightSet;
 
 /// Result of one local epoch (one "iteration" in the paper's terms: a full
@@ -29,14 +29,20 @@ pub struct EpochOutcome {
 /// A node-local trainer: the compute side of a worker. Implementations:
 /// [`NativeTrainer`] (pure Rust) and `runtime::XlaTrainer` (PJRT artifacts).
 pub trait LocalTrainer: Send {
-    /// Train one epoch over the current shard starting from `start`.
-    fn train_epoch(&mut self, start: WeightSet) -> EpochOutcome;
+    /// Train one epoch over the current shard starting from `start` — a
+    /// shared parameter-server snapshot ([`crate::outer::ParamServer::fetch`]
+    /// is a refcount bump). Implementations copy-on-write: `Arc::try_unwrap`
+    /// succeeds copy-free when the server has already evicted the version.
+    fn train_epoch(&mut self, start: Arc<WeightSet>) -> EpochOutcome;
     /// IDPA incremental allocation: extend the shard with dataset indices.
     fn add_samples(&mut self, range: Range<usize>);
     fn sample_count(&self) -> usize;
 }
 
-/// Pure-Rust local trainer over the native network.
+/// Pure-Rust local trainer over the native network. Owns a persistent
+/// [`StepWorkspace`] plus gather buffers, so every epoch after the first
+/// runs its batches allocation-free (the `alloc_regression` integration
+/// test pins the per-step property).
 pub struct NativeTrainer {
     cfg: NetworkConfig,
     data: Arc<Dataset>,
@@ -45,6 +51,10 @@ pub struct NativeTrainer {
     /// Artificial slowdown factor ≥ 1.0 emulating a slower node (in-process
     /// heterogeneity): the worker sleeps (factor−1)× its compute time.
     pub slowdown: f64,
+    /// Reused across every batch of every epoch this worker runs.
+    ws: StepWorkspace,
+    xbuf: Vec<f32>,
+    ybuf: Vec<f32>,
 }
 
 impl NativeTrainer {
@@ -55,6 +65,9 @@ impl NativeTrainer {
             indices: Vec::new(),
             lr,
             slowdown: 1.0,
+            ws: StepWorkspace::new(),
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
         }
     }
 
@@ -64,25 +77,35 @@ impl NativeTrainer {
         self
     }
 
-    /// Gather a batch (x, one-hot y) from shard-local positions, wrapping.
-    fn gather(&self, offset: usize, bsz: usize) -> (Vec<f32>, Vec<f32>) {
-        let pix = self.data.hw * self.data.hw * self.data.channels;
-        let classes = self.data.num_classes;
-        let mut x = Vec::with_capacity(bsz * pix);
-        let mut y = vec![0.0f32; bsz * classes];
+    /// Gather a batch (x, one-hot y) from shard-local positions, wrapping,
+    /// into reusable buffers.
+    fn gather_into(
+        data: &Dataset,
+        indices: &[usize],
+        offset: usize,
+        bsz: usize,
+        x: &mut Vec<f32>,
+        y: &mut Vec<f32>,
+    ) {
+        let classes = data.num_classes;
+        x.clear();
+        y.clear();
+        y.resize(bsz * classes, 0.0);
         for i in 0..bsz {
-            let idx = self.indices[(offset + i) % self.indices.len()];
-            x.extend_from_slice(&self.data.images[idx]);
-            y[i * classes + self.data.labels[idx]] = 1.0;
+            let idx = indices[(offset + i) % indices.len()];
+            x.extend_from_slice(&data.images[idx]);
+            y[i * classes + data.labels[idx]] = 1.0;
         }
-        (x, y)
     }
 }
 
 impl LocalTrainer for NativeTrainer {
-    fn train_epoch(&mut self, start: WeightSet) -> EpochOutcome {
+    fn train_epoch(&mut self, start: Arc<WeightSet>) -> EpochOutcome {
         assert!(!self.indices.is_empty(), "worker has no samples (allocate first)");
         let t0 = Instant::now();
+        // Copy-on-write: unwrap the snapshot without a copy when this worker
+        // holds the last reference, deep-copy otherwise.
+        let start = Arc::try_unwrap(start).unwrap_or_else(|shared| (*shared).clone());
         let mut net = Network::with_weights(&self.cfg, start);
         let bsz = self.cfg.batch_size.min(self.indices.len().max(1));
         let mut seen = 0usize;
@@ -93,8 +116,15 @@ impl LocalTrainer for NativeTrainer {
             let take = bsz.min(self.indices.len() - seen);
             // Gather a full `bsz` batch (wrapping) so the XLA path's fixed
             // batch shape and the native path behave identically.
-            let (x, y) = self.gather(seen, bsz);
-            let (l, c) = net.train_batch(&x, &y, bsz, self.lr);
+            Self::gather_into(
+                &self.data,
+                &self.indices,
+                seen,
+                bsz,
+                &mut self.xbuf,
+                &mut self.ybuf,
+            );
+            let (l, c) = net.train_batch_ws(&self.xbuf, &self.ybuf, bsz, self.lr, &mut self.ws);
             loss_sum += l as f64;
             correct += c.min(take);
             seen += take;
@@ -141,7 +171,7 @@ mod tests {
         w.add_samples(0..32);
         assert_eq!(w.sample_count(), 32);
         let start = Network::init(&cfg, 1).weights;
-        let out = w.train_epoch(start.clone());
+        let out = w.train_epoch(Arc::new(start.clone()));
         assert_eq!(out.samples, 32);
         assert!(out.loss > 0.0);
         assert!((0.0..=1.0).contains(&out.accuracy));
@@ -157,7 +187,7 @@ mod tests {
         let mut weights = Network::init(&cfg, 2).weights;
         let mut losses = Vec::new();
         for _ in 0..8 {
-            let out = w.train_epoch(weights);
+            let out = w.train_epoch(Arc::new(weights));
             weights = out.weights.clone();
             losses.push(out.loss);
         }
@@ -186,12 +216,12 @@ mod tests {
         slow.add_samples(0..16);
         let t_fast = {
             let t = Instant::now();
-            fast.train_epoch(start.clone());
+            fast.train_epoch(Arc::new(start.clone()));
             t.elapsed().as_secs_f64()
         };
         let t_slow = {
             let t = Instant::now();
-            slow.train_epoch(start);
+            slow.train_epoch(Arc::new(start));
             t.elapsed().as_secs_f64()
         };
         assert!(t_slow > 1.8 * t_fast, "slowdown ineffective: {t_slow} vs {t_fast}");
@@ -203,6 +233,6 @@ mod tests {
         let (cfg, ds) = setup();
         let mut w = NativeTrainer::new(&cfg, ds, 0.1);
         let start = Network::init(&cfg, 1).weights;
-        w.train_epoch(start);
+        w.train_epoch(Arc::new(start));
     }
 }

@@ -51,11 +51,12 @@ impl XlaTrainer {
 }
 
 impl LocalTrainer for XlaTrainer {
-    fn train_epoch(&mut self, start: WeightSet) -> EpochOutcome {
+    fn train_epoch(&mut self, start: Arc<WeightSet>) -> EpochOutcome {
         assert!(!self.indices.is_empty(), "worker has no samples (allocate first)");
         let t0 = Instant::now();
         let bsz = self.handle.manifest.config.batch_size;
-        let mut weights = start;
+        // Copy-on-write on the shared server snapshot.
+        let mut weights = Arc::try_unwrap(start).unwrap_or_else(|shared| (*shared).clone());
         let mut seen = 0usize;
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
@@ -121,7 +122,7 @@ mod tests {
         let mut weights = service.handle().init_weights(1).unwrap();
         let mut losses = Vec::new();
         for _ in 0..5 {
-            let out = w.train_epoch(weights);
+            let out = w.train_epoch(Arc::new(weights));
             weights = out.weights.clone();
             losses.push(out.loss);
         }

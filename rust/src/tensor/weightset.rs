@@ -4,22 +4,49 @@
 //! matches the artifact manifest (`meta.json: params[]`) — it is the wire
 //! format between the coordinator and the compiled XLA programs.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::Tensor;
 
-#[derive(Debug, Clone, PartialEq, Default)]
+/// Monotone source of weight-set generations. Global (process-wide) so two
+/// *different* weight sets can never carry the same generation unless one is
+/// a clone of the other — which is exactly when value-derived caches (the
+/// packed-GEMM weight panels in `nn::WeightPacks`) remain valid.
+static NEXT_GENERATION: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_generation() -> u64 {
+    NEXT_GENERATION.fetch_add(1, Ordering::Relaxed)
+}
+
+#[derive(Debug, Clone)]
 pub struct WeightSet {
     tensors: Vec<Tensor>,
+    /// Value identity: bumped to a globally fresh id by every mutating
+    /// accessor. Caches keyed on it (`generation()`) are invalidated by any
+    /// weight mutation; clones keep their source's generation (same values).
+    generation: u64,
+}
+
+/// Generations are cache keys, not values: equality compares tensors only.
+impl PartialEq for WeightSet {
+    fn eq(&self, other: &Self) -> bool {
+        self.tensors == other.tensors
+    }
+}
+
+impl Default for WeightSet {
+    fn default() -> Self {
+        Self::new(Vec::new())
+    }
 }
 
 impl WeightSet {
     pub fn new(tensors: Vec<Tensor>) -> Self {
-        Self { tensors }
+        Self { tensors, generation: fresh_generation() }
     }
 
     pub fn zeros_like(&self) -> Self {
-        Self {
-            tensors: self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect(),
-        }
+        Self::new(self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect())
     }
 
     pub fn tensors(&self) -> &[Tensor] {
@@ -27,7 +54,15 @@ impl WeightSet {
     }
 
     pub fn tensors_mut(&mut self) -> &mut [Tensor] {
+        self.generation = fresh_generation();
         &mut self.tensors
+    }
+
+    /// Value-identity token for caches derived from the current weight
+    /// values (e.g. packed GEMM panels): two sets with equal generations
+    /// hold equal values; any mutation produces a fresh generation.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn into_tensors(self) -> Vec<Tensor> {
@@ -56,12 +91,14 @@ impl WeightSet {
     /// `self += alpha * other`, element-wise over the whole set.
     pub fn axpy(&mut self, alpha: f32, other: &WeightSet) {
         assert_eq!(self.tensors.len(), other.tensors.len(), "weight set arity mismatch");
+        self.generation = fresh_generation();
         for (a, b) in self.tensors.iter_mut().zip(other.tensors.iter()) {
             a.axpy(alpha, b);
         }
     }
 
     pub fn scale(&mut self, alpha: f32) {
+        self.generation = fresh_generation();
         for t in self.tensors.iter_mut() {
             t.scale(alpha);
         }
@@ -71,14 +108,13 @@ impl WeightSet {
     /// of Eq. 10.
     pub fn sub(&self, other: &WeightSet) -> WeightSet {
         assert_eq!(self.tensors.len(), other.tensors.len(), "weight set arity mismatch");
-        WeightSet {
-            tensors: self
-                .tensors
+        WeightSet::new(
+            self.tensors
                 .iter()
                 .zip(other.tensors.iter())
                 .map(|(a, b)| a.sub(b))
                 .collect(),
-        }
+        )
     }
 
     /// Accuracy-weighted mean of several sets — SGWU's Eq. 7:
@@ -195,5 +231,29 @@ mod tests {
     fn l2_norm_across_set() {
         let w = ws(&[&[3.0], &[4.0]]);
         assert!((w.l2_norm() - 5.0).abs() < 1e-9);
+    }
+
+    /// Generation semantics backing the weight-pack cache: clones share
+    /// their source's generation (equal values → caches stay valid), every
+    /// mutating accessor produces a globally fresh one, and independently
+    /// created sets never collide.
+    #[test]
+    fn generation_tracks_value_identity() {
+        let mut a = ws(&[&[1.0, 2.0]]);
+        let b = a.clone();
+        assert_eq!(a.generation(), b.generation(), "clone keeps generation");
+        let other = ws(&[&[1.0, 2.0]]);
+        assert_ne!(a.generation(), other.generation(), "distinct sets, distinct gens");
+        let g0 = a.generation();
+        a.axpy(0.5, &b);
+        assert_ne!(a.generation(), g0, "axpy invalidates");
+        let g1 = a.generation();
+        a.scale(2.0);
+        assert_ne!(a.generation(), g1, "scale invalidates");
+        let g2 = a.generation();
+        let _ = a.tensors_mut();
+        assert_ne!(a.generation(), g2, "tensors_mut invalidates");
+        // Equality ignores generations.
+        assert_eq!(ws(&[&[5.0]]), ws(&[&[5.0]]));
     }
 }

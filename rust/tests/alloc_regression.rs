@@ -1,0 +1,93 @@
+//! Allocation regression for the workspace train step: after one warmup
+//! step, `Network::train_batch_ws` must perform **zero** heap allocations —
+//! the weight packs repack in place, every intermediate lives in the
+//! [`StepWorkspace`] arenas, and the gradient set is reused.
+//!
+//! The counting allocator wraps `System` and counts every `alloc` /
+//! `alloc_zeroed` / `realloc`. This file deliberately contains a single
+//! test: integration-test binaries get their own process, so no concurrent
+//! test can pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use bptcnn::config::NetworkConfig;
+use bptcnn::data::Dataset;
+use bptcnn::nn::{Network, StepWorkspace};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warmed_up_train_batch_is_allocation_free() {
+    // Conv + FC stack deep enough to exercise every stage (two conv layers
+    // so the packed input-gradient path runs, two FC layers plus the output
+    // layer so the ping-pong delta buffers and all pack slots are used).
+    let cfg = NetworkConfig {
+        name: "alloc".into(),
+        input_hw: 8,
+        in_channels: 1,
+        conv_layers: 2,
+        filters: 4,
+        kernel_hw: 3,
+        fc_layers: 2,
+        fc_neurons: 16,
+        num_classes: 4,
+        batch_size: 8,
+        pool_window: 2,
+    };
+    let ds = Dataset::synthetic(&cfg, 32, 0.2, 7);
+    let (x, y, _) = ds.batch(0, 8);
+    let mut net = Network::init(&cfg, 1);
+    let mut ws = StepWorkspace::new();
+
+    // Warmup: sizes the workspace arenas and the weight-pack slots.
+    let mut warm_loss = 0.0;
+    for _ in 0..3 {
+        let (l, _) = net.train_batch_ws(&x, &y, 8, 0.1, &mut ws);
+        warm_loss = l;
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    let mut last_loss = warm_loss;
+    for _ in 0..10 {
+        let (l, _) = net.train_batch_ws(&x, &y, 8, 0.1, &mut ws);
+        last_loss = l;
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        after - before,
+        0,
+        "warmed-up train_batch_ws made {} heap allocations over 10 steps",
+        after - before
+    );
+    // Sanity: the measured steps actually trained.
+    assert!(last_loss.is_finite());
+    assert!(last_loss < warm_loss * 1.5, "loss diverged: {warm_loss} -> {last_loss}");
+}

@@ -107,7 +107,7 @@ fn sgwu_consensus_on_identical_shards() {
     solo.add_samples(0..32);
     let mut w = init;
     for _ in 0..2 {
-        w = solo.train_epoch(w).weights;
+        w = solo.train_epoch(Arc::new(w)).weights;
     }
     assert!(
         report.final_weights.max_abs_diff(&w) < 1e-5,

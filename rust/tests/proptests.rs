@@ -332,6 +332,107 @@ fn prop_conv_bwd_parallel_matches_naive_and_arenas_do_not_leak() {
     });
 }
 
+/// Packed dense forward/backward parity vs the naive triple loops across
+/// ragged `(m, k, n)` shapes — `n` not a multiple of NR=8, `k < MR=4`,
+/// single-row batches `m = 1` — including the transposed pack used for
+/// `dx = dy · Wᵀ`. The FC stack rides the same micro-kernel as conv, so
+/// this is the dense analogue of the im2col-GEMM parity properties.
+#[test]
+fn prop_dense_packed_matches_naive() {
+    prop::check("packed dense parity", 80, |g| {
+        let m = g.usize_full(1, 9);
+        let k = g.usize_full(1, 19);
+        let n = g.usize_full(1, 19);
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let w = g.vec_f32(k * n, -1.0, 1.0);
+        let b = g.vec_f32(n, -0.5, 0.5);
+        let mut fwd_naive = vec![0.0f32; m * n];
+        ops::dense_fwd(m, k, n, &x, &w, &b, &mut fwd_naive);
+        let packed = ops::PackedB::pack(k, n, &w);
+        let mut fwd_fast = vec![0.0f32; m * n];
+        ops::dense_fwd_packed(m, &x, &packed, &b, &mut fwd_fast);
+        for (i, (a, bb)) in fwd_fast.iter().zip(fwd_naive.iter()).enumerate() {
+            assert_close(*a as f64, *bb as f64, 1e-4, &format!("out[{i}] m={m} k={k} n={n}"))?;
+        }
+        let dy = g.vec_f32(m * n, -1.0, 1.0);
+        let mut dx_n = vec![0.0f32; m * k];
+        let mut dw_n = vec![0.0f32; k * n];
+        let mut db_n = vec![0.0f32; n];
+        ops::dense_bwd(m, k, n, &x, &w, &dy, &mut dx_n, &mut dw_n, &mut db_n);
+        let wt = ops::PackedB::pack_transposed(k, n, &w);
+        let mut dx_p = vec![0.0f32; m * k];
+        let mut dw_p = vec![0.0f32; k * n];
+        let mut db_p = vec![0.0f32; n];
+        ops::dense_bwd_packed(m, k, n, &x, &wt, &dy, &mut dx_p, &mut dw_p, &mut db_p);
+        for (i, (a, bb)) in dx_p.iter().zip(dx_n.iter()).enumerate() {
+            assert_close(*a as f64, *bb as f64, 1e-4, &format!("dx[{i}] m={m} k={k} n={n}"))?;
+        }
+        for (i, (a, bb)) in dw_p.iter().zip(dw_n.iter()).enumerate() {
+            assert_close(*a as f64, *bb as f64, 1e-4, &format!("dw[{i}] m={m} k={k} n={n}"))?;
+        }
+        for (i, (a, bb)) in db_p.iter().zip(db_n.iter()).enumerate() {
+            assert_close(*a as f64, *bb as f64, 1e-4, &format!("db[{i}] m={m} k={k} n={n}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// The FC row-tile backward (per-worker arena accumulation + sequential
+/// reduce, ReLU mask fused) matches the serial packed reference for random
+/// shapes, granularities and pool sizes.
+#[test]
+fn prop_fc_row_tile_bwd_matches_serial() {
+    use bptcnn::inner::dense_bwd_parallel;
+    prop::check("fc row-tile bwd parity", 25, |g| {
+        let m = g.usize_full(1, 8);
+        let k = g.usize_full(1, 12);
+        let n = g.usize_full(1, 12);
+        let pool = ThreadPool::new(g.usize_full(1, 4));
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let w = g.vec_f32(k * n, -1.0, 1.0);
+        let dy0 = g.vec_f32(m * n, -1.0, 1.0);
+        let mut relu_out = g.vec_f32(m * n, -1.0, 1.0);
+        ops::relu_fwd(&mut relu_out);
+        let wt = ops::PackedB::pack_transposed(k, n, &w);
+        // Serial reference: explicit mask, then packed backward.
+        let mut dy_s = dy0.clone();
+        ops::relu_bwd(&relu_out, &mut dy_s);
+        let mut dx_s = vec![0.0f32; m * k];
+        let mut dw_s = vec![0.0f32; k * n];
+        let mut db_s = vec![0.0f32; n];
+        ops::dense_bwd_packed(m, k, n, &x, &wt, &dy_s, &mut dx_s, &mut dw_s, &mut db_s);
+        let rows = g.usize_full(1, m);
+        let mut dy_p = dy0.clone();
+        let mut dx_p = vec![0.0f32; m * k];
+        let mut dw_p = vec![0.0f32; k * n];
+        let mut db_p = vec![0.0f32; n];
+        dense_bwd_parallel(
+            &pool,
+            m,
+            k,
+            n,
+            &x,
+            &wt,
+            &mut dy_p,
+            Some(&relu_out),
+            &mut dx_p,
+            &mut dw_p,
+            &mut db_p,
+            rows,
+        );
+        for (i, (a, b)) in dx_p.iter().zip(dx_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("dx[{i}] rows={rows}"))?;
+        }
+        for (i, (a, b)) in dw_p.iter().zip(dw_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("dw[{i}] rows={rows}"))?;
+        }
+        for (i, (a, b)) in db_p.iter().zip(db_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("db[{i}] rows={rows}"))?;
+        }
+        Ok(())
+    });
+}
+
 /// Conv forward/backward algebra: ⟨conv(x), dy⟩ == ⟨x, conv_bwd_input(dy)⟩
 /// (adjoint identity) for random shapes.
 #[test]
