@@ -9,7 +9,7 @@
 use bptcnn::config::NetworkConfig;
 use bptcnn::data::Dataset;
 use bptcnn::inner::{
-    conv2d_parallel, conv_task_dag, parallel_train_step, train_step_dag,
+    conv2d_parallel, conv_task_dag, parallel_train_step, train_step_dag, TilePolicy,
 };
 use bptcnn::nn::ops::{self, ConvDims};
 use bptcnn::nn::{Network, StepWorkspace};
@@ -77,7 +77,16 @@ fn main() {
     let pool = ThreadPool::new(4);
     let (sl, _) = serial.train_batch(&xb, &yb, cfg.batch_size, 0.1);
     let mut ws = StepWorkspace::new();
-    let r = parallel_train_step(&pool, &mut par, &xb, &yb, cfg.batch_size, 0.1, 2, &mut ws);
+    let r = parallel_train_step(
+        &pool,
+        &mut par,
+        &xb,
+        &yb,
+        cfg.batch_size,
+        0.1,
+        TilePolicy::grid2d(2),
+        &mut ws,
+    );
     println!(
         "\nparallel train step: loss {:.5} (serial {:.5}), weight max|Δ| {:.1e}, {} tasks",
         r.loss,

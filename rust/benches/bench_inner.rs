@@ -22,7 +22,9 @@ use bptcnn::config::NetworkConfig;
 use bptcnn::data::Dataset;
 use bptcnn::inner::bp_tasks::conv_bwd_parallel;
 use bptcnn::inner::conv_tasks::DisjointBuf;
-use bptcnn::inner::{conv2d_parallel, conv_task_dag, execute_dag, parallel_train_step, TaskDag};
+use bptcnn::inner::{
+    conv2d_parallel, conv_task_dag, execute_dag, parallel_train_step, TaskDag, TilePolicy,
+};
 use bptcnn::nn::ops::{self, ConvDims};
 use bptcnn::nn::{Network, StepWorkspace};
 use bptcnn::util::bench::Bench;
@@ -428,7 +430,7 @@ fn main() {
                 &y,
                 cfg.batch_size,
                 0.02,
-                conv_rows,
+                TilePolicy::grid2d(conv_rows),
                 &mut step_ws,
             );
         });
@@ -439,6 +441,72 @@ fn main() {
         b.bench_with_throughput("train_step/serial_ws", flops, || {
             serial_net.train_batch_ws(&x, &y, cfg.batch_size, 0.02, &mut serial_ws);
         });
+    }
+
+    // ---- 2D row×column tiling: Table-2 cases 5–7 (2000-neuron FC, small
+    // batch) — the ISSUE-4 acceptance pair. Row-only tiling leaves ≤ batch
+    // tiles per FC stage, so an 8-worker pool mostly idles; the 2D grid
+    // splits the packed-B panel space across workers. Acceptance: 2D ≥ 1.5×
+    // row-only on the batch ≤ 8 rows at 8 threads.
+    {
+        let cfg = NetworkConfig {
+            name: "case6_fc".into(),
+            input_hw: 16,
+            in_channels: 1,
+            conv_layers: 1,
+            filters: 8,
+            kernel_hw: 3,
+            fc_layers: 2,
+            fc_neurons: 2000,
+            num_classes: 10,
+            batch_size: 8,
+            pool_window: 2,
+        };
+        let pool8 = ThreadPool::new(8);
+        let ds = Dataset::synthetic(&cfg, 16, 0.2, 11);
+        let conv_rows = cfg.input_hw / 2;
+        for batch in [4usize, 8] {
+            let (x, y, _) = ds.batch(0, batch);
+            let flops = cfg.flops_per_sample() * batch as f64;
+            for (tname, pool) in [("4t", &pool4), ("8t", &pool8)] {
+                let mut net_row = Network::init(&cfg, 21);
+                let mut ws_row = StepWorkspace::new();
+                b.bench_with_throughput(
+                    &format!("fc2000_step/b{batch}_rowonly_{tname}"),
+                    flops,
+                    || {
+                        parallel_train_step(
+                            pool,
+                            &mut net_row,
+                            &x,
+                            &y,
+                            batch,
+                            0.01,
+                            TilePolicy::rows_only(conv_rows),
+                            &mut ws_row,
+                        );
+                    },
+                );
+                let mut net_2d = Network::init(&cfg, 21);
+                let mut ws_2d = StepWorkspace::new();
+                b.bench_with_throughput(
+                    &format!("fc2000_step/b{batch}_2d_{tname}"),
+                    flops,
+                    || {
+                        parallel_train_step(
+                            pool,
+                            &mut net_2d,
+                            &x,
+                            &y,
+                            batch,
+                            0.01,
+                            TilePolicy::grid2d(conv_rows),
+                            &mut ws_2d,
+                        );
+                    },
+                );
+            }
+        }
     }
 
     // ---- forward-only sweeps (granularity/thread ablation) ---------------

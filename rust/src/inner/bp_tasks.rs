@@ -10,25 +10,30 @@
 //!   [`super::fc_tasks`], so the spine stages ride the pool too (they are
 //!   <15% of the time per §4.1.1 on conv-heavy nets, but dominate the
 //!   paper's FC-heavy Table-2 configurations);
-//! * backward conv — the same **row-tile** decomposition as forward: each
-//!   task lowers its tile's patches once, accumulates its partial filter /
-//!   bias gradient (Eq. 21 restricted to the tile) into the *executing
-//!   worker's* persistent arena, and writes its disjoint rows of `dx`
-//!   (Eq. 18, as a flipped-filter packed-GEMM forward for odd k). Per-worker
-//!   partials are reduced sequentially after the barrier — there is **no
-//!   mutex in the task body** and no per-task allocation. This is the
-//!   thread-safe realization of Fig. 8's per-neuron parallelism with the
-//!   synchronization overhead driven to zero.
+//! * backward conv — the same **2D tile** decomposition as forward (row
+//!   tiles × channel-panel windows when the grids split): each task lowers
+//!   its tile's patches once, accumulates its partial filter / bias
+//!   gradient stripe (Eq. 21 restricted to the tile's column window) into
+//!   the *executing worker's* persistent arena, and dx tiles write their
+//!   disjoint (row × input-channel-window) elements of `dx` (Eq. 18, as a
+//!   panel-windowed flipped-filter packed-GEMM forward for odd k).
+//!   Per-worker partials are reduced stripe-sequentially after the barrier
+//!   — there is **no mutex in the task body** and no per-task allocation.
+//!   This is the thread-safe realization of Fig. 8's per-neuron parallelism
+//!   with the synchronization overhead driven to zero.
 
 use crate::config::NetworkConfig;
 use crate::nn::ops::{self, ConvDims, PackedB};
 use crate::nn::{Network, StepWorkspace};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
-use super::conv_tasks::{conv2d_parallel_packed, ConvTask, DisjointBuf};
+use super::conv_tasks::{conv2d_parallel_packed, ConvTask, ConvTile, DisjointBuf};
 use super::dag::TaskDag;
 use super::fc_tasks;
-use super::scheduler::{execute_dag, ScheduleStats};
+use super::scheduler::{
+    execute_dag, panel_count, plan_cols_for_rows, plan_tile_grid, ScheduleStats, TileGrid,
+    TilePolicy,
+};
 
 /// Result of one task-parallel train step.
 pub struct ParallelStepResult {
@@ -37,18 +42,28 @@ pub struct ParallelStepResult {
     pub stats: ScheduleStats,
 }
 
-/// One backward task: a row tile (df/db always; dx too when the kernel is
-/// odd), or a whole-image input-gradient task on the even-kernel fallback
-/// path (asymmetric implicit padding doesn't ride the flipped-forward conv).
+/// One backward task of a conv layer:
+/// * [`BwdTask::Tile`] — fused row tile (df/db, plus dx when the kernel is
+///   odd), the pre-2D path taken whenever neither grid column-splits;
+/// * [`BwdTask::Df`] / [`BwdTask::Dx`] — 2D tiles over output-channel /
+///   input-channel panel windows when the grids do split (small batch ×
+///   small spatial extent);
+/// * [`BwdTask::DxImage`] — whole-image input-gradient fallback for even
+///   kernels (asymmetric implicit padding doesn't ride the flipped-forward
+///   conv).
 enum BwdTask {
     Tile(ConvTask),
+    Df(ConvTile),
+    Dx(ConvTile),
     DxImage(usize),
 }
 
-/// Backward of one conv layer with row-tile tasks (granularity mirrors the
-/// forward decomposition via `rows_per_task`): filter/bias gradients are
-/// accumulated into per-worker arenas and reduced once at the end, the input
-/// gradient is written into disjoint row slices. Numerically ≡
+/// Backward of one conv layer with 2D tile tasks (the row granularity
+/// mirrors the forward decomposition via `rows_per_task`; output/input
+/// channel panels split when `batch × H` row tiles cannot feed the pool):
+/// filter/bias gradients are accumulated into disjoint stripes of
+/// per-worker arenas and reduced once at the end, the input gradient is
+/// written into disjoint (row × channel-window) element sets. Numerically ≡
 /// `ops::conv2d_same_bwd_*` to f32 reduction-order tolerance (per-tile
 /// partial sums commute with the full-batch sums of Eq. 21).
 ///
@@ -72,12 +87,25 @@ pub fn conv_bwd_parallel(
     } else {
         None
     };
-    conv_bwd_parallel_packed(pool, d, x, f, dy, df, db, dx, flip.as_ref(), rows_per_task)
+    let df_grid = plan_tile_grid(d.n * d.h, d.k * d.k * d.c, d.co, pool.size(), rows_per_task);
+    let dx_grid = plan_cols_for_rows(
+        df_grid.rows_per_tile,
+        df_grid.row_tiles,
+        d.k * d.k * d.co,
+        d.c,
+        pool.size(),
+    );
+    conv_bwd_parallel_packed(pool, d, x, f, dy, df, db, dx, flip.as_ref(), df_grid, dx_grid)
 }
 
 /// [`conv_bwd_parallel`] on a caller-provided flipped-filter pack (from the
-/// network's [`crate::nn::WeightPacks`] cache); `flip_packed` is required
-/// exactly when `dx` is wanted and the kernel is odd.
+/// network's [`crate::nn::WeightPacks`] cache) and tile grids; `flip_packed`
+/// is required exactly when `dx` is wanted and the kernel is odd. `df_grid`
+/// tiles (rows × output-channel panels) drive the Eq.-21/22 gradients;
+/// `dx_grid` tiles (same rows × input-channel panels) drive the odd-kernel
+/// Eq.-18 input gradient. When neither grid column-splits, the two collapse
+/// into fused row-tile tasks — the pre-2D path, so large-batch layers pay
+/// no extra dispatch.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_bwd_parallel_packed(
     pool: &ThreadPool,
@@ -89,43 +117,17 @@ pub fn conv_bwd_parallel_packed(
     db: &mut [f32],
     dx: Option<&mut [f32]>,
     flip_packed: Option<&PackedB>,
-    rows_per_task: usize,
+    df_grid: TileGrid,
+    dx_grid: TileGrid,
 ) -> ScheduleStats {
-    assert!(rows_per_task >= 1);
     assert_eq!(x.len(), d.x_len());
     assert_eq!(dy.len(), d.y_len());
     assert_eq!(df.len(), d.f_len());
     assert_eq!(db.len(), d.co);
+    df_grid.check();
+    dx_grid.check();
     let want_dx = dx.is_some();
     let odd_k = d.k % 2 == 1;
-
-    // Task list: row tiles for df/db (+ dx when odd k), plus per-image dx
-    // fallback tasks for even kernels. All level-0 (independent).
-    let mut dag: TaskDag<BwdTask> = TaskDag::new();
-    let cost_per_row = (d.w * d.k * d.k * d.c * d.co) as f64;
-    for n in 0..d.n {
-        let mut y = 0;
-        while y < d.h {
-            let rows = rows_per_task.min(d.h - y);
-            // A tile does the filter-gradient contraction and (odd k) the
-            // input-gradient conv: ~2× the forward cost per row.
-            dag.add(
-                format!("conv_bwd[n{n},y{y}+{rows}]"),
-                2.0 * cost_per_row * rows as f64,
-                &[],
-                BwdTask::Tile(ConvTask { n, y0: y, rows }),
-            );
-            y += rows;
-        }
-        if want_dx && !odd_k {
-            dag.add(
-                format!("conv_bwd_dx[n{n}]"),
-                cost_per_row * d.h as f64,
-                &[],
-                BwdTask::DxImage(n),
-            );
-        }
-    }
 
     let dd = *d;
     let kkc = dd.k * dd.k * dd.c;
@@ -143,6 +145,83 @@ pub fn conv_bwd_parallel_packed(
     } else {
         None
     };
+    // Fused row tiles whenever neither space column-splits (and, for odd-k
+    // dx, the row splits agree); otherwise independent Df/Dx tile kinds.
+    let fused = df_grid.panel_tiles == 1
+        && (!want_dx
+            || !odd_k
+            || (dx_grid.panel_tiles == 1 && dx_grid.rows_per_tile == df_grid.rows_per_tile));
+
+    // Task list — all level-0 (independent): dy is read-only here, so df
+    // and dx tiles never need ordering between them.
+    let mut dag: TaskDag<BwdTask> = TaskDag::new();
+    let cost_per_el = (dd.w * dd.k * dd.k * dd.c) as f64;
+    let panels_co = panel_count(dd.co);
+    let panels_c = panel_count(dd.c);
+    for n in 0..dd.n {
+        if fused {
+            let mut y = 0;
+            while y < dd.h {
+                let rows = df_grid.rows_per_tile.min(dd.h - y);
+                // A tile does the filter-gradient contraction and (odd k)
+                // the input-gradient conv: ~2× the forward cost per row.
+                dag.add(
+                    format!("conv_bwd[n{n},y{y}+{rows}]"),
+                    2.0 * cost_per_el * (rows * dd.co) as f64,
+                    &[],
+                    BwdTask::Tile(ConvTask { n, y0: y, rows }),
+                );
+                y += rows;
+            }
+        } else {
+            let mut y = 0;
+            while y < dd.h {
+                let rows = df_grid.rows_per_tile.min(dd.h - y);
+                let mut p = 0;
+                while p < panels_co {
+                    let np = df_grid.panels_per_tile.min(panels_co - p);
+                    let (_, jw) = ops::panel_window(dd.co, p, np);
+                    dag.add(
+                        format!("conv_bwd_df[n{n},y{y},p{p}]"),
+                        cost_per_el * (rows * jw) as f64,
+                        &[],
+                        BwdTask::Df(ConvTile { n, y0: y, rows, p0: p, np }),
+                    );
+                    p += np;
+                }
+                y += rows;
+            }
+            if want_dx && odd_k {
+                let cost_dx_el = (dd.w * dd.k * dd.k * dd.co) as f64;
+                let mut y = 0;
+                while y < dd.h {
+                    let rows = dx_grid.rows_per_tile.min(dd.h - y);
+                    let mut p = 0;
+                    while p < panels_c {
+                        let np = dx_grid.panels_per_tile.min(panels_c - p);
+                        let (_, jw) = ops::panel_window(dd.c, p, np);
+                        dag.add(
+                            format!("conv_bwd_dx[n{n},y{y},p{p}]"),
+                            cost_dx_el * (rows * jw) as f64,
+                            &[],
+                            BwdTask::Dx(ConvTile { n, y0: y, rows, p0: p, np }),
+                        );
+                        p += np;
+                    }
+                    y += rows;
+                }
+            }
+        }
+        if want_dx && !odd_k {
+            dag.add(
+                format!("conv_bwd_dx[n{n}]"),
+                cost_per_el * (dd.h * dd.co) as f64,
+                &[],
+                BwdTask::DxImage(n),
+            );
+        }
+    }
+
     // Only the packed flip-forward path reads the zero bias; skip the
     // allocation entirely on df/db-only and even-kernel calls.
     let zero_bias = if flip_packed.is_some() { vec![0.0f32; dd.c] } else { Vec::new() };
@@ -151,11 +230,7 @@ pub fn conv_bwd_parallel_packed(
     let y_img = dd.h * dd.w * dd.co;
 
     // Size + zero each worker's gradient accumulators for this layer call.
-    for arena in pool.arenas() {
-        let mut g = arena.lock().unwrap();
-        ScratchArena::grow_zeroed(&mut g.grad_f, dd.f_len());
-        ScratchArena::grow_zeroed(&mut g.grad_b, dd.co);
-    }
+    fc_tasks::zero_arena_grads(pool, dd.f_len(), dd.co);
 
     let arenas = pool.arenas();
     let stats = execute_dag(pool, dag, move |worker: usize, task: &BwdTask| {
@@ -195,6 +270,68 @@ pub fn conv_bwd_parallel_packed(
                     );
                 }
             }
+            BwdTask::Df(t) => {
+                // Eq. 21/22 column stripe: this tile's dW/db contributions
+                // land in the [j0, j0+jw) output-channel stripe of the
+                // executing worker's arena — disjoint from every other
+                // stripe, shared (accumulated) only with this worker's own
+                // tiles of the same stripe.
+                let (j0, jw) = ops::panel_window(dd.co, t.p0, t.np);
+                let patches = t.rows * dd.w;
+                let mut arena = arenas[worker].lock().unwrap();
+                let arena = &mut *arena;
+                let cols = ScratchArena::grow(&mut arena.cols, patches * kkc);
+                ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
+                let dy0 = (t.n * dd.h + t.y0) * dd.w * dd.co;
+                let dyt = &dy[dy0..dy0 + patches * dd.co];
+                ops::gemm_tn_acc_cols(
+                    patches,
+                    kkc,
+                    dd.co,
+                    cols,
+                    dyt,
+                    &mut arena.grad_f[..dd.f_len()],
+                    j0,
+                    jw,
+                );
+                let gb = &mut arena.grad_b[j0..j0 + jw];
+                for px in 0..patches {
+                    let row = &dyt[px * dd.co + j0..px * dd.co + j0 + jw];
+                    for (acc, &v) in gb.iter_mut().zip(row.iter()) {
+                        *acc += v;
+                    }
+                }
+            }
+            BwdTask::Dx(t) => {
+                // Eq. 18 tile windowed over input-channel panels: the
+                // flipped-filter forward writes only columns [j0, j0+jw) of
+                // this tile's dx rows.
+                let pf = flip_packed.expect("Dx tiles only exist with a flip pack");
+                let (j0, jw) = ops::panel_window(dd.c, t.p0, t.np);
+                let patches = t.rows * dd.w;
+                let base = (t.n * dd.h + t.y0) * dd.w * dd.c;
+                let dxb = dx_buf.as_ref().unwrap();
+                for px in 0..patches {
+                    // SAFETY: this tile exclusively owns its (row ×
+                    // channel-window) dx elements.
+                    unsafe { dxb.slice_mut(base + px * dd.c + j0, jw) }.fill(0.0);
+                }
+                let mut arena = arenas[worker].lock().unwrap();
+                let cols2 = ScratchArena::grow(&mut arena.cols2, patches * kkco);
+                ops::im2col_rows(&swapped, dy, t.n, t.y0, t.rows, cols2);
+                // SAFETY: panel-windowed writes stay inside this tile's
+                // column window.
+                unsafe {
+                    ops::gemm_packed_acc_panels_raw(
+                        patches,
+                        cols2,
+                        pf,
+                        dxb.ptr_at(base),
+                        t.p0,
+                        t.np,
+                    );
+                }
+            }
             BwdTask::DxImage(n) => {
                 let dys = &dy[n * y_img..(n + 1) * y_img];
                 // SAFETY: image task n exclusively owns dx[n·x_img, (n+1)·x_img).
@@ -204,31 +341,25 @@ pub fn conv_bwd_parallel_packed(
         }
     });
 
-    // Sequential reduce of the per-worker partials (the paper's Fig.-9
-    // "reduce" node) — the only cross-worker aggregation, outside the tasks.
-    df.fill(0.0);
-    db.fill(0.0);
-    for arena in pool.arenas() {
-        let g = arena.lock().unwrap();
-        for (acc, &v) in df.iter_mut().zip(g.grad_f.iter()) {
-            *acc += v;
-        }
-        for (acc, &v) in db.iter_mut().zip(g.grad_b.iter()) {
-            *acc += v;
-        }
-    }
+    // Post-barrier reduce of the per-worker partials (the paper's Fig.-9
+    // "reduce" node) — stripe-sequential and contention-free, parallelized
+    // over chunks when df is large.
+    fc_tasks::reduce_arena_grads(pool, df, db);
     stats
 }
 
 /// One full training step (forward + backward + SGD, Eq. 23) executed with
-/// the inner-layer task decomposition on the thread pool: Algorithm-4.1 row
-/// tiles for the conv stack **and** `fc_tasks` batch-row tiles for the FC
-/// stack, per-image pool tasks, chunked ReLU tasks and row-tile loss tasks
-/// — the whole pipeline is inner-parallel, not just conv. Intermediate
-/// buffers live in the caller-owned [`StepWorkspace`] (no per-layer `vec!`
-/// or activation clones; steady-state heap traffic is the scheduler's task
-/// boxes only) and weight panels come from the network's pack cache.
-/// Numerically ≡ `Network::train_batch` to f32 reduction-order tolerance.
+/// the inner-layer task decomposition on the thread pool: 2D row×panel
+/// tiles for the conv **and** FC stacks (planned per stage by the
+/// [`TilePolicy`] from `(batch, M, K, N, workers)` — columns split exactly
+/// when batch rows alone cannot feed the workers, the Table-2 cases-5–7
+/// regime), per-image pool tasks, chunked ReLU tasks and row-tile loss
+/// tasks — the whole pipeline is inner-parallel, not just conv.
+/// Intermediate buffers live in the caller-owned [`StepWorkspace`] (no
+/// per-layer `vec!` or activation clones; steady-state heap traffic is the
+/// scheduler's task boxes only) and weight panels come from the network's
+/// pack cache. Numerically ≡ `Network::train_batch` to f32 reduction-order
+/// tolerance.
 #[allow(clippy::too_many_arguments)]
 pub fn parallel_train_step(
     pool: &ThreadPool,
@@ -237,16 +368,18 @@ pub fn parallel_train_step(
     y: &[f32],
     batch: usize,
     lr: f32,
-    rows_per_task: usize,
+    policy: TilePolicy,
     ws: &mut StepWorkspace,
 ) -> ParallelStepResult {
     let cfg = &net.cfg;
     let hw = cfg.input_hw;
+    let workers = pool.size();
+    let conv_rows = policy.rows_per_task();
     ws.prepare(cfg, batch, &net.weights);
     net.packs.borrow_mut().ensure(cfg, &net.weights);
     let mut agg: Option<ScheduleStats> = None;
-    // FC/loss granularity: ~2 batch-row tiles per worker.
-    let fc_rows = (batch / (2 * pool.size())).max(1);
+    // FC/loss row granularity: ~2 batch-row tiles per worker.
+    let fc_rows = (batch / (2 * workers)).max(1);
 
     let (loss, correct) = {
         let packs = net.packs.borrow();
@@ -256,6 +389,7 @@ pub fn parallel_train_step(
         for l in 0..cfg.conv_layers {
             let c = if l == 0 { cfg.in_channels } else { cfg.filters };
             let d = ConvDims { n: batch, h: hw, w: hw, c, k: cfg.kernel_hw, co: cfg.filters };
+            let grid = policy.plan(batch * hw, d.k * d.k * d.c, d.co, workers, conv_rows);
             let (prev, cur) = ws.conv_outs.split_at_mut(l);
             let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
             let out = &mut cur[0][..];
@@ -266,7 +400,7 @@ pub fn parallel_train_step(
                 &packs.conv[l],
                 wts[2 * l + 1].data(),
                 out,
-                rows_per_task,
+                grid,
             );
             agg = Some(merge_stats(agg, s));
             let s = fc_tasks::relu_fwd_parallel(pool, out, pool.size());
@@ -288,15 +422,17 @@ pub fn parallel_train_step(
             let (prev, cur) = ws.fc_outs.split_at_mut(l);
             let feat: &[f32] = if l == 0 { &ws.pooled } else { &prev[l - 1] };
             let b = wts[2 * cfg.conv_layers + 2 * l + 1].data();
+            let w = &packs.fc_w[l];
+            let grid = policy.plan(batch, w.kk(), w.n(), workers, fc_rows);
             let s = fc_tasks::dense_fwd_parallel(
                 pool,
                 batch,
                 feat,
-                &packs.fc_w[l],
+                w,
                 b,
                 &mut cur[0][..],
                 true,
-                fc_rows,
+                grid,
             );
             agg = Some(merge_stats(agg, s));
         }
@@ -306,15 +442,17 @@ pub fn parallel_train_step(
             &ws.fc_outs[cfg.fc_layers - 1]
         };
         let ob = wts[2 * cfg.conv_layers + 2 * cfg.fc_layers + 1].data();
+        let out_w = &packs.fc_w[cfg.fc_layers];
+        let out_grid = policy.plan(batch, out_w.kk(), out_w.n(), workers, fc_rows);
         let s = fc_tasks::dense_fwd_parallel(
             pool,
             batch,
             last,
-            &packs.fc_w[cfg.fc_layers],
+            out_w,
             ob,
             &mut ws.logits,
             false,
-            fc_rows,
+            out_grid,
         );
         agg = Some(merge_stats(agg, s));
 
@@ -345,6 +483,8 @@ pub fn parallel_train_step(
         let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
         {
             let (a, b) = gts.split_at_mut(out_w_idx + 1);
+            let dy_grid = policy.plan(batch, last_dim, cfg.num_classes, workers, fc_rows);
+            let dx_grid = policy.plan_cols(&dy_grid, cfg.num_classes, last_dim, workers);
             let s = fc_tasks::dense_bwd_parallel(
                 pool,
                 batch,
@@ -357,7 +497,8 @@ pub fn parallel_train_step(
                 &mut ws.dfeat[..batch * last_dim],
                 a[out_w_idx].data_mut(),
                 b[0].data_mut(),
-                fc_rows,
+                dy_grid,
+                dx_grid,
             );
             agg = Some(merge_stats(agg, s));
         }
@@ -367,6 +508,8 @@ pub fn parallel_train_step(
             let w_idx = 2 * cfg.conv_layers + 2 * l;
             {
                 let (a, b) = gts.split_at_mut(w_idx + 1);
+                let dy_grid = policy.plan(batch, in_dim, cfg.fc_neurons, workers, fc_rows);
+                let dx_grid = policy.plan_cols(&dy_grid, cfg.fc_neurons, in_dim, workers);
                 let s = fc_tasks::dense_bwd_parallel(
                     pool,
                     batch,
@@ -379,7 +522,8 @@ pub fn parallel_train_step(
                     &mut ws.dfeat2[..batch * in_dim],
                     a[w_idx].data_mut(),
                     b[0].data_mut(),
-                    fc_rows,
+                    dy_grid,
+                    dx_grid,
                 );
                 agg = Some(merge_stats(agg, s));
             }
@@ -410,6 +554,8 @@ pub fn parallel_train_step(
                 let (a, b) = gts.split_at_mut(w_idx + 1);
                 let dx = if want_dx { Some(&mut ws.dconv2[..d.x_len()]) } else { None };
                 let flip = if want_dx && d.k % 2 == 1 { Some(&packs.conv_flip[l]) } else { None };
+                let df_grid = policy.plan(batch * hw, d.k * d.k * d.c, d.co, workers, conv_rows);
+                let dx_grid = policy.plan_cols(&df_grid, d.k * d.k * d.co, d.c, workers);
                 conv_bwd_parallel_packed(
                     pool,
                     &d,
@@ -420,7 +566,8 @@ pub fn parallel_train_step(
                     b[0].data_mut(),
                     dx,
                     flip,
-                    rows_per_task,
+                    df_grid,
+                    dx_grid,
                 )
             };
             agg = Some(merge_stats(agg, s));
@@ -633,13 +780,72 @@ mod tests {
         let pool = ThreadPool::new(4);
         let mut ws = StepWorkspace::new();
         let (sl, sc) = serial.train_batch(&x, &y, 4, 0.1);
-        let r = parallel_train_step(&pool, &mut par, &x, &y, 4, 0.1, 2, &mut ws);
+        let r =
+            parallel_train_step(&pool, &mut par, &x, &y, 4, 0.1, TilePolicy::grid2d(2), &mut ws);
         assert!((sl - r.loss).abs() < 1e-5, "loss {sl} vs {}", r.loss);
         assert_eq!(sc, r.correct);
         assert!(
             serial.weights.max_abs_diff(&par.weights) < 1e-5,
             "weights diverged: {}",
             serial.weights.max_abs_diff(&par.weights)
+        );
+    }
+
+    /// The ISSUE-4 regime: batch smaller than the pool with FC layers wide
+    /// enough to cross the planner's work floor, so the dense stages really
+    /// do column-split — the whole 2D step must match the serial step, and
+    /// the row-only policy must agree too.
+    #[test]
+    fn parallel_step_2d_small_batch_wide_fc_matches_serial() {
+        let cfg = NetworkConfig {
+            name: "widefc".into(),
+            input_hw: 8,
+            in_channels: 1,
+            conv_layers: 1,
+            filters: 4,
+            kernel_hw: 3,
+            fc_layers: 2,
+            fc_neurons: 256,
+            num_classes: 4,
+            batch_size: 2,
+            pool_window: 2,
+        };
+        // The planner must actually split FC columns at this shape.
+        let g = plan_tile_grid(2, 256, 256, 4, 1);
+        assert!(g.panel_tiles > 1, "test shape does not exercise 2D: {g:?}");
+        let ds = Dataset::synthetic(&cfg, 8, 0.1, 19);
+        let (x, y, _) = ds.batch(0, 2);
+        let mut serial = Network::init(&cfg, 20);
+        let mut par2d = serial.clone();
+        let mut par1d = serial.clone();
+        let pool = ThreadPool::new(4);
+        let (sl, sc) = serial.train_batch(&x, &y, 2, 0.1);
+        let mut ws = StepWorkspace::new();
+        let r2 =
+            parallel_train_step(&pool, &mut par2d, &x, &y, 2, 0.1, TilePolicy::grid2d(2), &mut ws);
+        assert!((sl - r2.loss).abs() < 1e-5, "2d loss {sl} vs {}", r2.loss);
+        assert_eq!(sc, r2.correct);
+        assert!(
+            serial.weights.max_abs_diff(&par2d.weights) < 1e-4,
+            "2d weights diverged: {}",
+            serial.weights.max_abs_diff(&par2d.weights)
+        );
+        let mut ws1 = StepWorkspace::new();
+        let r1 = parallel_train_step(
+            &pool,
+            &mut par1d,
+            &x,
+            &y,
+            2,
+            0.1,
+            TilePolicy::rows_only(2),
+            &mut ws1,
+        );
+        assert!((sl - r1.loss).abs() < 1e-5, "rows-only loss {sl} vs {}", r1.loss);
+        assert!(
+            serial.weights.max_abs_diff(&par1d.weights) < 1e-4,
+            "rows-only weights diverged: {}",
+            serial.weights.max_abs_diff(&par1d.weights)
         );
     }
 
@@ -654,7 +860,16 @@ mod tests {
         let mut first = None;
         let mut last = 0.0;
         for _ in 0..40 {
-            let r = parallel_train_step(&pool, &mut net, &x, &y, 4, 0.3, 2, &mut ws);
+            let r = parallel_train_step(
+                &pool,
+                &mut net,
+                &x,
+                &y,
+                4,
+                0.3,
+                TilePolicy::grid2d(2),
+                &mut ws,
+            );
             first.get_or_insert(r.loss);
             last = r.loss;
         }
@@ -672,14 +887,15 @@ mod tests {
         let ds_big = Dataset::synthetic(&big, 8, 0.1, 15);
         let (xb, yb, _) = ds_big.batch(0, 4);
         let mut nb = Network::init(&big, 16);
-        parallel_train_step(&pool, &mut nb, &xb, &yb, 4, 0.1, 2, &mut ws);
+        parallel_train_step(&pool, &mut nb, &xb, &yb, 4, 0.1, TilePolicy::grid2d(2), &mut ws);
         // Now a smaller network through the *same* workspace.
         let ds_small = Dataset::synthetic(&small, 8, 0.1, 17);
         let (xs, ys, _) = ds_small.batch(0, 4);
         let mut np = Network::init(&small, 18);
         let mut ns = np.clone();
         let (sl, _) = ns.train_batch(&xs, &ys, 4, 0.1);
-        let r = parallel_train_step(&pool, &mut np, &xs, &ys, 4, 0.1, 2, &mut ws);
+        let r =
+            parallel_train_step(&pool, &mut np, &xs, &ys, 4, 0.1, TilePolicy::grid2d(2), &mut ws);
         assert!((sl - r.loss).abs() < 1e-5, "stale workspace leaked: {sl} vs {}", r.loss);
         assert!(ns.weights.max_abs_diff(&np.weights) < 1e-5);
     }

@@ -26,7 +26,7 @@ use crate::nn::ops::{self, ConvDims};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
 use super::dag::TaskDag;
-use super::scheduler::{execute_dag, ScheduleStats};
+use super::scheduler::{execute_dag, panel_count, plan_tile_grid, ScheduleStats, TileGrid};
 
 /// A buffer whose tasks write provably disjoint regions concurrently.
 ///
@@ -55,6 +55,29 @@ impl DisjointBuf {
         assert!(offset + len <= self.len, "disjoint window out of bounds");
         std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
     }
+
+    /// Raw pointer at `offset` — the output handle for the panel-windowed
+    /// GEMM entry points ([`ops::gemm_packed_acc_panels_raw`]), whose 2D
+    /// tiles write strided column windows that no `&mut` slice could cover
+    /// without aliasing a neighbour tile's elements. Creating the pointer is
+    /// safe; dereferences inherit the disjoint-window contract.
+    pub fn ptr_at(&self, offset: usize) -> *mut f32 {
+        assert!(offset <= self.len, "offset out of bounds");
+        // SAFETY: offset is within (or one past the end of) the buffer.
+        unsafe { self.ptr.add(offset) }
+    }
+
+    /// Shared view of `[offset, offset+len)` — for tiles that *read* a
+    /// window other tasks finished writing (e.g. dx tiles reading masked
+    /// `dy` rows after their dependency barrier).
+    ///
+    /// # Safety
+    /// No concurrent task may write any element of the window while the
+    /// returned borrow lives.
+    pub unsafe fn slice_ref(&self, offset: usize, len: usize) -> &[f32] {
+        assert!(offset + len <= self.len, "disjoint window out of bounds");
+        std::slice::from_raw_parts(self.ptr.add(offset), len)
+    }
 }
 
 /// Payload of one convolution task: image index + row range.
@@ -63,6 +86,23 @@ pub struct ConvTask {
     pub n: usize,
     pub y0: usize,
     pub rows: usize,
+}
+
+/// Payload of one **2D** convolution tile: image index + row range +
+/// output-channel panel range. With `np` covering all panels this is
+/// exactly a [`ConvTask`]; with a real panel split, several tiles share the
+/// same rows (each re-lowers the patch matrix — the price of keeping all
+/// workers busy when `batch × H` row tiles alone cannot) and write disjoint
+/// column windows of the output.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvTile {
+    pub n: usize,
+    pub y0: usize,
+    pub rows: usize,
+    /// First NR-column output panel of this tile.
+    pub p0: usize,
+    /// Panels covered.
+    pub np: usize,
 }
 
 /// Build the Algorithm 4.1 task list for one SAME conv layer: `K_C` output
@@ -89,8 +129,40 @@ pub fn conv_task_dag(d: &ConvDims, rows_per_task: usize) -> TaskDag<ConvTask> {
     dag
 }
 
+/// Build the 2D tile list for one SAME conv layer: row tiles per image ×
+/// output-channel panel tiles (all independent, level-0, mirroring Fig. 6).
+pub fn conv_tile_dag(d: &ConvDims, grid: &TileGrid) -> TaskDag<ConvTile> {
+    let mut dag = TaskDag::new();
+    let panels = panel_count(d.co);
+    // Cost model: rows × W output patches × jw columns × k²·C MACs each.
+    let cost_per_el = (d.w * d.k * d.k * d.c) as f64;
+    for n in 0..d.n {
+        let mut y = 0;
+        while y < d.h {
+            let rows = grid.rows_per_tile.min(d.h - y);
+            let mut p = 0;
+            while p < panels {
+                let np = grid.panels_per_tile.min(panels - p);
+                let (_, jw) = ops::panel_window(d.co, p, np);
+                dag.add(
+                    format!("conv[n{n},y{y}+{rows},p{p}]"),
+                    cost_per_el * (rows * jw) as f64,
+                    &[],
+                    ConvTile { n, y0: y, rows, p0: p, np },
+                );
+                p += np;
+            }
+            y += rows;
+        }
+    }
+    dag
+}
+
 /// Execute a SAME conv layer with the task-parallel decomposition on the
-/// pool; numerically identical to `ops::conv2d_same_fwd`.
+/// pool; numerically identical to `ops::conv2d_same_fwd`. The tile grid
+/// comes from the planner: row tiles at `rows_per_task` granularity, plus
+/// output-channel panel tiles when row tiles alone cannot feed the workers
+/// (small batch × small H).
 ///
 /// Dispatch is zero-copy (`x`/`f`/`bias` are borrowed by the tasks, the
 /// filter is packed once and shared) and the task body is allocation-free
@@ -105,13 +177,15 @@ pub fn conv2d_parallel(
     rows_per_task: usize,
 ) -> ScheduleStats {
     let packed = ops::pack_filter(d, f);
-    conv2d_parallel_packed(pool, d, x, &packed, bias, out, rows_per_task)
+    let grid = plan_tile_grid(d.n * d.h, d.k * d.k * d.c, d.co, pool.size(), rows_per_task);
+    conv2d_parallel_packed(pool, d, x, &packed, bias, out, grid)
 }
 
-/// [`conv2d_parallel`] on a caller-provided filter pack — the form the
-/// workspace train step uses, so the per-layer pack comes from the
+/// [`conv2d_parallel`] on a caller-provided filter pack and tile grid — the
+/// form the workspace train step uses, so the per-layer pack comes from the
 /// network's [`crate::nn::WeightPacks`] cache instead of being rebuilt
-/// every call.
+/// every call, and the grid from the step's [`crate::inner::TilePolicy`]
+/// plan.
 pub fn conv2d_parallel_packed(
     pool: &ThreadPool,
     d: &ConvDims,
@@ -119,29 +193,39 @@ pub fn conv2d_parallel_packed(
     packed: &ops::PackedB,
     bias: &[f32],
     out: &mut [f32],
-    rows_per_task: usize,
+    grid: TileGrid,
 ) -> ScheduleStats {
     assert_eq!(out.len(), d.y_len());
     assert_eq!(x.len(), d.x_len());
-    let dag = conv_task_dag(d, rows_per_task);
+    assert_eq!(packed.n(), d.co);
+    grid.check();
+    let dag = conv_tile_dag(d, &grid);
     let shared = DisjointBuf::new(out);
-    let row_len = d.w * d.co;
     let dd = *d;
     let kkc = dd.k * dd.k * dd.c;
     let arenas = pool.arenas();
-    execute_dag(pool, dag, move |worker: usize, task: &ConvTask| {
-        let offset = (task.n * dd.h + task.y0) * row_len;
-        let len = task.rows * row_len;
-        // SAFETY: task (n, y0, rows) exclusively owns output rows
-        // [y0, y0+rows) of image n; ranges never overlap across tasks.
-        let tile = unsafe { shared.slice_mut(offset, len) };
+    execute_dag(pool, dag, move |worker: usize, t: &ConvTile| {
+        let (j0, jw) = ops::panel_window(dd.co, t.p0, t.np);
+        let patches = t.rows * dd.w;
+        let base = (t.n * dd.h + t.y0) * dd.w * dd.co;
+        // Bias-seed the tile's column window, one patch row at a time.
+        // SAFETY: tile (n, y0, rows, p0, np) exclusively owns these
+        // (row × column-window) elements; windows never overlap across
+        // concurrent tiles.
+        for px in 0..patches {
+            let row = unsafe { shared.slice_mut(base + px * dd.co + j0, jw) };
+            row.copy_from_slice(&bias[j0..j0 + jw]);
+        }
         // Worker-persistent im2col scratch (uncontended: only worker
         // `worker` runs tasks pinned to it, one at a time).
         let mut arena = arenas[worker].lock().unwrap();
-        let cols = ScratchArena::grow(&mut arena.cols, task.rows * dd.w * kkc);
-        ops::conv2d_same_rows_packed(
-            &dd, x, packed, bias, task.n, task.y0, task.rows, cols, tile,
-        );
+        let cols = ScratchArena::grow(&mut arena.cols, patches * kkc);
+        ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
+        // SAFETY: the panel-windowed GEMM writes only the column window this
+        // tile owns.
+        unsafe {
+            ops::gemm_packed_acc_panels_raw(patches, cols, packed, shared.ptr_at(base), t.p0, t.np);
+        }
     })
 }
 
@@ -223,6 +307,41 @@ mod tests {
         conv2d_parallel(&pool, &small, &sx, &sf, &sb, &mut par, 2);
         for (a, b) in par.iter().zip(serial.iter()) {
             assert!((a - b).abs() < 1e-5, "stale arena contents leaked: {a} vs {b}");
+        }
+    }
+
+    /// Forced column tiles (co spanning several NR panels) match the serial
+    /// reference at every panel granularity — including the ragged final
+    /// panel and 1×1-ish spatial dims where rows alone cannot parallelize.
+    #[test]
+    fn column_tiles_match_serial_at_all_panel_granularities() {
+        let mut rng = Xoshiro256::new(31);
+        for d in [
+            ConvDims { n: 2, h: 3, w: 4, c: 3, k: 3, co: 20 }, // 3 panels, ragged
+            ConvDims { n: 2, h: 1, w: 1, c: 2, k: 1, co: 17 }, // 1×1 spatial
+        ] {
+            let x = rand_vec(&mut rng, d.x_len());
+            let f = rand_vec(&mut rng, d.f_len());
+            let b = rand_vec(&mut rng, d.co);
+            let mut serial = vec![0.0; d.y_len()];
+            ops::conv2d_same_fwd(&d, &x, &f, &b, &mut serial);
+            let packed = ops::pack_filter(&d, &f);
+            let pool = ThreadPool::new(4);
+            let panels = panel_count(d.co);
+            for ppt in 1..=panels {
+                let grid = TileGrid {
+                    rows_per_tile: 2.min(d.h),
+                    row_tiles: (d.n * d.h + 1) / 2.min(d.h),
+                    panels_per_tile: ppt,
+                    panel_tiles: (panels + ppt - 1) / ppt,
+                };
+                let mut par = vec![0.0; d.y_len()];
+                let stats = conv2d_parallel_packed(&pool, &d, &x, &packed, &b, &mut par, grid);
+                assert!(stats.tasks >= grid.panel_tiles, "ppt={ppt}");
+                for (a, bb) in par.iter().zip(serial.iter()) {
+                    assert!((a - bb).abs() < 1e-5, "ppt={ppt} ({d:?}): {a} vs {bb}");
+                }
+            }
         }
     }
 

@@ -6,12 +6,16 @@
 //! specifically for FC layers).
 //!
 //! Decomposition mirrors `conv_tasks`/`bp_tasks`:
-//! * **FC forward/backward** — batch-row tiles contracted on the shared
-//!   packed-B 4×8 micro-kernel (`gemm_packed_acc` over a weight pack cached
-//!   in the network's [`crate::nn::WeightPacks`]); backward tiles accumulate
-//!   their dW/db partials into the *executing worker's* persistent
-//!   [`ScratchArena`] and a sequential post-barrier reduce combines them —
-//!   no mutex in any task body, no per-task allocation.
+//! * **FC forward/backward** — 2D batch-row × packed-panel tiles
+//!   ([`Tile2`], grids from [`crate::inner::plan_tile_grid`]) contracted on
+//!   the shared panel-windowed 4×8 micro-kernel over a weight pack cached
+//!   in the network's [`crate::nn::WeightPacks`]. Columns split exactly
+//!   when batch rows alone cannot feed the pool (small batch × wide FC);
+//!   backward tiles accumulate their dW/db partials into **disjoint column
+//!   stripes** of the *executing worker's* persistent [`ScratchArena`] and
+//!   a post-barrier stripe-sequential reduce combines them
+//!   ([`reduce_arena_grads`]) — no mutex in any task body, no per-task
+//!   allocation.
 //! * **ReLU** — fused into the producing/consuming tile where possible
 //!   (forward tiles apply it before writing; backward tiles mask their `dy`
 //!   rows in place), with standalone chunk tasks for the conv activations.
@@ -19,18 +23,31 @@
 //! * **Loss** — row tiles write disjoint `dlogits`/`probs` rows and report
 //!   per-task (Σerr², correct) partials into caller-provided slots.
 
+use std::sync::Arc;
+
 use crate::nn::ops::{self, PackedB};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
 use super::conv_tasks::DisjointBuf;
 use super::dag::TaskDag;
-use super::scheduler::{execute_dag, ScheduleStats};
+use super::scheduler::{execute_dag, panel_count, ScheduleStats, TileGrid};
 
 /// One batch-row tile: rows `[i0, i0+rows)` of a `(m, ·)` matrix.
 #[derive(Debug, Clone, Copy)]
 pub struct RowTask {
     pub i0: usize,
     pub rows: usize,
+}
+
+/// One 2D tile: rows `[i0, i0+rows)` × packed panels `[p0, p0+np)` of a
+/// `(m, n)` matrix — the dense analogue of
+/// [`super::conv_tasks::ConvTile`].
+#[derive(Debug, Clone, Copy)]
+pub struct Tile2 {
+    pub i0: usize,
+    pub rows: usize,
+    pub p0: usize,
+    pub np: usize,
 }
 
 fn row_tile_dag(
@@ -50,6 +67,31 @@ fn row_tile_dag(
             &[],
             RowTask { i0: i, rows },
         );
+        i += rows;
+    }
+    dag
+}
+
+/// Level-0 2D tile list over a `(m, n)` output: row tiles × panel tiles of
+/// `grid`; `cost_per_el` prices one output element for Alg.-4.2 balancing.
+fn tile2_dag(m: usize, n: usize, grid: &TileGrid, cost_per_el: f64, label: &str) -> TaskDag<Tile2> {
+    let mut dag = TaskDag::new();
+    let panels = panel_count(n);
+    let mut i = 0;
+    while i < m {
+        let rows = grid.rows_per_tile.min(m - i);
+        let mut p = 0;
+        while p < panels {
+            let np = grid.panels_per_tile.min(panels - p);
+            let (_, jw) = ops::panel_window(n, p, np);
+            dag.add(
+                format!("{label}[i{i}+{rows},p{p}]"),
+                cost_per_el * (rows * jw) as f64,
+                &[],
+                Tile2 { i0: i, rows, p0: p, np },
+            );
+            p += np;
+        }
         i += rows;
     }
     dag
@@ -78,10 +120,12 @@ impl<T> DisjointSlots<T> {
     }
 }
 
-/// Dense forward `out = x · W + b` (optionally fused ReLU) as batch-row
+/// Dense forward `out = x · W + b` (optionally fused ReLU) as 2D row×panel
 /// tiles on the pool. `w` is the layer's cached weight pack, shared
-/// read-only by every tile; tiles write disjoint row slices, task bodies
-/// allocate nothing. Numerically ≡ [`ops::dense_fwd_packed`].
+/// read-only by every tile; tiles write disjoint (row-range ×
+/// column-window) element sets, task bodies allocate nothing. Numerically ≡
+/// [`ops::dense_fwd_packed`] bit for bit (each panel owns an independent
+/// register accumulator, so the column split does not regroup sums).
 #[allow(clippy::too_many_arguments)]
 pub fn dense_fwd_parallel(
     pool: &ThreadPool,
@@ -91,32 +135,61 @@ pub fn dense_fwd_parallel(
     bias: &[f32],
     out: &mut [f32],
     relu: bool,
-    rows_per_task: usize,
+    grid: TileGrid,
 ) -> ScheduleStats {
     let (k, n) = (w.kk(), w.n());
     assert_eq!(x.len(), m * k);
     assert_eq!(bias.len(), n);
     assert_eq!(out.len(), m * n);
-    let dag = row_tile_dag(m, rows_per_task, (2 * k * n) as f64, "dense_fwd");
+    grid.check();
+    let dag = tile2_dag(m, n, &grid, (2 * k) as f64, "dense_fwd");
     let shared = DisjointBuf::new(out);
-    execute_dag(pool, dag, move |_worker, task: &RowTask| {
-        // SAFETY: tile (i0, rows) exclusively owns out rows [i0, i0+rows).
-        let tile = unsafe { shared.slice_mut(task.i0 * n, task.rows * n) };
-        let xt = &x[task.i0 * k..(task.i0 + task.rows) * k];
-        ops::dense_fwd_packed(task.rows, xt, w, bias, tile);
+    execute_dag(pool, dag, move |_worker, t: &Tile2| {
+        let (j0, jw) = ops::panel_window(n, t.p0, t.np);
+        // Bias-seed the tile's column window row by row. SAFETY: tile
+        // (i0, rows, p0, np) exclusively owns these elements; concurrent
+        // tiles cover other rows or other column windows.
+        for r in t.i0..t.i0 + t.rows {
+            let row = unsafe { shared.slice_mut(r * n + j0, jw) };
+            row.copy_from_slice(&bias[j0..j0 + jw]);
+        }
+        let xt = &x[t.i0 * k..(t.i0 + t.rows) * k];
+        // SAFETY: the panel-windowed GEMM writes only this tile's window.
+        unsafe {
+            ops::gemm_packed_acc_panels_raw(t.rows, xt, w, shared.ptr_at(t.i0 * n), t.p0, t.np);
+        }
         if relu {
-            ops::relu_fwd(tile);
+            for r in t.i0..t.i0 + t.rows {
+                // SAFETY: same exclusive window as above.
+                ops::relu_fwd(unsafe { shared.slice_mut(r * n + j0, jw) });
+            }
         }
     })
 }
 
-/// Dense backward as batch-row tiles: each tile (optionally) applies the
-/// ReLU mask to its `dy` rows in place, computes its `dx` rows on the
-/// packed transpose (`dx = dy · Wᵀ`), and accumulates its dW/db partial
-/// into the executing worker's [`ScratchArena`]; the partials are reduced
-/// sequentially after the barrier, exactly like `bp_tasks`. Numerically ≡
-/// `relu_bwd` (when `relu_out` is given) followed by
-/// [`ops::dense_bwd_packed`], to f32 reduction-order tolerance in dW/db.
+/// One task of the two-phase 2D dense backward.
+enum DenseBwdTile {
+    /// Mask its `dy` column window (ReLU) + accumulate the dW/db stripe for
+    /// that window into the executing worker's arena.
+    Grad(Tile2),
+    /// `dx` tile over a transposed-pack (k-column) panel window; depends on
+    /// every [`DenseBwdTile::Grad`] task of its row range (they mask `dy`
+    /// in place, and `dx = dy · Wᵀ` contracts over *all* of `n`).
+    Dx(Tile2),
+}
+
+/// Dense backward as 2D tiles: each tile (optionally) applies the ReLU mask
+/// to its `dy` window in place, accumulates its dW/db **column stripe**
+/// into a disjoint stripe of the executing worker's [`ScratchArena`], and —
+/// once all of a row range's windows are masked — `dx` tiles compute
+/// `dx = dy · Wᵀ` over panel windows of the transposed pack. With both
+/// grids at a single column tile this collapses to the fused row-tile path
+/// (one task per row range, no second phase — the pre-2D engine, kept so
+/// large-batch steps pay no extra dispatch). The per-worker partials are
+/// reduced after the barrier, stripe-sequentially and contention-free
+/// ([`reduce_arena_grads`]). Numerically ≡ `relu_bwd` (when `relu_out` is
+/// given) followed by [`ops::dense_bwd_packed`], to f32 reduction-order
+/// tolerance in dW/db (`dx` and the mask are bit-identical).
 #[allow(clippy::too_many_arguments)]
 pub fn dense_bwd_parallel(
     pool: &ThreadPool,
@@ -130,7 +203,8 @@ pub fn dense_bwd_parallel(
     dx: &mut [f32],
     dw: &mut [f32],
     db: &mut [f32],
-    rows_per_task: usize,
+    dy_grid: TileGrid,
+    dx_grid: TileGrid,
 ) -> ScheduleStats {
     assert_eq!(wt.kk(), n, "wt must be the transposed pack");
     assert_eq!(wt.n(), k, "wt must be the transposed pack");
@@ -139,52 +213,225 @@ pub fn dense_bwd_parallel(
     assert_eq!(dx.len(), m * k);
     assert_eq!(dw.len(), k * n);
     assert_eq!(db.len(), n);
+    assert_eq!(
+        dy_grid.rows_per_tile, dx_grid.rows_per_tile,
+        "backward grids must share the row split"
+    );
+    dy_grid.check();
+    dx_grid.check();
     if let Some(r) = relu_out {
         assert_eq!(r.len(), m * n);
     }
     // Size + zero each worker's gradient accumulators for this layer call.
-    for arena in pool.arenas() {
-        let mut g = arena.lock().unwrap();
-        ScratchArena::grow_zeroed(&mut g.grad_f, k * n);
-        ScratchArena::grow_zeroed(&mut g.grad_b, n);
-    }
-    let dag = row_tile_dag(m, rows_per_task, (4 * k * n) as f64, "dense_bwd");
+    zero_arena_grads(pool, k * n, n);
+    let arenas = pool.arenas();
     let dy_buf = DisjointBuf::new(dy);
     let dx_buf = DisjointBuf::new(dx);
-    let arenas = pool.arenas();
-    let stats = execute_dag(pool, dag, move |worker, task: &RowTask| {
-        // SAFETY: tile (i0, rows) exclusively owns its dy and dx rows.
-        let dyt = unsafe { dy_buf.slice_mut(task.i0 * n, task.rows * n) };
-        let dxt = unsafe { dx_buf.slice_mut(task.i0 * k, task.rows * k) };
-        if let Some(out) = relu_out {
-            ops::relu_bwd(&out[task.i0 * n..(task.i0 + task.rows) * n], dyt);
-        }
-        let xt = &x[task.i0 * k..(task.i0 + task.rows) * k];
-        let mut arena = arenas[worker].lock().unwrap();
-        let arena = &mut *arena;
-        dxt.fill(0.0);
-        ops::gemm_packed_acc(task.rows, dyt, wt, dxt);
-        ops::gemm_tn_acc(task.rows, k, n, xt, dyt, &mut arena.grad_f[..k * n]);
-        let gb = &mut arena.grad_b[..n];
-        for row in dyt.chunks_exact(n) {
-            for (acc, &v) in gb.iter_mut().zip(row.iter()) {
-                *acc += v;
+
+    let stats = if dy_grid.panel_tiles == 1 && dx_grid.panel_tiles == 1 {
+        // Fused row-tile fast path: one task masks, computes dx and
+        // accumulates dW/db for its rows.
+        let dag = row_tile_dag(m, dy_grid.rows_per_tile, (4 * k * n) as f64, "dense_bwd");
+        execute_dag(pool, dag, move |worker, task: &RowTask| {
+            // SAFETY: tile (i0, rows) exclusively owns its dy and dx rows.
+            let dyt = unsafe { dy_buf.slice_mut(task.i0 * n, task.rows * n) };
+            let dxt = unsafe { dx_buf.slice_mut(task.i0 * k, task.rows * k) };
+            if let Some(out) = relu_out {
+                ops::relu_bwd(&out[task.i0 * n..(task.i0 + task.rows) * n], dyt);
             }
+            let xt = &x[task.i0 * k..(task.i0 + task.rows) * k];
+            let mut arena = arenas[worker].lock().unwrap();
+            let arena = &mut *arena;
+            dxt.fill(0.0);
+            ops::gemm_packed_acc(task.rows, dyt, wt, dxt);
+            ops::gemm_tn_acc(task.rows, k, n, xt, dyt, &mut arena.grad_f[..k * n]);
+            let gb = &mut arena.grad_b[..n];
+            for row in dyt.chunks_exact(n) {
+                for (acc, &v) in gb.iter_mut().zip(row.iter()) {
+                    *acc += v;
+                }
+            }
+        })
+    } else {
+        // Two-phase 2D DAG: per row range, Grad tiles (level 0) over dy
+        // column windows, then Dx tiles (level 1) over wt panel windows.
+        let panels_n = panel_count(n);
+        let panels_k = panel_count(k);
+        let mut dag: TaskDag<DenseBwdTile> = TaskDag::new();
+        let mut grad_ids = Vec::with_capacity(dy_grid.panel_tiles);
+        let mut i = 0;
+        while i < m {
+            let rows = dy_grid.rows_per_tile.min(m - i);
+            grad_ids.clear();
+            let mut p = 0;
+            while p < panels_n {
+                let np = dy_grid.panels_per_tile.min(panels_n - p);
+                let (_, jw) = ops::panel_window(n, p, np);
+                grad_ids.push(dag.add(
+                    format!("dense_bwd_grad[i{i},p{p}]"),
+                    (2 * k * rows * jw) as f64,
+                    &[],
+                    DenseBwdTile::Grad(Tile2 { i0: i, rows, p0: p, np }),
+                ));
+                p += np;
+            }
+            let mut q = 0;
+            while q < panels_k {
+                let nq = dx_grid.panels_per_tile.min(panels_k - q);
+                let (_, qw) = ops::panel_window(k, q, nq);
+                dag.add(
+                    format!("dense_bwd_dx[i{i},p{q}]"),
+                    (2 * n * rows * qw) as f64,
+                    &grad_ids,
+                    DenseBwdTile::Dx(Tile2 { i0: i, rows, p0: q, np: nq }),
+                );
+                q += nq;
+            }
+            i += rows;
         }
-    });
-    // Sequential reduce of the per-worker partials (the Fig.-9 reduce node).
-    dw.fill(0.0);
+        execute_dag(pool, dag, move |worker, task: &DenseBwdTile| match *task {
+            DenseBwdTile::Grad(t) => {
+                let (j0, jw) = ops::panel_window(n, t.p0, t.np);
+                let mut arena = arenas[worker].lock().unwrap();
+                let arena = &mut *arena;
+                let gb = &mut arena.grad_b[j0..j0 + jw];
+                for r in t.i0..t.i0 + t.rows {
+                    // SAFETY: this tile exclusively owns the (row ×
+                    // column-window) dy elements it masks and reads.
+                    let w = unsafe { dy_buf.slice_mut(r * n + j0, jw) };
+                    if let Some(out) = relu_out {
+                        ops::relu_bwd(&out[r * n + j0..r * n + j0 + jw], w);
+                    }
+                    for (acc, &v) in gb.iter_mut().zip(w.iter()) {
+                        *acc += v;
+                    }
+                }
+                let xt = &x[t.i0 * k..(t.i0 + t.rows) * k];
+                // SAFETY: dy reads and grad_f writes stay inside the column
+                // window; grad_f is the worker's own arena.
+                unsafe {
+                    ops::gemm_tn_acc_cols_raw(
+                        t.rows,
+                        k,
+                        n,
+                        xt,
+                        dy_buf.ptr_at(t.i0 * n) as *const f32,
+                        arena.grad_f.as_mut_ptr(),
+                        j0,
+                        jw,
+                    );
+                }
+            }
+            DenseBwdTile::Dx(t) => {
+                let (j0, jw) = ops::panel_window(k, t.p0, t.np);
+                for r in t.i0..t.i0 + t.rows {
+                    // SAFETY: this tile exclusively owns its dx window.
+                    unsafe { dx_buf.slice_mut(r * k + j0, jw) }.fill(0.0);
+                }
+                // SAFETY: the DAG dependencies guarantee rows [i0, i0+rows)
+                // of dy are fully masked and no longer written; reading them
+                // shared is sound. dx writes stay inside this tile's window.
+                let dyt = unsafe { dy_buf.slice_ref(t.i0 * n, t.rows * n) };
+                unsafe {
+                    ops::gemm_packed_acc_panels_raw(
+                        t.rows,
+                        dyt,
+                        wt,
+                        dx_buf.ptr_at(t.i0 * k),
+                        t.p0,
+                        t.np,
+                    );
+                }
+            }
+        })
+    };
+    // Post-barrier reduce of the per-worker partials (the Fig.-9 reduce
+    // node): stripe-sequential, contention-free.
+    reduce_arena_grads(pool, dw, db);
+    stats
+}
+
+/// Size + zero every worker's `grad_f`/`grad_b` accumulators before a
+/// backward layer call dispatches. Small accumulators zero sequentially on
+/// the calling thread; wide-FC ones (where a sequential memset of
+/// `workers × |dW|` floats would rival the GEMM itself) are zeroed by one
+/// job pinned to each worker — parallel across the pool and first-touch
+/// local to the worker that will accumulate into them.
+pub(crate) fn zero_arena_grads(pool: &ThreadPool, f_len: usize, b_len: usize) {
+    /// Matches the reduce threshold: below this the dispatch overhead wins.
+    const PAR_ZERO_MIN: usize = 64 * 1024;
+    if f_len < PAR_ZERO_MIN || pool.size() < 2 {
+        for arena in pool.arenas() {
+            let mut g = arena.lock().unwrap();
+            let g = &mut *g;
+            ScratchArena::grow_zeroed(&mut g.grad_f, f_len);
+            ScratchArena::grow_zeroed(&mut g.grad_b, b_len);
+        }
+        return;
+    }
+    for w in 0..pool.size() {
+        let arena = Arc::clone(pool.arena(w));
+        pool.execute_on(w, move || {
+            let mut g = arena.lock().unwrap();
+            let g = &mut *g;
+            ScratchArena::grow_zeroed(&mut g.grad_f, f_len);
+            ScratchArena::grow_zeroed(&mut g.grad_b, b_len);
+        });
+    }
+    // The layer call owns the pool (no concurrent layer calls), so idle ⇔
+    // all zeroing jobs finished.
+    pool.wait_idle();
+}
+
+/// Reduce the per-worker `grad_f`/`grad_b` arena partials into `dw`/`db`
+/// after a backward layer call's barrier. `db` (and small `dw`s) reduce
+/// sequentially on the calling thread; a large `dw` (wide-FC layers, where
+/// the sequential sweep would rival the GEMM itself) is reduced by parallel
+/// chunk tasks — each chunk of `dw` is summed across all arenas by exactly
+/// one task, so the reduce is sequential *per stripe* and workers never
+/// contend (the calling thread holds the arena locks; tasks read the
+/// partials through shared borrows and write disjoint `dw` chunks).
+pub(crate) fn reduce_arena_grads(pool: &ThreadPool, dw: &mut [f32], db: &mut [f32]) {
+    /// Below this many elements the sequential sweep wins (parallel reduce
+    /// pays one dispatch per chunk).
+    const PAR_REDUCE_MIN: usize = 64 * 1024;
+    let guards: Vec<_> = pool.arenas().iter().map(|a| a.lock().unwrap()).collect();
     db.fill(0.0);
-    for arena in pool.arenas() {
-        let g = arena.lock().unwrap();
-        for (acc, &v) in dw.iter_mut().zip(g.grad_f.iter()) {
-            *acc += v;
-        }
+    for g in &guards {
         for (acc, &v) in db.iter_mut().zip(g.grad_b.iter()) {
             *acc += v;
         }
     }
-    stats
+    dw.fill(0.0);
+    if dw.len() < PAR_REDUCE_MIN || pool.size() < 2 {
+        for g in &guards {
+            for (acc, &v) in dw.iter_mut().zip(g.grad_f.iter()) {
+                *acc += v;
+            }
+        }
+        return;
+    }
+    let len = dw.len();
+    let parts: Vec<&[f32]> = guards.iter().map(|g| &g.grad_f[..len]).collect();
+    let per = (len + 2 * pool.size() - 1) / (2 * pool.size());
+    let mut dag: TaskDag<(usize, usize)> = TaskDag::new();
+    let mut off = 0;
+    while off < len {
+        let l = per.min(len - off);
+        dag.add("grad_reduce", l as f64, &[], (off, l));
+        off += l;
+    }
+    let out = DisjointBuf::new(dw);
+    let parts_ref: &[&[f32]] = &parts;
+    execute_dag(pool, dag, move |_, &(off, l)| {
+        // SAFETY: chunks tile dw disjointly.
+        let o = unsafe { out.slice_mut(off, l) };
+        for p in parts_ref {
+            for (acc, &v) in o.iter_mut().zip(p[off..off + l].iter()) {
+                *acc += v;
+            }
+        }
+    });
 }
 
 /// Mean-pool forward, one task per image (disjoint output slices).
@@ -360,10 +607,12 @@ mod tests {
         (0..n).map(|_| rng.normal(0.0, 1.0) as f32).collect()
     }
 
+    /// Every combination of row granularity × panel granularity (including
+    /// single-panel ragged `n`) is bit-identical to the serial packed path.
     #[test]
     fn dense_fwd_parallel_matches_serial_all_granularities() {
         let mut rng = Xoshiro256::new(41);
-        let (m, k, n) = (7usize, 10usize, 9usize); // ragged on purpose
+        let (m, k, n) = (7usize, 10usize, 19usize); // ragged rows and panels
         let x = rand_vec(&mut rng, m * k);
         let w = rand_vec(&mut rng, k * n);
         let b = rand_vec(&mut rng, n);
@@ -371,19 +620,32 @@ mod tests {
         let mut serial = vec![0.0f32; m * n];
         ops::dense_fwd_packed(m, &x, &packed, &b, &mut serial);
         let pool = ThreadPool::new(4);
+        let panels = panel_count(n);
         for rows in [1usize, 2, 3, 7] {
-            let mut par = vec![0.0f32; m * n];
-            let stats = dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, false, rows);
-            assert_eq!(stats.tasks, (m + rows - 1) / rows);
-            assert_eq!(par, serial, "rows={rows}");
+            for ppt in 1..=panels {
+                let grid = TileGrid {
+                    rows_per_tile: rows,
+                    row_tiles: (m + rows - 1) / rows,
+                    panels_per_tile: ppt,
+                    panel_tiles: (panels + ppt - 1) / ppt,
+                };
+                let mut par = vec![0.0f32; m * n];
+                let stats = dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, false, grid);
+                assert_eq!(stats.tasks, grid.tiles(), "rows={rows} ppt={ppt}");
+                assert_eq!(par, serial, "rows={rows} ppt={ppt}");
+            }
         }
-        // Fused ReLU == serial ReLU after the fact.
+        // Fused ReLU == serial ReLU after the fact, across column tiles.
         ops::relu_fwd(&mut serial);
         let mut par = vec![0.0f32; m * n];
-        dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, true, 2);
+        let grid =
+            TileGrid { rows_per_tile: 2, row_tiles: 4, panels_per_tile: 1, panel_tiles: panels };
+        dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, true, grid);
         assert_eq!(par, serial);
     }
 
+    /// Row-only grids on both spaces (the fused fast path) match the serial
+    /// packed reference.
     #[test]
     fn dense_bwd_parallel_matches_serial() {
         let mut rng = Xoshiro256::new(43);
@@ -403,7 +665,19 @@ mod tests {
             let mut dw_p = vec![0.0f32; k * n];
             let mut db_p = vec![0.0f32; n];
             dense_bwd_parallel(
-                &pool, m, k, n, &x, &wt, &mut dy, None, &mut dx_p, &mut dw_p, &mut db_p, rows,
+                &pool,
+                m,
+                k,
+                n,
+                &x,
+                &wt,
+                &mut dy,
+                None,
+                &mut dx_p,
+                &mut dw_p,
+                &mut db_p,
+                TileGrid::rows_only(m, rows, n),
+                TileGrid::rows_only(m, rows, k),
             );
             assert_eq!(dx_p, dx_s, "rows={rows}");
             for (a, b) in dw_p.iter().zip(dw_s.iter()) {
@@ -411,6 +685,76 @@ mod tests {
             }
             for (a, b) in db_p.iter().zip(db_s.iter()) {
                 assert!((a - b).abs() < 1e-4, "db rows={rows}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Column-split grids (the two-phase DAG: masked dW/db stripes, then dx
+    /// panel tiles) match the serial reference at every panel granularity —
+    /// ragged `n` and `k`, batch smaller than the pool, fused ReLU mask.
+    #[test]
+    fn dense_bwd_parallel_2d_matches_serial() {
+        let mut rng = Xoshiro256::new(44);
+        let (m, k, n) = (3usize, 21usize, 19usize); // 3 k-panels, 3 n-panels
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let dy0 = rand_vec(&mut rng, m * n);
+        let relu_out = {
+            let mut o = rand_vec(&mut rng, m * n);
+            ops::relu_fwd(&mut o);
+            o
+        };
+        let wt = PackedB::pack_transposed(k, n, &w);
+        let mut dy_s = dy0.clone();
+        ops::relu_bwd(&relu_out, &mut dy_s);
+        let mut dx_s = vec![0.0f32; m * k];
+        let mut dw_s = vec![0.0f32; k * n];
+        let mut db_s = vec![0.0f32; n];
+        ops::dense_bwd_packed(m, k, n, &x, &wt, &dy_s, &mut dx_s, &mut dw_s, &mut db_s);
+        let pool = ThreadPool::new(4);
+        let panels_n = panel_count(n);
+        let panels_k = panel_count(k);
+        for ppt_n in 1..=panels_n {
+            for ppt_k in [1usize, panels_k] {
+                let dy_grid = TileGrid {
+                    rows_per_tile: 2,
+                    row_tiles: 2,
+                    panels_per_tile: ppt_n,
+                    panel_tiles: (panels_n + ppt_n - 1) / ppt_n,
+                };
+                let dx_grid = TileGrid {
+                    rows_per_tile: 2,
+                    row_tiles: 2,
+                    panels_per_tile: ppt_k,
+                    panel_tiles: (panels_k + ppt_k - 1) / ppt_k,
+                };
+                let mut dy = dy0.clone();
+                let mut dx_p = vec![0.0f32; m * k];
+                let mut dw_p = vec![0.0f32; k * n];
+                let mut db_p = vec![0.0f32; n];
+                dense_bwd_parallel(
+                    &pool,
+                    m,
+                    k,
+                    n,
+                    &x,
+                    &wt,
+                    &mut dy,
+                    Some(&relu_out),
+                    &mut dx_p,
+                    &mut dw_p,
+                    &mut db_p,
+                    dy_grid,
+                    dx_grid,
+                );
+                assert_eq!(dy, dy_s, "mask ppt_n={ppt_n} ppt_k={ppt_k}");
+                assert_eq!(dx_p, dx_s, "dx ppt_n={ppt_n} ppt_k={ppt_k}");
+                for (a, b) in dw_p.iter().zip(dw_s.iter()) {
+                    assert!((a - b).abs() < 1e-4, "dw ppt_n={ppt_n} ppt_k={ppt_k}: {a} vs {b}");
+                }
+                for (a, b) in db_p.iter().zip(db_s.iter()) {
+                    assert!((a - b).abs() < 1e-4, "db ppt_n={ppt_n} ppt_k={ppt_k}: {a} vs {b}");
+                }
             }
         }
     }
@@ -442,7 +786,19 @@ mod tests {
         let mut dw_p = vec![0.0f32; k * n];
         let mut db_p = vec![0.0f32; n];
         dense_bwd_parallel(
-            &pool, m, k, n, &x, &wt, &mut dy_p, Some(&out), &mut dx_p, &mut dw_p, &mut db_p, 2,
+            &pool,
+            m,
+            k,
+            n,
+            &x,
+            &wt,
+            &mut dy_p,
+            Some(&out),
+            &mut dx_p,
+            &mut dw_p,
+            &mut db_p,
+            TileGrid::rows_only(m, 2, n),
+            TileGrid::rows_only(m, 2, k),
         );
         assert_eq!(dy_p, dy_s, "fused mask must equal explicit mask");
         assert_eq!(dx_p, dx_s);

@@ -3,6 +3,14 @@
 //! (backward pass), task-DAG construction with priority marking (§4.2(1)),
 //! and the priority scheduler with least-loaded thread assignment
 //! (Algorithm 4.2).
+//!
+//! Tiles are **2D row×column**: batch/image rows crossed with packed-B
+//! `NR`-column panel windows ([`TileGrid`], planned per stage by
+//! [`plan_tile_grid`]). Columns split exactly when rows alone cannot
+//! produce enough tiles to feed the pool — the paper's Table-2 cases 5–7
+//! (2000-neuron FC layers at small batch), where a single batch row's GEMM
+//! must span workers to keep strong scaling alive (cf. Dryden et al.,
+//! arXiv:1903.06681; Jia et al., arXiv:1802.04924).
 
 pub mod bp_tasks;
 pub mod conv_tasks;
@@ -12,8 +20,13 @@ pub mod priority;
 pub mod scheduler;
 
 pub use bp_tasks::{parallel_train_step, train_step_dag, ParallelStepResult};
-pub use conv_tasks::{conv2d_parallel, conv2d_parallel_packed, conv_task_dag, ConvTask};
+pub use conv_tasks::{
+    conv2d_parallel, conv2d_parallel_packed, conv_task_dag, conv_tile_dag, ConvTask, ConvTile,
+};
 pub use dag::{TaskDag, TaskId, TaskNode};
-pub use fc_tasks::{dense_bwd_parallel, dense_fwd_parallel, loss_parallel, RowTask};
+pub use fc_tasks::{dense_bwd_parallel, dense_fwd_parallel, loss_parallel, RowTask, Tile2};
 pub use priority::{mark_priorities, priority_order};
-pub use scheduler::{execute_dag, execute_sequential, ScheduleStats};
+pub use scheduler::{
+    execute_dag, execute_sequential, panel_count, plan_cols_for_rows, plan_tile_grid,
+    ScheduleStats, TileGrid, TilePolicy,
+};

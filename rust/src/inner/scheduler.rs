@@ -17,11 +17,199 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
+use crate::nn::ops::{MR, NR};
 use crate::util::stats;
 use crate::util::threadpool::ThreadPool;
 
 use super::dag::TaskDag;
 use super::priority::priority_order;
+
+// ---- 2D row×column tile planning ------------------------------------------
+
+/// Tiles per worker the planner aims for: enough slack for Algorithm 4.2's
+/// least-loaded assignment to balance uneven tiles, small enough that
+/// dispatch overhead stays amortized.
+pub const TILE_TARGET_PER_WORKER: usize = 2;
+
+/// FLOP floor per tile: the planner never splits a stage into tiles cheaper
+/// than this (dispatch costs ~µs; a tile this size computes for ~10× that).
+const MIN_TILE_FLOPS: usize = 32 * 1024;
+
+/// `⌈n/NR⌉` — the packed-B panel count of an `n`-column stage (the column
+/// grain of the 2D grid; a column tile is always a whole number of panels).
+pub fn panel_count(n: usize) -> usize {
+    (n.max(1) + NR - 1) / NR
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// A 2D row×column tile grid over one GEMM-shaped stage: rows are batch
+/// rows (dense) or image rows (conv), columns are packed-B `NR`-column
+/// panels. `panel_tiles == 1` is exactly the pre-2D row-only decomposition.
+///
+/// Produced by [`plan_tile_grid`]; the row/panel counts are what the dag
+/// builders iterate (per-image builders may produce more row tiles than
+/// `row_tiles` when rows cannot span images — the fields are the grid's
+/// *shape*, not a task-count promise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Rows per row tile (the final tile may be ragged).
+    pub rows_per_tile: usize,
+    /// Row-tile count over the planned row space.
+    pub row_tiles: usize,
+    /// NR-column panels per column tile (the final tile may be ragged).
+    pub panels_per_tile: usize,
+    /// Column-tile count; 1 ⇒ no column split.
+    pub panel_tiles: usize,
+}
+
+impl TileGrid {
+    /// Row-only grid at the given granularity — the pre-2D decomposition
+    /// (and the bench baseline the 2D grid is measured against).
+    pub fn rows_only(m: usize, rows_per_task: usize, n: usize) -> Self {
+        let m = m.max(1);
+        let rows_per_tile = rows_per_task.clamp(1, m);
+        TileGrid {
+            rows_per_tile,
+            row_tiles: ceil_div(m, rows_per_tile),
+            panels_per_tile: panel_count(n),
+            panel_tiles: 1,
+        }
+    }
+
+    /// Total tiles this grid yields over its planned row space.
+    pub fn tiles(&self) -> usize {
+        self.row_tiles * self.panel_tiles
+    }
+
+    /// Reject degenerate grids early. The fields are public so tests and
+    /// benches can hand-build grids; a zero granularity would make the dag
+    /// builders' `y += rows` / `p += np` loops spin forever, so the tile
+    /// executors assert here first (the planner never produces zeros).
+    pub fn check(&self) {
+        assert!(self.rows_per_tile >= 1, "degenerate grid: rows_per_tile = 0");
+        assert!(self.panels_per_tile >= 1, "degenerate grid: panels_per_tile = 0");
+    }
+}
+
+/// Plan the 2D tile grid for one GEMM-shaped stage: `m` output rows,
+/// contraction length `kk`, `n` output columns, `workers` pool threads,
+/// `rows_hint` the caller's 1D row granularity.
+///
+/// Heuristic: row tiles stay the decomposition of choice (contiguous A and
+/// C, no duplicated im2col); columns split **only** when rows alone cannot
+/// produce [`TILE_TARGET_PER_WORKER`]`× workers` tiles — the Table-2
+/// cases-5–7 regime (small batch, 2000-neuron FC layers), where a single
+/// batch row's GEMM must span workers to keep them busy. When columns do
+/// split, row tiles are first fattened to `MR` so each tile still feeds
+/// full 4×8 register tiles instead of 1-row edge kernels, and the split is
+/// capped so no tile drops under a FLOP floor (`MIN_TILE_FLOPS`).
+pub fn plan_tile_grid(m: usize, kk: usize, n: usize, workers: usize, rows_hint: usize) -> TileGrid {
+    let m = m.max(1);
+    let target = TILE_TARGET_PER_WORKER * workers.max(1);
+    let rows_per_tile = rows_hint.clamp(1, m);
+    let row_tiles = ceil_div(m, rows_per_tile);
+    if row_tiles >= target || panel_count(n) <= 1 || workers <= 1 {
+        return TileGrid::rows_only(m, rows_per_tile, n);
+    }
+    // Fatten row tiles to MR before splitting columns: a 2D tile should
+    // feed whole register tiles, not 1-row edge kernels.
+    let rows_per_tile = rows_per_tile.max(MR.min(m));
+    let row_tiles = ceil_div(m, rows_per_tile);
+    plan_cols_for_rows(rows_per_tile, row_tiles, kk, n, workers)
+}
+
+/// The column-split half of the planner with the row split already fixed —
+/// used directly where a second grid must share row tiles with an existing
+/// one (the dense backward's dx space mirrors the dy grid's rows, conv
+/// backward's dx space mirrors the df grid's rows).
+pub fn plan_cols_for_rows(
+    rows_per_tile: usize,
+    row_tiles: usize,
+    kk: usize,
+    n: usize,
+    workers: usize,
+) -> TileGrid {
+    let target = TILE_TARGET_PER_WORKER * workers.max(1);
+    let panels = panel_count(n);
+    // Tiles wanted from the column dimension, capped by the panel supply
+    // and by the work floor (2·rows·kk·n FLOPs split `want` ways).
+    let mut want = ceil_div(target, row_tiles.max(1));
+    let row_tile_flops = 2usize
+        .saturating_mul(rows_per_tile)
+        .saturating_mul(kk)
+        .saturating_mul(n);
+    want = want.min((row_tile_flops / MIN_TILE_FLOPS).max(1)).min(panels).max(1);
+    let panels_per_tile = ceil_div(panels, want);
+    TileGrid {
+        rows_per_tile,
+        row_tiles,
+        panels_per_tile,
+        panel_tiles: ceil_div(panels, panels_per_tile),
+    }
+}
+
+/// How a task-parallel train step decomposes its stages into tiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TilePolicy {
+    /// 1D row tiles only, at the given conv granularity — the pre-2D
+    /// engine, retained as the bench baseline.
+    RowsOnly { rows_per_task: usize },
+    /// 2D row×panel grids from [`plan_tile_grid`]; `rows_per_task` seeds
+    /// the conv row split exactly like the old 1D knob.
+    Grid2d { rows_per_task: usize },
+}
+
+impl TilePolicy {
+    pub fn rows_only(rows_per_task: usize) -> Self {
+        TilePolicy::RowsOnly { rows_per_task }
+    }
+
+    pub fn grid2d(rows_per_task: usize) -> Self {
+        TilePolicy::Grid2d { rows_per_task }
+    }
+
+    /// The conv row granularity this policy was seeded with.
+    pub fn rows_per_task(&self) -> usize {
+        match *self {
+            TilePolicy::RowsOnly { rows_per_task } | TilePolicy::Grid2d { rows_per_task } => {
+                rows_per_task
+            }
+        }
+    }
+
+    /// Plan one stage's grid under this policy.
+    pub fn plan(
+        &self,
+        m: usize,
+        kk: usize,
+        n: usize,
+        workers: usize,
+        rows_hint: usize,
+    ) -> TileGrid {
+        match *self {
+            TilePolicy::RowsOnly { .. } => TileGrid::rows_only(m, rows_hint, n),
+            TilePolicy::Grid2d { .. } => plan_tile_grid(m, kk, n, workers, rows_hint),
+        }
+    }
+
+    /// Companion grid sharing `base`'s row split, column-split over a
+    /// different output width (the backward dx spaces).
+    pub fn plan_cols(&self, base: &TileGrid, kk: usize, n: usize, workers: usize) -> TileGrid {
+        match *self {
+            TilePolicy::RowsOnly { .. } => TileGrid {
+                panels_per_tile: panel_count(n),
+                panel_tiles: 1,
+                ..*base
+            },
+            TilePolicy::Grid2d { .. } => {
+                plan_cols_for_rows(base.rows_per_tile, base.row_tiles, kk, n, workers)
+            }
+        }
+    }
+}
 
 /// Outcome of one DAG execution.
 #[derive(Debug, Clone)]
@@ -396,5 +584,94 @@ mod tests {
         let stats = execute_dag(&pool, dag, |_, _| {});
         assert_eq!(stats.tasks, 2);
         assert_eq!(stats.thread_assigned_cost.len(), 1);
+    }
+
+    /// The ISSUE-4 acceptance shape: batch 4, 2000-neuron FC, 8 workers —
+    /// the planner must column-split so the stage yields ≥ 8 (indeed ≥ 2×8)
+    /// near-equal tiles instead of 4 serializing batch-row tiles.
+    #[test]
+    fn planner_splits_columns_for_small_batch_wide_fc() {
+        let g = plan_tile_grid(4, 2000, 2000, 8, 1);
+        assert!(g.panel_tiles > 1, "{g:?}");
+        assert!(g.tiles() >= 8, "{g:?}");
+        // Row tiles fattened to MR: whole register tiles, not 1-row edges.
+        assert_eq!(g.rows_per_tile, 4, "{g:?}");
+        // The supply hits the Alg.-4.2 balancing target exactly (2×workers
+        // tiles: 1 row tile × 16 column tiles of ≤16 panels over 250), and
+        // only the final tile may be ragged — every other tile is full
+        // width, so least-loaded assignment sees uniform costs plus at most
+        // one smaller tile.
+        assert_eq!(g.tiles(), 16, "{g:?}");
+        let panels = panel_count(2000);
+        let last = panels - (g.panel_tiles - 1) * g.panels_per_tile;
+        assert!((1..=g.panels_per_tile).contains(&last), "{g:?}");
+        assert_eq!((g.panel_tiles - 1) * g.panels_per_tile + last, panels, "{g:?}");
+    }
+
+    /// Plenty of batch rows → the planner reproduces the 1D decomposition
+    /// exactly (the no-regression guarantee for large-batch steps).
+    #[test]
+    fn planner_keeps_rows_only_when_rows_suffice() {
+        let g = plan_tile_grid(32, 256, 256, 4, 4);
+        assert_eq!(g, TileGrid::rows_only(32, 4, 256));
+        assert_eq!(g.panel_tiles, 1);
+        assert_eq!(g.rows_per_tile, 4);
+        assert_eq!(g.row_tiles, 8);
+    }
+
+    /// Tiny stages (output-layer logits, small test nets) stay coarse: the
+    /// FLOP floor forbids splitting work that would not amortize dispatch.
+    #[test]
+    fn planner_work_floor_prevents_tiny_tiles() {
+        // batch 4, k 16, n 10: whole stage ≈ 1.3 kFLOP ⇒ no column split.
+        let g = plan_tile_grid(4, 16, 10, 8, 1);
+        assert_eq!(g.panel_tiles, 1, "{g:?}");
+        // Single-column stages can never split.
+        let g1 = plan_tile_grid(4, 2000, 1, 8, 1);
+        assert_eq!(g1.panel_tiles, 1);
+    }
+
+    /// `plan_cols_for_rows` degenerates to one column tile when the row
+    /// split already meets the target (shared-row companion grids must not
+    /// over-split).
+    #[test]
+    fn plan_cols_respects_existing_row_supply() {
+        let base = plan_tile_grid(64, 512, 512, 4, 8);
+        assert_eq!(base.panel_tiles, 1);
+        let dx = plan_cols_for_rows(base.rows_per_tile, base.row_tiles, 512, 512, 4);
+        assert_eq!(dx.panel_tiles, 1, "{dx:?}");
+    }
+
+    /// Column tiles of any grid partition the panel space exactly.
+    #[test]
+    fn grid_panel_tiles_partition_panel_space() {
+        for n in [1usize, 7, 8, 9, 63, 250, 2000] {
+            for workers in [1usize, 2, 8] {
+                let g = plan_tile_grid(4, 64, n, workers, 1);
+                let panels = panel_count(n);
+                let mut covered = 0;
+                for t in 0..g.panel_tiles {
+                    let p0 = t * g.panels_per_tile;
+                    let np = g.panels_per_tile.min(panels - p0);
+                    assert!(np >= 1, "n={n} workers={workers} {g:?}");
+                    covered += np;
+                }
+                assert_eq!(covered, panels, "n={n} workers={workers} {g:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_policy_plans_match_mode() {
+        let rows = TilePolicy::rows_only(2);
+        assert_eq!(rows.plan(4, 2000, 2000, 8, 1), TileGrid::rows_only(4, 1, 2000));
+        let grid = TilePolicy::grid2d(2);
+        assert_eq!(grid.rows_per_task(), 2);
+        let g = grid.plan(4, 2000, 2000, 8, 1);
+        assert!(g.panel_tiles > 1);
+        // plan_cols under RowsOnly keeps a single column tile.
+        let dx = rows.plan_cols(&g, 2000, 2000, 8);
+        assert_eq!(dx.panel_tiles, 1);
+        assert_eq!(dx.rows_per_tile, g.rows_per_tile);
     }
 }

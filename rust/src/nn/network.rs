@@ -79,6 +79,23 @@ impl Network {
     /// Wrap an existing weight set (e.g. fetched from the parameter server
     /// or produced by the XLA `init` artifact).
     pub fn with_weights(cfg: &NetworkConfig, weights: WeightSet) -> Self {
+        Self::with_weights_and_packs(cfg, weights, WeightPacks::default())
+    }
+
+    /// Wrap an existing weight set *and* install a previously-populated
+    /// pack cache. This is how epoch trainers share one generation-keyed
+    /// cache across the fresh per-epoch `Network`s they spawn
+    /// ([`Network::take_packs`] recovers it): `WeightPacks::ensure` is keyed
+    /// on [`WeightSet::generation`], so packs built for an identical weight
+    /// set (same generation — e.g. an eval on frozen weights, or a fetch
+    /// the server did not advance) are reused without repacking, and stale
+    /// ones repack **in place** into the cache's existing allocations
+    /// instead of reallocating every panel from scratch.
+    pub fn with_weights_and_packs(
+        cfg: &NetworkConfig,
+        weights: WeightSet,
+        packs: WeightPacks,
+    ) -> Self {
         assert_eq!(
             weights.len(),
             cfg.param_shapes().len(),
@@ -87,8 +104,14 @@ impl Network {
         Self {
             cfg: cfg.clone(),
             weights,
-            packs: RefCell::new(WeightPacks::default()),
+            packs: RefCell::new(packs),
         }
+    }
+
+    /// Move the pack cache out of this network (the trainer-side half of
+    /// the cross-epoch carry); the network is left with a cold cache.
+    pub fn take_packs(&mut self) -> WeightPacks {
+        self.packs.replace(WeightPacks::default())
     }
 
     pub(crate) fn conv_dims(&self, layer: usize, batch: usize) -> ConvDims {

@@ -268,6 +268,12 @@ pub fn im2col_rows(d: &ConvDims, x: &[f32], n: usize, y0: usize, rows: usize, co
 }
 
 // ---- packed-B micro-kernel GEMM (the conv engine's single hot path) -------
+//
+// All packed kernels are panel-windowed: a caller may contract against any
+// sub-range of the NR-column panels ([`gemm_packed_acc_panels_raw`],
+// [`gemm_tn_acc_cols_raw`]), which is what lets the inner layer's 2D
+// row×column tile grid (`inner/scheduler.rs`) split one GEMM's output
+// columns across workers when batch rows alone cannot feed them.
 
 /// Rows of the register accumulator tile.
 pub const MR: usize = 4;
@@ -366,6 +372,23 @@ impl PackedB {
     pub fn n(&self) -> usize {
         self.n
     }
+
+    /// Number of NR-column panels (⌈n/NR⌉) — the column-tile grain of the
+    /// 2D row×panel decomposition: a column tile is always a whole number
+    /// of panels, so tiled kernels never split a panel.
+    pub fn panels(&self) -> usize {
+        (self.n + NR - 1) / NR
+    }
+}
+
+/// Column window `(j0, width)` covered by panels `[p0, p0+np)` of an
+/// `n`-column operand — the element range a (row × panel) tile owns.
+#[inline]
+pub fn panel_window(n: usize, p0: usize, np: usize) -> (usize, usize) {
+    let j0 = p0 * NR;
+    let hi = ((p0 + np) * NR).min(n);
+    debug_assert!(j0 < hi, "empty panel window p0={p0} np={np} n={n}");
+    (j0, hi - j0)
 }
 
 /// Pack the HWIO filter of `d` viewed as a `(k²·C, C_o)` matrix.
@@ -377,9 +400,15 @@ pub fn pack_filter(d: &ConvDims, f: &[f32]) -> PackedB {
 /// Register-blocked `MR×NR` inner kernel: accumulates `MR` rows of A against
 /// one packed panel into a stack tile, then adds the live `w ≤ NR` columns
 /// into C. `a` holds at least `MR` consecutive rows (stride `kk`); `c` points
-/// at the first row's panel window (stride `n`).
+/// at the first row's panel window (row stride `n`). C is a raw pointer so
+/// 2D tiles sharing one output allocation never materialize overlapping
+/// `&mut` slices — writes stay within the tile's column window.
+///
+/// # Safety
+/// `c[r·n + j]` must be valid for read+write for all `r < MR`, `j < w`, with
+/// no concurrent access to those elements.
 #[inline(always)]
-fn kernel_4x8(kk: usize, n: usize, a: &[f32], bp: &[f32], c: &mut [f32], w: usize) {
+unsafe fn kernel_4x8(kk: usize, n: usize, a: &[f32], bp: &[f32], c: *mut f32, w: usize) {
     let a0 = &a[..kk];
     let a1 = &a[kk..2 * kk];
     let a2 = &a[2 * kk..3 * kk];
@@ -396,16 +425,20 @@ fn kernel_4x8(kk: usize, n: usize, a: &[f32], bp: &[f32], c: &mut [f32], w: usiz
         }
     }
     for r in 0..MR {
-        let crow = &mut c[r * n..r * n + w];
+        let crow = c.add(r * n);
         for j in 0..w {
-            crow[j] += acc[r][j];
+            *crow.add(j) += acc[r][j];
         }
     }
 }
 
 /// Single-row edge kernel for the `m mod MR` remainder.
+///
+/// # Safety
+/// `c[j]` must be valid for read+write for `j < w`, with no concurrent
+/// access to those elements.
 #[inline(always)]
-fn kernel_1x8(kk: usize, a: &[f32], bp: &[f32], c: &mut [f32], w: usize) {
+unsafe fn kernel_1x8(kk: usize, a: &[f32], bp: &[f32], c: *mut f32, w: usize) {
     let mut acc = [0.0f32; NR];
     for l in 0..kk {
         let av = a[l];
@@ -415,24 +448,25 @@ fn kernel_1x8(kk: usize, a: &[f32], bp: &[f32], c: &mut [f32], w: usize) {
         }
     }
     for j in 0..w {
-        c[j] += acc[j];
+        *c.add(j) += acc[j];
     }
 }
 
-fn gemm_packed_scalar(m: usize, a: &[f32], b: &PackedB, c: &mut [f32]) {
+/// # Safety
+/// See [`gemm_packed_acc_panels_raw`].
+unsafe fn gemm_packed_scalar(m: usize, a: &[f32], b: &PackedB, c: *mut f32, p0: usize, np: usize) {
     let (kk, n) = (b.kk, b.n);
-    let panels = (n + NR - 1) / NR;
-    for p in 0..panels {
+    for p in p0..p0 + np {
         let j0 = p * NR;
         let w = NR.min(n - j0);
         let bp = &b.data[p * NR * kk..(p + 1) * NR * kk];
         let mut i = 0;
         while i + MR <= m {
-            kernel_4x8(kk, n, &a[i * kk..(i + MR) * kk], bp, &mut c[i * n + j0..], w);
+            kernel_4x8(kk, n, &a[i * kk..(i + MR) * kk], bp, c.add(i * n + j0), w);
             i += MR;
         }
         while i < m {
-            kernel_1x8(kk, &a[i * kk..(i + 1) * kk], bp, &mut c[i * n + j0..i * n + j0 + w], w);
+            kernel_1x8(kk, &a[i * kk..(i + 1) * kk], bp, c.add(i * n + j0), w);
             i += 1;
         }
     }
@@ -450,13 +484,20 @@ mod simd {
     }
 
     /// # Safety
-    /// Requires AVX2 and FMA (check [`fma_available`] first).
+    /// Requires AVX2 and FMA (check [`fma_available`] first); `c` carries
+    /// the [`super::gemm_packed_acc_panels_raw`] output contract.
     #[target_feature(enable = "avx2,fma")]
-    pub unsafe fn gemm_packed_acc_fma(m: usize, a: &[f32], b: &PackedB, c: &mut [f32]) {
+    pub unsafe fn gemm_packed_acc_fma(
+        m: usize,
+        a: &[f32],
+        b: &PackedB,
+        c: *mut f32,
+        p0: usize,
+        np: usize,
+    ) {
         use std::arch::x86_64::*;
         let (kk, n) = (b.kk, b.n);
-        let panels = (n + NR - 1) / NR;
-        for p in 0..panels {
+        for p in p0..p0 + np {
             let j0 = p * NR;
             let w = NR.min(n - j0);
             let bp = b.data[p * NR * kk..(p + 1) * NR * kk].as_ptr();
@@ -478,9 +519,9 @@ mod simd {
                 let mut buf = [0.0f32; NR];
                 for (r, acc) in accs.into_iter().enumerate() {
                     _mm256_storeu_ps(buf.as_mut_ptr(), acc);
-                    let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + w];
-                    for (cv, &v) in crow.iter_mut().zip(buf.iter()) {
-                        *cv += v;
+                    let crow = c.add((i + r) * n + j0);
+                    for (j, &v) in buf.iter().enumerate().take(w) {
+                        *crow.add(j) += v;
                     }
                 }
                 i += MR;
@@ -494,9 +535,9 @@ mod simd {
                 }
                 let mut buf = [0.0f32; NR];
                 _mm256_storeu_ps(buf.as_mut_ptr(), acc);
-                let crow = &mut c[i * n + j0..i * n + j0 + w];
-                for (cv, &v) in crow.iter_mut().zip(buf.iter()) {
-                    *cv += v;
+                let crow = c.add(i * n + j0);
+                for (j, &v) in buf.iter().enumerate().take(w) {
+                    *crow.add(j) += v;
                 }
                 i += 1;
             }
@@ -508,16 +549,58 @@ mod simd {
 /// is the single hot kernel shared by conv forward, backward-input (flipped
 /// filter) and — through [`gemm_tn_acc`] — the structure of backward-filter.
 pub fn gemm_packed_acc(m: usize, a: &[f32], b: &PackedB, c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * b.kk);
     debug_assert_eq!(c.len(), m * b.n);
+    // SAFETY: `c` is exclusively borrowed and covers the full m×n output.
+    unsafe { gemm_packed_acc_panels_raw(m, a, b, c.as_mut_ptr(), 0, b.panels()) }
+}
+
+/// Panel-range form of [`gemm_packed_acc`] on an exclusively-borrowed full
+/// output: `C[:, j0..j0+w) += A · B[:, j0..j0+w)` for the column window of
+/// panels `[p0, p0+np)`. A windowed sweep over all panels is bit-identical
+/// to one full call (each panel owns an independent register accumulator).
+pub fn gemm_packed_acc_panels(
+    m: usize,
+    a: &[f32],
+    b: &PackedB,
+    c: &mut [f32],
+    p0: usize,
+    np: usize,
+) {
+    debug_assert_eq!(c.len(), m * b.n);
+    // SAFETY: `c` is exclusively borrowed and covers the full m×n output.
+    unsafe { gemm_packed_acc_panels_raw(m, a, b, c.as_mut_ptr(), p0, np) }
+}
+
+/// The 2D-tile GEMM entry point: like [`gemm_packed_acc_panels`] but the
+/// output is a raw pointer to element (0, 0) of the full row-major `m×n`
+/// matrix, so concurrent tiles over disjoint (row-range × panel-range)
+/// blocks can share one allocation without ever materializing overlapping
+/// `&mut` slices. Writes touch only elements `c[i·n + j]` with `i < m` and
+/// `j` inside the window of panels `[p0, p0+np)`.
+///
+/// # Safety
+/// `c[i·n + j]` must be valid for read+write for every `i < m` and `j` in
+/// the panel window, and no other thread may concurrently access those
+/// elements.
+pub unsafe fn gemm_packed_acc_panels_raw(
+    m: usize,
+    a: &[f32],
+    b: &PackedB,
+    c: *mut f32,
+    p0: usize,
+    np: usize,
+) {
+    debug_assert_eq!(a.len(), m * b.kk);
+    debug_assert!(p0 + np <= b.panels(), "panel range out of bounds");
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
         if simd::fma_available() {
-            // SAFETY: feature presence checked at runtime.
-            return unsafe { simd::gemm_packed_acc_fma(m, a, b, c) };
+            // SAFETY: feature presence checked at runtime; output contract
+            // forwarded from this function's own.
+            return simd::gemm_packed_acc_fma(m, a, b, c, p0, np);
         }
     }
-    gemm_packed_scalar(m, a, b, c);
+    gemm_packed_scalar(m, a, b, c, p0, np);
 }
 
 // ---- legacy blocked GEMM (pre-packing baseline, kept for benches) ---------
@@ -557,40 +640,86 @@ pub fn gemm_acc(m: usize, kk: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f3
 /// loop, so results are unchanged. Public so the row-tile backward tasks
 /// (`inner/bp_tasks.rs`) can accumulate straight into per-worker arenas.
 pub fn gemm_tn_acc(m: usize, kk: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * kk);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(c.len(), kk * n);
+    // SAFETY: b/c are plain borrows covering the full window.
+    unsafe { gemm_tn_acc_cols_raw(m, kk, n, a, b.as_ptr(), c.as_mut_ptr(), 0, n) }
+}
+
+/// Column-windowed Eq.-21 contraction: `C[:, j0..j0+jw) += Aᵀ·B[:, j0..j0+jw)`
+/// with `C` (kk×n) and `B` (m×n) row-major. The dW column tiles of the 2D
+/// grid use this to fill disjoint stripes of a per-worker arena; per-element
+/// accumulation order is identical to [`gemm_tn_acc`], so a windowed sweep
+/// over `[0, n)` is bit-identical to one full call.
+pub fn gemm_tn_acc_cols(
+    m: usize,
+    kk: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    j0: usize,
+    jw: usize,
+) {
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), kk * n);
+    // SAFETY: b/c are plain borrows covering the window.
+    unsafe { gemm_tn_acc_cols_raw(m, kk, n, a, b.as_ptr(), c.as_mut_ptr(), j0, jw) }
+}
+
+/// Raw form of [`gemm_tn_acc_cols`] for 2D-tile tasks whose `B` matrix is
+/// concurrently written by other tasks in *other* column windows (the dense
+/// backward masks `dy` tile by tile): `b` and `c` address element (0, 0) of
+/// the full matrices; reads and writes stay inside columns `[j0, j0+jw)`.
+///
+/// # Safety
+/// `b[i·n + j]` must be valid for reads and `c[l·n + j]` for reads+writes
+/// for all `i < m`, `l < kk`, `j` in `[j0, j0+jw)`, with no concurrent
+/// writer to `b`'s window and no concurrent access to `c`'s window.
+pub unsafe fn gemm_tn_acc_cols_raw(
+    m: usize,
+    kk: usize,
+    n: usize,
+    a: &[f32],
+    b: *const f32,
+    c: *mut f32,
+    j0: usize,
+    jw: usize,
+) {
+    debug_assert_eq!(a.len(), m * kk);
+    debug_assert!(j0 + jw <= n, "column window out of bounds");
     let mut l0 = 0;
     while l0 + 4 <= kk {
-        let (c0, rest) = c[l0 * n..(l0 + 4) * n].split_at_mut(n);
-        let (c1, rest) = rest.split_at_mut(n);
-        let (c2, c3) = rest.split_at_mut(n);
+        let c0 = c.add(l0 * n + j0);
+        let c1 = c.add((l0 + 1) * n + j0);
+        let c2 = c.add((l0 + 2) * n + j0);
+        let c3 = c.add((l0 + 3) * n + j0);
         for i in 0..m {
             let av = &a[i * kk + l0..i * kk + l0 + 4];
             if av[0] == 0.0 && av[1] == 0.0 && av[2] == 0.0 && av[3] == 0.0 {
                 continue; // fully zero-padded patch columns
             }
-            let brow = &b[i * n..(i + 1) * n];
-            for j in 0..n {
-                let bv = brow[j];
-                c0[j] += av[0] * bv;
-                c1[j] += av[1] * bv;
-                c2[j] += av[2] * bv;
-                c3[j] += av[3] * bv;
+            let brow = b.add(i * n + j0);
+            for j in 0..jw {
+                let bv = *brow.add(j);
+                *c0.add(j) += av[0] * bv;
+                *c1.add(j) += av[1] * bv;
+                *c2.add(j) += av[2] * bv;
+                *c3.add(j) += av[3] * bv;
             }
         }
         l0 += 4;
     }
     while l0 < kk {
-        let crow = &mut c[l0 * n..(l0 + 1) * n];
+        let crow = c.add(l0 * n + j0);
         for i in 0..m {
             let av = a[i * kk + l0];
             if av == 0.0 {
                 continue;
             }
-            let brow = &b[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
+            let brow = b.add(i * n + j0);
+            for j in 0..jw {
+                *crow.add(j) += av * *brow.add(j);
             }
         }
         l0 += 1;
@@ -1223,6 +1352,61 @@ mod tests {
             for (x, y) in c_packed.iter().zip(c_ref.iter()) {
                 assert!((x - y).abs() < 1e-4, "m={m} kk={kk} n={n}: {x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn gemm_panel_windows_compose_to_full_gemm() {
+        let mut rng = Xoshiro256::new(61);
+        // Ragged n (panel remainder), m around MR, panel-by-panel windows.
+        for (m, kk, n) in [(1usize, 3usize, 5usize), (5, 7, 9), (4, 6, 16), (9, 4, 23)] {
+            let a = rand_vec(&mut rng, m * kk);
+            let b = rand_vec(&mut rng, kk * n);
+            let packed = PackedB::pack(kk, n, &b);
+            let mut full = rand_vec(&mut rng, m * n);
+            let mut windowed = full.clone();
+            gemm_packed_acc(m, &a, &packed, &mut full);
+            // Sweep single-panel windows: must be bit-identical to the full
+            // call (each panel owns an independent register accumulator).
+            for p in 0..packed.panels() {
+                gemm_packed_acc_panels(m, &a, &packed, &mut windowed, p, 1);
+            }
+            assert_eq!(full, windowed, "m={m} kk={kk} n={n}");
+            // Window geometry tiles [0, n) exactly.
+            let mut covered = 0;
+            for p in 0..packed.panels() {
+                let (j0, jw) = panel_window(n, p, 1);
+                assert_eq!(j0, covered, "m={m} kk={kk} n={n} p={p}");
+                covered += jw;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn gemm_tn_col_windows_compose_to_full_gemm() {
+        let mut rng = Xoshiro256::new(67);
+        for (m, kk, n) in [(1usize, 4usize, 5usize), (6, 9, 11), (4, 13, 8)] {
+            let a = rand_vec(&mut rng, m * kk);
+            let b = rand_vec(&mut rng, m * n);
+            let mut full = rand_vec(&mut rng, kk * n);
+            let mut windowed = full.clone();
+            gemm_tn_acc(m, kk, n, &a, &b, &mut full);
+            // Uneven windows sweeping [0, n) — bit-identical per element.
+            let mut j0 = 0;
+            for jw in [1usize, 3, n] {
+                if j0 >= n {
+                    break;
+                }
+                let jw = jw.min(n - j0);
+                gemm_tn_acc_cols(m, kk, n, &a, &b, &mut windowed, j0, jw);
+                j0 += jw;
+            }
+            while j0 < n {
+                gemm_tn_acc_cols(m, kk, n, &a, &b, &mut windowed, j0, 1);
+                j0 += 1;
+            }
+            assert_eq!(full, windowed, "m={m} kk={kk} n={n}");
         }
     }
 

@@ -102,16 +102,17 @@ pub fn run_sgwu(
             sync_wait += t_max - t;
             node_busy[j] += t;
         }
-        // Eq. 7 update.
-        let locals: Vec<(WeightSet, f64)> = outcomes
-            .iter()
-            .map(|(o, _)| (o.weights.clone(), o.accuracy))
-            .collect();
-        let version = ps.update_sgwu(&locals);
         let mean_loss =
             outcomes.iter().map(|(o, _)| o.loss).sum::<f64>() / m as f64;
         let mean_acc =
             outcomes.iter().map(|(o, _)| o.accuracy).sum::<f64>() / m as f64;
+        // Eq. 7 update: each node's weights move out of its EpochOutcome
+        // into the locals vec — no per-round clone of m full weight sets.
+        let locals: Vec<(WeightSet, f64)> = outcomes
+            .into_iter()
+            .map(|(o, _)| (o.weights, o.accuracy))
+            .collect();
+        let version = ps.update_sgwu(&locals);
         versions.push(VersionRecord {
             version,
             node: usize::MAX,

@@ -103,7 +103,11 @@ impl ParamServer {
     }
 
     /// SGWU — Eq. 7: all m local sets + accuracies arrive together; the new
-    /// global version is their accuracy-weighted mean.
+    /// global version is their accuracy-weighted mean. The server only
+    /// reads the submitted sets — the cluster driver builds `locals` by
+    /// **moving** each node's `EpochOutcome` weights into the slice's
+    /// backing storage, so an SGWU round pays no weight-set clone beyond
+    /// the Eq.-11 transfers it models.
     pub fn update_sgwu(&mut self, locals: &[(WeightSet, f64)]) -> usize {
         assert_eq!(locals.len(), self.nodes(), "SGWU needs all nodes");
         for (ws, _) in locals {

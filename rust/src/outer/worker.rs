@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use crate::config::NetworkConfig;
 use crate::data::Dataset;
-use crate::nn::{Network, StepWorkspace};
+use crate::nn::{Network, StepWorkspace, WeightPacks};
 use crate::tensor::WeightSet;
 
 /// Result of one local epoch (one "iteration" in the paper's terms: a full
@@ -42,7 +42,11 @@ pub trait LocalTrainer: Send {
 /// Pure-Rust local trainer over the native network. Owns a persistent
 /// [`StepWorkspace`] plus gather buffers, so every epoch after the first
 /// runs its batches allocation-free (the `alloc_regression` integration
-/// test pins the per-step property).
+/// test pins the per-step property), and the node's generation-keyed
+/// [`WeightPacks`] cache — SGWU/AGWU spawn a fresh [`Network`] per epoch,
+/// so the cache is moved into each one and recovered afterwards: packs for
+/// an unchanged weight generation are never rebuilt, and stale ones repack
+/// in place into the carried allocations.
 pub struct NativeTrainer {
     cfg: NetworkConfig,
     data: Arc<Dataset>,
@@ -53,6 +57,8 @@ pub struct NativeTrainer {
     pub slowdown: f64,
     /// Reused across every batch of every epoch this worker runs.
     ws: StepWorkspace,
+    /// Node-owned pack cache, carried across the per-epoch `Network`s.
+    packs: WeightPacks,
     xbuf: Vec<f32>,
     ybuf: Vec<f32>,
 }
@@ -66,6 +72,7 @@ impl NativeTrainer {
             lr,
             slowdown: 1.0,
             ws: StepWorkspace::new(),
+            packs: WeightPacks::default(),
             xbuf: Vec::new(),
             ybuf: Vec::new(),
         }
@@ -106,7 +113,11 @@ impl LocalTrainer for NativeTrainer {
         // Copy-on-write: unwrap the snapshot without a copy when this worker
         // holds the last reference, deep-copy otherwise.
         let start = Arc::try_unwrap(start).unwrap_or_else(|shared| (*shared).clone());
-        let mut net = Network::with_weights(&self.cfg, start);
+        // Hand the node's pack cache to this epoch's network (recovered
+        // below): unchanged weight generations skip repacking entirely,
+        // changed ones repack in place into the carried allocations.
+        let mut net =
+            Network::with_weights_and_packs(&self.cfg, start, std::mem::take(&mut self.packs));
         let bsz = self.cfg.batch_size.min(self.indices.len().max(1));
         let mut seen = 0usize;
         let mut loss_sum = 0.0f64;
@@ -136,6 +147,8 @@ impl LocalTrainer for NativeTrainer {
                 compute * (self.slowdown - 1.0),
             ));
         }
+        // Recover the pack cache for the next epoch (or eval) on this node.
+        self.packs = net.take_packs();
         EpochOutcome {
             weights: net.weights,
             loss: loss_sum / batches.max(1) as f64,
@@ -195,6 +208,28 @@ mod tests {
             losses.last().unwrap() < &(0.8 * losses[0]),
             "no improvement: {losses:?}"
         );
+    }
+
+    /// The pack cache carried across per-epoch networks is value-derived
+    /// (generation-keyed), so a trainer reusing it must produce bit-equal
+    /// weights to fresh cold-cache trainers.
+    #[test]
+    fn pack_cache_carry_does_not_change_results() {
+        let (cfg, ds) = setup();
+        let start = Network::init(&cfg, 5).weights;
+        let mut a = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2);
+        a.add_samples(0..16);
+        let mut wa = start.clone();
+        for _ in 0..3 {
+            wa = a.train_epoch(Arc::new(wa)).weights;
+        }
+        let mut wb = start;
+        for _ in 0..3 {
+            let mut b = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2);
+            b.add_samples(0..16);
+            wb = b.train_epoch(Arc::new(wb)).weights;
+        }
+        assert_eq!(wa.max_abs_diff(&wb), 0.0, "carried pack cache changed results");
     }
 
     #[test]

@@ -61,22 +61,44 @@ fn warmed_up_train_batch_is_allocation_free() {
         batch_size: 8,
         pool_window: 2,
     };
-    let ds = Dataset::synthetic(&cfg, 32, 0.2, 7);
-    let (x, y, _) = ds.batch(0, 8);
-    let mut net = Network::init(&cfg, 1);
+    assert_zero_alloc_steps(&cfg, 8);
+    // The ISSUE-4 regime: small batch × FC wide enough to span several
+    // NR-column panels (ragged — 100 = 12×8 + 4), so the serial step rides
+    // the panel-windowed kernels the 2D tiles share. Those entry points
+    // must stay allocation-free too.
+    let wide = NetworkConfig {
+        name: "alloc_wide_fc".into(),
+        input_hw: 8,
+        in_channels: 1,
+        conv_layers: 1,
+        filters: 4,
+        kernel_hw: 3,
+        fc_layers: 2,
+        fc_neurons: 100,
+        num_classes: 4,
+        batch_size: 4,
+        pool_window: 2,
+    };
+    assert_zero_alloc_steps(&wide, 4);
+}
+
+fn assert_zero_alloc_steps(cfg: &NetworkConfig, batch: usize) {
+    let ds = Dataset::synthetic(cfg, 32, 0.2, 7);
+    let (x, y, _) = ds.batch(0, batch);
+    let mut net = Network::init(cfg, 1);
     let mut ws = StepWorkspace::new();
 
     // Warmup: sizes the workspace arenas and the weight-pack slots.
     let mut warm_loss = 0.0;
     for _ in 0..3 {
-        let (l, _) = net.train_batch_ws(&x, &y, 8, 0.1, &mut ws);
+        let (l, _) = net.train_batch_ws(&x, &y, batch, 0.1, &mut ws);
         warm_loss = l;
     }
 
     let before = ALLOCS.load(Ordering::SeqCst);
     let mut last_loss = warm_loss;
     for _ in 0..10 {
-        let (l, _) = net.train_batch_ws(&x, &y, 8, 0.1, &mut ws);
+        let (l, _) = net.train_batch_ws(&x, &y, batch, 0.1, &mut ws);
         last_loss = l;
     }
     let after = ALLOCS.load(Ordering::SeqCst);
@@ -84,10 +106,15 @@ fn warmed_up_train_batch_is_allocation_free() {
     assert_eq!(
         after - before,
         0,
-        "warmed-up train_batch_ws made {} heap allocations over 10 steps",
+        "[{}] warmed-up train_batch_ws made {} heap allocations over 10 steps",
+        cfg.name,
         after - before
     );
     // Sanity: the measured steps actually trained.
     assert!(last_loss.is_finite());
-    assert!(last_loss < warm_loss * 1.5, "loss diverged: {warm_loss} -> {last_loss}");
+    assert!(
+        last_loss < warm_loss * 1.5,
+        "[{}] loss diverged: {warm_loss} -> {last_loss}",
+        cfg.name
+    );
 }

@@ -377,16 +377,19 @@ fn prop_dense_packed_matches_naive() {
     });
 }
 
-/// The FC row-tile backward (per-worker arena accumulation + sequential
-/// reduce, ReLU mask fused) matches the serial packed reference for random
-/// shapes, granularities and pool sizes.
+/// The FC 2D-tile backward (per-worker arena stripe accumulation + reduce,
+/// ReLU mask fused, dx panel tiles behind the mask barrier) matches the
+/// serial packed reference for random shapes — `n`/`k` not multiples of
+/// NR=8, `m` smaller than the pool — across random row *and* panel
+/// granularities (panel tiles forced via explicit grids, so both the fused
+/// row-only path and the two-phase 2D path are exercised).
 #[test]
-fn prop_fc_row_tile_bwd_matches_serial() {
-    use bptcnn::inner::dense_bwd_parallel;
-    prop::check("fc row-tile bwd parity", 25, |g| {
+fn prop_fc_2d_tile_bwd_matches_serial() {
+    use bptcnn::inner::{dense_bwd_parallel, panel_count, TileGrid};
+    prop::check("fc 2d-tile bwd parity", 25, |g| {
         let m = g.usize_full(1, 8);
-        let k = g.usize_full(1, 12);
-        let n = g.usize_full(1, 12);
+        let k = g.usize_full(1, 24);
+        let n = g.usize_full(1, 24);
         let pool = ThreadPool::new(g.usize_full(1, 4));
         let x = g.vec_f32(m * k, -1.0, 1.0);
         let w = g.vec_f32(k * n, -1.0, 1.0);
@@ -402,6 +405,22 @@ fn prop_fc_row_tile_bwd_matches_serial() {
         let mut db_s = vec![0.0f32; n];
         ops::dense_bwd_packed(m, k, n, &x, &wt, &dy_s, &mut dx_s, &mut dw_s, &mut db_s);
         let rows = g.usize_full(1, m);
+        let panels_n = panel_count(n);
+        let panels_k = panel_count(k);
+        let ppt_n = g.usize_full(1, panels_n);
+        let ppt_k = g.usize_full(1, panels_k);
+        let dy_grid = TileGrid {
+            rows_per_tile: rows,
+            row_tiles: (m + rows - 1) / rows,
+            panels_per_tile: ppt_n,
+            panel_tiles: (panels_n + ppt_n - 1) / ppt_n,
+        };
+        let dx_grid = TileGrid {
+            rows_per_tile: rows,
+            row_tiles: (m + rows - 1) / rows,
+            panels_per_tile: ppt_k,
+            panel_tiles: (panels_k + ppt_k - 1) / ppt_k,
+        };
         let mut dy_p = dy0.clone();
         let mut dx_p = vec![0.0f32; m * k];
         let mut dw_p = vec![0.0f32; k * n];
@@ -418,16 +437,132 @@ fn prop_fc_row_tile_bwd_matches_serial() {
             &mut dx_p,
             &mut dw_p,
             &mut db_p,
-            rows,
+            dy_grid,
+            dx_grid,
         );
+        let tag = format!("rows={rows} ppt_n={ppt_n} ppt_k={ppt_k}");
+        for (i, (a, b)) in dy_p.iter().zip(dy_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-6, &format!("mask[{i}] {tag}"))?;
+        }
         for (i, (a, b)) in dx_p.iter().zip(dx_s.iter()).enumerate() {
-            assert_close(*a as f64, *b as f64, 1e-3, &format!("dx[{i}] rows={rows}"))?;
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("dx[{i}] {tag}"))?;
         }
         for (i, (a, b)) in dw_p.iter().zip(dw_s.iter()).enumerate() {
-            assert_close(*a as f64, *b as f64, 1e-3, &format!("dw[{i}] rows={rows}"))?;
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("dw[{i}] {tag}"))?;
         }
         for (i, (a, b)) in db_p.iter().zip(db_s.iter()).enumerate() {
-            assert_close(*a as f64, *b as f64, 1e-3, &format!("db[{i}] rows={rows}"))?;
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("db[{i}] {tag}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// 2D-tiled dense forward (random row × panel grids, fused ReLU) is
+/// bit-identical to the serial packed path — and the tile planner always
+/// yields ≥ workers tiles for FC-shaped stages once the per-stage work
+/// crosses its floor, with the acceptance shape (batch 4, 2000-neuron, 8
+/// workers) pinned exactly.
+#[test]
+fn prop_dense_2d_fwd_parity_and_planner_supply() {
+    use bptcnn::inner::{dense_fwd_parallel, panel_count, plan_tile_grid, TileGrid};
+    prop::check("dense 2d fwd parity + planner", 30, |g| {
+        let m = g.usize_full(1, 8);
+        let k = g.usize_full(1, 24);
+        let n = g.usize_full(1, 24);
+        let workers = g.usize_full(1, 4);
+        let pool = ThreadPool::new(workers);
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let w = g.vec_f32(k * n, -1.0, 1.0);
+        let b = g.vec_f32(n, -0.5, 0.5);
+        let packed = ops::PackedB::pack(k, n, &w);
+        let mut serial = vec![0.0f32; m * n];
+        ops::dense_fwd_packed(m, &x, &packed, &b, &mut serial);
+        ops::relu_fwd(&mut serial);
+        let rows = g.usize_full(1, m);
+        let panels = panel_count(n);
+        let ppt = g.usize_full(1, panels);
+        let grid = TileGrid {
+            rows_per_tile: rows,
+            row_tiles: (m + rows - 1) / rows,
+            panels_per_tile: ppt,
+            panel_tiles: (panels + ppt - 1) / ppt,
+        };
+        let mut par = vec![0.0f32; m * n];
+        dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, true, grid);
+        for (i, (a, bb)) in par.iter().zip(serial.iter()).enumerate() {
+            assert_eq_msg(*a, *bb, &format!("out[{i}] rows={rows} ppt={ppt}"))?;
+        }
+        // Planner supply: wide-FC stages above the work floor always
+        // produce at least `workers` tiles, however small the batch.
+        let wide = plan_tile_grid(m, 2000, 2000, workers, 1);
+        assert_true(
+            wide.tiles() >= workers,
+            &format!("planner starves workers: {wide:?} (m={m} workers={workers})"),
+        )?;
+        let accept = plan_tile_grid(4, 2000, 2000, 8, 1);
+        assert_true(accept.tiles() >= 8, &format!("acceptance shape under-tiled: {accept:?}"))
+    });
+}
+
+/// 2D conv tiles (forced channel-panel splits) match the serial packed conv
+/// across random shapes — co crossing several NR panels, small batches,
+/// 1×1 spatial extents where rows alone cannot parallelize — for forward,
+/// and the planner-driven backward (`conv_bwd_parallel`) stays correct on
+/// wide-channel shapes that trigger real column splits.
+#[test]
+fn prop_conv_2d_tiles_match_serial() {
+    use bptcnn::inner::bp_tasks::conv_bwd_parallel;
+    use bptcnn::inner::{conv2d_parallel_packed, panel_count, TileGrid};
+    prop::check("conv 2d tile parity", 12, |g| {
+        let k = *g.choose(&[1usize, 3, 5]);
+        let d = ConvDims {
+            n: g.usize_full(1, 3),
+            h: g.usize_full(1, 5),
+            w: g.usize_full(1, 5),
+            c: g.usize_full(1, 12),
+            k,
+            co: g.usize_full(9, 20), // ≥ 2 output panels
+        };
+        let x = g.vec_f32(d.x_len(), -1.0, 1.0);
+        let f = g.vec_f32(d.f_len(), -1.0, 1.0);
+        let bias = g.vec_f32(d.co, -0.5, 0.5);
+        let mut serial = vec![0.0f32; d.y_len()];
+        ops::conv2d_same_fwd(&d, &x, &f, &bias, &mut serial);
+        let pool = ThreadPool::new(g.usize_full(2, 4));
+        let packed = ops::pack_filter(&d, &f);
+        let panels = panel_count(d.co);
+        let ppt = g.usize_full(1, panels);
+        let rows = g.usize_full(1, d.h);
+        let grid = TileGrid {
+            rows_per_tile: rows,
+            row_tiles: (d.n * d.h + rows - 1) / rows,
+            panels_per_tile: ppt,
+            panel_tiles: (panels + ppt - 1) / ppt,
+        };
+        let mut par = vec![0.0f32; d.y_len()];
+        conv2d_parallel_packed(&pool, &d, &x, &packed, &bias, &mut par, grid);
+        for (i, (a, b)) in par.iter().zip(serial.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-4, &format!("y[{i}] rows={rows} ppt={ppt}"))?;
+        }
+        // Planner-driven backward on the same wide-channel shape.
+        let dy = g.vec_f32(d.y_len(), -1.0, 1.0);
+        let mut df_s = vec![0.0f32; d.f_len()];
+        let mut db_s = vec![0.0f32; d.co];
+        let mut dx_s = vec![0.0f32; d.x_len()];
+        ops::conv2d_same_bwd_filter_naive(&d, &x, &dy, &mut df_s, &mut db_s);
+        ops::conv2d_same_bwd_input_naive(&d, &dy, &f, &mut dx_s);
+        let mut df_p = vec![0.0f32; d.f_len()];
+        let mut db_p = vec![0.0f32; d.co];
+        let mut dx_p = vec![0.0f32; d.x_len()];
+        conv_bwd_parallel(&pool, &d, &x, &f, &dy, &mut df_p, &mut db_p, Some(&mut dx_p), rows);
+        for (i, (a, b)) in df_p.iter().zip(df_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("df[{i}] ({d:?})"))?;
+        }
+        for (i, (a, b)) in db_p.iter().zip(db_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("db[{i}] ({d:?})"))?;
+        }
+        for (i, (a, b)) in dx_p.iter().zip(dx_s.iter()).enumerate() {
+            assert_close(*a as f64, *b as f64, 1e-3, &format!("dx[{i}] ({d:?})"))?;
         }
         Ok(())
     });
