@@ -441,13 +441,34 @@ fn main() {
         b.bench_with_throughput("train_step/serial_ws", flops, || {
             serial_net.train_batch_ws(&x, &y, cfg.batch_size, 0.02, &mut serial_ws);
         });
+        // The ISSUE-5 conv autotune row: the same large-batch conv step
+        // under TilePolicy::Auto. The bench warmup doubles as the tuner's
+        // exploration window, so the measured rows are the locked plans.
+        // Acceptance: auto ≥ 0.95× the best static policy above.
+        let mut auto_net = Network::init(&cfg, 9);
+        let mut auto_ws = StepWorkspace::new();
+        b.bench_with_throughput("train_step/auto_4t", flops, || {
+            parallel_train_step(
+                &pool4,
+                &mut auto_net,
+                &x,
+                &y,
+                cfg.batch_size,
+                0.02,
+                TilePolicy::auto(conv_rows),
+                &mut auto_ws,
+            );
+        });
+        println!("train_step/auto_4t {}", auto_net.tuning_report());
     }
 
     // ---- 2D row×column tiling: Table-2 cases 5–7 (2000-neuron FC, small
-    // batch) — the ISSUE-4 acceptance pair. Row-only tiling leaves ≤ batch
-    // tiles per FC stage, so an 8-worker pool mostly idles; the 2D grid
-    // splits the packed-B panel space across workers. Acceptance: 2D ≥ 1.5×
-    // row-only on the batch ≤ 8 rows at 8 threads.
+    // batch) — the ISSUE-4 acceptance pair plus the ISSUE-5 auto rows.
+    // Row-only tiling leaves ≤ batch tiles per FC stage, so an 8-worker
+    // pool mostly idles; the 2D grid splits the packed-B panel space across
+    // workers; Auto searches around the static plan online. Acceptance:
+    // 2D ≥ 1.5× row-only at batch ≤ 8 / 8 threads, auto ≥ 1.1× row-only at
+    // batch 4 / 8 threads after the exploration window (the bench warmup).
     {
         let cfg = NetworkConfig {
             name: "case6_fc".into(),
@@ -465,6 +486,7 @@ fn main() {
         let pool8 = ThreadPool::new(8);
         let ds = Dataset::synthetic(&cfg, 16, 0.2, 11);
         let conv_rows = cfg.input_hw / 2;
+        let mut plan_table = String::new();
         for batch in [4usize, 8] {
             let (x, y, _) = ds.batch(0, batch);
             let flops = cfg.flops_per_sample() * batch as f64;
@@ -505,8 +527,33 @@ fn main() {
                         );
                     },
                 );
+                let mut net_auto = Network::init(&cfg, 21);
+                let mut ws_auto = StepWorkspace::new();
+                b.bench_with_throughput(
+                    &format!("fc2000_step/b{batch}_auto_{tname}"),
+                    flops,
+                    || {
+                        parallel_train_step(
+                            pool,
+                            &mut net_auto,
+                            &x,
+                            &y,
+                            batch,
+                            0.01,
+                            TilePolicy::auto(conv_rows),
+                            &mut ws_auto,
+                        );
+                    },
+                );
+                plan_table = format!(
+                    "fc2000_step/b{batch}_auto_{tname} {}",
+                    net_auto.tuning_report()
+                );
             }
         }
+        // Final per-stage plan table (last auto row: b8 at 8 threads) so
+        // regressions in tuning choices are visible in CI logs.
+        println!("{plan_table}");
     }
 
     // ---- forward-only sweeps (granularity/thread ablation) ---------------

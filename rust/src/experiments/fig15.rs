@@ -4,6 +4,12 @@
 //! Paper anchors: BPT-CNN's traffic 2.35 MB → 11.44 MB (≈linear in m)
 //! vs TF 2.73 MB → 45.23 MB; BPT-CNN's balance index stays in 0.80–0.89
 //! while the baselines degrade.
+//!
+//! [`thread_balance_sweep`] complements the simulated node-level figure
+//! with **measured thread-level** balance indices: real
+//! `parallel_train_step` executions under `TilePolicy::Auto`, per pipeline
+//! stage, per pool size — the `ScheduleStats::balance_index` numbers the
+//! autotuner also consumes.
 
 use crate::config::ClusterConfig;
 use crate::metrics::Table;
@@ -57,11 +63,96 @@ pub fn balance_sweep(quick: bool) -> Table {
     table
 }
 
+/// Fig. 15(b) companion from **real measurements**: run warm
+/// `TilePolicy::Auto` train steps on pools of several sizes and report the
+/// mean per-stage thread-level balance index (1.0 = every worker equally
+/// busy). Rows are pipeline stages in execution order; columns are pool
+/// sizes.
+pub fn thread_balance_sweep(quick: bool) -> Table {
+    use crate::config::NetworkConfig;
+    use crate::data::Dataset;
+    use crate::inner::{parallel_train_step, TilePolicy};
+    use crate::nn::{Network, StepWorkspace};
+    use crate::util::threadpool::ThreadPool;
+
+    let cfg = NetworkConfig {
+        name: "fig15_threads".into(),
+        input_hw: 12,
+        in_channels: 1,
+        conv_layers: 1,
+        filters: 6,
+        kernel_hw: 3,
+        fc_layers: 2,
+        fc_neurons: if quick { 128 } else { 512 },
+        num_classes: 8,
+        batch_size: 4,
+        pool_window: 2,
+    };
+    let threads: Vec<usize> = if quick { vec![2, 4] } else { vec![2, 4, 8] };
+    let steps = if quick { 6 } else { 24 };
+    let ds = Dataset::synthetic(&cfg, 16, 0.2, 23);
+    let (x, y, _) = ds.batch(0, cfg.batch_size);
+    // Ordered per-stage accumulators: (label, per-thread-count (Σ, n)).
+    let mut labels: Vec<&'static str> = Vec::new();
+    let mut sums: Vec<Vec<(f64, u32)>> = Vec::new();
+    for (ti, t) in threads.iter().enumerate() {
+        let pool = ThreadPool::new(*t);
+        let mut net = Network::init(&cfg, 24);
+        let mut ws = StepWorkspace::new();
+        let rows = (cfg.input_hw / 2).max(1);
+        for step in 0..steps {
+            let r = parallel_train_step(
+                &pool,
+                &mut net,
+                &x,
+                &y,
+                cfg.batch_size,
+                0.05,
+                TilePolicy::auto(rows),
+                &mut ws,
+            );
+            if step == 0 {
+                continue; // skip the cold step (calibration + pack warmup)
+            }
+            for s in &r.stages {
+                let idx = match labels.iter().position(|l| *l == s.label) {
+                    Some(i) => i,
+                    None => {
+                        labels.push(s.label);
+                        sums.push(vec![(0.0, 0); threads.len()]);
+                        labels.len() - 1
+                    }
+                };
+                let slot = &mut sums[idx][ti];
+                slot.0 += s.balance;
+                slot.1 += 1;
+            }
+        }
+    }
+    let headers: Vec<String> = std::iter::once("stage".to_string())
+        .chain(threads.iter().map(|t| format!("{t} threads")))
+        .collect();
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig. 15(b) companion: measured thread-level balance index per stage (TilePolicy::Auto)",
+        &hrefs,
+    );
+    for (i, label) in labels.iter().enumerate() {
+        let mut row = vec![label.to_string()];
+        for (sum, n) in &sums[i] {
+            row.push(if *n > 0 { format!("{:.3}", sum / *n as f64) } else { "-".to_string() });
+        }
+        table.row(&row);
+    }
+    table
+}
+
 pub fn run(quick: bool) -> String {
     let mut out = String::new();
     out.push_str("\n# Fig. 15 — communication & workload balance (simulated)\n");
     out.push_str(&comm_sweep(quick).render());
     out.push_str(&balance_sweep(quick).render());
+    out.push_str(&thread_balance_sweep(quick).render());
     print!("{out}");
     out
 }
@@ -74,5 +165,17 @@ mod tests {
     fn tables_complete() {
         assert_eq!(comm_sweep(true).len(), 3);
         assert_eq!(balance_sweep(true).len(), 3);
+    }
+
+    /// The measured sweep reports one row per pipeline stage, each with a
+    /// balance index in (0, 1] for every pool size.
+    #[test]
+    fn thread_balance_table_covers_stages() {
+        let t = thread_balance_sweep(true);
+        assert!(t.len() >= 6, "too few stage rows: {}", t.len());
+        let rendered = t.render();
+        for stage in ["conv_fwd", "dense_fwd", "dense_bwd", "conv_bwd", "loss"] {
+            assert!(rendered.contains(stage), "missing {stage}:\n{rendered}");
+        }
     }
 }

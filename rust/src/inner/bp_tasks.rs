@@ -22,12 +22,15 @@
 //!   This is the thread-safe realization of Fig. 8's per-neuron parallelism
 //!   with the synchronization overhead driven to zero.
 
+use std::cell::RefMut;
+
 use crate::config::NetworkConfig;
 use crate::nn::ops::{self, ConvDims, PackedB};
 use crate::nn::{Network, StepWorkspace};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
-use super::conv_tasks::{conv2d_parallel_packed, ConvTask, ConvTile, DisjointBuf};
+use super::autotune::{AutoTuner, StageKey, StageKind};
+use super::conv_tasks::{conv2d_parallel_packed_ws, ConvTask, ConvTile, DisjointBuf};
 use super::dag::TaskDag;
 use super::fc_tasks;
 use super::scheduler::{
@@ -35,28 +38,57 @@ use super::scheduler::{
     TilePolicy,
 };
 
+/// One stage's contribution to a step, in execution order: the stage
+/// family, its measured makespan and thread-level [`balance
+/// index`](ScheduleStats::balance_index), and how many tasks it dispatched.
+/// This is how the task modules report their stats *out* of
+/// [`parallel_train_step`] (instead of the pre-ISSUE-5 behavior of merging
+/// them away): the autotuner consumes the GEMM-shaped stages' entries and
+/// `experiments::fig15` renders the measured balance figure from them.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSample {
+    pub label: &'static str,
+    pub makespan_s: f64,
+    pub balance: f64,
+    pub tasks: usize,
+}
+
 /// Result of one task-parallel train step.
 pub struct ParallelStepResult {
     pub loss: f32,
     pub correct: usize,
+    /// All stages merged ([`ScheduleStats::merge`]).
     pub stats: ScheduleStats,
+    /// Per-stage samples in execution order.
+    pub stages: Vec<StageSample>,
 }
 
 /// One backward task of a conv layer:
 /// * [`BwdTask::Tile`] — fused row tile (df/db, plus dx when the kernel is
 ///   odd), the pre-2D path taken whenever neither grid column-splits;
+/// * [`BwdTask::Lower`] — shared im2col: lowers one (image, row-range)
+///   patch matrix (of `x`, or of `dy` for the dx space) once into the
+///   caller's lowering buffer, so the row range's column tiles stop
+///   re-running the same im2col per panel window;
 /// * [`BwdTask::Df`] / [`BwdTask::Dx`] — 2D tiles over output-channel /
 ///   input-channel panel windows when the grids do split (small batch ×
-///   small spatial extent);
+///   small spatial extent); `off` points at the row range's shared lowered
+///   patches, or is [`OWN_SCRATCH`] when the tile is its range's only
+///   column tile and lowers into the worker arena as before;
 /// * [`BwdTask::DxImage`] — whole-image input-gradient fallback for even
 ///   kernels (asymmetric implicit padding doesn't ride the flipped-forward
 ///   conv).
 enum BwdTask {
     Tile(ConvTask),
-    Df(ConvTile),
-    Dx(ConvTile),
+    Lower { off: usize, len: usize, n: usize, y0: usize, rows: usize, dy_space: bool },
+    Df { t: ConvTile, off: usize },
+    Dx { t: ConvTile, off: usize },
     DxImage(usize),
 }
+
+/// Sentinel `off`: the tile lowers its own patches into the executing
+/// worker's arena (no shared segment exists for its row range).
+const OWN_SCRATCH: usize = usize::MAX;
 
 /// Backward of one conv layer with 2D tile tasks (the row granularity
 /// mirrors the forward decomposition via `rows_per_task`; output/input
@@ -105,7 +137,8 @@ pub fn conv_bwd_parallel(
 /// `dx_grid` tiles (same rows × input-channel panels) drive the odd-kernel
 /// Eq.-18 input gradient. When neither grid column-splits, the two collapse
 /// into fused row-tile tasks — the pre-2D path, so large-batch layers pay
-/// no extra dispatch.
+/// no extra dispatch. Wraps [`conv_bwd_parallel_packed_ws`] with a
+/// throwaway lowering buffer (only touched when a grid column-splits).
 #[allow(clippy::too_many_arguments)]
 pub fn conv_bwd_parallel_packed(
     pool: &ThreadPool,
@@ -119,6 +152,33 @@ pub fn conv_bwd_parallel_packed(
     flip_packed: Option<&PackedB>,
     df_grid: TileGrid,
     dx_grid: TileGrid,
+) -> ScheduleStats {
+    let mut lower = Vec::new();
+    conv_bwd_parallel_packed_ws(
+        pool, d, x, f, dy, df, db, dx, flip_packed, df_grid, dx_grid, &mut lower,
+    )
+}
+
+/// [`conv_bwd_parallel_packed`] with a caller-owned lowering buffer: when a
+/// grid column-splits, each (image, row-range) patch matrix — `x` patches
+/// for the df tiles, `dy` patches for the odd-kernel dx tiles — is lowered
+/// **once** by a level-0 [`BwdTask::Lower`] task into a disjoint segment of
+/// `lower`, and the range's column tiles read it behind the scheduler's
+/// dependency wait instead of each re-running im2col.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd_parallel_packed_ws(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+    flip_packed: Option<&PackedB>,
+    df_grid: TileGrid,
+    dx_grid: TileGrid,
+    lower: &mut Vec<f32>,
 ) -> ScheduleStats {
     assert_eq!(x.len(), d.x_len());
     assert_eq!(dy.len(), d.y_len());
@@ -152,12 +212,14 @@ pub fn conv_bwd_parallel_packed(
             || !odd_k
             || (dx_grid.panel_tiles == 1 && dx_grid.rows_per_tile == df_grid.rows_per_tile));
 
-    // Task list — all level-0 (independent): dy is read-only here, so df
-    // and dx tiles never need ordering between them.
+    // Task list: dy is read-only here, so df and dx tiles never need
+    // ordering between them — the only dependencies are each column-split
+    // row range's tiles on its shared Lower task.
     let mut dag: TaskDag<BwdTask> = TaskDag::new();
     let cost_per_el = (dd.w * dd.k * dd.k * dd.c) as f64;
     let panels_co = panel_count(dd.co);
     let panels_c = panel_count(dd.c);
+    let mut lower_total = 0usize;
     for n in 0..dd.n {
         if fused {
             let mut y = 0;
@@ -177,6 +239,25 @@ pub fn conv_bwd_parallel_packed(
             let mut y = 0;
             while y < dd.h {
                 let rows = df_grid.rows_per_tile.min(dd.h - y);
+                // Column-split row ranges lower their x patches once.
+                let (off, dep) = if df_grid.panel_tiles > 1 {
+                    let len = rows * dd.w * kkc;
+                    let off = lower_total;
+                    lower_total += len;
+                    let lid = dag.add(
+                        format!("conv_bwd_lower_x[n{n},y{y}]"),
+                        len as f64,
+                        &[],
+                        BwdTask::Lower { off, len, n, y0: y, rows, dy_space: false },
+                    );
+                    (off, Some(lid))
+                } else {
+                    (OWN_SCRATCH, None)
+                };
+                let deps: &[usize] = match &dep {
+                    Some(id) => std::slice::from_ref(id),
+                    None => &[],
+                };
                 let mut p = 0;
                 while p < panels_co {
                     let np = df_grid.panels_per_tile.min(panels_co - p);
@@ -184,8 +265,8 @@ pub fn conv_bwd_parallel_packed(
                     dag.add(
                         format!("conv_bwd_df[n{n},y{y},p{p}]"),
                         cost_per_el * (rows * jw) as f64,
-                        &[],
-                        BwdTask::Df(ConvTile { n, y0: y, rows, p0: p, np }),
+                        deps,
+                        BwdTask::Df { t: ConvTile { n, y0: y, rows, p0: p, np }, off },
                     );
                     p += np;
                 }
@@ -196,6 +277,24 @@ pub fn conv_bwd_parallel_packed(
                 let mut y = 0;
                 while y < dd.h {
                     let rows = dx_grid.rows_per_tile.min(dd.h - y);
+                    let (off, dep) = if dx_grid.panel_tiles > 1 {
+                        let len = rows * dd.w * kkco;
+                        let off = lower_total;
+                        lower_total += len;
+                        let lid = dag.add(
+                            format!("conv_bwd_lower_dy[n{n},y{y}]"),
+                            len as f64,
+                            &[],
+                            BwdTask::Lower { off, len, n, y0: y, rows, dy_space: true },
+                        );
+                        (off, Some(lid))
+                    } else {
+                        (OWN_SCRATCH, None)
+                    };
+                    let deps: &[usize] = match &dep {
+                        Some(id) => std::slice::from_ref(id),
+                        None => &[],
+                    };
                     let mut p = 0;
                     while p < panels_c {
                         let np = dx_grid.panels_per_tile.min(panels_c - p);
@@ -203,8 +302,8 @@ pub fn conv_bwd_parallel_packed(
                         dag.add(
                             format!("conv_bwd_dx[n{n},y{y},p{p}]"),
                             cost_dx_el * (rows * jw) as f64,
-                            &[],
-                            BwdTask::Dx(ConvTile { n, y0: y, rows, p0: p, np }),
+                            deps,
+                            BwdTask::Dx { t: ConvTile { n, y0: y, rows, p0: p, np }, off },
                         );
                         p += np;
                     }
@@ -232,6 +331,8 @@ pub fn conv_bwd_parallel_packed(
     // Size + zero each worker's gradient accumulators for this layer call.
     fc_tasks::zero_arena_grads(pool, dd.f_len(), dd.co);
 
+    let lslice = ScratchArena::grow(lower, lower_total);
+    let lbuf = DisjointBuf::new(lslice);
     let arenas = pool.arenas();
     let stats = execute_dag(pool, dag, move |worker: usize, task: &BwdTask| {
         match *task {
@@ -270,7 +371,17 @@ pub fn conv_bwd_parallel_packed(
                     );
                 }
             }
-            BwdTask::Df(t) => {
+            BwdTask::Lower { off, len, n, y0, rows, dy_space } => {
+                // SAFETY: each Lower task exclusively owns its segment of
+                // the lowering buffer.
+                let cols = unsafe { lbuf.slice_mut(off, len) };
+                if dy_space {
+                    ops::im2col_rows(&swapped, dy, n, y0, rows, cols);
+                } else {
+                    ops::im2col_rows(&dd, x, n, y0, rows, cols);
+                }
+            }
+            BwdTask::Df { t, off } => {
                 // Eq. 21/22 column stripe: this tile's dW/db contributions
                 // land in the [j0, j0+jw) output-channel stripe of the
                 // executing worker's arena — disjoint from every other
@@ -280,8 +391,17 @@ pub fn conv_bwd_parallel_packed(
                 let patches = t.rows * dd.w;
                 let mut arena = arenas[worker].lock().unwrap();
                 let arena = &mut *arena;
-                let cols = ScratchArena::grow(&mut arena.cols, patches * kkc);
-                ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
+                let cols: &[f32] = if off == OWN_SCRATCH {
+                    // Sole column tile of its row range: lower into the
+                    // worker arena as before.
+                    let c = ScratchArena::grow(&mut arena.cols, patches * kkc);
+                    ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, c);
+                    c
+                } else {
+                    // SAFETY: the DAG dependency guarantees the segment was
+                    // fully lowered and is no longer written.
+                    unsafe { lbuf.slice_ref(off, patches * kkc) }
+                };
                 let dy0 = (t.n * dd.h + t.y0) * dd.w * dd.co;
                 let dyt = &dy[dy0..dy0 + patches * dd.co];
                 ops::gemm_tn_acc_cols(
@@ -302,7 +422,7 @@ pub fn conv_bwd_parallel_packed(
                     }
                 }
             }
-            BwdTask::Dx(t) => {
+            BwdTask::Dx { t, off } => {
                 // Eq. 18 tile windowed over input-channel panels: the
                 // flipped-filter forward writes only columns [j0, j0+jw) of
                 // this tile's dx rows.
@@ -316,20 +436,36 @@ pub fn conv_bwd_parallel_packed(
                     // channel-window) dx elements.
                     unsafe { dxb.slice_mut(base + px * dd.c + j0, jw) }.fill(0.0);
                 }
-                let mut arena = arenas[worker].lock().unwrap();
-                let cols2 = ScratchArena::grow(&mut arena.cols2, patches * kkco);
-                ops::im2col_rows(&swapped, dy, t.n, t.y0, t.rows, cols2);
-                // SAFETY: panel-windowed writes stay inside this tile's
-                // column window.
-                unsafe {
-                    ops::gemm_packed_acc_panels_raw(
-                        patches,
-                        cols2,
-                        pf,
-                        dxb.ptr_at(base),
-                        t.p0,
-                        t.np,
-                    );
+                if off == OWN_SCRATCH {
+                    let mut arena = arenas[worker].lock().unwrap();
+                    let cols2 = ScratchArena::grow(&mut arena.cols2, patches * kkco);
+                    ops::im2col_rows(&swapped, dy, t.n, t.y0, t.rows, cols2);
+                    // SAFETY: panel-windowed writes stay inside this tile's
+                    // column window.
+                    unsafe {
+                        ops::gemm_packed_acc_panels_raw(
+                            patches,
+                            cols2,
+                            pf,
+                            dxb.ptr_at(base),
+                            t.p0,
+                            t.np,
+                        );
+                    }
+                } else {
+                    // SAFETY: shared read behind the dependency barrier;
+                    // panel-windowed writes stay inside this tile's window.
+                    let cols2 = unsafe { lbuf.slice_ref(off, patches * kkco) };
+                    unsafe {
+                        ops::gemm_packed_acc_panels_raw(
+                            patches,
+                            cols2,
+                            pf,
+                            dxb.ptr_at(base),
+                            t.p0,
+                            t.np,
+                        );
+                    }
                 }
             }
             BwdTask::DxImage(n) => {
@@ -360,6 +496,14 @@ pub fn conv_bwd_parallel_packed(
 /// scheduler's task boxes only) and weight panels come from the network's
 /// pack cache. Numerically ≡ `Network::train_batch` to f32 reduction-order
 /// tolerance.
+///
+/// Under [`TilePolicy::Auto`] the GEMM-shaped stages route their grids
+/// through the network's node-owned [`AutoTuner`]: the pool is calibrated
+/// once at first use (micro-kernel rate + dispatch overhead → the planner's
+/// FLOP floor), each stage's measured [`ScheduleStats`] feeds back into its
+/// [`StageKey`] entry, and after the exploration window every stage runs
+/// its locked best grid. Backward companion grids (`dx` spaces) follow the
+/// tuned base grid's row split. Static policies bypass the tuner entirely.
 #[allow(clippy::too_many_arguments)]
 pub fn parallel_train_step(
     pool: &ThreadPool,
@@ -378,22 +522,69 @@ pub fn parallel_train_step(
     ws.prepare(cfg, batch, &net.weights);
     net.packs.borrow_mut().ensure(cfg, &net.weights);
     let mut agg: Option<ScheduleStats> = None;
+    let mut stages: Vec<StageSample> = Vec::new();
     // FC/loss row granularity: ~2 batch-row tiles per worker.
     let fc_rows = (batch / (2 * workers)).max(1);
 
     let (loss, correct) = {
+        let mut tuner: Option<RefMut<'_, AutoTuner>> = if policy.is_auto() {
+            let mut t = net.tuner.borrow_mut();
+            t.ensure_calibrated(pool);
+            Some(t)
+        } else {
+            None
+        };
         let packs = net.packs.borrow();
         let wts = net.weights.tensors();
+
+        // Plan one GEMM-shaped stage: through the tuner when one drives
+        // this step, statically otherwise. Yields `(grid, key)`.
+        macro_rules! plan_stage {
+            ($kind:expr, $m:expr, $k:expr, $n:expr, $hint:expr) => {{
+                let (m, k, n, hint) = ($m, $k, $n, $hint);
+                match tuner.as_mut() {
+                    Some(t) => {
+                        let key = StageKey::new($kind, m, k, n, workers);
+                        (t.plan(key, hint), Some(key))
+                    }
+                    None => (policy.plan(m, k, n, workers, hint), None),
+                }
+            }};
+        }
+        // Record one executed stage: feed the measured stats back into the
+        // tuner (tuned stages only), append the per-stage sample, merge
+        // into the step aggregate.
+        macro_rules! record {
+            ($label:expr, $key:expr, $s:expr) => {{
+                let s: ScheduleStats = $s;
+                let key: Option<StageKey> = $key;
+                if let (Some(t), Some(k)) = (tuner.as_mut(), key) {
+                    t.observe(k, &s);
+                }
+                stages.push(StageSample {
+                    label: $label,
+                    makespan_s: s.makespan_s,
+                    balance: s.balance_index(),
+                    tasks: s.tasks,
+                });
+                if let Some(a) = agg.as_mut() {
+                    a.merge(&s);
+                } else {
+                    agg = Some(s);
+                }
+            }};
+        }
 
         // ---- Forward: conv stack (Algorithm 4.1 tasks per layer) ---------
         for l in 0..cfg.conv_layers {
             let c = if l == 0 { cfg.in_channels } else { cfg.filters };
             let d = ConvDims { n: batch, h: hw, w: hw, c, k: cfg.kernel_hw, co: cfg.filters };
-            let grid = policy.plan(batch * hw, d.k * d.k * d.c, d.co, workers, conv_rows);
+            let (grid, key) =
+                plan_stage!(StageKind::ConvFwd, batch * hw, d.k * d.k * d.c, d.co, conv_rows);
             let (prev, cur) = ws.conv_outs.split_at_mut(l);
             let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
             let out = &mut cur[0][..];
-            let s = conv2d_parallel_packed(
+            let s = conv2d_parallel_packed_ws(
                 pool,
                 &d,
                 input,
@@ -401,10 +592,11 @@ pub fn parallel_train_step(
                 wts[2 * l + 1].data(),
                 out,
                 grid,
+                &mut ws.cols,
             );
-            agg = Some(merge_stats(agg, s));
+            record!("conv_fwd", key, s);
             let s = fc_tasks::relu_fwd_parallel(pool, out, pool.size());
-            agg = Some(merge_stats(agg, s));
+            record!("relu_fwd", None, s);
         }
 
         // ---- Forward: pool (per-image tasks) + FC row tiles --------------
@@ -417,13 +609,13 @@ pub fn parallel_train_step(
             &ws.conv_outs[cfg.conv_layers - 1]
         };
         let s = fc_tasks::mean_pool_fwd_parallel(pool, batch, hw, hw, c, win, cur, &mut ws.pooled);
-        agg = Some(merge_stats(agg, s));
+        record!("pool_fwd", None, s);
         for l in 0..cfg.fc_layers {
             let (prev, cur) = ws.fc_outs.split_at_mut(l);
             let feat: &[f32] = if l == 0 { &ws.pooled } else { &prev[l - 1] };
             let b = wts[2 * cfg.conv_layers + 2 * l + 1].data();
             let w = &packs.fc_w[l];
-            let grid = policy.plan(batch, w.kk(), w.n(), workers, fc_rows);
+            let (grid, key) = plan_stage!(StageKind::DenseFwd, batch, w.kk(), w.n(), fc_rows);
             let s = fc_tasks::dense_fwd_parallel(
                 pool,
                 batch,
@@ -434,7 +626,7 @@ pub fn parallel_train_step(
                 true,
                 grid,
             );
-            agg = Some(merge_stats(agg, s));
+            record!("dense_fwd", key, s);
         }
         let last: &[f32] = if cfg.fc_layers == 0 {
             &ws.pooled
@@ -443,7 +635,8 @@ pub fn parallel_train_step(
         };
         let ob = wts[2 * cfg.conv_layers + 2 * cfg.fc_layers + 1].data();
         let out_w = &packs.fc_w[cfg.fc_layers];
-        let out_grid = policy.plan(batch, out_w.kk(), out_w.n(), workers, fc_rows);
+        let (out_grid, out_key) =
+            plan_stage!(StageKind::DenseFwd, batch, out_w.kk(), out_w.n(), fc_rows);
         let s = fc_tasks::dense_fwd_parallel(
             pool,
             batch,
@@ -454,7 +647,7 @@ pub fn parallel_train_step(
             false,
             out_grid,
         );
-        agg = Some(merge_stats(agg, s));
+        record!("dense_fwd", out_key, s);
 
         // ---- Loss (Eq. 16), row tiles ------------------------------------
         let (loss, correct, s) = fc_tasks::loss_parallel(
@@ -468,7 +661,7 @@ pub fn parallel_train_step(
             &mut ws.loss_parts,
             fc_rows,
         );
-        agg = Some(merge_stats(agg, s));
+        record!("loss", None, s);
 
         // ---- Backward: FC row tiles (ReLU masks fused into the tiles) ----
         let pooled_dim = hp * hp * c;
@@ -483,7 +676,8 @@ pub fn parallel_train_step(
         let last_dim = if cfg.fc_layers > 0 { cfg.fc_neurons } else { pooled_dim };
         {
             let (a, b) = gts.split_at_mut(out_w_idx + 1);
-            let dy_grid = policy.plan(batch, last_dim, cfg.num_classes, workers, fc_rows);
+            let (dy_grid, key) =
+                plan_stage!(StageKind::DenseBwd, batch, last_dim, cfg.num_classes, fc_rows);
             let dx_grid = policy.plan_cols(&dy_grid, cfg.num_classes, last_dim, workers);
             let s = fc_tasks::dense_bwd_parallel(
                 pool,
@@ -500,7 +694,7 @@ pub fn parallel_train_step(
                 dy_grid,
                 dx_grid,
             );
-            agg = Some(merge_stats(agg, s));
+            record!("dense_bwd", key, s);
         }
         for l in (0..cfg.fc_layers).rev() {
             let in_feat: &[f32] = if l == 0 { &ws.pooled } else { &ws.fc_outs[l - 1] };
@@ -508,7 +702,8 @@ pub fn parallel_train_step(
             let w_idx = 2 * cfg.conv_layers + 2 * l;
             {
                 let (a, b) = gts.split_at_mut(w_idx + 1);
-                let dy_grid = policy.plan(batch, in_dim, cfg.fc_neurons, workers, fc_rows);
+                let (dy_grid, key) =
+                    plan_stage!(StageKind::DenseBwd, batch, in_dim, cfg.fc_neurons, fc_rows);
                 let dx_grid = policy.plan_cols(&dy_grid, cfg.fc_neurons, in_dim, workers);
                 let s = fc_tasks::dense_bwd_parallel(
                     pool,
@@ -525,7 +720,7 @@ pub fn parallel_train_step(
                     dy_grid,
                     dx_grid,
                 );
-                agg = Some(merge_stats(agg, s));
+                record!("dense_bwd", key, s);
             }
             std::mem::swap(&mut ws.dfeat, &mut ws.dfeat2);
         }
@@ -541,22 +736,26 @@ pub fn parallel_train_step(
             &ws.dfeat[..batch * pooled_dim],
             &mut ws.dconv,
         );
-        agg = Some(merge_stats(agg, s));
+        record!("pool_bwd", None, s);
         for l in (0..cfg.conv_layers).rev() {
             let s = fc_tasks::relu_bwd_parallel(pool, &ws.conv_outs[l], &mut ws.dconv, pool.size());
-            agg = Some(merge_stats(agg, s));
+            record!("relu_bwd", None, s);
             let cin = if l == 0 { cfg.in_channels } else { cfg.filters };
             let d = ConvDims { n: batch, h: hw, w: hw, c: cin, k: cfg.kernel_hw, co: cfg.filters };
             let w_idx = 2 * l;
             let in_act: &[f32] = if l == 0 { x } else { &ws.conv_outs[l - 1] };
             let want_dx = l > 0;
-            let s = {
+            {
                 let (a, b) = gts.split_at_mut(w_idx + 1);
                 let dx = if want_dx { Some(&mut ws.dconv2[..d.x_len()]) } else { None };
                 let flip = if want_dx && d.k % 2 == 1 { Some(&packs.conv_flip[l]) } else { None };
-                let df_grid = policy.plan(batch * hw, d.k * d.k * d.c, d.co, workers, conv_rows);
+                // dx roughly doubles the stage's work: key it separately so
+                // df-only and df+dx layers never pool makespan samples.
+                let kind = if want_dx { StageKind::ConvBwdDx } else { StageKind::ConvBwd };
+                let (df_grid, key) =
+                    plan_stage!(kind, batch * hw, d.k * d.k * d.c, d.co, conv_rows);
                 let dx_grid = policy.plan_cols(&df_grid, d.k * d.k * d.co, d.c, workers);
-                conv_bwd_parallel_packed(
+                let s = conv_bwd_parallel_packed_ws(
                     pool,
                     &d,
                     in_act,
@@ -568,9 +767,10 @@ pub fn parallel_train_step(
                     flip,
                     df_grid,
                     dx_grid,
-                )
-            };
-            agg = Some(merge_stats(agg, s));
+                    &mut ws.cols,
+                );
+                record!("conv_bwd", key, s);
+            }
             if want_dx {
                 std::mem::swap(&mut ws.dconv, &mut ws.dconv2);
             }
@@ -580,30 +780,8 @@ pub fn parallel_train_step(
 
     // ---- SGD (Eq. 23) -------------------------------------------------------
     net.weights.axpy(-lr, ws.grads());
-    let stats = agg.unwrap_or(ScheduleStats {
-        makespan_s: 0.0,
-        thread_busy_s: vec![0.0; pool.size()],
-        thread_assigned_cost: vec![0.0; pool.size()],
-        tasks: 0,
-    });
-    ParallelStepResult { loss, correct, stats }
-}
-
-fn merge_stats(acc: Option<ScheduleStats>, s: ScheduleStats) -> ScheduleStats {
-    match acc {
-        None => s,
-        Some(mut a) => {
-            a.makespan_s += s.makespan_s;
-            a.tasks += s.tasks;
-            for (x, y) in a.thread_busy_s.iter_mut().zip(s.thread_busy_s.iter()) {
-                *x += y;
-            }
-            for (x, y) in a.thread_assigned_cost.iter_mut().zip(s.thread_assigned_cost.iter()) {
-                *x += y;
-            }
-            a
-        }
-    }
+    let stats = agg.unwrap_or_else(|| ScheduleStats::zero(pool.size()));
+    ParallelStepResult { loss, correct, stats, stages }
 }
 
 /// Build the Fig.-9 style task DAG for a whole train step at (image × layer)
@@ -847,6 +1025,68 @@ mod tests {
             "rows-only weights diverged: {}",
             serial.weights.max_abs_diff(&par1d.weights)
         );
+    }
+
+    /// `TilePolicy::Auto`: the tuner-driven step stays numerically ≡ the
+    /// serial step across its whole exploration window (every candidate
+    /// grid is an equivalent decomposition), accumulates per-stage tuner
+    /// state on the network, and reports per-stage samples.
+    #[test]
+    fn parallel_step_auto_matches_serial_through_exploration() {
+        let cfg = NetworkConfig {
+            name: "auto_fc".into(),
+            input_hw: 8,
+            in_channels: 1,
+            conv_layers: 1,
+            filters: 4,
+            kernel_hw: 3,
+            fc_layers: 2,
+            fc_neurons: 256,
+            num_classes: 4,
+            batch_size: 2,
+            pool_window: 2,
+        };
+        let ds = Dataset::synthetic(&cfg, 8, 0.1, 29);
+        let (x, y, _) = ds.batch(0, 2);
+        let pool = ThreadPool::new(4);
+        let mut serial = Network::init(&cfg, 30);
+        let mut auto_net = serial.clone();
+        let mut ws = StepWorkspace::new();
+        let mut sws = StepWorkspace::new();
+        for step in 0..12 {
+            let (sl, sc) = serial.train_batch_ws(&x, &y, 2, 0.05, &mut sws);
+            let r = parallel_train_step(
+                &pool,
+                &mut auto_net,
+                &x,
+                &y,
+                2,
+                0.05,
+                TilePolicy::auto(2),
+                &mut ws,
+            );
+            assert!(
+                (sl - r.loss).abs() < 1e-3,
+                "step {step}: serial loss {sl} vs auto {}",
+                r.loss
+            );
+            assert_eq!(sc, r.correct, "step {step}");
+            assert!(!r.stages.is_empty(), "step reported no stage samples");
+            assert!(r.stages.iter().any(|s| s.label == "dense_fwd"));
+            assert!(r.stages.iter().all(|s| s.makespan_s >= 0.0 && s.balance >= 0.0));
+            // Weights track the serial trajectory within f32 reduction
+            // tolerance, step by step (divergence would compound).
+            assert!(
+                serial.weights.max_abs_diff(&auto_net.weights) < 1e-3,
+                "step {step}: weights diverged by {}",
+                serial.weights.max_abs_diff(&auto_net.weights)
+            );
+        }
+        let tuner = auto_net.take_tuner();
+        assert!(tuner.calibration().is_some(), "pool was never calibrated");
+        assert!(tuner.len() >= 3, "too few tuned stages: {}", tuner.len());
+        let table = tuner.table();
+        assert!(table.contains("dense_bwd"), "{table}");
     }
 
     #[test]

@@ -185,7 +185,9 @@ pub fn conv2d_parallel(
 /// form the workspace train step uses, so the per-layer pack comes from the
 /// network's [`crate::nn::WeightPacks`] cache instead of being rebuilt
 /// every call, and the grid from the step's [`crate::inner::TilePolicy`]
-/// plan.
+/// plan. Wraps [`conv2d_parallel_packed_ws`] with a throwaway lowering
+/// buffer (only touched when the grid column-splits); hot loops pass a
+/// persistent one instead.
 pub fn conv2d_parallel_packed(
     pool: &ThreadPool,
     d: &ConvDims,
@@ -195,36 +197,149 @@ pub fn conv2d_parallel_packed(
     out: &mut [f32],
     grid: TileGrid,
 ) -> ScheduleStats {
+    let mut lower = Vec::new();
+    conv2d_parallel_packed_ws(pool, d, x, packed, bias, out, grid, &mut lower)
+}
+
+/// One task of the column-split conv DAG: a [`ConvLowerStage::Lower`] task
+/// lowers one (image × row-range) patch matrix **once** into the shared
+/// scratch; the [`ConvLowerStage::Tile`] tasks of that row range depend on
+/// it and contract disjoint panel windows of the shared patches. Before
+/// this, every panel tile of a row range re-ran the same im2col — work the
+/// autotuner would mis-attribute to grid shape.
+enum ConvLowerStage {
+    Lower { off: usize, len: usize, n: usize, y0: usize, rows: usize },
+    Tile { t: ConvTile, off: usize },
+}
+
+/// [`conv2d_parallel_packed`] with a caller-owned lowering buffer. Row-only
+/// grids keep the pre-2D path: each tile lowers its own rows into the
+/// executing worker's arena (no shared buffer, nothing grows). Column-split
+/// grids lower each (image, row-range) patch matrix exactly once into
+/// `lower` (level-0 tasks writing disjoint segments) and the row range's
+/// panel tiles read it behind the scheduler's dependency wait — the im2col
+/// cost no longer multiplies with the column-tile count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_parallel_packed_ws(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    packed: &ops::PackedB,
+    bias: &[f32],
+    out: &mut [f32],
+    grid: TileGrid,
+    lower: &mut Vec<f32>,
+) -> ScheduleStats {
     assert_eq!(out.len(), d.y_len());
     assert_eq!(x.len(), d.x_len());
     assert_eq!(packed.n(), d.co);
     grid.check();
-    let dag = conv_tile_dag(d, &grid);
-    let shared = DisjointBuf::new(out);
     let dd = *d;
     let kkc = dd.k * dd.k * dd.c;
-    let arenas = pool.arenas();
-    execute_dag(pool, dag, move |worker: usize, t: &ConvTile| {
-        let (j0, jw) = ops::panel_window(dd.co, t.p0, t.np);
-        let patches = t.rows * dd.w;
-        let base = (t.n * dd.h + t.y0) * dd.w * dd.co;
-        // Bias-seed the tile's column window, one patch row at a time.
-        // SAFETY: tile (n, y0, rows, p0, np) exclusively owns these
-        // (row × column-window) elements; windows never overlap across
-        // concurrent tiles.
-        for px in 0..patches {
-            let row = unsafe { shared.slice_mut(base + px * dd.co + j0, jw) };
-            row.copy_from_slice(&bias[j0..j0 + jw]);
+    if grid.panel_tiles <= 1 {
+        let dag = conv_tile_dag(d, &grid);
+        let shared = DisjointBuf::new(out);
+        let arenas = pool.arenas();
+        return execute_dag(pool, dag, move |worker: usize, t: &ConvTile| {
+            let (j0, jw) = ops::panel_window(dd.co, t.p0, t.np);
+            let patches = t.rows * dd.w;
+            let base = (t.n * dd.h + t.y0) * dd.w * dd.co;
+            // Bias-seed the tile's column window, one patch row at a time.
+            // SAFETY: tile (n, y0, rows, p0, np) exclusively owns these
+            // (row × column-window) elements; windows never overlap across
+            // concurrent tiles.
+            for px in 0..patches {
+                let row = unsafe { shared.slice_mut(base + px * dd.co + j0, jw) };
+                row.copy_from_slice(&bias[j0..j0 + jw]);
+            }
+            // Worker-persistent im2col scratch (uncontended: only worker
+            // `worker` runs tasks pinned to it, one at a time).
+            let mut arena = arenas[worker].lock().unwrap();
+            let cols = ScratchArena::grow(&mut arena.cols, patches * kkc);
+            ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
+            // SAFETY: the panel-windowed GEMM writes only the column window
+            // this tile owns.
+            unsafe {
+                ops::gemm_packed_acc_panels_raw(
+                    patches,
+                    cols,
+                    packed,
+                    shared.ptr_at(base),
+                    t.p0,
+                    t.np,
+                );
+            }
+        });
+    }
+    // Column-split grid: lower once per (image, row-range), contract per
+    // panel window.
+    let panels = panel_count(dd.co);
+    let cost_per_el = (dd.w * dd.k * dd.k * dd.c) as f64;
+    let mut dag: TaskDag<ConvLowerStage> = TaskDag::new();
+    let mut total = 0usize;
+    for n in 0..dd.n {
+        let mut y = 0;
+        while y < dd.h {
+            let rows = grid.rows_per_tile.min(dd.h - y);
+            let len = rows * dd.w * kkc;
+            let off = total;
+            total += len;
+            let lid = dag.add(
+                format!("conv_lower[n{n},y{y}+{rows}]"),
+                len as f64,
+                &[],
+                ConvLowerStage::Lower { off, len, n, y0: y, rows },
+            );
+            let deps = [lid];
+            let mut p = 0;
+            while p < panels {
+                let np = grid.panels_per_tile.min(panels - p);
+                let (_, jw) = ops::panel_window(dd.co, p, np);
+                dag.add(
+                    format!("conv[n{n},y{y}+{rows},p{p}]"),
+                    cost_per_el * (rows * jw) as f64,
+                    &deps,
+                    ConvLowerStage::Tile { t: ConvTile { n, y0: y, rows, p0: p, np }, off },
+                );
+                p += np;
+            }
+            y += rows;
         }
-        // Worker-persistent im2col scratch (uncontended: only worker
-        // `worker` runs tasks pinned to it, one at a time).
-        let mut arena = arenas[worker].lock().unwrap();
-        let cols = ScratchArena::grow(&mut arena.cols, patches * kkc);
-        ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
-        // SAFETY: the panel-windowed GEMM writes only the column window this
-        // tile owns.
-        unsafe {
-            ops::gemm_packed_acc_panels_raw(patches, cols, packed, shared.ptr_at(base), t.p0, t.np);
+    }
+    let lslice = ScratchArena::grow(lower, total);
+    let lbuf = DisjointBuf::new(lslice);
+    let shared = DisjointBuf::new(out);
+    execute_dag(pool, dag, move |_worker: usize, task: &ConvLowerStage| match *task {
+        ConvLowerStage::Lower { off, len, n, y0, rows } => {
+            // SAFETY: each Lower task exclusively owns its scratch segment.
+            let cols = unsafe { lbuf.slice_mut(off, len) };
+            ops::im2col_rows(&dd, x, n, y0, rows, cols);
+        }
+        ConvLowerStage::Tile { t, off } => {
+            let (j0, jw) = ops::panel_window(dd.co, t.p0, t.np);
+            let patches = t.rows * dd.w;
+            let base = (t.n * dd.h + t.y0) * dd.w * dd.co;
+            // SAFETY: tile (n, y0, rows, p0, np) exclusively owns its
+            // (row × column-window) output elements.
+            for px in 0..patches {
+                let row = unsafe { shared.slice_mut(base + px * dd.co + j0, jw) };
+                row.copy_from_slice(&bias[j0..j0 + jw]);
+            }
+            // SAFETY: the DAG dependency guarantees this segment was fully
+            // lowered and is no longer written — shared reads are sound.
+            let cols = unsafe { lbuf.slice_ref(off, patches * kkc) };
+            // SAFETY: the panel-windowed GEMM writes only the column window
+            // this tile owns.
+            unsafe {
+                ops::gemm_packed_acc_panels_raw(
+                    patches,
+                    cols,
+                    packed,
+                    shared.ptr_at(base),
+                    t.p0,
+                    t.np,
+                );
+            }
         }
     })
 }
@@ -343,6 +458,47 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Column-split grids take the shared-lowering DAG (one im2col per
+    /// (image, row-range), panel tiles contracting the shared buffer): the
+    /// output must be **bit-identical** to the row-only path (panel windows
+    /// have independent accumulators), the DAG must contain the extra Lower
+    /// tasks, and the caller's lowering buffer must be reused across calls.
+    #[test]
+    fn shared_lowering_matches_rowonly_bitwise() {
+        let mut rng = Xoshiro256::new(33);
+        let d = ConvDims { n: 2, h: 4, w: 5, c: 3, k: 3, co: 20 }; // 3 panels
+        let x = rand_vec(&mut rng, d.x_len());
+        let f = rand_vec(&mut rng, d.f_len());
+        let b = rand_vec(&mut rng, d.co);
+        let packed = ops::pack_filter(&d, &f);
+        let pool = ThreadPool::new(4);
+        let rows_only = TileGrid::rows_only(d.n * d.h, 2, d.co);
+        let mut base = vec![0.0; d.y_len()];
+        let s0 = conv2d_parallel_packed(&pool, &d, &x, &packed, &b, &mut base, rows_only);
+        let panels = panel_count(d.co);
+        let split = TileGrid {
+            rows_per_tile: 2,
+            row_tiles: (d.n * d.h + 1) / 2,
+            panels_per_tile: 1,
+            panel_tiles: panels,
+        };
+        let mut lower = Vec::new();
+        let mut out = vec![0.0; d.y_len()];
+        let s1 = conv2d_parallel_packed_ws(&pool, &d, &x, &packed, &b, &mut out, split, &mut lower);
+        assert_eq!(out, base, "shared-lowering path is not bit-identical");
+        // One Lower task per (image, row-range) on top of the panel tiles.
+        let row_ranges = d.n * ((d.h + 1) / 2);
+        assert_eq!(s1.tasks, s0.tasks + row_ranges * panels, "{s1:?} vs {s0:?}");
+        // The lowering buffer was sized for all segments and is reused.
+        let kkc = d.k * d.k * d.c;
+        assert!(lower.len() >= row_ranges * 2 * d.w * kkc - d.w * kkc);
+        let cap = lower.capacity();
+        let mut out2 = vec![0.0; d.y_len()];
+        conv2d_parallel_packed_ws(&pool, &d, &x, &packed, &b, &mut out2, split, &mut lower);
+        assert_eq!(out2, base);
+        assert_eq!(lower.capacity(), cap, "second call reallocated the lowering buffer");
     }
 
     #[test]

@@ -11,7 +11,14 @@
 //! (2000-neuron FC layers at small batch), where a single batch row's GEMM
 //! must span workers to keep strong scaling alive (cf. Dryden et al.,
 //! arXiv:1903.06681; Jia et al., arXiv:1802.04924).
+//!
+//! The planner's per-tile FLOP floor is **calibrated per machine** (micro-
+//! kernel rate × measured dispatch overhead, `autotune`), and under
+//! [`TilePolicy::Auto`] every GEMM-shaped stage's grid is adapted **online**
+//! from its measured [`ScheduleStats`] makespan by the node's
+//! [`AutoTuner`] — static heuristics are only the cold-start prior.
 
+pub mod autotune;
 pub mod bp_tasks;
 pub mod conv_tasks;
 pub mod dag;
@@ -19,14 +26,19 @@ pub mod fc_tasks;
 pub mod priority;
 pub mod scheduler;
 
-pub use bp_tasks::{parallel_train_step, train_step_dag, ParallelStepResult};
+pub use autotune::{
+    set_tile_floor_flops, tile_floor_flops, AutoTuner, Calibration, StageKey, StageKind,
+    StageTuner,
+};
+pub use bp_tasks::{parallel_train_step, train_step_dag, ParallelStepResult, StageSample};
 pub use conv_tasks::{
-    conv2d_parallel, conv2d_parallel_packed, conv_task_dag, conv_tile_dag, ConvTask, ConvTile,
+    conv2d_parallel, conv2d_parallel_packed, conv2d_parallel_packed_ws, conv_task_dag,
+    conv_tile_dag, ConvTask, ConvTile,
 };
 pub use dag::{TaskDag, TaskId, TaskNode};
 pub use fc_tasks::{dense_bwd_parallel, dense_fwd_parallel, loss_parallel, RowTask, Tile2};
 pub use priority::{mark_priorities, priority_order};
 pub use scheduler::{
-    execute_dag, execute_sequential, panel_count, plan_cols_for_rows, plan_tile_grid,
-    ScheduleStats, TileGrid, TilePolicy,
+    execute_dag, execute_sequential, panel_count, plan_cols_for_rows, plan_cols_for_rows_with_floor,
+    plan_tile_grid, plan_tile_grid_with_floor, ScheduleStats, TileGrid, TilePolicy,
 };

@@ -31,17 +31,13 @@ use super::priority::priority_order;
 /// dispatch overhead stays amortized.
 pub const TILE_TARGET_PER_WORKER: usize = 2;
 
-/// FLOP floor per tile: the planner never splits a stage into tiles cheaper
-/// than this (dispatch costs ~µs; a tile this size computes for ~10× that).
-const MIN_TILE_FLOPS: usize = 32 * 1024;
-
 /// `⌈n/NR⌉` — the packed-B panel count of an `n`-column stage (the column
 /// grain of the 2D grid; a column tile is always a whole number of panels).
 pub fn panel_count(n: usize) -> usize {
     (n.max(1) + NR - 1) / NR
 }
 
-fn ceil_div(a: usize, b: usize) -> usize {
+pub(super) fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
@@ -105,8 +101,24 @@ impl TileGrid {
 /// batch row's GEMM must span workers to keep them busy. When columns do
 /// split, row tiles are first fattened to `MR` so each tile still feeds
 /// full 4×8 register tiles instead of 1-row edge kernels, and the split is
-/// capped so no tile drops under a FLOP floor (`MIN_TILE_FLOPS`).
+/// capped so no tile drops under the per-tile FLOP floor — **calibrated**
+/// per machine from the measured micro-kernel rate and dispatch overhead
+/// ([`crate::inner::autotune::tile_floor_flops`]), not a hard-coded
+/// constant.
 pub fn plan_tile_grid(m: usize, kk: usize, n: usize, workers: usize, rows_hint: usize) -> TileGrid {
+    plan_tile_grid_with_floor(m, kk, n, workers, rows_hint, super::autotune::tile_floor_flops())
+}
+
+/// [`plan_tile_grid`] with an explicit per-tile FLOP floor — the form the
+/// autotuner uses to generate floor×{½,2} neighbor plans.
+pub fn plan_tile_grid_with_floor(
+    m: usize,
+    kk: usize,
+    n: usize,
+    workers: usize,
+    rows_hint: usize,
+    floor_flops: usize,
+) -> TileGrid {
     let m = m.max(1);
     let target = TILE_TARGET_PER_WORKER * workers.max(1);
     let rows_per_tile = rows_hint.clamp(1, m);
@@ -118,7 +130,7 @@ pub fn plan_tile_grid(m: usize, kk: usize, n: usize, workers: usize, rows_hint: 
     // feed whole register tiles, not 1-row edge kernels.
     let rows_per_tile = rows_per_tile.max(MR.min(m));
     let row_tiles = ceil_div(m, rows_per_tile);
-    plan_cols_for_rows(rows_per_tile, row_tiles, kk, n, workers)
+    plan_cols_for_rows_with_floor(rows_per_tile, row_tiles, kk, n, workers, floor_flops)
 }
 
 /// The column-split half of the planner with the row split already fixed —
@@ -132,6 +144,25 @@ pub fn plan_cols_for_rows(
     n: usize,
     workers: usize,
 ) -> TileGrid {
+    plan_cols_for_rows_with_floor(
+        rows_per_tile,
+        row_tiles,
+        kk,
+        n,
+        workers,
+        super::autotune::tile_floor_flops(),
+    )
+}
+
+/// [`plan_cols_for_rows`] with an explicit per-tile FLOP floor.
+pub fn plan_cols_for_rows_with_floor(
+    rows_per_tile: usize,
+    row_tiles: usize,
+    kk: usize,
+    n: usize,
+    workers: usize,
+    floor_flops: usize,
+) -> TileGrid {
     let target = TILE_TARGET_PER_WORKER * workers.max(1);
     let panels = panel_count(n);
     // Tiles wanted from the column dimension, capped by the panel supply
@@ -141,7 +172,7 @@ pub fn plan_cols_for_rows(
         .saturating_mul(rows_per_tile)
         .saturating_mul(kk)
         .saturating_mul(n);
-    want = want.min((row_tile_flops / MIN_TILE_FLOPS).max(1)).min(panels).max(1);
+    want = want.min((row_tile_flops / floor_flops.max(1)).max(1)).min(panels).max(1);
     let panels_per_tile = ceil_div(panels, want);
     TileGrid {
         rows_per_tile,
@@ -160,6 +191,12 @@ pub enum TilePolicy {
     /// 2D row×panel grids from [`plan_tile_grid`]; `rows_per_task` seeds
     /// the conv row split exactly like the old 1D knob.
     Grid2d { rows_per_task: usize },
+    /// Per-stage grids chosen online by the node's
+    /// [`crate::inner::AutoTuner`] from measured makespans. Where no tuner
+    /// state is available (the [`TilePolicy::plan`] fallback below, or a
+    /// freshly-seen stage), this degrades to the static [`plan_tile_grid`]
+    /// — an untuned Auto step is exactly a `Grid2d` step.
+    Auto { rows_per_task: usize },
 }
 
 impl TilePolicy {
@@ -171,16 +208,27 @@ impl TilePolicy {
         TilePolicy::Grid2d { rows_per_task }
     }
 
+    pub fn auto(rows_per_task: usize) -> Self {
+        TilePolicy::Auto { rows_per_task }
+    }
+
+    /// Whether this policy routes planning through the stage autotuner.
+    pub fn is_auto(&self) -> bool {
+        matches!(self, TilePolicy::Auto { .. })
+    }
+
     /// The conv row granularity this policy was seeded with.
     pub fn rows_per_task(&self) -> usize {
         match *self {
-            TilePolicy::RowsOnly { rows_per_task } | TilePolicy::Grid2d { rows_per_task } => {
-                rows_per_task
-            }
+            TilePolicy::RowsOnly { rows_per_task }
+            | TilePolicy::Grid2d { rows_per_task }
+            | TilePolicy::Auto { rows_per_task } => rows_per_task,
         }
     }
 
-    /// Plan one stage's grid under this policy.
+    /// Plan one stage's grid under this policy (the static path — `Auto`
+    /// steps route through the tuner instead and only land here as the
+    /// no-tuner degradation).
     pub fn plan(
         &self,
         m: usize,
@@ -191,12 +239,16 @@ impl TilePolicy {
     ) -> TileGrid {
         match *self {
             TilePolicy::RowsOnly { .. } => TileGrid::rows_only(m, rows_hint, n),
-            TilePolicy::Grid2d { .. } => plan_tile_grid(m, kk, n, workers, rows_hint),
+            TilePolicy::Grid2d { .. } | TilePolicy::Auto { .. } => {
+                plan_tile_grid(m, kk, n, workers, rows_hint)
+            }
         }
     }
 
     /// Companion grid sharing `base`'s row split, column-split over a
-    /// different output width (the backward dx spaces).
+    /// different output width (the backward dx spaces). Companions are
+    /// always derived statically from the base grid — under `Auto` the base
+    /// is the tuned grid, so the companion follows the tuner's row split.
     pub fn plan_cols(&self, base: &TileGrid, kk: usize, n: usize, workers: usize) -> TileGrid {
         match *self {
             TilePolicy::RowsOnly { .. } => TileGrid {
@@ -204,7 +256,7 @@ impl TilePolicy {
                 panel_tiles: 1,
                 ..*base
             },
-            TilePolicy::Grid2d { .. } => {
+            TilePolicy::Grid2d { .. } | TilePolicy::Auto { .. } => {
                 plan_cols_for_rows(base.rows_per_tile, base.row_tiles, kk, n, workers)
             }
         }
@@ -224,6 +276,17 @@ pub struct ScheduleStats {
 }
 
 impl ScheduleStats {
+    /// Stats of an empty schedule over `workers` threads (the identity for
+    /// [`ScheduleStats::merge`]).
+    pub fn zero(workers: usize) -> Self {
+        ScheduleStats {
+            makespan_s: 0.0,
+            thread_busy_s: vec![0.0; workers],
+            thread_assigned_cost: vec![0.0; workers],
+            tasks: 0,
+        }
+    }
+
     /// Balance index over measured busy time (Fig. 15b metric, applied to
     /// threads instead of nodes).
     pub fn balance_index(&self) -> f64 {
@@ -233,6 +296,30 @@ impl ScheduleStats {
     /// Balance index over assigned cost.
     pub fn assigned_balance_index(&self) -> f64 {
         stats::balance_index(&self.thread_assigned_cost)
+    }
+
+    /// Accumulate another **sequentially executed** sub-stage's stats into
+    /// this one: makespans and task counts add (the stages ran one after
+    /// another), and the per-thread vectors add element-wise **padded to
+    /// the larger worker count** — merging stats from pools of different
+    /// sizes is well-defined (a worker absent from one stage contributed
+    /// zero time there), instead of silently truncating to the shorter
+    /// vector as the old ad-hoc merge did.
+    pub fn merge(&mut self, s: &ScheduleStats) {
+        self.makespan_s += s.makespan_s;
+        self.tasks += s.tasks;
+        if self.thread_busy_s.len() < s.thread_busy_s.len() {
+            self.thread_busy_s.resize(s.thread_busy_s.len(), 0.0);
+        }
+        for (x, y) in self.thread_busy_s.iter_mut().zip(s.thread_busy_s.iter()) {
+            *x += y;
+        }
+        if self.thread_assigned_cost.len() < s.thread_assigned_cost.len() {
+            self.thread_assigned_cost.resize(s.thread_assigned_cost.len(), 0.0);
+        }
+        for (x, y) in self.thread_assigned_cost.iter_mut().zip(s.thread_assigned_cost.iter()) {
+            *x += y;
+        }
     }
 }
 
@@ -673,5 +760,68 @@ mod tests {
         let dx = rows.plan_cols(&g, 2000, 2000, 8);
         assert_eq!(dx.panel_tiles, 1);
         assert_eq!(dx.rows_per_tile, g.rows_per_tile);
+        // Auto degrades to the static planner when no tuner drives it.
+        let auto = TilePolicy::auto(2);
+        assert!(auto.is_auto());
+        assert_eq!(auto.rows_per_task(), 2);
+        assert_eq!(auto.plan(4, 2000, 2000, 8, 1), g);
+        assert_eq!(auto.plan_cols(&g, 2000, 2000, 8), grid.plan_cols(&g, 2000, 2000, 8));
+    }
+
+    /// The merge of sequentially-executed sub-stage stats is well-defined
+    /// for *any* pair of worker counts: per-thread vectors pad to the max
+    /// instead of silently truncating to the min.
+    #[test]
+    fn merge_pads_to_max_worker_count() {
+        let mut a = ScheduleStats {
+            makespan_s: 1.0,
+            thread_busy_s: vec![1.0, 2.0],
+            thread_assigned_cost: vec![3.0, 4.0],
+            tasks: 2,
+        };
+        let b = ScheduleStats {
+            makespan_s: 0.5,
+            thread_busy_s: vec![0.5, 0.5, 0.5, 0.5],
+            thread_assigned_cost: vec![1.0, 1.0, 1.0, 1.0],
+            tasks: 4,
+        };
+        a.merge(&b);
+        assert_eq!(a.makespan_s, 1.5);
+        assert_eq!(a.tasks, 6);
+        assert_eq!(a.thread_busy_s, vec![1.5, 2.5, 0.5, 0.5]);
+        assert_eq!(a.thread_assigned_cost, vec![4.0, 5.0, 1.0, 1.0]);
+        // Longer-into-shorter (the old silent-truncation case): the extra
+        // workers of the accumulator keep their totals.
+        let mut c = ScheduleStats::zero(4);
+        c.thread_busy_s[3] = 9.0;
+        c.merge(&ScheduleStats {
+            makespan_s: 1.0,
+            thread_busy_s: vec![1.0],
+            thread_assigned_cost: vec![2.0],
+            tasks: 1,
+        });
+        assert_eq!(c.thread_busy_s, vec![1.0, 0.0, 0.0, 9.0]);
+        assert_eq!(c.thread_assigned_cost, vec![2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(c.tasks, 1);
+    }
+
+    /// The floor is an explicit parameter with the default path reading the
+    /// calibrated global — no hard-coded constant left in the planner.
+    #[test]
+    fn planner_floor_is_explicit_and_calibrated() {
+        // A tiny floor lets the acceptance shape reach the full 2×workers
+        // supply; a huge floor forbids column-splitting entirely.
+        let fine = plan_tile_grid_with_floor(4, 2000, 2000, 8, 1, 1);
+        assert!(fine.panel_tiles > 1, "{fine:?}");
+        let coarse = plan_tile_grid_with_floor(4, 2000, 2000, 8, 1, usize::MAX / 4);
+        assert_eq!(coarse.panel_tiles, 1, "{coarse:?}");
+        // The default path's calibrated floor stays inside the clamp band,
+        // where every pinned planner expectation holds.
+        let f = crate::inner::autotune::tile_floor_flops();
+        assert!(
+            (crate::inner::autotune::FLOOR_MIN_FLOPS..=crate::inner::autotune::FLOOR_MAX_FLOPS)
+                .contains(&f),
+            "calibrated floor {f} outside clamp band"
+        );
     }
 }

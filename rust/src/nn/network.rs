@@ -17,6 +17,7 @@
 use std::cell::RefCell;
 
 use crate::config::NetworkConfig;
+use crate::inner::AutoTuner;
 use crate::tensor::{Tensor, WeightSet};
 use crate::util::rng::Xoshiro256;
 
@@ -32,16 +33,22 @@ pub struct Network {
     /// whenever the weight generation changes — once per SGD step, once per
     /// AGWU fetch, never across eval batches on frozen weights.
     pub(crate) packs: RefCell<WeightPacks>,
+    /// Per-stage tile autotuner driving `TilePolicy::Auto` steps. Lives
+    /// with the pack cache on the node: epoch trainers move it across
+    /// their per-epoch networks ([`Network::take_tuner`]) so calibration
+    /// and locked plans survive as long as the node does.
+    pub(crate) tuner: RefCell<AutoTuner>,
 }
 
 impl Clone for Network {
     fn clone(&self) -> Self {
         // The pack cache is value-derived; clones start cold and repack on
-        // first use.
+        // first use. Tuner state is measurement-derived; clones re-tune.
         Self {
             cfg: self.cfg.clone(),
             weights: self.weights.clone(),
             packs: RefCell::new(WeightPacks::default()),
+            tuner: RefCell::new(AutoTuner::default()),
         }
     }
 }
@@ -96,6 +103,20 @@ impl Network {
         weights: WeightSet,
         packs: WeightPacks,
     ) -> Self {
+        Self::with_node_state(cfg, weights, packs, AutoTuner::default())
+    }
+
+    /// [`Network::with_weights_and_packs`] plus a previously-accumulated
+    /// stage autotuner — the full node-state carry: epoch trainers move
+    /// both the pack cache and the tuner into each fresh per-epoch network
+    /// so packs for unchanged weight generations are never rebuilt *and*
+    /// calibrated/locked tile plans are never re-explored.
+    pub fn with_node_state(
+        cfg: &NetworkConfig,
+        weights: WeightSet,
+        packs: WeightPacks,
+        tuner: AutoTuner,
+    ) -> Self {
         assert_eq!(
             weights.len(),
             cfg.param_shapes().len(),
@@ -105,6 +126,7 @@ impl Network {
             cfg: cfg.clone(),
             weights,
             packs: RefCell::new(packs),
+            tuner: RefCell::new(tuner),
         }
     }
 
@@ -112,6 +134,18 @@ impl Network {
     /// the cross-epoch carry); the network is left with a cold cache.
     pub fn take_packs(&mut self) -> WeightPacks {
         self.packs.replace(WeightPacks::default())
+    }
+
+    /// Move the stage autotuner out of this network (the trainer-side half
+    /// of the cross-epoch carry); the network is left with a fresh tuner.
+    pub fn take_tuner(&mut self) -> AutoTuner {
+        self.tuner.replace(AutoTuner::default())
+    }
+
+    /// Render the autotuner's per-stage tuning table (calibration, plan,
+    /// lock state, best makespan per stage) for debugging / CI logs.
+    pub fn tuning_report(&self) -> String {
+        self.tuner.borrow().table()
     }
 
     pub(crate) fn conv_dims(&self, layer: usize, batch: usize) -> ConvDims {

@@ -8,8 +8,10 @@ use std::time::Instant;
 
 use crate::config::NetworkConfig;
 use crate::data::Dataset;
+use crate::inner::{parallel_train_step, AutoTuner, TilePolicy};
 use crate::nn::{Network, StepWorkspace, WeightPacks};
 use crate::tensor::WeightSet;
+use crate::util::threadpool::ThreadPool;
 
 /// Result of one local epoch (one "iteration" in the paper's terms: a full
 /// pass over the node's current subset, updating the local weight set after
@@ -46,7 +48,11 @@ pub trait LocalTrainer: Send {
 /// [`WeightPacks`] cache — SGWU/AGWU spawn a fresh [`Network`] per epoch,
 /// so the cache is moved into each one and recovered afterwards: packs for
 /// an unchanged weight generation are never rebuilt, and stale ones repack
-/// in place into the carried allocations.
+/// in place into the carried allocations. The node's [`AutoTuner`] rides
+/// the same carry ([`Network::take_tuner`]): when the trainer drives the
+/// inner-layer pool ([`NativeTrainer::with_pool`]), pool calibration and
+/// per-stage locked tile plans survive across every epoch the node runs
+/// instead of re-exploring inside each one.
 pub struct NativeTrainer {
     cfg: NetworkConfig,
     data: Arc<Dataset>,
@@ -59,6 +65,12 @@ pub struct NativeTrainer {
     ws: StepWorkspace,
     /// Node-owned pack cache, carried across the per-epoch `Network`s.
     packs: WeightPacks,
+    /// Node-owned stage autotuner, carried the same way.
+    tuner: AutoTuner,
+    /// Inner-layer pool: when set, epochs run [`parallel_train_step`]
+    /// under `policy` instead of the serial workspace step.
+    pool: Option<Arc<ThreadPool>>,
+    policy: TilePolicy,
     xbuf: Vec<f32>,
     ybuf: Vec<f32>,
 }
@@ -73,6 +85,9 @@ impl NativeTrainer {
             slowdown: 1.0,
             ws: StepWorkspace::new(),
             packs: WeightPacks::default(),
+            tuner: AutoTuner::default(),
+            pool: None,
+            policy: TilePolicy::auto(1),
             xbuf: Vec::new(),
             ybuf: Vec::new(),
         }
@@ -82,6 +97,33 @@ impl NativeTrainer {
         assert!(factor >= 1.0);
         self.slowdown = factor;
         self
+    }
+
+    /// Run this node's epochs through the inner-layer task scheduler on
+    /// `pool`, with `TilePolicy::Auto` grids: the pool is calibrated once,
+    /// and each stage's tile plan adapts online and stays locked across
+    /// epochs (the tuner is node state, like the pack cache).
+    pub fn with_pool(self, pool: Arc<ThreadPool>) -> Self {
+        let rows = (self.cfg.input_hw / 2).max(1);
+        self.with_pool_policy(pool, TilePolicy::auto(rows))
+    }
+
+    /// [`NativeTrainer::with_pool`] with an explicit tile policy (benches
+    /// compare `RowsOnly` / `Grid2d` / `Auto` epochs).
+    pub fn with_pool_policy(mut self, pool: Arc<ThreadPool>, policy: TilePolicy) -> Self {
+        self.pool = Some(pool);
+        self.policy = policy;
+        self
+    }
+
+    /// Number of stages the node's autotuner has accumulated plans for.
+    pub fn tuned_stages(&self) -> usize {
+        self.tuner.len()
+    }
+
+    /// The node's per-stage tuning table (debugging / logs).
+    pub fn tuning_report(&self) -> String {
+        self.tuner.table()
     }
 
     /// Gather a batch (x, one-hot y) from shard-local positions, wrapping,
@@ -113,11 +155,16 @@ impl LocalTrainer for NativeTrainer {
         // Copy-on-write: unwrap the snapshot without a copy when this worker
         // holds the last reference, deep-copy otherwise.
         let start = Arc::try_unwrap(start).unwrap_or_else(|shared| (*shared).clone());
-        // Hand the node's pack cache to this epoch's network (recovered
-        // below): unchanged weight generations skip repacking entirely,
-        // changed ones repack in place into the carried allocations.
-        let mut net =
-            Network::with_weights_and_packs(&self.cfg, start, std::mem::take(&mut self.packs));
+        // Hand the node's pack cache and autotuner to this epoch's network
+        // (both recovered below): unchanged weight generations skip
+        // repacking entirely, changed ones repack in place into the carried
+        // allocations, and tuned tile plans stay locked across epochs.
+        let mut net = Network::with_node_state(
+            &self.cfg,
+            start,
+            std::mem::take(&mut self.packs),
+            std::mem::take(&mut self.tuner),
+        );
         let bsz = self.cfg.batch_size.min(self.indices.len().max(1));
         let mut seen = 0usize;
         let mut loss_sum = 0.0f64;
@@ -135,7 +182,22 @@ impl LocalTrainer for NativeTrainer {
                 &mut self.xbuf,
                 &mut self.ybuf,
             );
-            let (l, c) = net.train_batch_ws(&self.xbuf, &self.ybuf, bsz, self.lr, &mut self.ws);
+            let (l, c) = match &self.pool {
+                Some(pool) => {
+                    let r = parallel_train_step(
+                        pool,
+                        &mut net,
+                        &self.xbuf,
+                        &self.ybuf,
+                        bsz,
+                        self.lr,
+                        self.policy,
+                        &mut self.ws,
+                    );
+                    (r.loss, r.correct)
+                }
+                None => net.train_batch_ws(&self.xbuf, &self.ybuf, bsz, self.lr, &mut self.ws),
+            };
             loss_sum += l as f64;
             correct += c.min(take);
             seen += take;
@@ -147,8 +209,9 @@ impl LocalTrainer for NativeTrainer {
                 compute * (self.slowdown - 1.0),
             ));
         }
-        // Recover the pack cache for the next epoch (or eval) on this node.
+        // Recover the pack cache and tuner for the next epoch on this node.
         self.packs = net.take_packs();
+        self.tuner = net.take_tuner();
         EpochOutcome {
             weights: net.weights,
             loss: loss_sum / batches.max(1) as f64,
@@ -230,6 +293,42 @@ mod tests {
             wb = b.train_epoch(Arc::new(wb)).weights;
         }
         assert_eq!(wa.max_abs_diff(&wb), 0.0, "carried pack cache changed results");
+    }
+
+    /// A pool-backed trainer runs its epochs through the inner-layer
+    /// scheduler with `TilePolicy::Auto`, still learns, and the node-owned
+    /// tuner (like the pack cache) survives the per-epoch networks: stage
+    /// entries accumulate in epoch 1 and are *carried*, not re-created,
+    /// afterwards.
+    #[test]
+    fn pool_backed_epochs_train_and_carry_tuner() {
+        let (cfg, ds) = setup();
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut w = NativeTrainer::new(&cfg, ds, 0.3).with_pool(Arc::clone(&pool));
+        w.add_samples(0..32);
+        assert_eq!(w.tuned_stages(), 0);
+        let mut weights = Network::init(&cfg, 4).weights;
+        let mut losses = Vec::new();
+        let mut stages_after_first = 0;
+        for epoch in 0..6 {
+            let out = w.train_epoch(Arc::new(weights));
+            weights = out.weights.clone();
+            losses.push(out.loss);
+            if epoch == 0 {
+                stages_after_first = w.tuned_stages();
+                assert!(stages_after_first > 0, "first epoch accumulated no tuner state");
+            }
+        }
+        assert!(
+            losses.last().unwrap() < &(0.8 * losses[0]),
+            "pool-backed epochs did not learn: {losses:?}"
+        );
+        assert_eq!(
+            w.tuned_stages(),
+            stages_after_first,
+            "tuner state was rebuilt instead of carried across epochs"
+        );
+        assert!(w.tuning_report().contains("dense_fwd"), "{}", w.tuning_report());
     }
 
     #[test]

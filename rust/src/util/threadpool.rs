@@ -23,7 +23,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -98,6 +98,9 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     arenas: Vec<Arc<Mutex<ScratchArena>>>,
     handles: Vec<JoinHandle<()>>,
+    /// Cached [`ThreadPool::dispatch_overhead_s`] measurement (calibration
+    /// hook for the inner-layer autotuner).
+    dispatch_overhead: OnceLock<f64>,
 }
 
 impl ThreadPool {
@@ -125,11 +128,44 @@ impl ThreadPool {
         let arenas = (0..n)
             .map(|_| Arc::new(Mutex::new(ScratchArena::default())))
             .collect();
-        Self { shared, arenas, handles }
+        Self { shared, arenas, handles, dispatch_overhead: OnceLock::new() }
     }
 
     pub fn size(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Measured per-task dispatch + wakeup overhead of this pool in
+    /// seconds, probed once on first use and cached — the calibration hook
+    /// the inner-layer autotuner derives its per-tile FLOP floor from
+    /// (`crate::inner::autotune::Calibration`).
+    pub fn dispatch_overhead_s(&self) -> f64 {
+        *self.dispatch_overhead.get_or_init(|| self.probe_dispatch_overhead())
+    }
+
+    /// The probe behind [`ThreadPool::dispatch_overhead_s`]: posts bursts
+    /// of trivial pinned jobs (the Algorithm-4.2 dispatch path) and times
+    /// queue push + wakeup + completion per job, taking the fastest rep so
+    /// a scheduler hiccup cannot inflate the estimate. The pool must be
+    /// otherwise idle.
+    pub fn probe_dispatch_overhead(&self) -> f64 {
+        const JOBS: usize = 128;
+        const REPS: usize = 4;
+        // Warm: make sure every worker has run at least one job.
+        for w in 0..self.size() {
+            self.execute_on(w, || {});
+        }
+        self.wait_idle();
+        let mut best = f64::INFINITY;
+        for _ in 0..REPS {
+            let t0 = std::time::Instant::now();
+            for j in 0..JOBS {
+                self.execute_on(j % self.size(), || {});
+            }
+            self.wait_idle();
+            best = best.min(t0.elapsed().as_secs_f64() / JOBS as f64);
+        }
+        best.max(1e-9)
     }
 
     /// Worker `i`'s persistent scratch arena. Lock it from a job pinned to
@@ -463,6 +499,29 @@ mod tests {
         let g = pool.arena(0).lock().unwrap();
         assert!(g.cols.len() >= 1024, "arena did not persist");
         assert_eq!(g.cols[1023], 7.0);
+    }
+
+    /// The dispatch probe reports a sane overhead and the cached accessor
+    /// is stable across calls.
+    #[test]
+    fn dispatch_probe_measures_and_caches() {
+        let pool = ThreadPool::new(2);
+        let probed = pool.probe_dispatch_overhead();
+        assert!(probed > 0.0, "non-positive dispatch overhead");
+        assert!(probed < 0.01, "implausible {probed}s per trivial job");
+        let a = pool.dispatch_overhead_s();
+        let b = pool.dispatch_overhead_s();
+        assert_eq!(a, b, "cached measurement changed between calls");
+        // The pool is still fully usable after probing.
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute_on(i % 2, move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 
     #[test]

@@ -688,3 +688,85 @@ fn prop_param_count_matches_shapes() {
         assert_eq_msg(cfg.weight_bytes(), total * 4, "bytes = 4·count")
     });
 }
+
+/// ISSUE-5: any grid the autotuner can emit — the cold-start prior, every
+/// explored neighbor (±1 row/column split, floor×{½,2} replans), and the
+/// locked plan — produces **bit-identical** dense forward output to the
+/// serial packed path, on ragged shapes (`n`, `k` ∤ NR, batch smaller than
+/// the pool). The tuner is fed the real measured stats, so the walk is the
+/// production exploration path.
+#[test]
+fn prop_autotuner_grids_bitwise_match_serial() {
+    use bptcnn::inner::{dense_fwd_parallel, AutoTuner, StageKey, StageKind};
+    prop::check("autotuner grid parity", 10, |g| {
+        let m = g.usize_full(1, 6);
+        let k = g.usize_full(1, 32);
+        let n = g.usize_full(9, 40); // ≥ 2 panels so column neighbors exist
+        let workers = g.usize_full(1, 4);
+        let pool = ThreadPool::new(workers);
+        let x = g.vec_f32(m * k, -1.0, 1.0);
+        let w = g.vec_f32(k * n, -1.0, 1.0);
+        let b = g.vec_f32(n, -0.5, 0.5);
+        let packed = ops::PackedB::pack(k, n, &w);
+        let mut serial = vec![0.0f32; m * n];
+        ops::dense_fwd_packed(m, &x, &packed, &b, &mut serial);
+        let mut tuner = AutoTuner::new(g.u64(0, u64::MAX / 2));
+        let key = StageKey::new(StageKind::DenseFwd, m, k, n, workers);
+        let mut locked_checked = false;
+        for step in 0..48 {
+            let grid = tuner.plan(key, 1);
+            let mut par = vec![0.0f32; m * n];
+            let stats = dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, false, grid);
+            for (i, (a, s)) in par.iter().zip(serial.iter()).enumerate() {
+                assert_eq_msg(*a, *s, &format!("out[{i}] step={step} grid={grid:?}"))?;
+            }
+            tuner.observe(key, &stats);
+            if tuner.stage(&key).map_or(false, |s| s.locked()) {
+                locked_checked = true;
+                break;
+            }
+        }
+        assert_true(locked_checked, "tuner never locked within 48 steps")
+    });
+}
+
+/// ISSUE-5: tuning decisions are reproducible under a fixed exploration
+/// seed — two tuners with the same seed, fed the identical synthetic
+/// makespan stream, plan the identical grid sequence and lock the
+/// identical plan, for random stage shapes.
+#[test]
+fn prop_autotuner_decisions_deterministic_under_seed() {
+    use bptcnn::inner::{AutoTuner, StageKey, StageKind, TileGrid};
+    prop::check("autotuner determinism", 40, |g| {
+        let m = g.usize_full(1, 8);
+        let k = g.usize_full(1, 64);
+        let n = g.usize_full(1, 64);
+        let workers = g.usize_full(1, 8);
+        let seed = g.u64(0, u64::MAX / 2);
+        let key = StageKey::new(StageKind::DenseBwd, m, k, n, workers);
+        let cost = |t: TileGrid| {
+            (t.tiles() as f64 - (2 * workers) as f64).abs() + 0.1 * t.rows_per_tile as f64
+        };
+        let mut a = AutoTuner::new(seed);
+        let mut b = AutoTuner::new(seed);
+        let mut plans_a: Vec<TileGrid> = Vec::new();
+        let mut plans_b: Vec<TileGrid> = Vec::new();
+        for _ in 0..64 {
+            let ga = a.plan(key, 1);
+            let gb = b.plan(key, 1);
+            plans_a.push(ga);
+            plans_b.push(gb);
+            a.observe_raw(key, cost(ga), 1.0);
+            b.observe_raw(key, cost(gb), 1.0);
+        }
+        assert_true(
+            plans_a == plans_b,
+            &format!("decision streams diverged:\n{plans_a:?}\nvs\n{plans_b:?}"),
+        )?;
+        assert_eq_msg(
+            a.stage(&key).unwrap().locked(),
+            b.stage(&key).unwrap().locked(),
+            "lock state diverged",
+        )
+    });
+}
