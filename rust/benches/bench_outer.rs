@@ -1,6 +1,7 @@
 //! Outer-layer benchmarks: parameter-server update throughput (SGWU Eq. 7
-//! vs AGWU Eq. 10) across the paper's Table-2 weight-set sizes, IDPA
-//! scheduling cost, and weight-set algebra primitives.
+//! vs AGWU Eq. 10) across the paper's Table-2 weight-set sizes, transport
+//! backends (in-process vs loopback TCP, with an Eq. 11 measured-vs-modeled
+//! line), IDPA scheduling cost, and weight-set algebra primitives.
 
 use bptcnn::config::NetworkConfig;
 use bptcnn::nn::Network;
@@ -60,6 +61,86 @@ fn main() {
         b.bench_with_throughput(&format!("weightset_axpy/case{case}"), bytes, || {
             acc.axpy(0.001, &local);
         });
+    }
+
+    // Transport-level cost of one weight-set move — the real Eq. 11 c_w —
+    // for the in-process backend (Arc bump + by-value submit) vs real
+    // loopback sockets (frame encode → kernel → decode), plus a printed
+    // measured-vs-modeled Eq. 11 comparison line.
+    {
+        use bptcnn::config::UpdateStrategy;
+        use bptcnn::outer::{
+            serve, InProcTransport, ServeOptions, SubmitMeta, SubmitMode, TcpTransport,
+            TransferModel, Transport,
+        };
+        use std::sync::{Arc, Mutex};
+
+        let cfg = NetworkConfig::table2_case(1);
+        let bytes = cfg.weight_bytes() as f64;
+        let init = Network::init(&cfg, 1).weights;
+
+        let ps = Arc::new(Mutex::new(ParamServer::new(init.clone(), 1)));
+        let mut t = InProcTransport::new(Arc::clone(&ps), 0);
+        b.bench_with_throughput("transport/inproc_fetch", bytes, || {
+            std::hint::black_box(t.fetch_global().unwrap());
+        });
+        b.bench_with_throughput("transport/inproc_cycle", 2.0 * bytes, || {
+            let (w, base) = t.fetch_global().unwrap();
+            let local = (*w).clone();
+            let meta = SubmitMeta {
+                mode: SubmitMode::Agwu,
+                base,
+                accuracy: 0.8,
+                loss: 0.5,
+                want_snapshot: false,
+            };
+            t.submit(local, &meta).unwrap();
+        });
+        drop(t);
+        drop(ps);
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions { nodes: 1, update: UpdateStrategy::Agwu, verbose: false };
+        let server = {
+            let init = init.clone();
+            std::thread::spawn(move || serve(listener, init, opts))
+        };
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        b.bench_with_throughput("transport/tcp_loopback_fetch", bytes, || {
+            std::hint::black_box(t.fetch_global().unwrap());
+        });
+        b.bench_with_throughput("transport/tcp_loopback_cycle", 2.0 * bytes, || {
+            let (w, base) = t.fetch_global().unwrap();
+            let local = (*w).clone();
+            let meta = SubmitMeta {
+                mode: SubmitMode::Agwu,
+                base,
+                accuracy: 0.8,
+                loss: 0.5,
+                want_snapshot: false,
+            };
+            t.submit(local, &meta).unwrap();
+        });
+        let st = t.stats();
+        t.finish().unwrap();
+        let report = server.join().unwrap().unwrap();
+
+        // Eq. 11 comparison: measured loopback round (fetch + submit = the
+        // 2·c_w of one node-iteration) vs the TransferModel on nominal 1 GbE.
+        let per_fetch = st.fetch_wall_s / st.fetches.max(1) as f64;
+        let per_submit = st.submit_wall_s / st.submits.max(1) as f64;
+        let model = TransferModel::new(117.0e6, 100e-6); // ~1 GbE effective
+        let modeled = 2.0 * model.transfer_time(cfg.weight_bytes());
+        println!(
+            "eq11/case1: measured loopback 2·c_w = {:.3} ms (fetch {:.3} + submit {:.3}), \
+             modeled 1 GbE = {:.3} ms, wire/logical bytes = {:.2}",
+            (per_fetch + per_submit) * 1e3,
+            per_fetch * 1e3,
+            per_submit * 1e3,
+            modeled * 1e3,
+            report.comm.wire_bytes as f64 / report.comm.bytes.max(1) as f64,
+        );
     }
 
     // IDPA schedule construction at paper scale.

@@ -1,15 +1,18 @@
 //! `bptcnn` — the BPT-CNN launcher (Layer-3 leader entrypoint).
 //!
 //! Subcommands:
-//!   train       run distributed training on the in-process cluster
-//!   simulate    run one discrete-event cluster simulation
-//!   experiment  regenerate a paper table/figure (fig11..fig15, table1, all)
-//!   inspect     print artifact manifest / config information
+//!   train         run distributed training on the in-process cluster
+//!   param-server  standalone parameter-server process (outer layer over TCP)
+//!   worker        computing-node process connecting to a param-server
+//!   simulate      run one discrete-event cluster simulation
+//!   experiment    regenerate a paper table/figure (fig11..fig15, table1, all)
+//!   inspect       print artifact manifest / config information
 
 use bptcnn::config::{
     ClusterConfig, NetworkConfig, PartitionStrategy, TrainConfig, UpdateStrategy,
 };
 use bptcnn::metrics::Table;
+use bptcnn::nn::Network;
 use bptcnn::sim::{simulate, SimConfig};
 use bptcnn::util::cli::{Args, CliError};
 
@@ -17,6 +20,8 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&argv[1..]),
+        Some("param-server") => cmd_param_server(&argv[1..]),
+        Some("worker") => cmd_worker(&argv[1..]),
         Some("simulate") => cmd_simulate(&argv[1..]),
         Some("experiment") => cmd_experiment(&argv[1..]),
         Some("inspect") => cmd_inspect(&argv[1..]),
@@ -38,10 +43,12 @@ fn print_usage() {
         "bptcnn — Bi-layered Parallel Training for large-scale CNNs (TPDS'18 reproduction)\n\n\
          USAGE: bptcnn <command> [flags]\n\n\
          COMMANDS:\n  \
-           train       distributed training on the in-process cluster\n  \
-           simulate    discrete-event cluster simulation at paper scale\n  \
-           experiment  regenerate paper results: fig11..fig15, table1, all\n  \
-           inspect     show artifact manifests and configs\n\n\
+           train         distributed training on the in-process cluster\n  \
+           param-server  standalone parameter-server process (outer layer over TCP)\n  \
+           worker        computing-node process connecting to a param-server\n  \
+           simulate      discrete-event cluster simulation at paper scale\n  \
+           experiment    regenerate paper results: fig11..fig15, table1, all\n  \
+           inspect       show artifact manifests and configs\n\n\
          Run `bptcnn <command> --help` for flags."
     );
 }
@@ -231,6 +238,175 @@ fn train_xla(
         accuracy_auc,
         cluster: report,
     })
+}
+
+/// Standalone parameter-server process: binds a socket, accepts exactly
+/// `--nodes` worker connections, serves the SGWU/AGWU update rules over the
+/// wire protocol, and prints the run's ClusterReport summary at the end.
+fn cmd_param_server(argv: &[String]) -> i32 {
+    let spec = Args::new(
+        "bptcnn param-server",
+        "standalone parameter-server process (outer layer over TCP)",
+    )
+    .opt(
+        "listen",
+        "127.0.0.1:7878",
+        "bind address; port 0 picks an ephemeral port (the bound address is printed)",
+    )
+    .opt("network", "quickstart", "network config: quickstart|e2e|case1..case7")
+    .opt("update", "sgwu", "global weight update strategy: agwu|sgwu")
+    .opt("nodes", "2", "number of worker processes to accept")
+    .opt("seed", "42", "RNG seed for the initial weights (share with the workers)")
+    .flag("verbose", "log every installed version")
+    .flag(
+        "expect-learning",
+        "exit nonzero unless the local loss improved first → last (CI smoke)",
+    );
+    let usage = spec.usage();
+    let p = match handle(spec.parse(argv), &usage) {
+        Ok(p) => p,
+        Err(c) => return c,
+    };
+    let run = || -> anyhow::Result<()> {
+        let network = parse_network(p.str("network"))?;
+        let update = UpdateStrategy::parse(p.str("update"))?;
+        let nodes = p.usize("nodes")?;
+        let listener = std::net::TcpListener::bind(p.str("listen"))?;
+        let addr = listener.local_addr()?;
+        let init = Network::init(&network, p.u64("seed")?).weights;
+        println!(
+            "param-server listening on {addr} ({nodes} nodes, {}, {} params)",
+            update.name(),
+            network.param_count()
+        );
+        let opts = bptcnn::outer::ServeOptions { nodes, update, verbose: p.bool("verbose") };
+        let report = bptcnn::outer::serve(listener, init, opts)?;
+        let mb = 1024.0 * 1024.0;
+        println!(
+            "run complete: {} versions | comm {:.2} MB logical, {:.2} MB wire | \
+             comm wall {:.2} s | sync wait {:.2} s | wall {:.1} s | balance {:.3}",
+            report.versions.len(),
+            report.comm.megabytes(),
+            report.comm.wire_bytes as f64 / mb,
+            report.comm.comm_wall_s(),
+            report.sync_wait_s,
+            report.wall_s,
+            report.balance_index()
+        );
+        match (report.versions.first(), report.versions.last()) {
+            (Some(first), Some(last)) => {
+                println!(
+                    "local loss first {:.4} -> last {:.4}",
+                    first.local_loss, last.local_loss
+                );
+                if p.bool("expect-learning") {
+                    anyhow::ensure!(
+                        last.local_loss < first.local_loss,
+                        "no learning: first loss {:.4}, last {:.4}",
+                        first.local_loss,
+                        last.local_loss
+                    );
+                }
+            }
+            _ => anyhow::ensure!(!p.bool("expect-learning"), "no versions recorded"),
+        }
+        Ok(())
+    };
+    exit_on(run())
+}
+
+/// Computing-node worker process: regenerates the deterministic dataset and
+/// IDPA schedule from the shared flags, connects to the param-server, and
+/// drives the fetch → train → submit loop over TCP.
+fn cmd_worker(argv: &[String]) -> i32 {
+    let spec = Args::new(
+        "bptcnn worker",
+        "computing-node worker process (connects to a param-server)",
+    )
+    .opt("connect", "127.0.0.1:7878", "param-server address")
+    .opt("node", "0", "this node's slot index (0..nodes)")
+    .opt("nodes", "2", "total computing nodes m (must match the server)")
+    .opt("network", "quickstart", "network config: quickstart|e2e|case1..case7")
+    .opt("update", "sgwu", "agwu|sgwu (must match the server)")
+    .opt("partition", "idpa", "data partitioning: idpa|udpa")
+    .opt("samples", "512", "training samples (synthetic dataset; share across workers)")
+    .opt("iterations", "4", "training iterations K")
+    .opt("batches", "2", "IDPA batches A")
+    .opt("lr", "0.2", "learning rate η")
+    .opt("seed", "42", "RNG seed (must match the server and peers)")
+    .opt("bandwidth-mbs", "0", "throttle: modeled link bandwidth in MB/s (0 = off)")
+    .opt("latency-ms", "0", "throttle: modeled link latency in ms")
+    .flag("verbose", "log every iteration");
+    let usage = spec.usage();
+    let p = match handle(spec.parse(argv), &usage) {
+        Ok(p) => p,
+        Err(c) => return c,
+    };
+    let run = || -> anyhow::Result<()> {
+        let network = parse_network(p.str("network"))?;
+        let update = UpdateStrategy::parse(p.str("update"))?;
+        let nodes = p.usize("nodes")?;
+        let node = p.usize("node")?;
+        anyhow::ensure!(node < nodes, "node index {node} out of range for {nodes} nodes");
+        let tc = TrainConfig {
+            network: network.clone(),
+            update,
+            partition: PartitionStrategy::parse(p.str("partition"))?,
+            total_samples: p.usize("samples")?,
+            iterations: p.usize("iterations")?,
+            idpa_batches: p.usize("batches")?,
+            learning_rate: p.f64("lr")? as f32,
+            seed: p.u64("seed")?,
+        };
+        // Every worker derives the identical dataset and schedule from the
+        // shared flags; the homogeneous cluster profile keeps the IDPA
+        // schedule independent of local speed calibration across processes.
+        let cluster = ClusterConfig::homogeneous(nodes);
+        let (schedule, _totals, iterations) = bptcnn::outer::build_schedule(&tc, &cluster);
+        let column = bptcnn::outer::schedule_columns(&schedule, nodes).swap_remove(node);
+        let ds = std::sync::Arc::new(bptcnn::data::Dataset::synthetic(
+            &network,
+            tc.total_samples,
+            0.3,
+            tc.seed,
+        ));
+        let mut trainer = bptcnn::outer::NativeTrainer::new(&network, ds, tc.learning_rate);
+        let mode = match update {
+            UpdateStrategy::Sgwu => bptcnn::outer::SubmitMode::Sgwu,
+            UpdateStrategy::Agwu => bptcnn::outer::SubmitMode::Agwu,
+        };
+        let addr = p.str("connect");
+        println!(
+            "worker {node}/{nodes} connecting to {addr} ({}, K={iterations})",
+            update.name()
+        );
+        let tcp = bptcnn::outer::TcpTransport::connect(addr, node)?;
+        let bw_mbs = p.f64("bandwidth-mbs")?;
+        let latency_s = p.f64("latency-ms")? / 1e3;
+        let verbose = p.bool("verbose");
+        let summary = if bw_mbs > 0.0 {
+            let model = bptcnn::outer::TransferModel::new(bw_mbs * 1e6, latency_s);
+            let mut t = bptcnn::outer::ThrottledTransport::new(tcp, model);
+            bptcnn::outer::drive_worker(&mut t, &mut trainer, &column, iterations, mode, verbose)?
+        } else {
+            let mut t = tcp;
+            bptcnn::outer::drive_worker(&mut t, &mut trainer, &column, iterations, mode, verbose)?
+        };
+        let mb = 1024.0 * 1024.0;
+        println!(
+            "worker {node} done: v{} | loss {:.4} | acc {:.3} | busy {:.2} s | \
+             wire {:.2} MB | fetch {:.2} s | submit {:.2} s",
+            summary.final_version,
+            summary.last_loss,
+            summary.last_accuracy,
+            summary.busy_s,
+            summary.stats.wire_bytes as f64 / mb,
+            summary.stats.fetch_wall_s,
+            summary.stats.submit_wall_s
+        );
+        Ok(())
+    };
+    exit_on(run())
 }
 
 fn cmd_simulate(argv: &[String]) -> i32 {

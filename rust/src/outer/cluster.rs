@@ -2,6 +2,12 @@
 //! node plus the parameter server, with real concurrency semantics —
 //! SGWU rounds synchronize at a barrier (and pay the Eq. 8 wait), AGWU
 //! workers free-run and race on the server exactly as Fig. 5 describes.
+//!
+//! Every node ↔ server exchange goes through an
+//! [`InProcTransport`](super::transport::InProcTransport) — the same
+//! [`Transport`] calls a remote worker makes against the standalone
+//! [`super::server`], so the in-process cluster and a real multi-process
+//! deployment share one code path (and one accounting scheme).
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -10,6 +16,7 @@ use crate::config::UpdateStrategy;
 use crate::tensor::WeightSet;
 
 use super::param_server::{CommStats, ParamServer};
+use super::transport::{InProcTransport, SubmitMeta, SubmitMode, Transport, TransportStats};
 use super::worker::LocalTrainer;
 
 /// One global-version record in the training log.
@@ -55,6 +62,35 @@ pub type AllocationSchedule = Vec<Vec<std::ops::Range<usize>>>;
 /// Held-out evaluation hook: global weight set → (loss, accuracy).
 pub type EvalHook<'a> = &'a (dyn Fn(&WeightSet) -> (f64, f64) + Sync);
 
+/// Split the IDPA allocation schedule (rows = allocation batches, columns =
+/// nodes) into per-node columns — the shape a single node's driver consumes,
+/// whether it runs as an in-process thread or a remote worker process.
+pub fn schedule_columns(
+    schedule: &AllocationSchedule,
+    m: usize,
+) -> Vec<Vec<std::ops::Range<usize>>> {
+    (0..m)
+        .map(|j| schedule.iter().map(|row| row[j].clone()).collect())
+        .collect()
+}
+
+/// Collect each transport's measured accounting into the unwrapped server's
+/// [`CommStats`], then move the final global set out — the shared epilogue
+/// of both in-process runners.
+fn unwrap_server(
+    ps: Arc<Mutex<ParamServer>>,
+    tstats: &[TransportStats],
+) -> (CommStats, WeightSet) {
+    let mut ps = Arc::try_unwrap(ps)
+        .expect("all transports dropped")
+        .into_inner()
+        .unwrap();
+    for s in tstats {
+        ps.comm.absorb_transport(s);
+    }
+    (ps.comm.clone(), ps.into_global())
+}
+
 /// Run `iterations` rounds with the **SGWU** strategy (Fig. 4).
 pub fn run_sgwu(
     init: WeightSet,
@@ -65,7 +101,9 @@ pub fn run_sgwu(
 ) -> ClusterReport {
     let m = workers.len();
     assert!(m > 0);
-    let mut ps = ParamServer::new(init, m);
+    let ps = Arc::new(Mutex::new(ParamServer::new(init, m)));
+    let mut transports: Vec<InProcTransport> =
+        (0..m).map(|j| InProcTransport::new(Arc::clone(&ps), j)).collect();
     let mut sync_wait = 0.0f64;
     let mut node_busy = vec![0.0f64; m];
     let mut versions = Vec::new();
@@ -78,9 +116,15 @@ pub fn run_sgwu(
                 w.add_samples(schedule[iter][j].clone());
             }
         }
-        // Every node fetches the same global version (m logical transfers;
-        // in-process they share one Arc snapshot).
-        let globals: Vec<Arc<WeightSet>> = (0..m).map(|j| ps.fetch(j).0).collect();
+        // Every node fetches the same global version through its transport
+        // (m logical transfers; in-process they share one Arc snapshot).
+        let mut globals = Vec::with_capacity(m);
+        let mut base = 0usize;
+        for t in transports.iter_mut() {
+            let (g, v) = t.fetch_global().expect("in-process fetch cannot fail");
+            base = v;
+            globals.push(g);
+        }
         // Parallel local epochs.
         let outcomes: Vec<(super::worker::EpochOutcome, f64)> = std::thread::scope(|scope| {
             let handles: Vec<_> = workers
@@ -107,30 +151,43 @@ pub fn run_sgwu(
         let mean_acc =
             outcomes.iter().map(|(o, _)| o.accuracy).sum::<f64>() / m as f64;
         // Eq. 7 update: each node's weights move out of its EpochOutcome
-        // into the locals vec — no per-round clone of m full weight sets.
-        let locals: Vec<(WeightSet, f64)> = outcomes
-            .into_iter()
-            .map(|(o, _)| (o.weights, o.accuracy))
-            .collect();
-        let version = ps.update_sgwu(&locals);
+        // through its transport in node order — the server buffers the
+        // parts and installs the round on the last one, numerically
+        // identical to the one-shot slice update (no per-round clones).
+        let mut version = 0usize;
+        for (t, (o, _)) in transports.iter_mut().zip(outcomes) {
+            let meta = SubmitMeta {
+                mode: SubmitMode::Sgwu,
+                base,
+                accuracy: o.accuracy,
+                loss: o.loss,
+                want_snapshot: false,
+            };
+            let ack = t.submit(o.weights, &meta).expect("in-process submit cannot fail");
+            version = ack.version;
+        }
         versions.push(VersionRecord {
             version,
             node: usize::MAX,
             local_loss: mean_loss,
             local_accuracy: mean_acc,
             at_s: t0.elapsed().as_secs_f64(),
-            eval: eval.map(|f| f(ps.global())),
+            eval: eval.map(|f| f(ps.lock().unwrap().global())),
         });
     }
 
+    let tstats: Vec<TransportStats> = transports.iter().map(|t| t.stats()).collect();
+    drop(transports);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let (comm, final_weights) = unwrap_server(ps, &tstats);
     ClusterReport {
         strategy: UpdateStrategy::Sgwu,
         versions,
-        comm: ps.comm.clone(),
+        comm,
         sync_wait_s: sync_wait,
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s,
         node_busy_s: node_busy,
-        final_weights: ps.global().clone(),
+        final_weights,
     }
 }
 
@@ -172,18 +229,19 @@ pub fn run_async(
     let versions: Arc<Mutex<Vec<VersionRecord>>> = Arc::new(Mutex::new(Vec::new()));
     let t0 = Instant::now();
 
-    // Per-node allocation schedule columns.
-    let node_schedules: Vec<Vec<std::ops::Range<usize>>> = (0..m)
-        .map(|j| schedule.iter().map(|row| row[j].clone()).collect())
-        .collect();
+    let node_schedules = schedule_columns(schedule, m);
+    let submit_mode = match mode {
+        AsyncMode::Agwu => SubmitMode::Agwu,
+        AsyncMode::Plain => SubmitMode::Plain,
+    };
 
-    let node_busy: Vec<f64> = std::thread::scope(|scope| {
+    let results: Vec<(f64, TransportStats)> = std::thread::scope(|scope| {
         let handles: Vec<_> = workers
             .into_iter()
             .zip(node_schedules)
             .enumerate()
             .map(|(j, (mut w, sched))| {
-                let ps = Arc::clone(&ps);
+                let mut transport = InProcTransport::new(Arc::clone(&ps), j);
                 let versions = Arc::clone(&versions);
                 scope.spawn(move || {
                     let mut busy = 0.0f64;
@@ -192,49 +250,53 @@ pub fn run_async(
                             w.add_samples(sched[iter].clone());
                         }
                         // Fetch the freshest global version.
-                        let (global, base) = ps.lock().unwrap().fetch(j);
+                        let (global, base) = transport
+                            .fetch_global()
+                            .expect("in-process fetch cannot fail");
                         // Local epoch — no locks held while computing.
                         let t = Instant::now();
                         let out = w.train_epoch(global);
                         busy += t.elapsed().as_secs_f64();
                         // Submit immediately (Alg. 3.2): no waiting for
-                        // other nodes.
-                        let (version, snapshot) = {
-                            let mut guard = ps.lock().unwrap();
-                            let v = match mode {
-                                AsyncMode::Agwu => {
-                                    guard.update_agwu(j, &out.weights, base, out.accuracy)
-                                }
-                                AsyncMode::Plain => {
-                                    guard.update_async_plain(j, &out.weights, base)
-                                }
-                            };
-                            // Snapshot is a refcount bump — no weight copy
-                            // while holding the server lock.
-                            (v, eval.map(|_| guard.global_arc()))
+                        // other nodes. The snapshot rides the ack — taken
+                        // under the same server lock as the update, as a
+                        // refcount bump, so eval sees exactly the version
+                        // this submission produced.
+                        let meta = SubmitMeta {
+                            mode: submit_mode,
+                            base,
+                            accuracy: out.accuracy,
+                            loss: out.loss,
+                            want_snapshot: eval.is_some(),
                         };
+                        let (local_loss, local_accuracy) = (out.loss, out.accuracy);
+                        let ack = transport
+                            .submit(out.weights, &meta)
+                            .expect("in-process submit cannot fail");
                         // Eval outside the lock so stragglers don't serialize.
-                        let eval_point = match (eval, snapshot) {
+                        let eval_point = match (eval, ack.snapshot) {
                             (Some(f), Some(g)) => Some(f(&g)),
                             _ => None,
                         };
                         versions.lock().unwrap().push(VersionRecord {
-                            version,
+                            version: ack.version,
                             node: j,
-                            local_loss: out.loss,
-                            local_accuracy: out.accuracy,
+                            local_loss,
+                            local_accuracy,
                             at_s: t0.elapsed().as_secs_f64(),
                             eval: eval_point,
                         });
                     }
-                    busy
+                    (busy, transport.stats())
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
 
-    let ps = Arc::try_unwrap(ps).expect("threads joined").into_inner().unwrap();
+    let (node_busy, tstats): (Vec<f64>, Vec<TransportStats>) = results.into_iter().unzip();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let (comm, final_weights) = unwrap_server(ps, &tstats);
     let mut versions = Arc::try_unwrap(versions)
         .expect("threads joined")
         .into_inner()
@@ -244,11 +306,11 @@ pub fn run_async(
     ClusterReport {
         strategy: UpdateStrategy::Agwu,
         versions,
-        comm: ps.comm.clone(),
+        comm,
         sync_wait_s: 0.0, // no synchronization barrier exists in AGWU
-        wall_s: t0.elapsed().as_secs_f64(),
+        wall_s,
         node_busy_s: node_busy,
-        final_weights: ps.global().clone(),
+        final_weights,
     }
 }
 
@@ -349,6 +411,31 @@ mod tests {
                 "{strat} did not learn: first={first} last={last}"
             );
         }
+    }
+
+    /// The in-process transports report measured accounting into the
+    /// report's CommStats: no wire bytes (Arc bumps), but real fetch/submit
+    /// handling time, and the final weights move out of the server.
+    #[test]
+    fn inproc_transport_accounting_in_report() {
+        let (cfg, ds, schedule) = setup(2, 16);
+        let init = Network::init(&cfg, 11).weights;
+        let report = run_agwu(init, workers(&cfg, &ds, 2, 0.2), &schedule, 2, None);
+        assert_eq!(report.comm.wire_bytes, 0, "in-process runs move no wire bytes");
+        assert!(report.comm.comm_wall_s() >= 0.0);
+        assert_eq!(report.comm.fetches, 4);
+        assert_eq!(report.versions.len(), 4);
+        assert_eq!(
+            report.final_weights.param_count(),
+            Network::init(&cfg, 11).weights.param_count()
+        );
+    }
+
+    #[test]
+    fn schedule_columns_transposes() {
+        let schedule: AllocationSchedule = vec![vec![0..2, 2..4], vec![4..6, 6..8]];
+        let cols = schedule_columns(&schedule, 2);
+        assert_eq!(cols, vec![vec![0..2, 4..6], vec![2..4, 6..8]]);
     }
 
     #[test]

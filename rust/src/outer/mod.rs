@@ -1,19 +1,28 @@
 //! Outer-layer parallel training (paper §3.3): incremental data partitioning
 //! and allocation (IDPA, Algorithm 3.1), the parameter server with the
 //! synchronous (SGWU, Eq. 7) and asynchronous (AGWU, Algorithm 3.2) global
-//! weight-update strategies, the in-process cluster of worker threads, and
-//! the top-level BPT-CNN trainer.
+//! weight-update strategies, the cluster of worker nodes — in-process
+//! threads or real processes behind the [`Transport`] trait — and the
+//! top-level BPT-CNN trainer.
 
 pub mod cluster;
-pub mod comm;
 pub mod param_server;
 pub mod partition;
+pub mod server;
 pub mod trainer;
+pub mod transport;
+pub mod wire;
 pub mod worker;
 
-pub use cluster::{run_agwu, run_sgwu, AllocationSchedule, ClusterReport, VersionRecord};
-pub use comm::TransferModel;
+pub use cluster::{
+    run_agwu, run_sgwu, schedule_columns, AllocationSchedule, ClusterReport, VersionRecord,
+};
 pub use param_server::{CommStats, ParamServer};
 pub use partition::{udpa_partition, IdpaPartitioner};
+pub use server::{serve, ServeOptions};
 pub use trainer::{build_schedule, slowdown_factors, train_native, CurvePoint, TrainReport};
-pub use worker::{EpochOutcome, LocalTrainer, NativeTrainer};
+pub use transport::{
+    InProcTransport, SubmitAck, SubmitMeta, SubmitMode, TcpTransport, ThrottledTransport,
+    TransferModel, Transport, TransportStats,
+};
+pub use worker::{drive_worker, EpochOutcome, LocalTrainer, NativeTrainer, WorkerRunSummary};

@@ -28,11 +28,35 @@ pub struct CommStats {
     /// version — extreme stragglers. Nonzero values mean the increment was
     /// computed against an older base than the node actually trained from.
     pub evicted_base_fallbacks: usize,
+    /// Bytes *actually moved* between endpoints (protocol frames included):
+    /// measured by the transports, 0 for in-process runs where a transfer is
+    /// an `Arc` refcount bump. Compare with `bytes`, the logical Eq. 11
+    /// volume, to see what the deployment really pays.
+    pub wire_bytes: u64,
+    /// Measured wall seconds inside `Transport::fetch_global` across nodes.
+    pub fetch_wall_s: f64,
+    /// Measured wall seconds inside `Transport::submit` across nodes (for
+    /// SGWU over TCP this includes the Eq. 8 barrier wait).
+    pub submit_wall_s: f64,
 }
 
 impl CommStats {
     pub fn megabytes(&self) -> f64 {
         self.bytes as f64 / (1024.0 * 1024.0)
+    }
+
+    /// Measured Eq. 11 communication wall time (fetch + submit directions).
+    pub fn comm_wall_s(&self) -> f64 {
+        self.fetch_wall_s + self.submit_wall_s
+    }
+
+    /// Fold one endpoint's measured accounting into the server-side stats.
+    /// Only the *measured* columns are absorbed — fetch/submit counts and
+    /// logical bytes are already accounted server-side per operation.
+    pub fn absorb_transport(&mut self, t: &crate::outer::transport::TransportStats) {
+        self.wire_bytes += t.wire_bytes;
+        self.fetch_wall_s += t.fetch_wall_s;
+        self.submit_wall_s += t.submit_wall_s;
     }
 }
 
@@ -54,6 +78,9 @@ pub struct ParamServer {
     history_cap: usize,
     /// Base version each node last fetched (k_{j'} in Eq. 9's denominator).
     node_base: Vec<usize>,
+    /// Per-node SGWU round buffer: submissions arriving one at a time (the
+    /// transport path) are held here until all m parts of the round exist.
+    sgwu_pending: Vec<Option<(WeightSet, f64)>>,
     pub comm: CommStats,
 }
 
@@ -68,6 +95,7 @@ impl ParamServer {
             history,
             history_cap: 2 * nodes.max(1) + 2,
             node_base: vec![0; nodes],
+            sgwu_pending: (0..nodes).map(|_| None).collect(),
             comm: CommStats::default(),
         }
     }
@@ -109,17 +137,51 @@ impl ParamServer {
     /// backing storage, so an SGWU round pays no weight-set clone beyond
     /// the Eq.-11 transfers it models.
     pub fn update_sgwu(&mut self, locals: &[(WeightSet, f64)]) -> usize {
-        assert_eq!(locals.len(), self.nodes(), "SGWU needs all nodes");
         for (ws, _) in locals {
             self.comm.submits += 1;
             self.comm.bytes += ws.byte_size() as u64;
         }
+        self.apply_sgwu(locals)
+    }
+
+    /// Eq. 7 proper, without communication accounting (the callers above and
+    /// below count each part as it arrives).
+    fn apply_sgwu(&mut self, locals: &[(WeightSet, f64)]) -> usize {
+        assert_eq!(locals.len(), self.nodes(), "SGWU needs all nodes");
         let total_q: f64 = locals.iter().map(|(_, q)| q.max(1e-9)).sum();
         let mut new_global = self.global.zeros_like();
         for (ws, q) in locals {
             new_global.axpy((q.max(1e-9) / total_q) as f32, ws);
         }
         self.install(new_global)
+    }
+
+    /// One node's part of an SGWU round, arriving through a [`super::transport::Transport`].
+    /// Buffered until all m parts of the round are present, then the round
+    /// is installed in node order — numerically identical to a single
+    /// [`ParamServer::update_sgwu`] call with the full slice. Returns the new
+    /// version when this submission completed the round, `None` while the
+    /// round is still filling.
+    pub fn submit_sgwu(&mut self, node: usize, local: WeightSet, accuracy: f64) -> Option<usize> {
+        self.comm.submits += 1;
+        self.comm.bytes += local.byte_size() as u64;
+        assert!(
+            self.sgwu_pending[node].is_none(),
+            "node {node} submitted twice in one SGWU round"
+        );
+        self.sgwu_pending[node] = Some((local, accuracy));
+        if self.sgwu_pending.iter().any(|p| p.is_none()) {
+            return None;
+        }
+        let locals: Vec<(WeightSet, f64)> =
+            self.sgwu_pending.iter_mut().map(|p| p.take().unwrap()).collect();
+        Some(self.apply_sgwu(&locals))
+    }
+
+    /// Parts of the current SGWU round already buffered (server-side
+    /// progress reporting).
+    pub fn sgwu_round_fill(&self) -> usize {
+        self.sgwu_pending.iter().filter(|p| p.is_some()).count()
     }
 
     /// Staleness attenuation γ_j^(k) — Eq. 9. `i` is the version the update
@@ -228,6 +290,15 @@ impl ParamServer {
 
     fn oldest_retained(&self) -> &WeightSet {
         self.history.front().expect("history never empty").1.as_ref()
+    }
+
+    /// Consume the server, moving the final global weight set out. Once the
+    /// history window (the only other holder of the final version's `Arc`)
+    /// is dropped, the unwrap is copy-free; a still-outstanding fetch
+    /// snapshot degrades it to one clone rather than failing.
+    pub fn into_global(mut self) -> WeightSet {
+        self.history.clear();
+        Arc::try_unwrap(self.global).unwrap_or_else(|shared| (*shared).clone())
     }
 }
 
@@ -412,6 +483,57 @@ mod tests {
         ps.update_agwu(0, &a, 0, 1.0);
         assert!(!Arc::ptr_eq(&a, &ps.global_arc()));
         assert_eq!(a.tensors()[0].data(), &[1.0, 2.0]);
+    }
+
+    /// Part-wise SGWU submission (the transport path) must be numerically
+    /// identical to the one-shot slice API, regardless of arrival order.
+    #[test]
+    fn submit_sgwu_parts_match_one_shot_update() {
+        let locals = [(ws(&[2.0, 0.0]), 0.75), (ws(&[0.0, 4.0]), 0.25)];
+        let mut one_shot = ParamServer::new(ws(&[0.0, 0.0]), 2);
+        one_shot.update_sgwu(&locals);
+
+        let mut parts = ParamServer::new(ws(&[0.0, 0.0]), 2);
+        // Reverse arrival order: node 1 first, then node 0 completes.
+        assert_eq!(parts.submit_sgwu(1, locals[1].0.clone(), locals[1].1), None);
+        assert_eq!(parts.sgwu_round_fill(), 1);
+        assert_eq!(parts.submit_sgwu(0, locals[0].0.clone(), locals[0].1), Some(1));
+        assert_eq!(parts.sgwu_round_fill(), 0);
+        assert_eq!(v0(&parts), v0(&one_shot));
+        assert_eq!(parts.comm.submits, one_shot.comm.submits);
+        assert_eq!(parts.comm.bytes, one_shot.comm.bytes);
+        // The buffer resets — a second round works.
+        assert_eq!(parts.submit_sgwu(0, ws(&[1.0, 1.0]), 1.0), None);
+        assert_eq!(parts.submit_sgwu(1, ws(&[1.0, 1.0]), 1.0), Some(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "twice")]
+    fn submit_sgwu_duplicate_node_panics() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 2);
+        ps.submit_sgwu(0, ws(&[1.0]), 1.0);
+        ps.submit_sgwu(0, ws(&[2.0]), 1.0);
+    }
+
+    /// `into_global` moves the final version out without a copy once history
+    /// and fetches are gone, and degrades to a clone when a snapshot is
+    /// still outstanding.
+    #[test]
+    fn into_global_moves_final_version() {
+        let mut ps = ParamServer::new(ws(&[1.0, 2.0]), 1);
+        let (w, k) = ps.fetch(0);
+        ps.update_agwu(0, &w, k, 1.0);
+        drop(w);
+        let final_vals = v0(&ps);
+        let out = ps.into_global();
+        assert_eq!(out.tensors()[0].data(), &final_vals[..]);
+
+        // Outstanding fetch: still correct, via a clone.
+        let mut ps = ParamServer::new(ws(&[3.0]), 1);
+        let (held, _) = ps.fetch(0);
+        let out = ps.into_global();
+        assert_eq!(out.tensors()[0].data(), &[3.0]);
+        assert_eq!(held.tensors()[0].data(), &[3.0]);
     }
 
     #[test]

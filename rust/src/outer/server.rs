@@ -1,0 +1,438 @@
+//! Standalone parameter-server service: the §3.2.1 server node as a real
+//! process. An accept loop takes one TCP connection per computing node,
+//! each served by its own handler thread against the shared [`ParamServer`]
+//! — the Eq. 7/Eq. 10 update rules run unchanged; only the node ↔ server
+//! link is a socket instead of an `Arc` bump.
+//!
+//! SGWU's Eq. 8 barrier falls out of the protocol: a round part's `Ack` is
+//! not written until the last node of the round arrives and the round is
+//! installed, so the blocked socket *is* the synchronization wait (accounted
+//! in `sync_wait_s` exactly like the in-process runner does).
+//!
+//! The service produces the same [`ClusterReport`] as the in-process
+//! cluster: version log with per-submission loss/accuracy, Eq. 11 comm
+//! accounting (logical bytes plus measured wire bytes and handling time),
+//! per-node busy proxies (fetch-reply → submit-arrival spans), and the
+//! final global weight set.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::UpdateStrategy;
+use crate::tensor::WeightSet;
+
+use super::cluster::{ClusterReport, VersionRecord};
+use super::param_server::ParamServer;
+use super::transport::SubmitMode;
+use super::wire::{read_msg, write_msg, Msg};
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Number of computing nodes; the accept loop takes exactly this many
+    /// connections and the run ends when every node sent `Done`.
+    pub nodes: usize,
+    /// Update rule this server enforces: SGWU runs reject AGWU submissions
+    /// and vice versa (`Plain` submissions ride under `Agwu`).
+    pub update: UpdateStrategy,
+    /// Log every installed version to stderr.
+    pub verbose: bool,
+}
+
+struct ServerState {
+    ps: ParamServer,
+    versions: Vec<VersionRecord>,
+    /// SGWU: completed-round counter releasing the Eq. 8 barrier.
+    round: usize,
+    /// SGWU: per-node (loss, accuracy) of the filling round.
+    round_meta: Vec<Option<(f64, f64)>>,
+    /// Eq. 8 synchronization wait accumulated across nodes (SGWU only).
+    sync_wait_s: f64,
+    /// Per-node busy proxy: fetch-reply sent → submission received.
+    node_busy: Vec<f64>,
+    claimed: Vec<bool>,
+    /// Set when a handler dies mid-run so barrier waiters don't hang.
+    aborted: bool,
+}
+
+struct Shared {
+    state: Mutex<ServerState>,
+    round_cv: Condvar,
+    t0: Instant,
+    opts: ServeOptions,
+}
+
+/// Serve one training run on an already-bound listener (bind to port 0 and
+/// read `listener.local_addr()` for ephemeral deployments). Blocks until
+/// all `opts.nodes` workers connected, ran and sent `Done`, then returns
+/// the run's [`ClusterReport`].
+pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Result<ClusterReport> {
+    ensure!(opts.nodes > 0, "param server needs at least one node");
+    let shared = Arc::new(Shared {
+        state: Mutex::new(ServerState {
+            ps: ParamServer::new(init, opts.nodes),
+            versions: Vec::new(),
+            round: 0,
+            round_meta: (0..opts.nodes).map(|_| None).collect(),
+            sync_wait_s: 0.0,
+            node_busy: vec![0.0; opts.nodes],
+            claimed: vec![false; opts.nodes],
+            aborted: false,
+        }),
+        round_cv: Condvar::new(),
+        t0: Instant::now(),
+        opts,
+    });
+
+    let mut handles = Vec::with_capacity(opts.nodes);
+    for _ in 0..opts.nodes {
+        let (stream, peer) = listener.accept().context("accept worker connection")?;
+        if opts.verbose {
+            eprintln!("param-server: worker connected from {peer}");
+        }
+        let sh = Arc::clone(&shared);
+        handles.push(std::thread::spawn(move || handle_conn(stream, sh)));
+    }
+    drop(listener);
+
+    let mut failures: Vec<String> = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => failures.push(format!("{e:#}")),
+            Err(_) => failures.push("connection handler panicked".to_string()),
+        }
+    }
+    let shared = Arc::try_unwrap(shared)
+        .map_err(|_| anyhow!("handler threads still hold server state"))?;
+    let wall_s = shared.t0.elapsed().as_secs_f64();
+    ensure!(failures.is_empty(), "worker connections failed: {}", failures.join("; "));
+
+    let mut st = shared.state.into_inner().unwrap();
+    st.versions.sort_by_key(|v| v.version);
+    Ok(ClusterReport {
+        strategy: opts.update,
+        versions: st.versions,
+        comm: st.ps.comm.clone(),
+        sync_wait_s: st.sync_wait_s,
+        wall_s,
+        node_busy_s: st.node_busy,
+        final_weights: st.ps.into_global(),
+    })
+}
+
+/// Handler-local measured accounting, folded into the shared state exactly
+/// once when the connection ends (valid because one connection = one node).
+#[derive(Default)]
+struct ConnAcct {
+    wire_bytes: u64,
+    fetch_wall_s: f64,
+    submit_wall_s: f64,
+    sync_wait_s: f64,
+    busy_s: f64,
+    last_fetch_reply: Option<Instant>,
+}
+
+/// Mark the run aborted and release any Eq. 8 barrier waiters so a dead
+/// peer can't hang the round.
+fn abort_run(shared: &Shared) {
+    shared.state.lock().unwrap().aborted = true;
+    shared.round_cv.notify_all();
+}
+
+/// Serve one node's connection: `Hello`, then fetch/submit rounds until
+/// `Done` (or disconnect). Measured accounting is handler-local and folded
+/// into the shared [`super::CommStats`] once, at the end.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = std::io::BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut writer = std::io::BufWriter::new(stream);
+    let mut acct = ConnAcct::default();
+
+    // Registration.
+    let (hello, hello_bytes) = read_msg(&mut reader)?;
+    acct.wire_bytes += hello_bytes as u64;
+    let node = match hello {
+        Msg::Hello { node } => node as usize,
+        other => {
+            let _ = write_msg(&mut writer, &Msg::Error { msg: "expected hello".into() });
+            abort_run(&shared);
+            bail!("expected hello, got {other:?}");
+        }
+    };
+    {
+        let mut st = shared.state.lock().unwrap();
+        if node >= shared.opts.nodes || st.claimed[node] {
+            st.aborted = true;
+            shared.round_cv.notify_all();
+            drop(st);
+            let _ = write_msg(
+                &mut writer,
+                &Msg::Error { msg: format!("node slot {node} invalid or already claimed") },
+            );
+            bail!("node slot {node} invalid or already claimed");
+        }
+        st.claimed[node] = true;
+    }
+
+    let result = serve_node(&mut reader, &mut writer, &shared, node, &mut acct);
+
+    // Fold this node's measured accounting into the shared stats exactly
+    // once, and make sure barrier waiters can't hang on a dead peer.
+    let mut st = shared.state.lock().unwrap();
+    st.ps.comm.wire_bytes += acct.wire_bytes;
+    st.ps.comm.fetch_wall_s += acct.fetch_wall_s;
+    st.ps.comm.submit_wall_s += acct.submit_wall_s;
+    st.sync_wait_s += acct.sync_wait_s;
+    st.node_busy[node] += acct.busy_s;
+    if result.is_err() {
+        st.aborted = true;
+        shared.round_cv.notify_all();
+    }
+    result.with_context(|| format!("serving node {node}"))
+}
+
+/// The per-connection request loop (registration already done).
+fn serve_node(
+    reader: &mut std::io::BufReader<TcpStream>,
+    writer: &mut std::io::BufWriter<TcpStream>,
+    shared: &Shared,
+    node: usize,
+    acct: &mut ConnAcct,
+) -> Result<()> {
+    loop {
+        let (msg, nread) = read_msg(reader)?;
+        acct.wire_bytes += nread as u64;
+        match msg {
+            Msg::Fetch => {
+                let t_h = Instant::now();
+                let (snapshot, version) = {
+                    let mut st = shared.state.lock().unwrap();
+                    st.ps.fetch(node)
+                };
+                let reply = Msg::Global { version: version as u64, weights: (*snapshot).clone() };
+                acct.wire_bytes += write_msg(writer, &reply)? as u64;
+                acct.fetch_wall_s += t_h.elapsed().as_secs_f64();
+                acct.last_fetch_reply = Some(Instant::now());
+            }
+            Msg::Submit { mode, base, accuracy, loss, weights } => {
+                if let Some(t) = acct.last_fetch_reply.take() {
+                    acct.busy_s += t.elapsed().as_secs_f64();
+                }
+                let t_h = Instant::now();
+                let mut waited = 0.0f64;
+                let version = {
+                    let mut st = shared.state.lock().unwrap();
+                    let at_s = shared.t0.elapsed().as_secs_f64();
+                    match (shared.opts.update, mode) {
+                        (UpdateStrategy::Agwu, SubmitMode::Agwu)
+                        | (UpdateStrategy::Agwu, SubmitMode::Plain) => {
+                            let v = if mode == SubmitMode::Agwu {
+                                st.ps.update_agwu(node, &weights, base as usize, accuracy)
+                            } else {
+                                st.ps.update_async_plain(node, &weights, base as usize)
+                            };
+                            st.versions.push(VersionRecord {
+                                version: v,
+                                node,
+                                local_loss: loss,
+                                local_accuracy: accuracy,
+                                at_s,
+                                eval: None,
+                            });
+                            if shared.opts.verbose {
+                                eprintln!(
+                                    "param-server: v{v} node {node} loss {loss:.4} acc {accuracy:.3}"
+                                );
+                            }
+                            v
+                        }
+                        (UpdateStrategy::Sgwu, SubmitMode::Sgwu) => {
+                            let my_round = st.round;
+                            st.round_meta[node] = Some((loss, accuracy));
+                            match st.ps.submit_sgwu(node, weights, accuracy) {
+                                Some(v) => {
+                                    let m = shared.opts.nodes as f64;
+                                    let (mut l_sum, mut q_sum) = (0.0f64, 0.0f64);
+                                    for meta in st.round_meta.iter_mut() {
+                                        let (l, q) = meta.take().expect("full round");
+                                        l_sum += l;
+                                        q_sum += q;
+                                    }
+                                    st.versions.push(VersionRecord {
+                                        version: v,
+                                        node: usize::MAX,
+                                        local_loss: l_sum / m,
+                                        local_accuracy: q_sum / m,
+                                        at_s,
+                                        eval: None,
+                                    });
+                                    if shared.opts.verbose {
+                                        eprintln!(
+                                            "param-server: v{v} (SGWU round) mean loss {:.4}",
+                                            l_sum / m
+                                        );
+                                    }
+                                    st.round += 1;
+                                    shared.round_cv.notify_all();
+                                    v
+                                }
+                                None => {
+                                    // Eq. 8: wait for the round's last node.
+                                    let w0 = Instant::now();
+                                    while st.round == my_round && !st.aborted {
+                                        st = shared.round_cv.wait(st).unwrap();
+                                    }
+                                    waited = w0.elapsed().as_secs_f64();
+                                    acct.sync_wait_s += waited;
+                                    if st.aborted {
+                                        bail!("SGWU round aborted: a peer disconnected");
+                                    }
+                                    st.ps.version()
+                                }
+                            }
+                        }
+                        (want, got) => {
+                            drop(st);
+                            let msg = format!("server runs {want:?} but node submitted {got:?}");
+                            let _ = write_msg(writer, &Msg::Error { msg: msg.clone() });
+                            bail!("{msg}");
+                        }
+                    }
+                };
+                acct.submit_wall_s += t_h.elapsed().as_secs_f64() - waited;
+                acct.wire_bytes += write_msg(writer, &Msg::Ack { version: version as u64 })? as u64;
+            }
+            Msg::Done => return Ok(()),
+            other => bail!("unexpected message from node {node}: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outer::transport::{SubmitMeta, TcpTransport, Transport};
+    use crate::tensor::Tensor;
+
+    fn ws(vals: &[f32]) -> WeightSet {
+        WeightSet::new(vec![Tensor::from_vec(&[vals.len()], vals.to_vec())])
+    }
+
+    fn spawn_server(
+        init: WeightSet,
+        opts: ServeOptions,
+    ) -> (String, std::thread::JoinHandle<Result<ClusterReport>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || serve(listener, init, opts));
+        (addr, h)
+    }
+
+    #[test]
+    fn loopback_agwu_round_trip() {
+        let opts =
+            ServeOptions { nodes: 1, update: UpdateStrategy::Agwu, verbose: false };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let (g, base) = t.fetch_global().unwrap();
+        assert_eq!(base, 0);
+        assert_eq!(g.tensors()[0].data(), &[1.0]);
+        let mut local = (*g).clone();
+        local.tensors_mut()[0].data_mut()[0] = 3.0;
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 0.5,
+            loss: 0.9,
+            want_snapshot: false,
+        };
+        let ack = t.submit(local, &meta).unwrap();
+        assert_eq!(ack.version, 1);
+        // W = 1 + 1·0.5·(3−1) = 2, visible in the next fetch.
+        let (g2, v2) = t.fetch_global().unwrap();
+        assert_eq!(v2, 1);
+        assert_eq!(g2.tensors()[0].data(), &[2.0]);
+        t.finish().unwrap();
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.versions.len(), 1);
+        assert_eq!(report.comm.fetches, 2);
+        assert_eq!(report.comm.submits, 1);
+        assert!(report.comm.wire_bytes > 0, "sockets must move real bytes");
+        assert_eq!(report.final_weights.tensors()[0].data(), &[2.0]);
+        assert!(t.stats().wire_bytes > 0);
+    }
+
+    #[test]
+    fn loopback_sgwu_barrier_blocks_until_round_completes() {
+        let opts =
+            ServeOptions { nodes: 2, update: UpdateStrategy::Sgwu, verbose: false };
+        let (addr, server) = spawn_server(ws(&[0.0, 0.0]), opts);
+        let addr2 = addr.clone();
+        // Node 0 submits first and must block in submit() until node 1 arrives.
+        let first = std::thread::spawn(move || {
+            let mut t = TcpTransport::connect(&addr2, 0).unwrap();
+            let meta = SubmitMeta {
+                mode: SubmitMode::Sgwu,
+                base: 0,
+                accuracy: 0.5,
+                loss: 1.0,
+                want_snapshot: false,
+            };
+            let t_submit = Instant::now();
+            let ack = t.submit(ws(&[2.0, 0.0]), &meta).unwrap();
+            t.finish().unwrap();
+            (ack.version, t_submit.elapsed().as_secs_f64())
+        });
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        let mut t1 = TcpTransport::connect(&addr, 1).unwrap();
+        let meta = SubmitMeta {
+            mode: SubmitMode::Sgwu,
+            base: 0,
+            accuracy: 0.5,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        let ack1 = t1.submit(ws(&[0.0, 4.0]), &meta).unwrap();
+        t1.finish().unwrap();
+        let (v0, blocked_s) = first.join().unwrap();
+        assert_eq!((v0, ack1.version), (1, 1));
+        assert!(blocked_s >= 0.1, "first submitter did not wait: {blocked_s}s");
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.versions.len(), 1);
+        assert_eq!(report.versions[0].node, usize::MAX);
+        assert!(report.sync_wait_s >= 0.1, "Eq. 8 wait not accounted");
+        assert_eq!(report.final_weights.tensors()[0].data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn wrong_mode_rejected() {
+        let opts =
+            ServeOptions { nodes: 1, update: UpdateStrategy::Sgwu, verbose: false };
+        let (addr, server) = spawn_server(ws(&[0.0]), opts);
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base: 0,
+            accuracy: 1.0,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        assert!(t.submit(ws(&[1.0]), &meta).is_err());
+        assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn bad_node_slot_rejected() {
+        let opts =
+            ServeOptions { nodes: 1, update: UpdateStrategy::Agwu, verbose: false };
+        let (addr, server) = spawn_server(ws(&[0.0]), opts);
+        let mut t = TcpTransport::connect(&addr, 5).unwrap();
+        // The registration error surfaces on the first request.
+        assert!(t.fetch_global().is_err());
+        assert!(server.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,454 @@
+//! The outer layer's communication substrate: every node ↔ parameter-server
+//! exchange (§3.2–3.3) goes through the [`Transport`] trait, with three
+//! backends sharing one code path:
+//!
+//! * [`InProcTransport`] — the original thread/`Arc` cluster: fetch is a
+//!   refcount bump, submit applies the Eq. 7/10 update under the shared
+//!   server lock. Deterministic, zero-copy — the default for tests/CI.
+//! * [`TcpTransport`] — real sockets speaking the length-prefixed protocol
+//!   of [`super::wire`] against a standalone [`super::server`] process;
+//!   weight sets cross the wire through the bit-exact
+//!   [`crate::tensor::wire`] codec.
+//! * [`ThrottledTransport`] — a decorator that sleeps the [`TransferModel`]
+//!   link cost (latency + bytes/bandwidth) around any inner transport, so
+//!   the simulated Eq. 11 communication term and real transfer share the
+//!   same call sites instead of living in a model-only struct.
+//!
+//! All backends keep measured accounting ([`TransportStats`]): operation
+//! counts, wall time inside fetch/submit, and — for the socket backend —
+//! the bytes actually moved, so `bench_outer` reports measured (not
+//! modeled) communication cost.
+
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::WeightSet;
+
+use super::param_server::ParamServer;
+use super::wire::{read_msg, write_msg, Msg};
+
+/// Which global weight-update rule a submission requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitMode {
+    /// Eq. 10 with γ staleness attenuation + accuracy weighting.
+    Agwu,
+    /// Downpour-style 1/m increment (ablation baseline).
+    Plain,
+    /// Eq. 7 round averaging; the server barriers until all m nodes of the
+    /// round have submitted.
+    Sgwu,
+}
+
+/// Submission metadata accompanying the local weight set.
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitMeta {
+    pub mode: SubmitMode,
+    /// Global version the node trained from (k in Eq. 9/10).
+    pub base: usize,
+    /// Local training accuracy Q (Eq. 7 / Eq. 10 weighting).
+    pub accuracy: f64,
+    /// Local mean training loss (server-side learning curve).
+    pub loss: f64,
+    /// Ask for a post-update global snapshot in the ack. Only the
+    /// in-process backend honors it (atomically with the update, for eval
+    /// hooks); remote evaluators re-fetch instead.
+    pub want_snapshot: bool,
+}
+
+/// Reply to a submission.
+#[derive(Debug)]
+pub struct SubmitAck {
+    /// Server version after processing this submission. For a *buffered*
+    /// in-process SGWU part (round not yet complete) this is the still-
+    /// current version; the completing submission returns the new one.
+    pub version: usize,
+    /// Post-update global snapshot when requested and supported.
+    pub snapshot: Option<Arc<WeightSet>>,
+}
+
+/// Measured per-endpoint communication accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransportStats {
+    pub fetches: usize,
+    pub submits: usize,
+    /// Bytes actually moved on the wire by this endpoint, both directions
+    /// (frame prefixes included). 0 for in-process transports — their
+    /// "transfer" is an `Arc` refcount bump.
+    pub wire_bytes: u64,
+    /// Wall seconds spent inside `fetch_global`, including any throttle.
+    pub fetch_wall_s: f64,
+    /// Wall seconds spent inside `submit` (for SGWU over TCP this includes
+    /// the Eq. 8 barrier wait — the reply is the round release).
+    pub submit_wall_s: f64,
+}
+
+impl TransportStats {
+    pub fn merge(&mut self, other: &TransportStats) {
+        self.fetches += other.fetches;
+        self.submits += other.submits;
+        self.wire_bytes += other.wire_bytes;
+        self.fetch_wall_s += other.fetch_wall_s;
+        self.submit_wall_s += other.submit_wall_s;
+    }
+}
+
+/// A node's view of the parameter server (Definition 2's global weight set
+/// behind fetch/submit). One instance per node; implementations carry the
+/// node identity fixed at construction.
+pub trait Transport: Send {
+    /// Fetch the freshest global weight set and its version.
+    fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)>;
+
+    /// Submit a locally-trained weight set (moved — in-process backends
+    /// hand it to the server without a copy; socket backends serialize and
+    /// drop it).
+    fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> Result<SubmitAck>;
+
+    /// Measured accounting for this endpoint.
+    fn stats(&self) -> TransportStats;
+
+    /// Signal an orderly end of this node's run (remote backends tell the
+    /// server; in-process ones need nothing).
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-process backend
+// ---------------------------------------------------------------------------
+
+/// The thread-cluster backend: all nodes share one [`ParamServer`] behind a
+/// mutex; fetch hands out `Arc` snapshots and submit applies the update rule
+/// directly. Exactly the pre-refactor semantics, now behind the trait.
+pub struct InProcTransport {
+    ps: Arc<Mutex<ParamServer>>,
+    node: usize,
+    stats: TransportStats,
+}
+
+impl InProcTransport {
+    pub fn new(ps: Arc<Mutex<ParamServer>>, node: usize) -> Self {
+        Self { ps, node, stats: TransportStats::default() }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+        let t0 = Instant::now();
+        let out = self.ps.lock().unwrap().fetch(self.node);
+        self.stats.fetches += 1;
+        self.stats.fetch_wall_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> Result<SubmitAck> {
+        let t0 = Instant::now();
+        let ack = {
+            let mut ps = self.ps.lock().unwrap();
+            let version = match meta.mode {
+                SubmitMode::Agwu => {
+                    ps.update_agwu(self.node, &local, meta.base, meta.accuracy)
+                }
+                SubmitMode::Plain => ps.update_async_plain(self.node, &local, meta.base),
+                SubmitMode::Sgwu => ps
+                    .submit_sgwu(self.node, local, meta.accuracy)
+                    .unwrap_or_else(|| ps.version()),
+            };
+            // Snapshot under the same lock as the update: eval hooks see
+            // exactly the version this submission produced.
+            let snapshot = meta.want_snapshot.then(|| ps.global_arc());
+            SubmitAck { version, snapshot }
+        };
+        self.stats.submits += 1;
+        self.stats.submit_wall_s += t0.elapsed().as_secs_f64();
+        Ok(ack)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP backend
+// ---------------------------------------------------------------------------
+
+/// Socket backend: one connection to the standalone param-server process,
+/// speaking the [`super::wire`] protocol. Blocking request/reply — an SGWU
+/// submit does not return until the server installed the round (the socket
+/// is the Eq. 8 barrier).
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    stats: TransportStats,
+}
+
+impl TcpTransport {
+    /// Connect to `addr` ("host:port") and register as `node`.
+    pub fn connect(addr: &str, node: usize) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect to param server at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        let mut t = Self { reader, writer: BufWriter::new(stream), stats: TransportStats::default() };
+        t.stats.wire_bytes += write_msg(&mut t.writer, &Msg::Hello { node: node as u32 })? as u64;
+        Ok(t)
+    }
+
+    fn round_trip(&mut self, msg: &Msg) -> Result<Msg> {
+        self.stats.wire_bytes += write_msg(&mut self.writer, msg)? as u64;
+        let (reply, n) = read_msg(&mut self.reader)?;
+        self.stats.wire_bytes += n as u64;
+        if let Msg::Error { msg } = reply {
+            bail!("param server error: {msg}");
+        }
+        Ok(reply)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+        let t0 = Instant::now();
+        let reply = self.round_trip(&Msg::Fetch)?;
+        let out = match reply {
+            Msg::Global { version, weights } => (Arc::new(weights), version as usize),
+            other => bail!("unexpected reply to fetch: {other:?}"),
+        };
+        self.stats.fetches += 1;
+        self.stats.fetch_wall_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> Result<SubmitAck> {
+        let t0 = Instant::now();
+        let reply = self.round_trip(&Msg::Submit {
+            mode: meta.mode,
+            base: meta.base as u64,
+            accuracy: meta.accuracy,
+            loss: meta.loss,
+            weights: local,
+        })?;
+        let version = match reply {
+            Msg::Ack { version } => version as usize,
+            other => bail!("unexpected reply to submit: {other:?}"),
+        };
+        self.stats.submits += 1;
+        self.stats.submit_wall_s += t0.elapsed().as_secs_f64();
+        Ok(SubmitAck { version, snapshot: None })
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.stats.wire_bytes += write_msg(&mut self.writer, &Msg::Done)? as u64;
+        self.writer.flush().ok();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Link model + throttled decorator
+// ---------------------------------------------------------------------------
+
+/// Simple latency + bandwidth link model (§3.3.2(3), Fig. 15a) — the unit
+/// cost behind Eq. 11's communication term.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferModel {
+    pub bandwidth_bytes_per_s: f64,
+    pub latency_s: f64,
+}
+
+impl TransferModel {
+    pub fn new(bandwidth_bytes_per_s: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bytes_per_s > 0.0);
+        Self { bandwidth_bytes_per_s, latency_s }
+    }
+
+    /// Seconds to move `bytes` over the link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+
+    /// Eq. 11 as time: 2·c_w·m·K where c_w is one weight-set transfer.
+    pub fn total_update_time(&self, weight_bytes: usize, m: usize, k: usize) -> f64 {
+        2.0 * self.transfer_time(weight_bytes) * m as f64 * k as f64
+    }
+}
+
+/// Decorator imposing a [`TransferModel`]'s link cost on any inner
+/// transport: each fetch sleeps the modeled download time of the received
+/// set, each submit the modeled upload time of the sent set. Wrapping
+/// [`InProcTransport`] reproduces the old simulated-link behavior; wrapping
+/// [`TcpTransport`] emulates a slower WAN on top of real sockets.
+pub struct ThrottledTransport<T: Transport> {
+    inner: T,
+    model: TransferModel,
+    throttle_fetch_s: f64,
+    throttle_submit_s: f64,
+}
+
+impl<T: Transport> ThrottledTransport<T> {
+    pub fn new(inner: T, model: TransferModel) -> Self {
+        Self { inner, model, throttle_fetch_s: 0.0, throttle_submit_s: 0.0 }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+}
+
+impl<T: Transport> Transport for ThrottledTransport<T> {
+    fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+        let (ws, version) = self.inner.fetch_global()?;
+        let dt = self.model.transfer_time(ws.byte_size());
+        self.throttle_fetch_s += dt;
+        std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        Ok((ws, version))
+    }
+
+    fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> Result<SubmitAck> {
+        let dt = self.model.transfer_time(local.byte_size());
+        self.throttle_submit_s += dt;
+        std::thread::sleep(std::time::Duration::from_secs_f64(dt));
+        self.inner.submit(local, meta)
+    }
+
+    /// Inner stats with the modeled link time folded into the wall columns —
+    /// the simulated and the real cost report through one channel.
+    fn stats(&self) -> TransportStats {
+        let mut s = self.inner.stats();
+        s.fetch_wall_s += self.throttle_fetch_s;
+        s.submit_wall_s += self.throttle_submit_s;
+        s
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn ws(vals: &[f32]) -> WeightSet {
+        WeightSet::new(vec![Tensor::from_vec(&[vals.len()], vals.to_vec())])
+    }
+
+    fn inproc(nodes: usize) -> (Arc<Mutex<ParamServer>>, Vec<InProcTransport>) {
+        let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[0.0, 0.0]), nodes)));
+        let ts = (0..nodes).map(|j| InProcTransport::new(Arc::clone(&ps), j)).collect();
+        (ps, ts)
+    }
+
+    #[test]
+    fn inproc_fetch_is_shared_snapshot() {
+        let (ps, mut ts) = inproc(2);
+        let (a, va) = ts[0].fetch_global().unwrap();
+        let (b, vb) = ts[1].fetch_global().unwrap();
+        assert_eq!((va, vb), (0, 0));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(ps.lock().unwrap().comm.fetches, 2);
+        assert_eq!(ts[0].stats().fetches, 1);
+        assert_eq!(ts[0].stats().wire_bytes, 0, "in-proc moves no wire bytes");
+    }
+
+    #[test]
+    fn inproc_agwu_submit_applies_eq10() {
+        let (ps, mut ts) = inproc(1);
+        let (g, base) = ts[0].fetch_global().unwrap();
+        let mut local = (*g).clone();
+        local.tensors_mut()[0].data_mut()[0] = 2.0;
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 1.0,
+            loss: 0.5,
+            want_snapshot: true,
+        };
+        let ack = ts[0].submit(local, &meta).unwrap();
+        assert_eq!(ack.version, 1);
+        // γ=1 (single node), Q=1: W = 0 + (2−0) = 2.
+        assert_eq!(ack.snapshot.unwrap().tensors()[0].data(), &[2.0, 0.0]);
+        assert_eq!(ps.lock().unwrap().version(), 1);
+    }
+
+    #[test]
+    fn inproc_sgwu_buffers_until_round_completes() {
+        let (ps, mut ts) = inproc(2);
+        let meta = |acc| SubmitMeta {
+            mode: SubmitMode::Sgwu,
+            base: 0,
+            accuracy: acc,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        let a0 = ts[0].submit(ws(&[2.0, 0.0]), &meta(0.5)).unwrap();
+        assert_eq!(a0.version, 0, "buffered part reports still-current version");
+        let a1 = ts[1].submit(ws(&[0.0, 4.0]), &meta(0.5)).unwrap();
+        assert_eq!(a1.version, 1, "completing part installs the round");
+        let ps = ps.lock().unwrap();
+        assert_eq!(ps.global().tensors()[0].data(), &[1.0, 2.0]);
+        assert_eq!(ps.comm.submits, 2);
+    }
+
+    #[test]
+    fn throttled_sleeps_and_reports_link_time() {
+        let (_ps, mut ts) = inproc(1);
+        let model = TransferModel::new(1e9, 0.02); // dominated by 20 ms latency
+        let mut t = ThrottledTransport::new(ts.remove(0), model);
+        let t0 = Instant::now();
+        let (g, base) = t.fetch_global().unwrap();
+        let _ = t
+            .submit(
+                (*g).clone(),
+                &SubmitMeta {
+                    mode: SubmitMode::Plain,
+                    base,
+                    accuracy: 1.0,
+                    loss: 1.0,
+                    want_snapshot: false,
+                },
+            )
+            .unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.04, "two modeled transfers ≥ 2×20 ms");
+        let s = t.stats();
+        assert!(s.fetch_wall_s >= 0.02 && s.submit_wall_s >= 0.02);
+        assert_eq!((s.fetches, s.submits), (1, 1));
+    }
+
+    // TransferModel semantics (moved here with the model from the old
+    // `outer::comm` module).
+
+    #[test]
+    fn transfer_time_components() {
+        let m = TransferModel::new(1e6, 0.001);
+        // 1 MB at 1 MB/s + 1 ms latency.
+        assert!((m.transfer_time(1_000_000) - 1.001).abs() < 1e-9);
+        assert!((m.transfer_time(0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq11_scaling() {
+        let m = TransferModel::new(1e9, 0.0);
+        let t1 = m.total_update_time(1000, 5, 10);
+        let t2 = m.total_update_time(1000, 10, 10);
+        let t3 = m.total_update_time(1000, 5, 20);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9, "linear in m");
+        assert!((t3 / t1 - 2.0).abs() < 1e-9, "linear in K");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        TransferModel::new(0.0, 0.0);
+    }
+}

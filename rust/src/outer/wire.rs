@@ -1,0 +1,255 @@
+//! Length-prefixed binary protocol between workers and the parameter
+//! server (§3.2's node ↔ server links, made real).
+//!
+//! Every message is one frame: `u32 LE body length | u8 tag | body`.
+//! Weight sets ride the [`crate::tensor::wire`] codec unchanged, so the
+//! protocol layer only adds scalars (LE-encoded) around them. Frames are
+//! capped at [`MAX_FRAME`] to keep a corrupt length prefix from driving a
+//! multi-gigabyte allocation.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::wire::{decode_weight_set, encode_weight_set_into, encoded_len};
+use crate::tensor::WeightSet;
+
+use super::transport::SubmitMode;
+
+/// Upper bound on one frame's body (weights for the paper's largest Table-2
+/// case are ~hundreds of MB below this).
+pub const MAX_FRAME: usize = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_FETCH: u8 = 2;
+const TAG_SUBMIT: u8 = 3;
+const TAG_GLOBAL: u8 = 4;
+const TAG_ACK: u8 = 5;
+const TAG_DONE: u8 = 6;
+const TAG_ERROR: u8 = 7;
+
+/// One protocol message. Client → server: `Hello`, `Fetch`, `Submit`,
+/// `Done`. Server → client: `Global`, `Ack`, `Error`.
+#[derive(Debug)]
+pub enum Msg {
+    /// Worker registration: which node slot this connection drives.
+    Hello { node: u32 },
+    /// Request the freshest global weight set.
+    Fetch,
+    /// Submit a locally-trained weight set. `base` is the global version the
+    /// node trained from (AGWU staleness, Eq. 9); `accuracy`/`loss` feed the
+    /// Eq. 7/10 weighting and the server-side learning curve.
+    Submit { mode: SubmitMode, base: u64, accuracy: f64, loss: f64, weights: WeightSet },
+    /// Reply to `Fetch`: the global set at `version`.
+    Global { version: u64, weights: WeightSet },
+    /// Reply to `Submit`: the server's version after processing it (for
+    /// SGWU, the reply is delayed until the whole round is installed — the
+    /// socket *is* the Eq. 8 barrier).
+    Ack { version: u64 },
+    /// Worker finished all its iterations; the connection winds down.
+    Done,
+    /// Server-side failure report (protocol violation, bad node id, ...).
+    Error { msg: String },
+}
+
+fn mode_to_wire(m: SubmitMode) -> u8 {
+    match m {
+        SubmitMode::Agwu => 0,
+        SubmitMode::Plain => 1,
+        SubmitMode::Sgwu => 2,
+    }
+}
+
+fn mode_from_wire(b: u8) -> Result<SubmitMode> {
+    Ok(match b {
+        0 => SubmitMode::Agwu,
+        1 => SubmitMode::Plain,
+        2 => SubmitMode::Sgwu,
+        other => bail!("unknown submit mode byte {other}"),
+    })
+}
+
+/// Serialize `msg` as one frame into `w`. Returns the total bytes written
+/// (frame prefix included) — the transport's measured wire accounting.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
+    let mut body: Vec<u8> = Vec::with_capacity(match msg {
+        Msg::Submit { weights, .. } => 1 + 1 + 8 + 8 + 8 + encoded_len(weights),
+        Msg::Global { weights, .. } => 1 + 8 + encoded_len(weights),
+        _ => 64,
+    });
+    match msg {
+        Msg::Hello { node } => {
+            body.push(TAG_HELLO);
+            body.extend_from_slice(&node.to_le_bytes());
+        }
+        Msg::Fetch => body.push(TAG_FETCH),
+        Msg::Submit { mode, base, accuracy, loss, weights } => {
+            body.push(TAG_SUBMIT);
+            body.push(mode_to_wire(*mode));
+            body.extend_from_slice(&base.to_le_bytes());
+            body.extend_from_slice(&accuracy.to_le_bytes());
+            body.extend_from_slice(&loss.to_le_bytes());
+            encode_weight_set_into(weights, &mut body);
+        }
+        Msg::Global { version, weights } => {
+            body.push(TAG_GLOBAL);
+            body.extend_from_slice(&version.to_le_bytes());
+            encode_weight_set_into(weights, &mut body);
+        }
+        Msg::Ack { version } => {
+            body.push(TAG_ACK);
+            body.extend_from_slice(&version.to_le_bytes());
+        }
+        Msg::Done => body.push(TAG_DONE),
+        Msg::Error { msg } => {
+            body.push(TAG_ERROR);
+            body.extend_from_slice(msg.as_bytes());
+        }
+    }
+    ensure!(body.len() <= MAX_FRAME, "frame body {} exceeds MAX_FRAME", body.len());
+    w.write_all(&(body.len() as u32).to_le_bytes()).context("write frame length")?;
+    w.write_all(&body).context("write frame body")?;
+    w.flush().context("flush frame")?;
+    Ok(4 + body.len())
+}
+
+/// Read one frame from `r`. Returns the message plus the total bytes read.
+pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("read frame length")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(len >= 1, "empty frame");
+    ensure!(len <= MAX_FRAME, "frame length {len} exceeds MAX_FRAME");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("read frame body")?;
+    let tag = body[0];
+    let rest = &body[1..];
+    let msg = match tag {
+        TAG_HELLO => {
+            ensure!(rest.len() == 4, "hello body length {}", rest.len());
+            Msg::Hello { node: u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) }
+        }
+        TAG_FETCH => {
+            ensure!(rest.is_empty(), "fetch carries no body");
+            Msg::Fetch
+        }
+        TAG_SUBMIT => {
+            ensure!(rest.len() >= 1 + 8 + 8 + 8, "submit body too short: {}", rest.len());
+            let mode = mode_from_wire(rest[0])?;
+            let base = u64::from_le_bytes(rest[1..9].try_into().unwrap());
+            let accuracy = f64::from_le_bytes(rest[9..17].try_into().unwrap());
+            let loss = f64::from_le_bytes(rest[17..25].try_into().unwrap());
+            let weights = decode_weight_set(&rest[25..])?;
+            Msg::Submit { mode, base, accuracy, loss, weights }
+        }
+        TAG_GLOBAL => {
+            ensure!(rest.len() >= 8, "global body too short: {}", rest.len());
+            let version = u64::from_le_bytes(rest[..8].try_into().unwrap());
+            let weights = decode_weight_set(&rest[8..])?;
+            Msg::Global { version, weights }
+        }
+        TAG_ACK => {
+            ensure!(rest.len() == 8, "ack body length {}", rest.len());
+            Msg::Ack { version: u64::from_le_bytes(rest.try_into().unwrap()) }
+        }
+        TAG_DONE => {
+            ensure!(rest.is_empty(), "done carries no body");
+            Msg::Done
+        }
+        TAG_ERROR => Msg::Error { msg: String::from_utf8_lossy(rest).into_owned() },
+        other => bail!("unknown message tag {other}"),
+    };
+    Ok((msg, 4 + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn ws() -> WeightSet {
+        WeightSet::new(vec![Tensor::from_vec(&[2, 2], vec![1.0, f32::NAN, -0.0, 3.5])])
+    }
+
+    fn round_trip(msg: Msg) -> Msg {
+        let mut buf = Vec::new();
+        let wrote = write_msg(&mut buf, &msg).unwrap();
+        assert_eq!(wrote, buf.len());
+        let mut cursor = std::io::Cursor::new(buf.clone());
+        let (out, read) = read_msg(&mut cursor).unwrap();
+        assert_eq!(read, buf.len());
+        out
+    }
+
+    #[test]
+    fn scalar_messages_round_trip() {
+        match round_trip(Msg::Hello { node: 7 }) {
+            Msg::Hello { node } => assert_eq!(node, 7),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(round_trip(Msg::Fetch), Msg::Fetch));
+        assert!(matches!(round_trip(Msg::Done), Msg::Done));
+        match round_trip(Msg::Ack { version: 123 }) {
+            Msg::Ack { version } => assert_eq!(version, 123),
+            other => panic!("{other:?}"),
+        }
+        match round_trip(Msg::Error { msg: "boom".into() }) {
+            Msg::Error { msg } => assert_eq!(msg, "boom"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_round_trips_with_weights() {
+        let msg = Msg::Submit {
+            mode: SubmitMode::Agwu,
+            base: 42,
+            accuracy: 0.75,
+            loss: 1.25,
+            weights: ws(),
+        };
+        match round_trip(msg) {
+            Msg::Submit { mode, base, accuracy, loss, weights } => {
+                assert_eq!(mode, SubmitMode::Agwu);
+                assert_eq!(base, 42);
+                assert_eq!(accuracy, 0.75);
+                assert_eq!(loss, 1.25);
+                assert_eq!(weights.tensors()[0].shape(), &[2, 2]);
+                let bits: Vec<u32> =
+                    weights.tensors()[0].data().iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> =
+                    ws().tensors()[0].data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, want);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn global_round_trips() {
+        match round_trip(Msg::Global { version: 9, weights: ws() }) {
+            Msg::Global { version, weights } => {
+                assert_eq!(version, 9);
+                assert_eq!(weights.param_count(), 4);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Fetch).unwrap();
+        // Truncated frame.
+        let mut cur = std::io::Cursor::new(buf[..buf.len() - 1].to_vec());
+        assert!(read_msg(&mut cur).is_err());
+        // Unknown tag.
+        let mut bad = buf.clone();
+        bad[4] = 0xEE;
+        assert!(read_msg(&mut std::io::Cursor::new(bad)).is_err());
+        // Oversized declared length.
+        let mut bad = buf;
+        bad[0..4].copy_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(read_msg(&mut std::io::Cursor::new(bad)).is_err());
+    }
+}

@@ -6,12 +6,16 @@ use std::ops::Range;
 use std::sync::Arc;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use crate::config::NetworkConfig;
 use crate::data::Dataset;
 use crate::inner::{parallel_train_step, AutoTuner, TilePolicy};
 use crate::nn::{Network, StepWorkspace, WeightPacks};
 use crate::tensor::WeightSet;
 use crate::util::threadpool::ThreadPool;
+
+use super::transport::{SubmitMeta, SubmitMode, Transport, TransportStats};
 
 /// Result of one local epoch (one "iteration" in the paper's terms: a full
 /// pass over the node's current subset, updating the local weight set after
@@ -230,6 +234,74 @@ impl LocalTrainer for NativeTrainer {
     }
 }
 
+/// Summary of one node's run against a parameter server (local or remote).
+#[derive(Debug, Clone)]
+pub struct WorkerRunSummary {
+    pub iterations: usize,
+    /// Server version after this node's last submission.
+    pub final_version: usize,
+    pub last_loss: f64,
+    pub last_accuracy: f64,
+    /// Pure local-training wall seconds (excludes fetch/submit).
+    pub busy_s: f64,
+    /// This endpoint's measured communication accounting.
+    pub stats: TransportStats,
+}
+
+/// Drive one node's fetch → train → submit loop over any [`Transport`] —
+/// the same loop `run_async`'s in-process threads execute, reusable against
+/// a remote server through `TcpTransport` (the `bptcnn worker` subcommand).
+/// In SGWU mode the Eq. 8 barrier is the transport's blocking submit: the
+/// call does not return until the server installed the whole round.
+pub fn drive_worker(
+    transport: &mut dyn Transport,
+    trainer: &mut dyn LocalTrainer,
+    schedule: &[Range<usize>],
+    iterations: usize,
+    mode: SubmitMode,
+    verbose: bool,
+) -> Result<WorkerRunSummary> {
+    let mut busy = 0.0f64;
+    let mut last_loss = f64::NAN;
+    let mut last_accuracy = 0.0f64;
+    let mut final_version = 0usize;
+    for iter in 0..iterations {
+        // IDPA incremental allocation (batch `iter` of this node's column).
+        if iter < schedule.len() {
+            trainer.add_samples(schedule[iter].clone());
+        }
+        let (global, base) = transport.fetch_global()?;
+        let t = Instant::now();
+        let out = trainer.train_epoch(global);
+        busy += t.elapsed().as_secs_f64();
+        last_loss = out.loss;
+        last_accuracy = out.accuracy;
+        let meta = SubmitMeta {
+            mode,
+            base,
+            accuracy: out.accuracy,
+            loss: out.loss,
+            want_snapshot: false,
+        };
+        let ack = transport.submit(out.weights, &meta)?;
+        final_version = ack.version;
+        if verbose {
+            eprintln!(
+                "worker: iter {iter} -> v{final_version} loss {last_loss:.4} acc {last_accuracy:.3}"
+            );
+        }
+    }
+    transport.finish()?;
+    Ok(WorkerRunSummary {
+        iterations,
+        final_version,
+        last_loss,
+        last_accuracy,
+        busy_s: busy,
+        stats: transport.stats(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,5 +440,31 @@ mod tests {
         let mut w = NativeTrainer::new(&cfg, ds, 0.1);
         let start = Network::init(&cfg, 1).weights;
         w.train_epoch(Arc::new(start));
+    }
+
+    /// The remote-worker driver runs the same loop as the in-process
+    /// cluster threads — check it against an `InProcTransport`.
+    #[test]
+    fn drive_worker_runs_against_inproc_transport() {
+        use crate::outer::param_server::ParamServer;
+        use crate::outer::transport::InProcTransport;
+        use std::sync::Mutex;
+
+        let (cfg, ds) = setup();
+        let init = Network::init(&cfg, 6).weights;
+        let ps = Arc::new(Mutex::new(ParamServer::new(init, 1)));
+        let mut t = InProcTransport::new(Arc::clone(&ps), 0);
+        let mut w = NativeTrainer::new(&cfg, ds, 0.2);
+        let sched = vec![0..32];
+        let summary =
+            drive_worker(&mut t, &mut w, &sched, 3, SubmitMode::Agwu, false).unwrap();
+        assert_eq!(summary.iterations, 3);
+        assert_eq!(summary.final_version, 3);
+        assert_eq!((summary.stats.fetches, summary.stats.submits), (3, 3));
+        assert!(summary.busy_s > 0.0);
+        assert!(summary.last_loss.is_finite());
+        drop(t);
+        let ps = Arc::try_unwrap(ps).unwrap().into_inner().unwrap();
+        assert_eq!(ps.version(), 3);
     }
 }

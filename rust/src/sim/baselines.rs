@@ -18,7 +18,7 @@
 //!   *rises* with cluster size beyond ~20 nodes (Figs. 12b/13).
 
 use crate::config::{PartitionStrategy, UpdateStrategy};
-use crate::outer::comm::TransferModel;
+use crate::outer::TransferModel;
 use crate::outer::partition::udpa_partition;
 use crate::util::stats;
 

@@ -11,7 +11,7 @@
 use crate::config::{
     ClusterConfig, NetworkConfig, PartitionStrategy, UpdateStrategy,
 };
-use crate::outer::comm::TransferModel;
+use crate::outer::TransferModel;
 use crate::outer::partition::{udpa_partition, IdpaPartitioner};
 use crate::util::stats;
 

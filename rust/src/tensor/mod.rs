@@ -7,6 +7,7 @@
 //! backend needs (conv/pool/matmul live in `nn/`).
 
 mod weightset;
+pub mod wire;
 
 pub use weightset::WeightSet;
 

@@ -1,0 +1,253 @@
+//! Versioned wire codec for [`WeightSet`] (the outer layer's unit of
+//! transfer, Eq. 11). The format is deliberately dumb: a fixed header, then
+//! per-tensor shape + raw little-endian f32 payload. Every f32 bit pattern —
+//! including NaN payloads, infinities and signed zeros — round-trips exactly
+//! (`to_le_bytes`/`from_le_bytes` are bit moves, not numeric conversions),
+//! so a TCP SGWU run is bit-identical to the in-process cluster.
+//!
+//! ```text
+//! [0..4)   magic  b"BPWS"
+//! [4..6)   format version  u16 LE  (currently 1)
+//! [6..10)  tensor count    u32 LE
+//! per tensor:
+//!   ndim   u8  (1..=MAX_NDIM)
+//!   dims   ndim × u32 LE
+//!   data   Πdims × f32 LE
+//! ```
+//!
+//! Decoding rejects short buffers, bad magic, unknown format versions,
+//! impossible shapes and trailing bytes — a corrupt or truncated frame can
+//! never produce a silently-wrong weight set.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{Tensor, WeightSet};
+
+/// Header magic: "BPt-cnn Weight Set".
+pub const WIRE_MAGIC: [u8; 4] = *b"BPWS";
+/// Current format version. Bump on any layout change; decoders reject
+/// versions they do not know.
+pub const WIRE_VERSION: u16 = 1;
+/// Most dims a tensor may carry on the wire (the CNN uses ≤ 4).
+pub const MAX_NDIM: usize = 8;
+
+const HEADER_LEN: usize = 4 + 2 + 4;
+
+/// Exact encoded size in bytes (header + shapes + payloads).
+pub fn encoded_len(ws: &WeightSet) -> usize {
+    let mut n = HEADER_LEN;
+    for t in ws.tensors() {
+        n += 1 + 4 * t.shape().len() + 4 * t.len();
+    }
+    n
+}
+
+/// Append the encoded form of `ws` to `out` (reusable buffer for repeated
+/// sends; `out` is *not* cleared).
+pub fn encode_weight_set_into(ws: &WeightSet, out: &mut Vec<u8>) {
+    out.reserve(encoded_len(ws));
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.extend_from_slice(&(ws.len() as u32).to_le_bytes());
+    for t in ws.tensors() {
+        let shape = t.shape();
+        assert!(
+            !shape.is_empty() && shape.len() <= MAX_NDIM,
+            "tensor rank {} not encodable (1..={MAX_NDIM})",
+            shape.len()
+        );
+        out.push(shape.len() as u8);
+        for &d in shape {
+            assert!(d <= u32::MAX as usize, "dim {d} exceeds wire width");
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Encode `ws` into a fresh buffer.
+pub fn encode_weight_set(ws: &WeightSet) -> Vec<u8> {
+    let mut out = Vec::with_capacity(encoded_len(ws));
+    encode_weight_set_into(ws, &mut out);
+    out
+}
+
+/// Cursor over a byte buffer with bounds-checked little-endian reads.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated weight-set frame: need {} bytes at offset {}, have {}",
+            n,
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Decode a weight set previously produced by [`encode_weight_set`].
+/// The entire buffer must be consumed — trailing bytes are an error.
+pub fn decode_weight_set(bytes: &[u8]) -> Result<WeightSet> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let magic = r.take(4)?;
+    ensure!(magic == WIRE_MAGIC, "bad weight-set magic {magic:02x?}");
+    let version = r.u16()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "unsupported weight-set wire version {version} (expected {WIRE_VERSION})"
+    );
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count.min(1024));
+    for i in 0..count {
+        let ndim = r.u8()? as usize;
+        ensure!(
+            (1..=MAX_NDIM).contains(&ndim),
+            "tensor {i}: rank {ndim} outside 1..={MAX_NDIM}"
+        );
+        let mut shape = Vec::with_capacity(ndim);
+        let mut elems: usize = 1;
+        for _ in 0..ndim {
+            let d = r.u32()? as usize;
+            elems = match elems.checked_mul(d) {
+                Some(n) => n,
+                None => bail!("tensor {i}: shape {shape:?}×{d} overflows"),
+            };
+            shape.push(d);
+        }
+        // Bound the allocation by what the buffer can actually hold before
+        // trusting the declared element count.
+        let payload = r.take(4 * elems)?;
+        let mut data = Vec::with_capacity(elems);
+        for c in payload.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        tensors.push(Tensor::from_vec(&shape, data));
+    }
+    ensure!(
+        r.pos == bytes.len(),
+        "trailing {} bytes after weight-set payload",
+        bytes.len() - r.pos
+    );
+    Ok(WeightSet::new(tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WeightSet {
+        WeightSet::new(vec![
+            Tensor::from_vec(&[2, 3], vec![1.0, -2.5, 0.0, f32::MAX, f32::MIN_POSITIVE, 7.75]),
+            Tensor::from_vec(&[4], vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0]),
+        ])
+    }
+
+    fn bits(ws: &WeightSet) -> Vec<Vec<u32>> {
+        ws.tensors()
+            .iter()
+            .map(|t| t.data().iter().map(|v| v.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let ws = sample();
+        let enc = encode_weight_set(&ws);
+        assert_eq!(enc.len(), encoded_len(&ws));
+        let dec = decode_weight_set(&enc).unwrap();
+        assert_eq!(dec.len(), ws.len());
+        for (a, b) in dec.tensors().iter().zip(ws.tensors()) {
+            assert_eq!(a.shape(), b.shape());
+        }
+        // Bit-level equality (NaN != NaN under PartialEq, so compare bits).
+        assert_eq!(bits(&dec), bits(&ws));
+    }
+
+    #[test]
+    fn empty_set_round_trips() {
+        let ws = WeightSet::new(Vec::new());
+        let dec = decode_weight_set(&encode_weight_set(&ws)).unwrap();
+        assert!(dec.is_empty());
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        let enc = encode_weight_set(&sample());
+        for cut in 0..enc.len() {
+            assert!(
+                decode_weight_set(&enc[..cut]).is_err(),
+                "truncation at {cut}/{} accepted",
+                enc.len()
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut enc = encode_weight_set(&sample());
+        enc.push(0);
+        assert!(decode_weight_set(&enc).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let good = encode_weight_set(&sample());
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_weight_set(&bad).is_err(), "magic");
+        let mut bad = good;
+        bad[4] = 0xFF; // format version
+        bad[5] = 0xFF;
+        assert!(decode_weight_set(&bad).is_err(), "version");
+    }
+
+    #[test]
+    fn absurd_shape_rejected() {
+        // Header claiming one tensor of rank 0, then of rank 9.
+        for ndim in [0u8, 9] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&WIRE_MAGIC);
+            buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+            buf.extend_from_slice(&1u32.to_le_bytes());
+            buf.push(ndim);
+            assert!(decode_weight_set(&buf).is_err(), "ndim {ndim}");
+        }
+    }
+
+    #[test]
+    fn declared_payload_longer_than_buffer_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(2);
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        // No payload follows the (huge) declared shape.
+        assert!(decode_weight_set(&buf).is_err());
+    }
+}

@@ -251,3 +251,129 @@ fn communication_matches_eq11_on_real_cluster() {
     let expected_mb = (expected_transfers * tc.network.weight_bytes()) as f64 / (1024.0 * 1024.0);
     assert!((r.comm_mb - expected_mb).abs() < 1e-9);
 }
+
+/// PR6 tentpole: three real worker endpoints drive AGWU against the
+/// standalone param-server service over loopback TCP. The run must produce
+/// the same version/comm ledger shape as the in-process cluster (Eq. 11:
+/// 2·m·K logical transfers), move real wire bytes, learn, and land within a
+/// loose tolerance of an in-process AGWU run with identical trainers (AGWU
+/// interleaving is nondeterministic in both deployments, so exact equality
+/// is not expected here — see the SGWU test below for bitwise parity).
+#[test]
+fn tcp_loopback_agwu_three_workers_matches_inprocess() {
+    use bptcnn::outer::{
+        drive_worker, run_agwu, schedule_columns, serve, ServeOptions, SubmitMode, TcpTransport,
+    };
+    use std::net::TcpListener;
+
+    let cfg = NetworkConfig::quickstart();
+    let ds = Arc::new(Dataset::synthetic(&cfg, 192, 0.3, 11));
+    let init = Network::init(&cfg, 11).weights;
+    let schedule = vec![vec![0..64, 64..128, 128..192]];
+    let (m, iterations) = (3usize, 3usize);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Agwu, verbose: false };
+    let server = {
+        let init = init.clone();
+        std::thread::spawn(move || serve(listener, init, opts))
+    };
+    let handles: Vec<_> = schedule_columns(&schedule, m)
+        .into_iter()
+        .enumerate()
+        .map(|(node, column)| {
+            let (addr, ds, cfg) = (addr.clone(), Arc::clone(&ds), cfg.clone());
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, node).unwrap();
+                let mut trainer = NativeTrainer::new(&cfg, ds, 0.2);
+                drive_worker(&mut t, &mut trainer, &column, iterations, SubmitMode::Agwu, false)
+                    .unwrap()
+            })
+        })
+        .collect();
+    let summaries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let report = server.join().unwrap().unwrap();
+
+    assert_eq!(report.versions.len(), m * iterations);
+    assert_eq!(report.comm.fetches, m * iterations);
+    assert_eq!(report.comm.submits, m * iterations);
+    assert_eq!(report.comm.bytes, (2 * m * iterations * cfg.weight_bytes()) as u64);
+    assert!(report.comm.wire_bytes > report.comm.bytes, "frames add protocol overhead");
+    assert!(report.comm.comm_wall_s() > 0.0);
+    for s in &summaries {
+        assert_eq!(s.iterations, iterations);
+        assert!(s.stats.wire_bytes > 0, "endpoint moved no bytes");
+        assert!(s.busy_s > 0.0);
+    }
+    let first = report.versions.first().unwrap().local_loss;
+    let last = report.versions.last().unwrap().local_loss;
+    assert!(last < first, "TCP AGWU did not learn: {first} -> {last}");
+
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..m)
+        .map(|_| Box::new(NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2)) as Box<dyn LocalTrainer>)
+        .collect();
+    let inproc = run_agwu(init, workers, &schedule, iterations, None);
+    assert_eq!(inproc.versions.len(), report.versions.len());
+    let diff = report.final_weights.max_abs_diff(&inproc.final_weights);
+    assert!(diff < 0.5, "TCP vs in-process AGWU diverged: max|Δw| = {diff}");
+}
+
+/// PR6 tentpole: SGWU is deterministic — submissions buffer at the barrier
+/// and apply in node order regardless of arrival order — so a 2-worker SGWU
+/// run over loopback TCP must be *bit-identical* to the in-process cluster
+/// from the same init, dataset and schedule. This is the strongest parity
+/// guarantee the transport refactor makes.
+#[test]
+fn tcp_loopback_sgwu_bitwise_matches_inprocess() {
+    use bptcnn::outer::{
+        drive_worker, run_sgwu, schedule_columns, serve, ServeOptions, SubmitMode, TcpTransport,
+    };
+    use std::net::TcpListener;
+
+    let cfg = NetworkConfig::quickstart();
+    let ds = Arc::new(Dataset::synthetic(&cfg, 144, 0.3, 23));
+    let init = Network::init(&cfg, 23).weights;
+    // Two allocation batches → exercises incremental add_samples on both paths.
+    let schedule = vec![vec![0..48, 48..96], vec![96..120, 120..144]];
+    let (m, iterations) = (2usize, 2usize);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Sgwu, verbose: false };
+    let server = {
+        let init = init.clone();
+        std::thread::spawn(move || serve(listener, init, opts))
+    };
+    let handles: Vec<_> = schedule_columns(&schedule, m)
+        .into_iter()
+        .enumerate()
+        .map(|(node, column)| {
+            let (addr, ds, cfg) = (addr.clone(), Arc::clone(&ds), cfg.clone());
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, node).unwrap();
+                let mut trainer = NativeTrainer::new(&cfg, ds, 0.25);
+                drive_worker(&mut t, &mut trainer, &column, iterations, SubmitMode::Sgwu, false)
+                    .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let report = server.join().unwrap().unwrap();
+
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..m)
+        .map(|_| Box::new(NativeTrainer::new(&cfg, Arc::clone(&ds), 0.25)) as Box<dyn LocalTrainer>)
+        .collect();
+    let inproc = run_sgwu(init, workers, &schedule, iterations, None);
+
+    // One installed version per round, flagged as the all-nodes merge.
+    assert_eq!(report.versions.len(), iterations);
+    assert!(report.versions.iter().all(|v| v.node == usize::MAX));
+    assert_eq!(report.comm.fetches, inproc.comm.fetches);
+    assert_eq!(report.comm.submits, inproc.comm.submits);
+    assert_eq!(report.comm.bytes, inproc.comm.bytes);
+    let diff = report.final_weights.max_abs_diff(&inproc.final_weights);
+    assert_eq!(diff, 0.0, "SGWU over TCP must be bit-identical, got max|Δw| = {diff}");
+}

@@ -770,3 +770,73 @@ fn prop_autotuner_decisions_deterministic_under_seed() {
         )
     });
 }
+
+/// PR6: the WeightSet wire codec round-trips every f32 bit pattern exactly
+/// (NaN payloads, infinities, signed zeros, denormals) for arbitrary tensor
+/// shapes up to MAX_NDIM — including zero-sized dims — and rejects every
+/// strict prefix, any corrupted header byte, and trailing garbage. A damaged
+/// frame can never decode into a silently-wrong weight set.
+#[test]
+fn prop_weightset_codec_bit_exact_and_rejects_corruption() {
+    use bptcnn::tensor::wire::{decode_weight_set, encode_weight_set, encoded_len, MAX_NDIM};
+    prop::check("weightset codec", 120, |g| {
+        let n_tensors = g.usize_full(0, 4);
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let ndim = g.usize_full(1, MAX_NDIM);
+            // First two dims carry the size (possibly zero); trailing dims
+            // stay tiny so the payload is bounded regardless of rank.
+            let shape: Vec<usize> = (0..ndim)
+                .map(|i| if i < 2 { g.usize_full(0, 5) } else { g.usize_full(1, 2) })
+                .collect();
+            let len: usize = shape.iter().product();
+            let mut data = g.vec_f32(len, -1e6, 1e6);
+            for v in data.iter_mut() {
+                if g.usize_full(0, 3) == 0 {
+                    *v = f32::from_bits(*g.choose(&[
+                        f32::NAN.to_bits() | 0x1234, // NaN with payload bits
+                        f32::INFINITY.to_bits(),
+                        f32::NEG_INFINITY.to_bits(),
+                        0x8000_0000, // -0.0
+                        0x0000_0001, // smallest denormal
+                        0xFFFF_FFFF, // negative quiet NaN, full payload
+                    ]));
+                }
+            }
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        let ws = WeightSet::new(tensors);
+        let enc = encode_weight_set(&ws);
+        assert_eq_msg(enc.len(), encoded_len(&ws), "encoded_len exact")?;
+        let dec = match decode_weight_set(&enc) {
+            Ok(d) => d,
+            Err(e) => return Err(format!("decode failed: {e}")),
+        };
+        assert_eq_msg(dec.len(), ws.len(), "tensor count")?;
+        for (i, (a, b)) in dec.tensors().iter().zip(ws.tensors()).enumerate() {
+            assert_eq_msg(a.shape(), b.shape(), &format!("shape of tensor {i}"))?;
+            let ab: Vec<u32> = a.data().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = b.data().iter().map(|v| v.to_bits()).collect();
+            assert_true(ab == bb, &format!("payload bits of tensor {i}"))?;
+        }
+        // Any strict prefix is rejected: the decoder demands the buffer be
+        // consumed exactly, so a cut frame always errors.
+        let cut = g.usize_full(0, enc.len() - 1);
+        assert_true(
+            decode_weight_set(&enc[..cut]).is_err(),
+            &format!("truncation at {cut}/{} accepted", enc.len()),
+        )?;
+        // Flipping any header byte (magic, version, tensor count) is fatal.
+        let mut bad = enc.clone();
+        let idx = g.usize_full(0, 9);
+        bad[idx] ^= 0xFF;
+        assert_true(
+            decode_weight_set(&bad).is_err(),
+            &format!("corrupt header byte {idx} accepted"),
+        )?;
+        // So is trailing garbage after a well-formed payload.
+        let mut long = enc;
+        long.push(0);
+        assert_true(decode_weight_set(&long).is_err(), "trailing byte accepted")
+    });
+}
