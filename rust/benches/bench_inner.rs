@@ -460,6 +460,31 @@ fn main() {
             );
         });
         println!("train_step/auto_4t {}", auto_net.tuning_report());
+        // ISSUE-7 checker-overhead row: the same packed step, labelled by
+        // whether the `chk` runtime claim cross-check is compiled in. The
+        // default build must keep the `_chk_off` row within 1% of
+        // `train_step/packed_4t` (the claim plumbing is a dead `None` field
+        // without the feature); compare `_chk_on` vs `_chk_off` across a
+        // `--features chk` run to read the checker's true cost.
+        let chk_label = if cfg!(feature = "chk") {
+            "train_step/packed_4t_chk_on"
+        } else {
+            "train_step/packed_4t_chk_off"
+        };
+        let mut chk_net = Network::init(&cfg, 9);
+        let mut chk_ws = StepWorkspace::new();
+        b.bench_with_throughput(chk_label, flops, || {
+            parallel_train_step(
+                &pool4,
+                &mut chk_net,
+                &x,
+                &y,
+                cfg.batch_size,
+                0.02,
+                TilePolicy::grid2d(conv_rows),
+                &mut chk_ws,
+            );
+        });
     }
 
     // ---- 2D row×column tiling: Table-2 cases 5–7 (2000-neuron FC, small

@@ -30,6 +30,7 @@ use crate::nn::{Network, StepWorkspace};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
 use super::autotune::{AutoTuner, StageKey, StageKind};
+use super::check;
 use super::conv_tasks::{conv2d_parallel_packed_ws, ConvTask, ConvTile, DisjointBuf};
 use super::dag::TaskDag;
 use super::fc_tasks;
@@ -78,7 +79,8 @@ pub struct ParallelStepResult {
 /// * [`BwdTask::DxImage`] — whole-image input-gradient fallback for even
 ///   kernels (asymmetric implicit padding doesn't ride the flipped-forward
 ///   conv).
-enum BwdTask {
+#[derive(Debug, Clone, Copy)]
+pub enum BwdTask {
     Tile(ConvTask),
     Lower { off: usize, len: usize, n: usize, y0: usize, rows: usize, dy_space: bool },
     Df { t: ConvTile, off: usize },
@@ -88,7 +90,7 @@ enum BwdTask {
 
 /// Sentinel `off`: the tile lowers its own patches into the executing
 /// worker's arena (no shared segment exists for its row range).
-const OWN_SCRATCH: usize = usize::MAX;
+pub const OWN_SCRATCH: usize = usize::MAX;
 
 /// Backward of one conv layer with 2D tile tasks (the row granularity
 /// mirrors the forward decomposition via `rows_per_task`; output/input
@@ -159,52 +161,22 @@ pub fn conv_bwd_parallel_packed(
     )
 }
 
-/// [`conv_bwd_parallel_packed`] with a caller-owned lowering buffer: when a
-/// grid column-splits, each (image, row-range) patch matrix — `x` patches
-/// for the df tiles, `dy` patches for the odd-kernel dx tiles — is lowered
-/// **once** by a level-0 [`BwdTask::Lower`] task into a disjoint segment of
-/// `lower`, and the range's column tiles read it behind the scheduler's
-/// dependency wait instead of each re-running im2col.
-#[allow(clippy::too_many_arguments)]
-pub fn conv_bwd_parallel_packed_ws(
-    pool: &ThreadPool,
+/// Build the backward stage plan for one conv layer: the [`BwdTask`] DAG
+/// (fused row tiles, or Lower → Df/Dx column tiles when a grid splits, plus
+/// per-image dx fallbacks for even kernels) and the total lowering-buffer
+/// length its `Lower` tasks claim. Pure planning — shared with the offline
+/// plan-sweep verifier, which replays every emitted plan through
+/// [`check::verify`] via [`conv_bwd_claims`].
+pub fn conv_bwd_dag(
     d: &ConvDims,
-    x: &[f32],
-    f: &[f32],
-    dy: &[f32],
-    df: &mut [f32],
-    db: &mut [f32],
-    dx: Option<&mut [f32]>,
-    flip_packed: Option<&PackedB>,
-    df_grid: TileGrid,
-    dx_grid: TileGrid,
-    lower: &mut Vec<f32>,
-) -> ScheduleStats {
-    assert_eq!(x.len(), d.x_len());
-    assert_eq!(dy.len(), d.y_len());
-    assert_eq!(df.len(), d.f_len());
-    assert_eq!(db.len(), d.co);
-    df_grid.check();
-    dx_grid.check();
-    let want_dx = dx.is_some();
-    let odd_k = d.k % 2 == 1;
-
+    want_dx: bool,
+    df_grid: &TileGrid,
+    dx_grid: &TileGrid,
+) -> (TaskDag<BwdTask>, usize) {
     let dd = *d;
+    let odd_k = dd.k % 2 == 1;
     let kkc = dd.k * dd.k * dd.c;
     let kkco = dd.k * dd.k * dd.co;
-    // Input gradient = SAME forward conv of dy with the spatially-flipped,
-    // channel-transposed filter (odd k): packed once per weight mutation in
-    // the caller's pack cache, shared read-only by all tiles.
-    let swapped = ConvDims { c: dd.co, co: dd.c, ..dd };
-    let per_image = ConvDims { n: 1, ..dd };
-    let flip_packed: Option<&PackedB> = if want_dx && odd_k {
-        let pf = flip_packed.expect("flip_packed required for odd-kernel dx");
-        debug_assert_eq!(pf.kk(), kkco);
-        debug_assert_eq!(pf.n(), dd.c);
-        Some(pf)
-    } else {
-        None
-    };
     // Fused row tiles whenever neither space column-splits (and, for odd-k
     // dx, the row splits agree); otherwise independent Df/Dx tile kinds.
     let fused = df_grid.panel_tiles == 1
@@ -320,11 +292,120 @@ pub fn conv_bwd_parallel_packed_ws(
             );
         }
     }
+    (dag, lower_total)
+}
+
+/// Lower a [`conv_bwd_dag`] plan to access claims over the stage's shared
+/// buffers: `dx` rows / channel windows ([`check::Buf::Out`]), the shared
+/// lowering buffer ([`check::Buf::Lower`]) and the per-worker gradient
+/// accumulators ([`check::Buf::ArenaGradF`]/[`ArenaGradB`](check::Buf),
+/// worker-serialized, so exempt from pairwise disjointness but still
+/// cross-checked at runtime under `--features chk`).
+pub fn conv_bwd_claims(
+    d: &ConvDims,
+    want_dx: bool,
+    dag: &TaskDag<BwdTask>,
+) -> Vec<check::Claim> {
+    use check::{Buf, Claim, Span};
+    let odd_k = d.k % 2 == 1;
+    let kkc = d.k * d.k * d.c;
+    let kkco = d.k * d.k * d.co;
+    let x_img = d.h * d.w * d.c;
+    let mut cs = Vec::new();
+    for nd in dag.nodes() {
+        let id = nd.id;
+        match nd.payload {
+            BwdTask::Tile(t) => {
+                cs.push(Claim::write(id, Buf::ArenaGradF, Span::interval(0, d.f_len())));
+                cs.push(Claim::write(id, Buf::ArenaGradB, Span::interval(0, d.co)));
+                if want_dx && odd_k {
+                    let base = (t.n * d.h + t.y0) * d.w * d.c;
+                    let len = t.rows * d.w * d.c;
+                    cs.push(Claim::write(id, Buf::Out, Span::interval(base, len)));
+                }
+            }
+            BwdTask::Lower { off, len, .. } => {
+                cs.push(Claim::write(id, Buf::Lower, Span::interval(off, len)));
+            }
+            BwdTask::Df { t, off } => {
+                let (j0, jw) = ops::panel_window(d.co, t.p0, t.np);
+                let patches = t.rows * d.w;
+                cs.push(Claim::write(id, Buf::ArenaGradF, Span::strided(j0, kkc, d.co, jw)));
+                cs.push(Claim::write(id, Buf::ArenaGradB, Span::interval(j0, jw)));
+                if off != OWN_SCRATCH {
+                    cs.push(Claim::read(id, Buf::Lower, Span::interval(off, patches * kkc)));
+                }
+            }
+            BwdTask::Dx { t, off } => {
+                let (j0, jw) = ops::panel_window(d.c, t.p0, t.np);
+                let patches = t.rows * d.w;
+                let base = (t.n * d.h + t.y0) * d.w * d.c;
+                cs.push(Claim::write(id, Buf::Out, Span::strided(base + j0, patches, d.c, jw)));
+                if off != OWN_SCRATCH {
+                    cs.push(Claim::read(id, Buf::Lower, Span::interval(off, patches * kkco)));
+                }
+            }
+            BwdTask::DxImage(n) => {
+                cs.push(Claim::write(id, Buf::Out, Span::interval(n * x_img, x_img)));
+            }
+        }
+    }
+    cs
+}
+
+/// [`conv_bwd_parallel_packed`] with a caller-owned lowering buffer: when a
+/// grid column-splits, each (image, row-range) patch matrix — `x` patches
+/// for the df tiles, `dy` patches for the odd-kernel dx tiles — is lowered
+/// **once** by a level-0 [`BwdTask::Lower`] task into a disjoint segment of
+/// `lower`, and the range's column tiles read it behind the scheduler's
+/// dependency wait instead of each re-running im2col.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd_parallel_packed_ws(
+    pool: &ThreadPool,
+    d: &ConvDims,
+    x: &[f32],
+    f: &[f32],
+    dy: &[f32],
+    df: &mut [f32],
+    db: &mut [f32],
+    dx: Option<&mut [f32]>,
+    flip_packed: Option<&PackedB>,
+    df_grid: TileGrid,
+    dx_grid: TileGrid,
+    lower: &mut Vec<f32>,
+) -> ScheduleStats {
+    assert_eq!(x.len(), d.x_len());
+    assert_eq!(dy.len(), d.y_len());
+    assert_eq!(df.len(), d.f_len());
+    assert_eq!(db.len(), d.co);
+    df_grid.check();
+    dx_grid.check();
+    let want_dx = dx.is_some();
+    let odd_k = d.k % 2 == 1;
+
+    let dd = *d;
+    let kkc = dd.k * dd.k * dd.c;
+    let kkco = dd.k * dd.k * dd.co;
+    // Input gradient = SAME forward conv of dy with the spatially-flipped,
+    // channel-transposed filter (odd k): packed once per weight mutation in
+    // the caller's pack cache, shared read-only by all tiles.
+    let swapped = ConvDims { c: dd.co, co: dd.c, ..dd };
+    let per_image = ConvDims { n: 1, ..dd };
+    let flip_packed: Option<&PackedB> = if want_dx && odd_k {
+        let pf = flip_packed.expect("flip_packed required for odd-kernel dx");
+        debug_assert_eq!(pf.kk(), kkco);
+        debug_assert_eq!(pf.n(), dd.c);
+        Some(pf)
+    } else {
+        None
+    };
+    let (dag, lower_total) = conv_bwd_dag(d, want_dx, &df_grid, &dx_grid);
+    let guard = check::stage_guard(&dag, || conv_bwd_claims(d, want_dx, &dag));
 
     // Only the packed flip-forward path reads the zero bias; skip the
     // allocation entirely on df/db-only and even-kernel calls.
     let zero_bias = if flip_packed.is_some() { vec![0.0f32; dd.c] } else { Vec::new() };
-    let dx_buf = dx.map(DisjointBuf::new);
+    let dx_buf = dx.map(|s| DisjointBuf::new(s).checked(check::Buf::Out, &guard));
     let x_img = dd.h * dd.w * dd.c;
     let y_img = dd.h * dd.w * dd.co;
 
@@ -332,7 +413,7 @@ pub fn conv_bwd_parallel_packed_ws(
     fc_tasks::zero_arena_grads(pool, dd.f_len(), dd.co);
 
     let lslice = ScratchArena::grow(lower, lower_total);
-    let lbuf = DisjointBuf::new(lslice);
+    let lbuf = DisjointBuf::new(lslice).checked(check::Buf::Lower, &guard);
     let arenas = pool.arenas();
     let stats = execute_dag(pool, dag, move |worker: usize, task: &BwdTask| {
         match *task {
@@ -345,9 +426,10 @@ pub fn conv_bwd_parallel_packed_ws(
                 ops::im2col_rows(&dd, x, t.n, t.y0, t.rows, cols);
                 let dy0 = (t.n * dd.h + t.y0) * dd.w * dd.co;
                 let dyt = &dy[dy0..dy0 + patches * dd.co];
-                ops::gemm_tn_acc(patches, kkc, dd.co, cols, dyt, &mut arena.grad_f[..dd.f_len()]);
+                let gf = ScratchArena::grad_all(&mut arena.grad_f, dd.f_len());
+                ops::gemm_tn_acc(patches, kkc, dd.co, cols, dyt, gf);
                 // Eq. 22 tile: db_worker += column sums of the dy tile.
-                let gb = &mut arena.grad_b[..dd.co];
+                let gb = ScratchArena::grad_all(&mut arena.grad_b, dd.co);
                 for px in 0..patches {
                     let row = &dyt[px * dd.co..(px + 1) * dd.co];
                     for (acc, &v) in gb.iter_mut().zip(row.iter()) {
@@ -404,17 +486,9 @@ pub fn conv_bwd_parallel_packed_ws(
                 };
                 let dy0 = (t.n * dd.h + t.y0) * dd.w * dd.co;
                 let dyt = &dy[dy0..dy0 + patches * dd.co];
-                ops::gemm_tn_acc_cols(
-                    patches,
-                    kkc,
-                    dd.co,
-                    cols,
-                    dyt,
-                    &mut arena.grad_f[..dd.f_len()],
-                    j0,
-                    jw,
-                );
-                let gb = &mut arena.grad_b[j0..j0 + jw];
+                let gf = ScratchArena::grad_all(&mut arena.grad_f, dd.f_len());
+                ops::gemm_tn_acc_cols(patches, kkc, dd.co, cols, dyt, gf, j0, jw);
+                let gb = ScratchArena::grad_stripe(&mut arena.grad_b, dd.co, j0, jw);
                 for px in 0..patches {
                     let row = &dyt[px * dd.co + j0..px * dd.co + j0 + jw];
                     for (acc, &v) in gb.iter_mut().zip(row.iter()) {

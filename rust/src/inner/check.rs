@@ -1,0 +1,602 @@
+//! Schedule-soundness checker for the inner-layer tile plans.
+//!
+//! The paper's §4 task parallelism is safe because every task writes a
+//! provably disjoint region of the shared output ("different tasks can
+//! access different convolution areas simultaneously … without data
+//! dependence"). The parity proptests catch wrong *values*, but a latent
+//! data race can produce right answers; this module makes the disjointness
+//! argument itself a checked artifact:
+//!
+//! * **Plan time (always compiled, zero runtime cost on hot paths):** every
+//!   stage DAG lowers to a set of [`Claim`]s — `(buffer, access, span)` per
+//!   task — and [`verify`] asserts that any two overlapping claims are
+//!   either both reads or ordered by declared DAG dependencies. The
+//!   `tests/plan_sweep.rs` suite runs this over the full planner output
+//!   space, so the planner cannot emit a racy schedule unnoticed.
+//! * **Runtime (behind the `chk` cargo feature):** [`stage_guard`] verifies
+//!   the plan and indexes its claims; [`DisjointBuf`] accessors registered
+//!   with the guard cross-check every *actual* touched interval against the
+//!   executing task's declared claims and panic on undeclared access. The
+//!   scheduler tags the executing task via [`scoped_task`].
+//!
+//! Spans are in **f32 elements** of the owning buffer (multiply by 4 for
+//! bytes). Buffers that are only ever read during a stage (inputs, packed
+//! filters) carry no claims — a race needs at least one writer.
+//!
+//! [`DisjointBuf`]: super::conv_tasks::DisjointBuf
+
+use std::fmt;
+
+use super::dag::{TaskDag, TaskId};
+
+/// Kind of access a task performs on a buffer window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Read,
+    Write,
+}
+
+/// Logical identity of a stage-shared buffer. One stage call never shares
+/// two distinct buffers under the same id, so `(Buf, span)` identifies a
+/// memory region unambiguously within a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Buf {
+    /// The stage's primary output (conv/dense `out`, backward `dx`, reduce
+    /// target, …).
+    Out,
+    /// Secondary output when a stage has two (e.g. softmax probabilities
+    /// next to the loss gradient).
+    Out2,
+    /// The upstream-gradient buffer masked in place by dense backward.
+    Dy,
+    /// The shared im2col lowering scratch of column-split conv stages.
+    Lower,
+    /// Per-task scalar result slots (loss partials).
+    Slots,
+    /// Per-worker arena filter-gradient partials (`ScratchArena::grad_f`).
+    ArenaGradF,
+    /// Per-worker arena bias-gradient partials (`ScratchArena::grad_b`).
+    ArenaGradB,
+}
+
+impl Buf {
+    /// Per-worker buffers are serialized by the executing worker (only
+    /// worker `i` runs tasks pinned to `i`, one at a time) and are *meant*
+    /// to be accumulated into by many tasks — overlap across tasks is the
+    /// design, so they are exempt from pairwise disjointness. Their claims
+    /// still feed the runtime undeclared-access check.
+    pub fn per_worker(self) -> bool {
+        matches!(self, Buf::ArenaGradF | Buf::ArenaGradB)
+    }
+}
+
+/// A (possibly strided) set of elements: `rows` windows of `width` elements
+/// spaced `stride` apart, starting at `start`. `rows == 1` is a plain
+/// interval; the strided form describes a 2D tile's column window inside a
+/// row-major matrix (row stride = the matrix's full width).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    start: usize,
+    rows: usize,
+    stride: usize,
+    width: usize,
+}
+
+impl Span {
+    /// Contiguous `[start, start+len)`.
+    pub fn interval(start: usize, len: usize) -> Self {
+        assert!(len >= 1, "empty span");
+        Span { start, rows: 1, stride: len, width: len }
+    }
+
+    /// `rows` windows of `width` elements, `stride` apart. Windows must not
+    /// self-overlap (`width <= stride`); full-width windows collapse to one
+    /// contiguous interval.
+    pub fn strided(start: usize, rows: usize, stride: usize, width: usize) -> Self {
+        assert!(rows >= 1 && width >= 1, "empty span");
+        if rows == 1 {
+            return Self::interval(start, width);
+        }
+        assert!(width <= stride, "span rows overlap each other");
+        if width == stride {
+            return Self::interval(start, rows * stride);
+        }
+        Span { start, rows, stride, width }
+    }
+
+    /// First element.
+    pub fn lo(&self) -> usize {
+        self.start
+    }
+
+    /// One past the last element (bounding interval, gaps included).
+    pub fn hi(&self) -> usize {
+        self.start + (self.rows - 1) * self.stride + self.width
+    }
+
+    fn contiguous(&self) -> bool {
+        self.rows == 1
+    }
+
+    /// Is the contiguous interval `[lo, hi)` fully contained in this span?
+    /// Runtime accesses are always within a single claim row (a tile touches
+    /// its column window one matrix row at a time), so single-row
+    /// containment is sufficient.
+    pub fn covers_interval(&self, lo: usize, hi: usize) -> bool {
+        if hi <= lo {
+            return true;
+        }
+        if lo < self.start || hi > self.hi() {
+            return false;
+        }
+        if self.contiguous() {
+            return true;
+        }
+        let r = (lo - self.start) / self.stride;
+        let s = self.start + r * self.stride;
+        lo >= s && hi <= s + self.width
+    }
+
+    /// Does this span share at least one element with the interval
+    /// `[lo, hi)`?
+    fn hits_interval(&self, lo: usize, hi: usize) -> bool {
+        if hi <= lo || lo >= self.hi() || hi <= self.start {
+            return false;
+        }
+        if self.contiguous() {
+            return true;
+        }
+        // An interval at least one period long cannot fit in a gap
+        // (gaps are `stride - width < stride` elements).
+        if hi - lo >= self.stride {
+            return true;
+        }
+        // Shorter interval: it can only touch the row it starts in or the
+        // next one.
+        let r0 = lo.saturating_sub(self.start) / self.stride;
+        for r in [r0, r0 + 1] {
+            if r >= self.rows {
+                continue;
+            }
+            let s = self.start + r * self.stride;
+            if s < hi && lo < s + self.width {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Exact element-set intersection test.
+    pub fn intersects(&self, other: &Span) -> bool {
+        if self.lo() >= other.hi() || other.lo() >= self.hi() {
+            return false;
+        }
+        if self.contiguous() {
+            return other.hits_interval(self.lo(), self.hi());
+        }
+        if other.contiguous() {
+            return self.hits_interval(other.lo(), other.hi());
+        }
+        // Both strided: walk the rows of the span with fewer of them.
+        let (few, many) = if self.rows <= other.rows { (self, other) } else { (other, self) };
+        for r in 0..few.rows {
+            let s = few.start + r * few.stride;
+            if many.hits_interval(s, s + few.width) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// One task's declared access to one buffer region.
+#[derive(Debug, Clone, Copy)]
+pub struct Claim {
+    pub task: TaskId,
+    pub buf: Buf,
+    pub access: Access,
+    pub span: Span,
+}
+
+impl Claim {
+    pub fn read(task: TaskId, buf: Buf, span: Span) -> Self {
+        Claim { task, buf, access: Access::Read, span }
+    }
+
+    pub fn write(task: TaskId, buf: Buf, span: Span) -> Self {
+        Claim { task, buf, access: Access::Write, span }
+    }
+}
+
+/// A pair of claims [`verify`] proved can race: they overlap, at least one
+/// writes, and no dependency chain orders the two tasks.
+#[derive(Debug)]
+pub struct Violation {
+    pub buf: Buf,
+    pub kind: &'static str,
+    pub task_a: TaskId,
+    pub label_a: String,
+    pub span_a: Span,
+    pub task_b: TaskId,
+    pub label_b: String,
+    pub span_b: Span,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} race on {:?}: task {} ({}) {:?} vs task {} ({}) {:?} with no ordering dependency",
+            self.kind,
+            self.buf,
+            self.task_a,
+            self.label_a,
+            self.span_a,
+            self.task_b,
+            self.label_b,
+            self.span_b,
+        )
+    }
+}
+
+/// Prove the claim set race-free under the DAG's dependency order: any two
+/// claims on the same (non-per-worker) buffer whose spans intersect must be
+/// both reads, belong to the same task, or belong to tasks ordered by a
+/// dependency path. This subsumes the per-level check — two tasks on the
+/// same DAG level are never ordered, and *unordered* tasks on different
+/// levels are checked too.
+pub fn verify<P>(dag: &TaskDag<P>, claims: &[Claim]) -> Result<(), Box<Violation>> {
+    let n = dag.len();
+    let words = (n + 63) / 64;
+    // reach[id] ⊇ all transitive dependencies of `id`, as a bitset. Built in
+    // one pass: ids are inserted in topological order (deps < id), so every
+    // dependency's row is final when its dependent's row is assembled.
+    let mut reach = vec![0u64; n * words];
+    for node in dag.nodes() {
+        if node.deps.is_empty() {
+            continue;
+        }
+        let (done, rest) = reach.split_at_mut(node.id * words);
+        let dst = &mut rest[..words];
+        for &d in &node.deps {
+            let src = &done[d * words..(d + 1) * words];
+            for (dw, sw) in dst.iter_mut().zip(src) {
+                *dw |= *sw;
+            }
+            dst[d / 64] |= 1u64 << (d % 64);
+        }
+    }
+    let ordered = |a: TaskId, b: TaskId| {
+        (reach[a * words + b / 64] >> (b % 64)) & 1 == 1
+            || (reach[b * words + a / 64] >> (a % 64)) & 1 == 1
+    };
+
+    // Group claim indices by buffer, then sweep each group sorted by span
+    // start: a claim only needs checking against later-starting claims that
+    // begin before its bounding interval ends.
+    let mut by_buf: Vec<(Buf, Vec<usize>)> = Vec::new();
+    for (i, c) in claims.iter().enumerate() {
+        assert!(c.task < n, "claim references task {} outside the dag", c.task);
+        if c.buf.per_worker() {
+            continue;
+        }
+        match by_buf.iter_mut().find(|(b, _)| *b == c.buf) {
+            Some((_, v)) => v.push(i),
+            None => by_buf.push((c.buf, vec![i])),
+        }
+    }
+    for (buf, mut idx) in by_buf {
+        idx.sort_by_key(|&i| claims[i].span.lo());
+        for (pos, &i) in idx.iter().enumerate() {
+            let ci = &claims[i];
+            let hi_i = ci.span.hi();
+            for &j in &idx[pos + 1..] {
+                let cj = &claims[j];
+                if cj.span.lo() >= hi_i {
+                    break;
+                }
+                if ci.task == cj.task
+                    || (ci.access == Access::Read && cj.access == Access::Read)
+                    || !ci.span.intersects(&cj.span)
+                    || ordered(ci.task, cj.task)
+                {
+                    continue;
+                }
+                let kind = if ci.access == Access::Write && cj.access == Access::Write {
+                    "write-write"
+                } else {
+                    "read-write"
+                };
+                return Err(Box::new(Violation {
+                    buf,
+                    kind,
+                    task_a: ci.task,
+                    label_a: dag.node(ci.task).label.clone(),
+                    span_a: ci.span,
+                    task_b: cj.task,
+                    label_b: dag.node(cj.task).label.clone(),
+                    span_b: cj.span,
+                }));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Largest element index + 1 any claim on `buf` can touch — lets sweep
+/// tests assert a plan stays inside the buffer it will be given.
+pub fn max_extent(claims: &[Claim], buf: Buf) -> usize {
+    claims.iter().filter(|c| c.buf == buf).map(|c| c.span.hi()).max().unwrap_or(0)
+}
+
+#[cfg(feature = "chk")]
+mod runtime {
+    use super::{Access, Buf, Claim, Span, TaskDag, TaskId};
+    use std::cell::Cell;
+    use std::collections::HashMap;
+
+    thread_local! {
+        static CURRENT_TASK: Cell<Option<TaskId>> = const { Cell::new(None) };
+    }
+
+    /// Run `f` with the executing task id visible to claim checks on this
+    /// thread. The previous id is restored even if `f` panics, so a
+    /// panicking task cannot poison attribution for later dispatches.
+    pub fn scoped_task<R>(task: TaskId, f: impl FnOnce() -> R) -> R {
+        struct Restore(Option<TaskId>);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                CURRENT_TASK.with(|c| c.set(self.0));
+            }
+        }
+        let prev = CURRENT_TASK.with(|c| c.replace(Some(task)));
+        let _restore = Restore(prev);
+        f()
+    }
+
+    /// Task id of the innermost [`scoped_task`] on this thread, if any.
+    pub fn current_task() -> Option<TaskId> {
+        CURRENT_TASK.with(|c| c.get())
+    }
+
+    #[derive(Default)]
+    struct TaskClaims {
+        writes: Vec<Span>,
+        reads: Vec<Span>,
+    }
+
+    /// A verified stage plan's claims, indexed per `(task, buffer)` for the
+    /// runtime cross-check. Immutable after construction and freshly built
+    /// per stage call, so a mid-stage panic leaves nothing to un-poison.
+    pub struct ClaimSet {
+        by_task: HashMap<(TaskId, Buf), TaskClaims>,
+        labels: Vec<String>,
+    }
+
+    impl ClaimSet {
+        pub fn index<P>(dag: &TaskDag<P>, claims: &[Claim]) -> Self {
+            let mut by_task: HashMap<(TaskId, Buf), TaskClaims> = HashMap::new();
+            for c in claims {
+                let e = by_task.entry((c.task, c.buf)).or_default();
+                match c.access {
+                    Access::Write => e.writes.push(c.span),
+                    Access::Read => e.reads.push(c.span),
+                }
+            }
+            let labels = dag.nodes().iter().map(|n| n.label.clone()).collect();
+            ClaimSet { by_task, labels }
+        }
+
+        /// Panic unless the currently executing task declared the access.
+        /// A write claim also licenses reads (tasks read back what they
+        /// wrote); accesses outside any task scope (the dispatching thread
+        /// preparing buffers) are not checked.
+        pub fn check_access(&self, buf: Buf, access: Access, lo: usize, hi: usize) {
+            if hi <= lo {
+                return;
+            }
+            let Some(task) = current_task() else { return };
+            let covered = |spans: &[Span]| spans.iter().any(|s| s.covers_interval(lo, hi));
+            let ok = match (self.by_task.get(&(task, buf)), access) {
+                (Some(tc), Access::Write) => covered(&tc.writes),
+                (Some(tc), Access::Read) => covered(&tc.reads) || covered(&tc.writes),
+                (None, _) => false,
+            };
+            if !ok {
+                let label = self.labels.get(task).map(|s| s.as_str()).unwrap_or("?");
+                panic!(
+                    "chk: task {task} ({label}) touched undeclared {access:?} window \
+                     [{lo}, {hi}) of {buf:?}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(feature = "chk")]
+pub use runtime::{current_task, scoped_task, ClaimSet};
+
+/// With `chk` off, [`scoped_task`] is an inlined identity — the scheduler
+/// seam costs nothing in default builds.
+#[cfg(not(feature = "chk"))]
+#[inline(always)]
+pub fn scoped_task<R>(_task: TaskId, f: impl FnOnce() -> R) -> R {
+    f()
+}
+
+/// Handle a stage attaches to its [`DisjointBuf`]s. With `chk` on it is the
+/// indexed, verified claim set; with `chk` off it is a zero-sized token and
+/// the whole claim machinery compiles away.
+///
+/// [`DisjointBuf`]: super::conv_tasks::DisjointBuf
+#[cfg(feature = "chk")]
+pub type StageGuard = std::sync::Arc<ClaimSet>;
+
+#[cfg(not(feature = "chk"))]
+#[derive(Clone)]
+pub struct StageGuard(());
+
+/// Verify a stage plan and produce its runtime guard. With `chk` on, the
+/// claims closure runs, [`verify`] panics on any violation, and the indexed
+/// claims are returned for accessor cross-checks; with `chk` off the
+/// closure is never called and nothing is allocated.
+pub fn stage_guard<P>(dag: &TaskDag<P>, claims: impl FnOnce() -> Vec<Claim>) -> StageGuard {
+    #[cfg(feature = "chk")]
+    {
+        let claims = claims();
+        if let Err(v) = verify(dag, &claims) {
+            panic!("chk: unsound stage plan: {v}");
+        }
+        std::sync::Arc::new(ClaimSet::index(dag, &claims))
+    }
+    #[cfg(not(feature = "chk"))]
+    {
+        let _ = (dag, claims);
+        StageGuard(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_interval_basics() {
+        let s = Span::interval(4, 6); // [4, 10)
+        assert_eq!(s.lo(), 4);
+        assert_eq!(s.hi(), 10);
+        assert!(s.covers_interval(4, 10));
+        assert!(s.covers_interval(5, 7));
+        assert!(!s.covers_interval(3, 5));
+        assert!(!s.covers_interval(8, 11));
+        assert!(s.intersects(&Span::interval(9, 1)));
+        assert!(!s.intersects(&Span::interval(10, 3)));
+        assert!(!s.intersects(&Span::interval(0, 4)));
+    }
+
+    #[test]
+    fn span_strided_geometry() {
+        // Rows {0,1}, columns [2,5) of a 3×8 row-major matrix.
+        let a = Span::strided(2, 2, 8, 3); // {2,3,4, 10,11,12}
+        assert_eq!(a.lo(), 2);
+        assert_eq!(a.hi(), 13);
+        // Row-window containment.
+        assert!(a.covers_interval(2, 5));
+        assert!(a.covers_interval(10, 13));
+        assert!(a.covers_interval(11, 12));
+        assert!(!a.covers_interval(4, 6)); // crosses a row boundary
+        assert!(!a.covers_interval(5, 6)); // gap element
+        // Disjoint column windows of the same rows never intersect.
+        let b = Span::strided(5, 2, 8, 3); // {5,6,7, 13,14,15}
+        assert!(!a.intersects(&b));
+        assert!(!b.intersects(&a));
+        // Same columns, overlapping rows do.
+        let c = Span::strided(10, 2, 8, 3); // {10..13, 18..21}
+        assert!(a.intersects(&c));
+        // Interval through a gap only: {5,6} misses a.
+        assert!(!a.intersects(&Span::interval(5, 2)));
+        // Interval of a full period always hits.
+        assert!(a.intersects(&Span::interval(5, 8)));
+        // Full-width strided collapses to contiguous.
+        let full = Span::strided(0, 3, 8, 8);
+        assert_eq!(full, Span::interval(0, 24));
+    }
+
+    #[test]
+    fn verify_rejects_unordered_overlapping_writes() {
+        let mut dag: TaskDag<()> = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], ());
+        let b = dag.add("b", 1.0, &[], ());
+        let claims = vec![
+            Claim::write(a, Buf::Out, Span::interval(0, 8)),
+            Claim::write(b, Buf::Out, Span::interval(4, 8)),
+        ];
+        let err = verify(&dag, &claims).unwrap_err();
+        assert_eq!(err.kind, "write-write");
+        assert_eq!(err.buf, Buf::Out);
+    }
+
+    #[test]
+    fn verify_accepts_dependency_ordered_overlap() {
+        let mut dag: TaskDag<()> = TaskDag::new();
+        let a = dag.add("lower", 1.0, &[], ());
+        let b = dag.add("tile", 1.0, &[a], ());
+        let claims = vec![
+            Claim::write(a, Buf::Lower, Span::interval(0, 16)),
+            Claim::read(b, Buf::Lower, Span::interval(0, 16)),
+        ];
+        verify(&dag, &claims).unwrap();
+        // Same spans without the edge: read-write race.
+        let mut flat: TaskDag<()> = TaskDag::new();
+        let a2 = flat.add("lower", 1.0, &[], ());
+        let b2 = flat.add("tile", 1.0, &[], ());
+        let claims2 = vec![
+            Claim::write(a2, Buf::Lower, Span::interval(0, 16)),
+            Claim::read(b2, Buf::Lower, Span::interval(0, 16)),
+        ];
+        assert_eq!(verify(&flat, &claims2).unwrap_err().kind, "read-write");
+    }
+
+    #[test]
+    fn verify_ordering_is_transitive() {
+        // a → b → c; a and c overlap, with no direct edge.
+        let mut dag: TaskDag<()> = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], ());
+        let b = dag.add("b", 1.0, &[a], ());
+        let c = dag.add("c", 1.0, &[b], ());
+        let claims = vec![
+            Claim::write(a, Buf::Out, Span::interval(0, 8)),
+            Claim::write(c, Buf::Out, Span::interval(0, 8)),
+        ];
+        verify(&dag, &claims).unwrap();
+    }
+
+    #[test]
+    fn verify_ignores_read_read_and_per_worker_overlap() {
+        let mut dag: TaskDag<()> = TaskDag::new();
+        let a = dag.add("a", 1.0, &[], ());
+        let b = dag.add("b", 1.0, &[], ());
+        let claims = vec![
+            Claim::read(a, Buf::Dy, Span::interval(0, 8)),
+            Claim::read(b, Buf::Dy, Span::interval(0, 8)),
+            // Arena partials intentionally overlap across tasks.
+            Claim::write(a, Buf::ArenaGradF, Span::interval(0, 64)),
+            Claim::write(b, Buf::ArenaGradF, Span::interval(0, 64)),
+        ];
+        verify(&dag, &claims).unwrap();
+    }
+
+    #[test]
+    fn verify_accepts_disjoint_2d_tiling() {
+        // Four tiles of a 4×16 matrix: 2 row tiles × 2 column windows.
+        let mut dag: TaskDag<()> = TaskDag::new();
+        let mut claims = Vec::new();
+        for ti in 0..2 {
+            for tj in 0..2 {
+                let id = dag.add(format!("t{ti}{tj}"), 1.0, &[], ());
+                claims.push(Claim::write(
+                    id,
+                    Buf::Out,
+                    Span::strided(ti * 2 * 16 + tj * 8, 2, 16, 8),
+                ));
+            }
+        }
+        verify(&dag, &claims).unwrap();
+        assert_eq!(max_extent(&claims, Buf::Out), 4 * 16);
+        assert_eq!(max_extent(&claims, Buf::Lower), 0);
+    }
+
+    #[test]
+    fn ragged_final_panel_tiles_stay_disjoint() {
+        // n = 19 columns split as [0,8), [8,16), [16,19) across 3 tasks,
+        // 2 rows each — the Table-2 ragged-panel shape in miniature.
+        let mut dag: TaskDag<()> = TaskDag::new();
+        let mut claims = Vec::new();
+        for (j0, jw) in [(0usize, 8usize), (8, 8), (16, 3)] {
+            let id = dag.add(format!("p{j0}"), 1.0, &[], ());
+            claims.push(Claim::write(id, Buf::Out, Span::strided(j0, 2, 19, jw)));
+        }
+        verify(&dag, &claims).unwrap();
+        assert_eq!(max_extent(&claims, Buf::Out), 2 * 19);
+    }
+}

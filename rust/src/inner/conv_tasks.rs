@@ -25,6 +25,7 @@
 use crate::nn::ops::{self, ConvDims};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
+use super::check;
 use super::dag::TaskDag;
 use super::scheduler::{execute_dag, panel_count, plan_tile_grid, ScheduleStats, TileGrid};
 
@@ -33,34 +34,95 @@ use super::scheduler::{execute_dag, panel_count, plan_tile_grid, ScheduleStats, 
 /// Safety contract: every (offset, len) window handed out via `slice_mut`
 /// must be disjoint across concurrently running tasks. The conv
 /// decomposition guarantees this structurally: task (n, y) owns exactly
-/// rows `[y, y+rows)` of image `n`.
+/// rows `[y, y+rows)` of image `n` — and every stage plan's region map is
+/// proved disjoint by [`check::verify`] (statically in `tests/plan_sweep.rs`
+/// and at stage start under the `chk` feature, where accessors additionally
+/// cross-check each touched window against the task's declared claims).
 pub struct DisjointBuf {
     ptr: *mut f32,
     len: usize,
+    /// Logical buffer id + stage claim guard, set by [`DisjointBuf::checked`]
+    /// — accessors cross-check every window against the executing task's
+    /// verified claims.
+    #[cfg(feature = "chk")]
+    claims: Option<(check::Buf, check::StageGuard)>,
 }
 
+// SAFETY: `DisjointBuf` is a bounds-tagged raw pointer into a buffer the
+// dispatching stage exclusively borrows for the lifetime of its task DAG
+// (the scheduler's completion barrier enforces the lifetime). Tasks on
+// other threads may move the handle (`Send`) and access it concurrently
+// (`Sync`) because every access goes through windows that are pairwise
+// disjoint across unordered tasks — the invariant `check::verify` proves
+// for each stage plan and `chk` builds re-check per actual access.
 unsafe impl Send for DisjointBuf {}
+// SAFETY: see the `Send` justification above — shared `&DisjointBuf` use
+// is sound only through disjoint (or dependency-ordered) windows, which is
+// exactly the checked stage-plan invariant.
 unsafe impl Sync for DisjointBuf {}
 
 impl DisjointBuf {
     pub fn new(buf: &mut [f32]) -> Self {
-        Self { ptr: buf.as_mut_ptr(), len: buf.len() }
+        Self {
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+            #[cfg(feature = "chk")]
+            claims: None,
+        }
     }
+
+    /// Register this buffer with a stage's claim guard under the logical id
+    /// `buf`: in `chk` builds every subsequent `slice_mut`/`slice_ref`
+    /// window is checked against the executing task's declared claims. A
+    /// no-op token pass-through in default builds.
+    #[must_use]
+    pub fn checked(self, buf: check::Buf, guard: &check::StageGuard) -> Self {
+        #[cfg(feature = "chk")]
+        {
+            let mut this = self;
+            this.claims = Some((buf, guard.clone()));
+            this
+        }
+        #[cfg(not(feature = "chk"))]
+        {
+            let _ = (buf, guard);
+            self
+        }
+    }
+
+    #[cfg(feature = "chk")]
+    fn check_claim(&self, access: check::Access, lo: usize, hi: usize) {
+        if let Some((buf, guard)) = &self.claims {
+            guard.check_access(*buf, access, lo, hi);
+        }
+    }
+
+    #[cfg(not(feature = "chk"))]
+    #[inline(always)]
+    fn check_claim(&self, _access: check::Access, _lo: usize, _hi: usize) {}
 
     /// # Safety
     /// Callers must ensure `[offset, offset+len)` windows of concurrent
     /// calls do not overlap.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, offset: usize, len: usize) -> &mut [f32] {
-        assert!(offset + len <= self.len, "disjoint window out of bounds");
-        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+        let end = offset.checked_add(len).expect("disjoint window overflows usize");
+        assert!(end <= self.len, "disjoint window out of bounds");
+        self.check_claim(check::Access::Write, offset, end);
+        // SAFETY: bounds asserted above; the caller contract (checked
+        // against the stage plan in `chk` builds) keeps concurrent windows
+        // disjoint, so no other live reference aliases these elements.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(offset), len) }
     }
 
     /// Raw pointer at `offset` — the output handle for the panel-windowed
     /// GEMM entry points ([`ops::gemm_packed_acc_panels_raw`]), whose 2D
     /// tiles write strided column windows that no `&mut` slice could cover
     /// without aliasing a neighbour tile's elements. Creating the pointer is
-    /// safe; dereferences inherit the disjoint-window contract.
+    /// safe; dereferences inherit the disjoint-window contract. The `chk`
+    /// cross-check does not see these dereferences — each GEMM window
+    /// through `ptr_at` is claimed alongside (and element-equal to) the
+    /// task's checked `slice_mut` seeding sweep or an explicit Read claim.
     pub fn ptr_at(&self, offset: usize) -> *mut f32 {
         assert!(offset <= self.len, "offset out of bounds");
         // SAFETY: offset is within (or one past the end of) the buffer.
@@ -75,8 +137,13 @@ impl DisjointBuf {
     /// No concurrent task may write any element of the window while the
     /// returned borrow lives.
     pub unsafe fn slice_ref(&self, offset: usize, len: usize) -> &[f32] {
-        assert!(offset + len <= self.len, "disjoint window out of bounds");
-        std::slice::from_raw_parts(self.ptr.add(offset), len)
+        let end = offset.checked_add(len).expect("disjoint window overflows usize");
+        assert!(end <= self.len, "disjoint window out of bounds");
+        self.check_claim(check::Access::Read, offset, end);
+        // SAFETY: bounds asserted above; the caller contract (checked
+        // against the stage plan in `chk` builds) rules out concurrent
+        // writers to this window.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(offset), len) }
     }
 }
 
@@ -207,9 +274,108 @@ pub fn conv2d_parallel_packed(
 /// it and contract disjoint panel windows of the shared patches. Before
 /// this, every panel tile of a row range re-ran the same im2col — work the
 /// autotuner would mis-attribute to grid shape.
-enum ConvLowerStage {
+#[derive(Debug, Clone, Copy)]
+pub enum ConvLowerStage {
     Lower { off: usize, len: usize, n: usize, y0: usize, rows: usize },
     Tile { t: ConvTile, off: usize },
+}
+
+/// Build the column-split conv forward DAG: one `Lower` task per
+/// (image, row-range) writing segment `[off, off+len)` of the shared
+/// lowering scratch, plus that row range's panel `Tile` tasks depending on
+/// it. Returns the DAG and the total lowering-scratch length. Extracted
+/// from [`conv2d_parallel_packed_ws`] so the plan-sweep tests can verify
+/// every planner-emitted schedule without executing it.
+pub fn conv_lower_dag(d: &ConvDims, grid: &TileGrid) -> (TaskDag<ConvLowerStage>, usize) {
+    let kkc = d.k * d.k * d.c;
+    let panels = panel_count(d.co);
+    let cost_per_el = (d.w * d.k * d.k * d.c) as f64;
+    let mut dag: TaskDag<ConvLowerStage> = TaskDag::new();
+    let mut total = 0usize;
+    for n in 0..d.n {
+        let mut y = 0;
+        while y < d.h {
+            let rows = grid.rows_per_tile.min(d.h - y);
+            let len = rows * d.w * kkc;
+            let off = total;
+            total += len;
+            let lid = dag.add(
+                format!("conv_lower[n{n},y{y}+{rows}]"),
+                len as f64,
+                &[],
+                ConvLowerStage::Lower { off, len, n, y0: y, rows },
+            );
+            let deps = [lid];
+            let mut p = 0;
+            while p < panels {
+                let np = grid.panels_per_tile.min(panels - p);
+                let (_, jw) = ops::panel_window(d.co, p, np);
+                dag.add(
+                    format!("conv[n{n},y{y}+{rows},p{p}]"),
+                    cost_per_el * (rows * jw) as f64,
+                    &deps,
+                    ConvLowerStage::Tile { t: ConvTile { n, y0: y, rows, p0: p, np }, off },
+                );
+                p += np;
+            }
+            y += rows;
+        }
+    }
+    (dag, total)
+}
+
+/// Access claims of the row-only conv forward DAG: each tile writes the
+/// strided (patch-row × column-window) block of the output it owns. The
+/// input/filter/bias are stage-wide read-only and carry no claims.
+pub fn conv_fwd_claims(d: &ConvDims, dag: &TaskDag<ConvTile>) -> Vec<check::Claim> {
+    let mut claims = Vec::with_capacity(dag.len());
+    for node in dag.nodes() {
+        let t = &node.payload;
+        let (j0, jw) = ops::panel_window(d.co, t.p0, t.np);
+        let base = (t.n * d.h + t.y0) * d.w * d.co;
+        claims.push(check::Claim::write(
+            node.id,
+            check::Buf::Out,
+            check::Span::strided(base + j0, t.rows * d.w, d.co, jw),
+        ));
+    }
+    claims
+}
+
+/// Access claims of the column-split conv forward DAG ([`conv_lower_dag`]):
+/// `Lower` tasks write disjoint segments of the shared lowering scratch;
+/// `Tile` tasks read their row range's segment (ordered behind the Lower
+/// dependency) and write their strided output block.
+pub fn conv_lower_claims(d: &ConvDims, dag: &TaskDag<ConvLowerStage>) -> Vec<check::Claim> {
+    let kkc = d.k * d.k * d.c;
+    let mut claims = Vec::with_capacity(2 * dag.len());
+    for node in dag.nodes() {
+        match node.payload {
+            ConvLowerStage::Lower { off, len, .. } => {
+                claims.push(check::Claim::write(
+                    node.id,
+                    check::Buf::Lower,
+                    check::Span::interval(off, len),
+                ));
+            }
+            ConvLowerStage::Tile { t, off } => {
+                let (j0, jw) = ops::panel_window(d.co, t.p0, t.np);
+                let patches = t.rows * d.w;
+                let base = (t.n * d.h + t.y0) * d.w * d.co;
+                claims.push(check::Claim::read(
+                    node.id,
+                    check::Buf::Lower,
+                    check::Span::interval(off, patches * kkc),
+                ));
+                claims.push(check::Claim::write(
+                    node.id,
+                    check::Buf::Out,
+                    check::Span::strided(base + j0, patches, d.co, jw),
+                ));
+            }
+        }
+    }
+    claims
 }
 
 /// [`conv2d_parallel_packed`] with a caller-owned lowering buffer. Row-only
@@ -238,7 +404,8 @@ pub fn conv2d_parallel_packed_ws(
     let kkc = dd.k * dd.k * dd.c;
     if grid.panel_tiles <= 1 {
         let dag = conv_tile_dag(d, &grid);
-        let shared = DisjointBuf::new(out);
+        let guard = check::stage_guard(&dag, || conv_fwd_claims(d, &dag));
+        let shared = DisjointBuf::new(out).checked(check::Buf::Out, &guard);
         let arenas = pool.arenas();
         return execute_dag(pool, dag, move |worker: usize, t: &ConvTile| {
             let (j0, jw) = ops::panel_window(dd.co, t.p0, t.np);
@@ -273,42 +440,11 @@ pub fn conv2d_parallel_packed_ws(
     }
     // Column-split grid: lower once per (image, row-range), contract per
     // panel window.
-    let panels = panel_count(dd.co);
-    let cost_per_el = (dd.w * dd.k * dd.k * dd.c) as f64;
-    let mut dag: TaskDag<ConvLowerStage> = TaskDag::new();
-    let mut total = 0usize;
-    for n in 0..dd.n {
-        let mut y = 0;
-        while y < dd.h {
-            let rows = grid.rows_per_tile.min(dd.h - y);
-            let len = rows * dd.w * kkc;
-            let off = total;
-            total += len;
-            let lid = dag.add(
-                format!("conv_lower[n{n},y{y}+{rows}]"),
-                len as f64,
-                &[],
-                ConvLowerStage::Lower { off, len, n, y0: y, rows },
-            );
-            let deps = [lid];
-            let mut p = 0;
-            while p < panels {
-                let np = grid.panels_per_tile.min(panels - p);
-                let (_, jw) = ops::panel_window(dd.co, p, np);
-                dag.add(
-                    format!("conv[n{n},y{y}+{rows},p{p}]"),
-                    cost_per_el * (rows * jw) as f64,
-                    &deps,
-                    ConvLowerStage::Tile { t: ConvTile { n, y0: y, rows, p0: p, np }, off },
-                );
-                p += np;
-            }
-            y += rows;
-        }
-    }
+    let (dag, total) = conv_lower_dag(d, &grid);
+    let guard = check::stage_guard(&dag, || conv_lower_claims(d, &dag));
     let lslice = ScratchArena::grow(lower, total);
-    let lbuf = DisjointBuf::new(lslice);
-    let shared = DisjointBuf::new(out);
+    let lbuf = DisjointBuf::new(lslice).checked(check::Buf::Lower, &guard);
+    let shared = DisjointBuf::new(out).checked(check::Buf::Out, &guard);
     execute_dag(pool, dag, move |_worker: usize, task: &ConvLowerStage| match *task {
         ConvLowerStage::Lower { off, len, n, y0, rows } => {
             // SAFETY: each Lower task exclusively owns its scratch segment.
@@ -505,9 +641,35 @@ mod tests {
     fn disjoint_buf_bounds_checked() {
         let mut buf = vec![0.0f32; 8];
         let db = DisjointBuf::new(&mut buf);
+        // SAFETY: the window is deliberately out of bounds — the accessor
+        // must panic before any slice is created.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             db.slice_mut(6, 4);
         }));
         assert!(res.is_err());
+        // SAFETY: offset+len overflows usize — must panic, not wrap into a
+        // bogus in-bounds window.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            db.slice_ref(usize::MAX, 2);
+        }));
+        assert!(res.is_err(), "overflowing window wrapped instead of panicking");
+    }
+
+    /// Aliasing-model target (run under Miri in the sanitizers workflow):
+    /// two live disjoint `&mut` windows plus a later shared view must be
+    /// sound and see the written values.
+    #[test]
+    fn disjoint_buf_windows_do_not_alias() {
+        let mut buf = vec![0.0f32; 16];
+        let db = DisjointBuf::new(&mut buf);
+        // SAFETY: [0,8) and [8,16) are disjoint windows.
+        let (a, b) = unsafe { (db.slice_mut(0, 8), db.slice_mut(8, 8)) };
+        a.fill(1.0);
+        b.fill(2.0);
+        // SAFETY: the mutable windows above are no longer used.
+        let r = unsafe { db.slice_ref(0, 16) };
+        assert_eq!(&r[..8], &[1.0; 8]);
+        assert_eq!(&r[8..], &[2.0; 8]);
+        assert_eq!(db.ptr_at(16), db.ptr_at(0).wrapping_add(16));
     }
 }

@@ -28,6 +28,7 @@ use std::sync::Arc;
 use crate::nn::ops::{self, PackedB};
 use crate::util::threadpool::{ScratchArena, ThreadPool};
 
+use super::check;
 use super::conv_tasks::DisjointBuf;
 use super::dag::TaskDag;
 use super::scheduler::{execute_dag, panel_count, ScheduleStats, TileGrid};
@@ -50,7 +51,10 @@ pub struct Tile2 {
     pub np: usize,
 }
 
-fn row_tile_dag(
+/// Level-0 row-tile list over `m` batch rows, `rows_per_task` at a time.
+/// Public so the plan-sweep tests can verify fused-backward schedules
+/// without executing them.
+pub fn row_tile_dag(
     m: usize,
     rows_per_task: usize,
     cost_per_row: f64,
@@ -74,7 +78,14 @@ fn row_tile_dag(
 
 /// Level-0 2D tile list over a `(m, n)` output: row tiles × panel tiles of
 /// `grid`; `cost_per_el` prices one output element for Alg.-4.2 balancing.
-fn tile2_dag(m: usize, n: usize, grid: &TileGrid, cost_per_el: f64, label: &str) -> TaskDag<Tile2> {
+/// Public so the plan-sweep tests can verify forward schedules statically.
+pub fn tile2_dag(
+    m: usize,
+    n: usize,
+    grid: &TileGrid,
+    cost_per_el: f64,
+    label: &str,
+) -> TaskDag<Tile2> {
     let mut dag = TaskDag::new();
     let panels = panel_count(n);
     let mut i = 0;
@@ -104,7 +115,14 @@ struct DisjointSlots<T> {
     len: usize,
 }
 
+// SAFETY: a bounds-tagged raw pointer into a slot array the dispatching
+// stage exclusively borrows until its completion barrier. Handles may move
+// across threads (`Send`; `T: Send` because slot values do) and be shared
+// (`Sync`) because each task writes exactly one distinct index — claimed as
+// `check::Buf::Slots` and proved disjoint by the stage verifier.
 unsafe impl<T: Send> Send for DisjointSlots<T> {}
+// SAFETY: see the `Send` justification above — shared use is sound only
+// through distinct-index writes, which the loss DAG guarantees.
 unsafe impl<T: Send> Sync for DisjointSlots<T> {}
 
 impl<T> DisjointSlots<T> {
@@ -116,7 +134,9 @@ impl<T> DisjointSlots<T> {
     /// Concurrent calls must use distinct `i`.
     unsafe fn set(&self, i: usize, v: T) {
         assert!(i < self.len, "slot out of bounds");
-        *self.ptr.add(i) = v;
+        // SAFETY: bounds asserted above; the caller contract keeps
+        // concurrent writes on distinct slots.
+        unsafe { *self.ptr.add(i) = v };
     }
 }
 
@@ -143,7 +163,8 @@ pub fn dense_fwd_parallel(
     assert_eq!(out.len(), m * n);
     grid.check();
     let dag = tile2_dag(m, n, &grid, (2 * k) as f64, "dense_fwd");
-    let shared = DisjointBuf::new(out);
+    let guard = check::stage_guard(&dag, || dense_fwd_claims(n, &dag));
+    let shared = DisjointBuf::new(out).checked(check::Buf::Out, &guard);
     execute_dag(pool, dag, move |_worker, t: &Tile2| {
         let (j0, jw) = ops::panel_window(n, t.p0, t.np);
         // Bias-seed the tile's column window row by row. SAFETY: tile
@@ -167,8 +188,25 @@ pub fn dense_fwd_parallel(
     })
 }
 
+/// Access claims of the dense-forward DAG: each tile writes its
+/// (row-range × column-window) block of the `(m, n)` output; `x`/weights/
+/// bias are stage-wide read-only and carry no claims.
+pub fn dense_fwd_claims(n: usize, dag: &TaskDag<Tile2>) -> Vec<check::Claim> {
+    let mut claims = Vec::with_capacity(dag.len());
+    for node in dag.nodes() {
+        let t = &node.payload;
+        let (j0, jw) = ops::panel_window(n, t.p0, t.np);
+        claims.push(check::Claim::write(
+            node.id,
+            check::Buf::Out,
+            check::Span::strided(t.i0 * n + j0, t.rows, n, jw),
+        ));
+    }
+    claims
+}
+
 /// One task of the two-phase 2D dense backward.
-enum DenseBwdTile {
+pub enum DenseBwdTile {
     /// Mask its `dy` column window (ReLU) + accumulate the dW/db stripe for
     /// that window into the executing worker's arena.
     Grad(Tile2),
@@ -176,6 +214,132 @@ enum DenseBwdTile {
     /// every [`DenseBwdTile::Grad`] task of its row range (they mask `dy`
     /// in place, and `dx = dy · Wᵀ` contracts over *all* of `n`).
     Dx(Tile2),
+}
+
+/// Build the two-phase 2D dense-backward DAG: per row range, `Grad` tiles
+/// over `dy` column windows (level 0), then `Dx` tiles over transposed-pack
+/// panel windows depending on all of that row range's `Grad` tiles.
+/// Extracted from [`dense_bwd_parallel`] so the plan-sweep tests can verify
+/// every planner-emitted schedule statically.
+pub fn dense_bwd_dag(
+    m: usize,
+    k: usize,
+    n: usize,
+    dy_grid: &TileGrid,
+    dx_grid: &TileGrid,
+) -> TaskDag<DenseBwdTile> {
+    let panels_n = panel_count(n);
+    let panels_k = panel_count(k);
+    let mut dag: TaskDag<DenseBwdTile> = TaskDag::new();
+    let mut grad_ids = Vec::with_capacity(dy_grid.panel_tiles);
+    let mut i = 0;
+    while i < m {
+        let rows = dy_grid.rows_per_tile.min(m - i);
+        grad_ids.clear();
+        let mut p = 0;
+        while p < panels_n {
+            let np = dy_grid.panels_per_tile.min(panels_n - p);
+            let (_, jw) = ops::panel_window(n, p, np);
+            grad_ids.push(dag.add(
+                format!("dense_bwd_grad[i{i},p{p}]"),
+                (2 * k * rows * jw) as f64,
+                &[],
+                DenseBwdTile::Grad(Tile2 { i0: i, rows, p0: p, np }),
+            ));
+            p += np;
+        }
+        let mut q = 0;
+        while q < panels_k {
+            let nq = dx_grid.panels_per_tile.min(panels_k - q);
+            let (_, qw) = ops::panel_window(k, q, nq);
+            dag.add(
+                format!("dense_bwd_dx[i{i},p{q}]"),
+                (2 * n * rows * qw) as f64,
+                &grad_ids,
+                DenseBwdTile::Dx(Tile2 { i0: i, rows, p0: q, np: nq }),
+            );
+            q += nq;
+        }
+        i += rows;
+    }
+    dag
+}
+
+/// Access claims of the two-phase dense-backward DAG ([`dense_bwd_dag`]):
+/// `Grad` tiles mask their `dy` column window in place and accumulate dW/db
+/// column stripes of the executing worker's arena (per-worker, exempt from
+/// pairwise disjointness); `Dx` tiles read their full masked `dy` row range
+/// (ordered behind the `Grad` dependencies) and write their `dx` window
+/// (`Buf::Out`).
+pub fn dense_bwd_claims(k: usize, n: usize, dag: &TaskDag<DenseBwdTile>) -> Vec<check::Claim> {
+    let mut claims = Vec::with_capacity(3 * dag.len());
+    for node in dag.nodes() {
+        match node.payload {
+            DenseBwdTile::Grad(t) => {
+                let (j0, jw) = ops::panel_window(n, t.p0, t.np);
+                claims.push(check::Claim::write(
+                    node.id,
+                    check::Buf::Dy,
+                    check::Span::strided(t.i0 * n + j0, t.rows, n, jw),
+                ));
+                claims.push(check::Claim::write(
+                    node.id,
+                    check::Buf::ArenaGradF,
+                    check::Span::strided(j0, k, n, jw),
+                ));
+                claims.push(check::Claim::write(
+                    node.id,
+                    check::Buf::ArenaGradB,
+                    check::Span::interval(j0, jw),
+                ));
+            }
+            DenseBwdTile::Dx(t) => {
+                let (j0, jw) = ops::panel_window(k, t.p0, t.np);
+                claims.push(check::Claim::read(
+                    node.id,
+                    check::Buf::Dy,
+                    check::Span::interval(t.i0 * n, t.rows * n),
+                ));
+                claims.push(check::Claim::write(
+                    node.id,
+                    check::Buf::Out,
+                    check::Span::strided(t.i0 * k + j0, t.rows, k, jw),
+                ));
+            }
+        }
+    }
+    claims
+}
+
+/// Access claims of the fused row-tile dense backward: each task owns its
+/// full `dy` and `dx` row ranges and accumulates the *whole* dW/db into its
+/// worker's arena.
+pub fn dense_bwd_fused_claims(k: usize, n: usize, dag: &TaskDag<RowTask>) -> Vec<check::Claim> {
+    let mut claims = Vec::with_capacity(4 * dag.len());
+    for node in dag.nodes() {
+        let t = &node.payload;
+        claims.push(check::Claim::write(
+            node.id,
+            check::Buf::Dy,
+            check::Span::interval(t.i0 * n, t.rows * n),
+        ));
+        claims.push(check::Claim::write(
+            node.id,
+            check::Buf::Out,
+            check::Span::interval(t.i0 * k, t.rows * k),
+        ));
+        claims.push(check::Claim::write(
+            node.id,
+            check::Buf::ArenaGradF,
+            check::Span::interval(0, k * n),
+        ));
+        claims.push(check::Claim::write(
+            node.id,
+            check::Buf::ArenaGradB,
+            check::Span::interval(0, n),
+        ));
+    }
+    claims
 }
 
 /// Dense backward as 2D tiles: each tile (optionally) applies the ReLU mask
@@ -225,13 +389,14 @@ pub fn dense_bwd_parallel(
     // Size + zero each worker's gradient accumulators for this layer call.
     zero_arena_grads(pool, k * n, n);
     let arenas = pool.arenas();
-    let dy_buf = DisjointBuf::new(dy);
-    let dx_buf = DisjointBuf::new(dx);
 
     let stats = if dy_grid.panel_tiles == 1 && dx_grid.panel_tiles == 1 {
         // Fused row-tile fast path: one task masks, computes dx and
         // accumulates dW/db for its rows.
         let dag = row_tile_dag(m, dy_grid.rows_per_tile, (4 * k * n) as f64, "dense_bwd");
+        let guard = check::stage_guard(&dag, || dense_bwd_fused_claims(k, n, &dag));
+        let dy_buf = DisjointBuf::new(dy).checked(check::Buf::Dy, &guard);
+        let dx_buf = DisjointBuf::new(dx).checked(check::Buf::Out, &guard);
         execute_dag(pool, dag, move |worker, task: &RowTask| {
             // SAFETY: tile (i0, rows) exclusively owns its dy and dx rows.
             let dyt = unsafe { dy_buf.slice_mut(task.i0 * n, task.rows * n) };
@@ -244,8 +409,9 @@ pub fn dense_bwd_parallel(
             let arena = &mut *arena;
             dxt.fill(0.0);
             ops::gemm_packed_acc(task.rows, dyt, wt, dxt);
-            ops::gemm_tn_acc(task.rows, k, n, xt, dyt, &mut arena.grad_f[..k * n]);
-            let gb = &mut arena.grad_b[..n];
+            let gf = ScratchArena::grad_all(&mut arena.grad_f, k * n);
+            ops::gemm_tn_acc(task.rows, k, n, xt, dyt, gf);
+            let gb = ScratchArena::grad_all(&mut arena.grad_b, n);
             for row in dyt.chunks_exact(n) {
                 for (acc, &v) in gb.iter_mut().zip(row.iter()) {
                     *acc += v;
@@ -255,46 +421,16 @@ pub fn dense_bwd_parallel(
     } else {
         // Two-phase 2D DAG: per row range, Grad tiles (level 0) over dy
         // column windows, then Dx tiles (level 1) over wt panel windows.
-        let panels_n = panel_count(n);
-        let panels_k = panel_count(k);
-        let mut dag: TaskDag<DenseBwdTile> = TaskDag::new();
-        let mut grad_ids = Vec::with_capacity(dy_grid.panel_tiles);
-        let mut i = 0;
-        while i < m {
-            let rows = dy_grid.rows_per_tile.min(m - i);
-            grad_ids.clear();
-            let mut p = 0;
-            while p < panels_n {
-                let np = dy_grid.panels_per_tile.min(panels_n - p);
-                let (_, jw) = ops::panel_window(n, p, np);
-                grad_ids.push(dag.add(
-                    format!("dense_bwd_grad[i{i},p{p}]"),
-                    (2 * k * rows * jw) as f64,
-                    &[],
-                    DenseBwdTile::Grad(Tile2 { i0: i, rows, p0: p, np }),
-                ));
-                p += np;
-            }
-            let mut q = 0;
-            while q < panels_k {
-                let nq = dx_grid.panels_per_tile.min(panels_k - q);
-                let (_, qw) = ops::panel_window(k, q, nq);
-                dag.add(
-                    format!("dense_bwd_dx[i{i},p{q}]"),
-                    (2 * n * rows * qw) as f64,
-                    &grad_ids,
-                    DenseBwdTile::Dx(Tile2 { i0: i, rows, p0: q, np: nq }),
-                );
-                q += nq;
-            }
-            i += rows;
-        }
+        let dag = dense_bwd_dag(m, k, n, &dy_grid, &dx_grid);
+        let guard = check::stage_guard(&dag, || dense_bwd_claims(k, n, &dag));
+        let dy_buf = DisjointBuf::new(dy).checked(check::Buf::Dy, &guard);
+        let dx_buf = DisjointBuf::new(dx).checked(check::Buf::Out, &guard);
         execute_dag(pool, dag, move |worker, task: &DenseBwdTile| match *task {
             DenseBwdTile::Grad(t) => {
                 let (j0, jw) = ops::panel_window(n, t.p0, t.np);
                 let mut arena = arenas[worker].lock().unwrap();
                 let arena = &mut *arena;
-                let gb = &mut arena.grad_b[j0..j0 + jw];
+                let gb = ScratchArena::grad_stripe(&mut arena.grad_b, n, j0, jw);
                 for r in t.i0..t.i0 + t.rows {
                     // SAFETY: this tile exclusively owns the (row ×
                     // column-window) dy elements it masks and reads.
@@ -316,7 +452,7 @@ pub fn dense_bwd_parallel(
                         n,
                         xt,
                         dy_buf.ptr_at(t.i0 * n) as *const f32,
-                        arena.grad_f.as_mut_ptr(),
+                        ScratchArena::grad_window_ptr(&mut arena.grad_f, k, n, j0, jw),
                         j0,
                         jw,
                     );
@@ -421,7 +557,8 @@ pub(crate) fn reduce_arena_grads(pool: &ThreadPool, dw: &mut [f32], db: &mut [f3
         dag.add("grad_reduce", l as f64, &[], (off, l));
         off += l;
     }
-    let out = DisjointBuf::new(dw);
+    let guard = check::stage_guard(&dag, || chunk_claims(&dag));
+    let out = DisjointBuf::new(dw).checked(check::Buf::Out, &guard);
     let parts_ref: &[&[f32]] = &parts;
     execute_dag(pool, dag, move |_, &(off, l)| {
         // SAFETY: chunks tile dw disjointly.
@@ -455,7 +592,16 @@ pub fn mean_pool_fwd_parallel(
     }
     let img_in = h * w * c;
     let img_out = ho * wo * c;
-    let shared = DisjointBuf::new(out);
+    let guard = check::stage_guard(&dag, || {
+        dag.nodes()
+            .iter()
+            .map(|nd| {
+                let span = check::Span::interval(nd.payload * img_out, img_out);
+                check::Claim::write(nd.id, check::Buf::Out, span)
+            })
+            .collect()
+    });
+    let shared = DisjointBuf::new(out).checked(check::Buf::Out, &guard);
     execute_dag(pool, dag, move |_, &i| {
         // SAFETY: image task i exclusively owns its output slice.
         let tile = unsafe { shared.slice_mut(i * img_out, img_out) };
@@ -484,12 +630,32 @@ pub fn mean_pool_bwd_parallel(
     }
     let img_in = h * w * c;
     let img_out = ho * wo * c;
-    let shared = DisjointBuf::new(dx);
+    let guard = check::stage_guard(&dag, || {
+        dag.nodes()
+            .iter()
+            .map(|nd| {
+                let span = check::Span::interval(nd.payload * img_in, img_in);
+                check::Claim::write(nd.id, check::Buf::Out, span)
+            })
+            .collect()
+    });
+    let shared = DisjointBuf::new(dx).checked(check::Buf::Out, &guard);
     execute_dag(pool, dag, move |_, &i| {
         // SAFETY: image task i exclusively owns its dx slice.
         let tile = unsafe { shared.slice_mut(i * img_in, img_in) };
         ops::mean_pool_bwd(1, h, w, c, win, &dy[i * img_out..(i + 1) * img_out], tile);
     })
+}
+
+/// Claims of a `(offset, len)`-chunk DAG: each task writes its own chunk.
+fn chunk_claims(dag: &TaskDag<(usize, usize)>) -> Vec<check::Claim> {
+    dag.nodes()
+        .iter()
+        .map(|nd| {
+            let (off, len) = nd.payload;
+            check::Claim::write(nd.id, check::Buf::Out, check::Span::interval(off, len))
+        })
+        .collect()
 }
 
 /// Standalone ReLU stages for the conv activations (elementwise, chunked
@@ -504,7 +670,8 @@ pub fn relu_fwd_parallel(pool: &ThreadPool, buf: &mut [f32], chunks: usize) -> S
         dag.add("relu_fwd", len as f64, &[], (i, len));
         i += len;
     }
-    let shared = DisjointBuf::new(buf);
+    let guard = check::stage_guard(&dag, || chunk_claims(&dag));
+    let shared = DisjointBuf::new(buf).checked(check::Buf::Out, &guard);
     execute_dag(pool, dag, move |_, &(off, len)| {
         // SAFETY: chunks tile the buffer disjointly.
         ops::relu_fwd(unsafe { shared.slice_mut(off, len) });
@@ -528,7 +695,8 @@ pub fn relu_bwd_parallel(
         dag.add("relu_bwd", len as f64, &[], (i, len));
         i += len;
     }
-    let shared = DisjointBuf::new(dy);
+    let guard = check::stage_guard(&dag, || chunk_claims(&dag));
+    let shared = DisjointBuf::new(dy).checked(check::Buf::Out, &guard);
     execute_dag(pool, dag, move |_, &(off, len)| {
         // SAFETY: chunks tile the buffer disjointly.
         ops::relu_bwd(&out[off..off + len], unsafe { shared.slice_mut(off, len) });
@@ -573,8 +741,19 @@ pub fn loss_parallel(
     }
     parts.clear();
     parts.resize(slots, (0.0, 0));
-    let dl_buf = DisjointBuf::new(dlogits);
-    let p_buf = DisjointBuf::new(probs);
+    let guard = check::stage_guard(&dag, || {
+        let mut cs = Vec::new();
+        for nd in dag.nodes() {
+            let (slot, task) = nd.payload;
+            let rows = check::Span::interval(task.i0 * n, task.rows * n);
+            cs.push(check::Claim::write(nd.id, check::Buf::Out, rows));
+            cs.push(check::Claim::write(nd.id, check::Buf::Out2, rows));
+            cs.push(check::Claim::write(nd.id, check::Buf::Slots, check::Span::interval(slot, 1)));
+        }
+        cs
+    });
+    let dl_buf = DisjointBuf::new(dlogits).checked(check::Buf::Out, &guard);
+    let p_buf = DisjointBuf::new(probs).checked(check::Buf::Out2, &guard);
     let part_slots = DisjointSlots::new(parts);
     let inv_b = 1.0 / m as f32;
     let stats = execute_dag(pool, dag, move |_, &(slot, task)| {

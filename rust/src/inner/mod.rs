@@ -20,6 +20,7 @@
 
 pub mod autotune;
 pub mod bp_tasks;
+pub mod check;
 pub mod conv_tasks;
 pub mod dag;
 pub mod fc_tasks;
@@ -30,13 +31,21 @@ pub use autotune::{
     set_tile_floor_flops, tile_floor_flops, AutoTuner, Calibration, StageKey, StageKind,
     StageTuner,
 };
-pub use bp_tasks::{parallel_train_step, train_step_dag, ParallelStepResult, StageSample};
+pub use bp_tasks::{
+    conv_bwd_claims, conv_bwd_dag, parallel_train_step, train_step_dag, BwdTask,
+    ParallelStepResult, StageSample,
+};
 pub use conv_tasks::{
-    conv2d_parallel, conv2d_parallel_packed, conv2d_parallel_packed_ws, conv_task_dag,
-    conv_tile_dag, ConvTask, ConvTile,
+    conv2d_parallel, conv2d_parallel_packed, conv2d_parallel_packed_ws, conv_fwd_claims,
+    conv_lower_claims, conv_lower_dag, conv_task_dag, conv_tile_dag, ConvLowerStage, ConvTask,
+    ConvTile, DisjointBuf,
 };
 pub use dag::{TaskDag, TaskId, TaskNode};
-pub use fc_tasks::{dense_bwd_parallel, dense_fwd_parallel, loss_parallel, RowTask, Tile2};
+pub use fc_tasks::{
+    dense_bwd_claims, dense_bwd_dag, dense_bwd_fused_claims, dense_bwd_parallel,
+    dense_fwd_claims, dense_fwd_parallel, loss_parallel, row_tile_dag, tile2_dag, DenseBwdTile,
+    RowTask, Tile2,
+};
 pub use priority::{mark_priorities, priority_order};
 pub use scheduler::{
     execute_dag, execute_sequential, panel_count, plan_cols_for_rows, plan_cols_for_rows_with_floor,

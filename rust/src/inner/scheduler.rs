@@ -417,9 +417,12 @@ where
             let start = Instant::now();
             // Catch task panics so the worker thread, the pool's inflight
             // accounting and this DAG's completion barrier all stay intact;
-            // the payload is re-thrown on the dispatching thread below.
+            // the payload is re-thrown on the dispatching thread below. The
+            // `scoped_task` wrapper tags the worker thread with the task id
+            // for the `chk`-feature claim cross-check (no-op otherwise) and
+            // restores the previous tag even when the runner panics.
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                runner_ref(k, &node.payload);
+                super::check::scoped_task(node.id, || runner_ref(k, &node.payload));
             }));
             busy2[k].fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
             let mut guard = lock(&state2.done);

@@ -10,6 +10,10 @@
 // Kernel entry points (conv/dense fwd+bwd, the GEMM tile API) take explicit
 // dimension + buffer arguments by design — no config structs on hot paths.
 #![allow(clippy::too_many_arguments)]
+// Every unsafe operation must sit in an explicit `unsafe {}` block with its
+// own `// SAFETY:` justification, even inside `unsafe fn` — enforced
+// together with scripts/unsafe_lint.py (CI fails on undocumented unsafe).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod config;
 pub mod data;

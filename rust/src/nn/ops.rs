@@ -425,9 +425,12 @@ unsafe fn kernel_4x8(kk: usize, n: usize, a: &[f32], bp: &[f32], c: *mut f32, w:
         }
     }
     for r in 0..MR {
-        let crow = c.add(r * n);
-        for j in 0..w {
-            *crow.add(j) += acc[r][j];
+        // SAFETY: caller guarantees c[r·n + j] valid for r < MR, j < w.
+        unsafe {
+            let crow = c.add(r * n);
+            for j in 0..w {
+                *crow.add(j) += acc[r][j];
+            }
         }
     }
 }
@@ -447,8 +450,11 @@ unsafe fn kernel_1x8(kk: usize, a: &[f32], bp: &[f32], c: *mut f32, w: usize) {
             acc[j] += av * bl[j];
         }
     }
-    for j in 0..w {
-        *c.add(j) += acc[j];
+    // SAFETY: caller guarantees c[j] valid for j < w.
+    unsafe {
+        for j in 0..w {
+            *c.add(j) += acc[j];
+        }
     }
 }
 
@@ -462,11 +468,14 @@ unsafe fn gemm_packed_scalar(m: usize, a: &[f32], b: &PackedB, c: *mut f32, p0: 
         let bp = &b.data[p * NR * kk..(p + 1) * NR * kk];
         let mut i = 0;
         while i + MR <= m {
-            kernel_4x8(kk, n, &a[i * kk..(i + MR) * kk], bp, c.add(i * n + j0), w);
+            // SAFETY: rows [i, i+MR) × columns [j0, j0+w) lie inside the
+            // output window the caller owns per this fn's contract.
+            unsafe { kernel_4x8(kk, n, &a[i * kk..(i + MR) * kk], bp, c.add(i * n + j0), w) };
             i += MR;
         }
         while i < m {
-            kernel_1x8(kk, &a[i * kk..(i + 1) * kk], bp, c.add(i * n + j0), w);
+            // SAFETY: as above, for the single remainder row i.
+            unsafe { kernel_1x8(kk, &a[i * kk..(i + 1) * kk], bp, c.add(i * n + j0), w) };
             i += 1;
         }
     }
@@ -497,49 +506,56 @@ mod simd {
     ) {
         use std::arch::x86_64::*;
         let (kk, n) = (b.kk, b.n);
-        for p in p0..p0 + np {
-            let j0 = p * NR;
-            let w = NR.min(n - j0);
-            let bp = b.data[p * NR * kk..(p + 1) * NR * kk].as_ptr();
-            let mut i = 0;
-            while i + MR <= m {
-                let ap = a.as_ptr().add(i * kk);
-                let mut acc0 = _mm256_setzero_ps();
-                let mut acc1 = _mm256_setzero_ps();
-                let mut acc2 = _mm256_setzero_ps();
-                let mut acc3 = _mm256_setzero_ps();
-                for l in 0..kk {
-                    let bv = _mm256_loadu_ps(bp.add(l * NR));
-                    acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(l)), bv, acc0);
-                    acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(kk + l)), bv, acc1);
-                    acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(2 * kk + l)), bv, acc2);
-                    acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(3 * kk + l)), bv, acc3);
+        // SAFETY: every packed-B load stays inside panel `p`'s `NR·kk`
+        // slice (loads are unaligned), every A load inside the `m·kk`
+        // slice, and every C access inside the caller-owned panel window;
+        // the AVX2/FMA intrinsics themselves are licensed by this fn's
+        // target_feature + the fma_available() runtime check.
+        unsafe {
+            for p in p0..p0 + np {
+                let j0 = p * NR;
+                let w = NR.min(n - j0);
+                let bp = b.data[p * NR * kk..(p + 1) * NR * kk].as_ptr();
+                let mut i = 0;
+                while i + MR <= m {
+                    let ap = a.as_ptr().add(i * kk);
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    for l in 0..kk {
+                        let bv = _mm256_loadu_ps(bp.add(l * NR));
+                        acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(l)), bv, acc0);
+                        acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(kk + l)), bv, acc1);
+                        acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(2 * kk + l)), bv, acc2);
+                        acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(3 * kk + l)), bv, acc3);
+                    }
+                    let accs = [acc0, acc1, acc2, acc3];
+                    let mut buf = [0.0f32; NR];
+                    for (r, acc) in accs.into_iter().enumerate() {
+                        _mm256_storeu_ps(buf.as_mut_ptr(), acc);
+                        let crow = c.add((i + r) * n + j0);
+                        for (j, &v) in buf.iter().enumerate().take(w) {
+                            *crow.add(j) += v;
+                        }
+                    }
+                    i += MR;
                 }
-                let accs = [acc0, acc1, acc2, acc3];
-                let mut buf = [0.0f32; NR];
-                for (r, acc) in accs.into_iter().enumerate() {
+                while i < m {
+                    let ap = a.as_ptr().add(i * kk);
+                    let mut acc = _mm256_setzero_ps();
+                    for l in 0..kk {
+                        let bv = _mm256_loadu_ps(bp.add(l * NR));
+                        acc = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(l)), bv, acc);
+                    }
+                    let mut buf = [0.0f32; NR];
                     _mm256_storeu_ps(buf.as_mut_ptr(), acc);
-                    let crow = c.add((i + r) * n + j0);
+                    let crow = c.add(i * n + j0);
                     for (j, &v) in buf.iter().enumerate().take(w) {
                         *crow.add(j) += v;
                     }
+                    i += 1;
                 }
-                i += MR;
-            }
-            while i < m {
-                let ap = a.as_ptr().add(i * kk);
-                let mut acc = _mm256_setzero_ps();
-                for l in 0..kk {
-                    let bv = _mm256_loadu_ps(bp.add(l * NR));
-                    acc = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(l)), bv, acc);
-                }
-                let mut buf = [0.0f32; NR];
-                _mm256_storeu_ps(buf.as_mut_ptr(), acc);
-                let crow = c.add(i * n + j0);
-                for (j, &v) in buf.iter().enumerate().take(w) {
-                    *crow.add(j) += v;
-                }
-                i += 1;
             }
         }
     }
@@ -597,10 +613,11 @@ pub unsafe fn gemm_packed_acc_panels_raw(
         if simd::fma_available() {
             // SAFETY: feature presence checked at runtime; output contract
             // forwarded from this function's own.
-            return simd::gemm_packed_acc_fma(m, a, b, c, p0, np);
+            return unsafe { simd::gemm_packed_acc_fma(m, a, b, c, p0, np) };
         }
     }
-    gemm_packed_scalar(m, a, b, c, p0, np);
+    // SAFETY: output contract forwarded from this function's own.
+    unsafe { gemm_packed_scalar(m, a, b, c, p0, np) };
 }
 
 // ---- legacy blocked GEMM (pre-packing baseline, kept for benches) ---------
@@ -688,41 +705,46 @@ pub unsafe fn gemm_tn_acc_cols_raw(
 ) {
     debug_assert_eq!(a.len(), m * kk);
     debug_assert!(j0 + jw <= n, "column window out of bounds");
-    let mut l0 = 0;
-    while l0 + 4 <= kk {
-        let c0 = c.add(l0 * n + j0);
-        let c1 = c.add((l0 + 1) * n + j0);
-        let c2 = c.add((l0 + 2) * n + j0);
-        let c3 = c.add((l0 + 3) * n + j0);
-        for i in 0..m {
-            let av = &a[i * kk + l0..i * kk + l0 + 4];
-            if av[0] == 0.0 && av[1] == 0.0 && av[2] == 0.0 && av[3] == 0.0 {
-                continue; // fully zero-padded patch columns
+    // SAFETY: all B reads are b[i·n + j] with i < m and all C accesses
+    // c[l·n + j] with l < kk, j in [j0, j0+jw) — exactly the windows the
+    // caller guarantees valid and unaliased per this fn's contract.
+    unsafe {
+        let mut l0 = 0;
+        while l0 + 4 <= kk {
+            let c0 = c.add(l0 * n + j0);
+            let c1 = c.add((l0 + 1) * n + j0);
+            let c2 = c.add((l0 + 2) * n + j0);
+            let c3 = c.add((l0 + 3) * n + j0);
+            for i in 0..m {
+                let av = &a[i * kk + l0..i * kk + l0 + 4];
+                if av[0] == 0.0 && av[1] == 0.0 && av[2] == 0.0 && av[3] == 0.0 {
+                    continue; // fully zero-padded patch columns
+                }
+                let brow = b.add(i * n + j0);
+                for j in 0..jw {
+                    let bv = *brow.add(j);
+                    *c0.add(j) += av[0] * bv;
+                    *c1.add(j) += av[1] * bv;
+                    *c2.add(j) += av[2] * bv;
+                    *c3.add(j) += av[3] * bv;
+                }
             }
-            let brow = b.add(i * n + j0);
-            for j in 0..jw {
-                let bv = *brow.add(j);
-                *c0.add(j) += av[0] * bv;
-                *c1.add(j) += av[1] * bv;
-                *c2.add(j) += av[2] * bv;
-                *c3.add(j) += av[3] * bv;
-            }
+            l0 += 4;
         }
-        l0 += 4;
-    }
-    while l0 < kk {
-        let crow = c.add(l0 * n + j0);
-        for i in 0..m {
-            let av = a[i * kk + l0];
-            if av == 0.0 {
-                continue;
+        while l0 < kk {
+            let crow = c.add(l0 * n + j0);
+            for i in 0..m {
+                let av = a[i * kk + l0];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = b.add(i * n + j0);
+                for j in 0..jw {
+                    *crow.add(j) += av * *brow.add(j);
+                }
             }
-            let brow = b.add(i * n + j0);
-            for j in 0..jw {
-                *crow.add(j) += av * *brow.add(j);
-            }
+            l0 += 1;
         }
-        l0 += 1;
     }
 }
 

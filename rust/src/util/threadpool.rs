@@ -22,8 +22,23 @@
 //! `i` runs pinned jobs, and it runs them one at a time.
 
 use std::collections::VecDeque;
+
+// Under `--cfg loom` (the model-checking lane in sanitizers.yml) the pool's
+// sleep/wake protocol runs on loom's instrumented sync primitives so every
+// interleaving of park/post/shutdown is explored. The per-worker arenas stay
+// on `std::sync` — they are plain data handed out under a lock, not part of
+// the protocol, and callers outside this module name their types as std.
+#[cfg(loom)]
+use loom::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(loom)]
+use loom::sync::{Arc, Condvar, Mutex};
+#[cfg(loom)]
+use loom::thread::JoinHandle;
+#[cfg(not(loom))]
 use std::sync::atomic::{AtomicUsize, Ordering};
+#[cfg(not(loom))]
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+#[cfg(not(loom))]
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -69,6 +84,41 @@ impl ScratchArena {
         s.fill(0.0);
         s
     }
+
+    /// Checked handout of a full `len`-element accumulator that the layer
+    /// call already sized with [`ScratchArena::grow_zeroed`]. Unlike `grow`
+    /// this never resizes: a task asking for more than the plan provisioned
+    /// is a scheduling bug and panics instead of reallocating mid-flight.
+    pub fn grad_all(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+        assert!(buf.len() >= len, "arena handout of {len} from {}-element buffer", buf.len());
+        &mut buf[..len]
+    }
+
+    /// Checked handout of the `[j0, j0+jw)` column stripe of an
+    /// `n`-element accumulator (a tile's private window of `grad_b`).
+    pub fn grad_stripe(buf: &mut Vec<f32>, n: usize, j0: usize, jw: usize) -> &mut [f32] {
+        let end = j0.checked_add(jw).expect("arena stripe overflows usize");
+        assert!(end <= n && n <= buf.len(), "stripe [{j0}, {end}) outside {n}/{}", buf.len());
+        &mut buf[j0..end]
+    }
+
+    /// Checked base pointer for a strided `kk × [j0, j0+jw)` column window
+    /// of a row-major `kk × n` accumulator (fed to
+    /// [`crate::nn::ops::gemm_tn_acc_cols_raw`], which cannot take a slice:
+    /// the window is non-contiguous). Validates the window geometry against
+    /// the grown buffer before surrendering the pointer.
+    pub fn grad_window_ptr(
+        buf: &mut Vec<f32>,
+        kk: usize,
+        n: usize,
+        j0: usize,
+        jw: usize,
+    ) -> *mut f32 {
+        let end = j0.checked_add(jw).expect("arena window overflows usize");
+        let total = kk.checked_mul(n).expect("arena window overflows usize");
+        assert!(end <= n && total <= buf.len(), "window {kk}x[{j0}, {end}) outside buffer");
+        buf.as_mut_ptr()
+    }
 }
 
 /// All job queues, guarded by one mutex (held only for queue push/pop, never
@@ -96,11 +146,24 @@ struct Shared {
 /// A pool of worker threads with one queue per worker plus a shared queue.
 pub struct ThreadPool {
     shared: Arc<Shared>,
-    arenas: Vec<Arc<Mutex<ScratchArena>>>,
+    arenas: Vec<std::sync::Arc<std::sync::Mutex<ScratchArena>>>,
     handles: Vec<JoinHandle<()>>,
     /// Cached [`ThreadPool::dispatch_overhead_s`] measurement (calibration
-    /// hook for the inner-layer autotuner).
+    /// hook for the inner-layer autotuner). Absent under loom: the model
+    /// has no wall clock, so the probe cannot run there.
+    #[cfg(not(loom))]
     dispatch_overhead: OnceLock<f64>,
+}
+
+/// Spawn worker `i`'s OS (or loom-modeled) thread.
+#[cfg(not(loom))]
+fn spawn_worker(i: usize, shared: Arc<Shared>) -> JoinHandle<()> {
+    std::thread::spawn(move || worker_loop(i, shared))
+}
+
+#[cfg(loom)]
+fn spawn_worker(i: usize, shared: Arc<Shared>) -> JoinHandle<()> {
+    loom::thread::spawn(move || worker_loop(i, shared))
 }
 
 impl ThreadPool {
@@ -119,16 +182,17 @@ impl ThreadPool {
             idle: Mutex::new(()),
             idle_cv: Condvar::new(),
         });
-        let handles = (0..n)
-            .map(|i| {
-                let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(i, shared))
-            })
-            .collect();
+        let handles = (0..n).map(|i| spawn_worker(i, Arc::clone(&shared))).collect();
         let arenas = (0..n)
-            .map(|_| Arc::new(Mutex::new(ScratchArena::default())))
+            .map(|_| std::sync::Arc::new(std::sync::Mutex::new(ScratchArena::default())))
             .collect();
-        Self { shared, arenas, handles, dispatch_overhead: OnceLock::new() }
+        Self {
+            shared,
+            arenas,
+            handles,
+            #[cfg(not(loom))]
+            dispatch_overhead: OnceLock::new(),
+        }
     }
 
     pub fn size(&self) -> usize {
@@ -139,8 +203,16 @@ impl ThreadPool {
     /// seconds, probed once on first use and cached — the calibration hook
     /// the inner-layer autotuner derives its per-tile FLOP floor from
     /// (`crate::inner::autotune::Calibration`).
+    #[cfg(not(loom))]
     pub fn dispatch_overhead_s(&self) -> f64 {
         *self.dispatch_overhead.get_or_init(|| self.probe_dispatch_overhead())
+    }
+
+    /// Loom models have no wall clock; report a fixed plausible estimate so
+    /// callers compile unchanged under `--cfg loom`.
+    #[cfg(loom)]
+    pub fn dispatch_overhead_s(&self) -> f64 {
+        5e-6
     }
 
     /// The probe behind [`ThreadPool::dispatch_overhead_s`]: posts bursts
@@ -148,6 +220,7 @@ impl ThreadPool {
     /// queue push + wakeup + completion per job, taking the fastest rep so
     /// a scheduler hiccup cannot inflate the estimate. The pool must be
     /// otherwise idle.
+    #[cfg(not(loom))]
     pub fn probe_dispatch_overhead(&self) -> f64 {
         const JOBS: usize = 128;
         const REPS: usize = 4;
@@ -171,12 +244,12 @@ impl ThreadPool {
     /// Worker `i`'s persistent scratch arena. Lock it from a job pinned to
     /// worker `i` (uncontended by construction) or from the submitting thread
     /// after [`ThreadPool::wait_idle`] (e.g. to reduce per-worker partials).
-    pub fn arena(&self, i: usize) -> &Arc<Mutex<ScratchArena>> {
+    pub fn arena(&self, i: usize) -> &std::sync::Arc<std::sync::Mutex<ScratchArena>> {
         &self.arenas[i]
     }
 
     /// All per-worker arenas, indexed by worker.
-    pub fn arenas(&self) -> &[Arc<Mutex<ScratchArena>>] {
+    pub fn arenas(&self) -> &[std::sync::Arc<std::sync::Mutex<ScratchArena>>] {
         &self.arenas
     }
 
@@ -305,6 +378,9 @@ pub fn parallel_map<T: Send + 'static, F>(pool: &ThreadPool, n: usize, f: F) -> 
 where
     F: Fn(usize) -> T + Send + Sync + 'static,
 {
+    // Plain data plumbing, not part of the modeled protocol — std on purpose
+    // so the helper compiles (unexercised) under `--cfg loom`.
+    use std::sync::{Arc, Mutex};
     let f = Arc::new(f);
     let results: Arc<Mutex<Vec<Option<T>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));

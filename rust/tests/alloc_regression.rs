@@ -20,22 +20,32 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a transparent wrapper over `System` — every method bumps the
+// counter (no allocator re-entry: `fetch_add` on a static atomic never
+// allocates) and forwards `ptr`/`layout` unchanged, so `System` upholds the
+// `GlobalAlloc` contract on our behalf.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards the caller's layout to `System.alloc` verbatim.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: forwards the caller's layout to `System.alloc_zeroed` verbatim.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: `ptr`/`layout` come from this allocator, which always handed
+    // out `System` pointers, so forwarding them to `System.realloc` is valid.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: same provenance argument as `realloc` — `ptr` originated from
+    // `System`, so `System.dealloc` may free it.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -1,0 +1,159 @@
+//! Runtime claim cross-check exercises (`--features chk` only): the
+//! `DisjointBuf` accessors registered with a stage guard must admit exactly
+//! the accesses the plan declared, reject everything else, survive task
+//! panics without poisoning attribution, and pass clean under the real
+//! production stages.
+#![cfg(feature = "chk")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use bptcnn::inner::check::{self, Buf, Claim, Span};
+use bptcnn::inner::{dense_fwd_parallel, execute_dag, panel_count, DisjointBuf, TaskDag, TileGrid};
+use bptcnn::nn::ops::{self, PackedB};
+use bptcnn::util::threadpool::ThreadPool;
+
+/// Panic payloads from the checker are formatted strings.
+fn payload_str(p: Box<dyn std::any::Any + Send>) -> String {
+    match p.downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => p.downcast::<&'static str>().map(|s| s.to_string()).unwrap_or_default(),
+    }
+}
+
+#[test]
+fn declared_access_passes_and_undeclared_panics() {
+    let mut dag: TaskDag<()> = TaskDag::new();
+    let t0 = dag.add("t0", 1.0, &[], ());
+    let t1 = dag.add("t1", 1.0, &[], ());
+    let guard = check::stage_guard(&dag, || {
+        vec![
+            Claim::write(t0, Buf::Out, Span::interval(0, 4)),
+            Claim::write(t1, Buf::Out, Span::interval(4, 4)),
+        ]
+    });
+    let mut data = vec![0.0f32; 8];
+    let db = DisjointBuf::new(&mut data).checked(Buf::Out, &guard);
+    // Declared write window: admitted.
+    check::scoped_task(t0, || {
+        // SAFETY: [0, 4) is t0's claimed window; t1 never touches it.
+        unsafe { db.slice_mut(0, 4) }.fill(1.0);
+    });
+    // A write claim licenses reading the same window back.
+    check::scoped_task(t1, || {
+        // SAFETY: [4, 8) is t1's claimed window.
+        assert_eq!(unsafe { db.slice_ref(4, 4) }, &[0.0; 4]);
+    });
+    // Undeclared window: rejected with task attribution.
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        check::scoped_task(t0, || {
+            // SAFETY: in-bounds window; the claim check panics before any
+            // aliasing access can happen.
+            let _ = unsafe { db.slice_mut(4, 4) };
+        })
+    }))
+    .unwrap_err();
+    let msg = payload_str(err);
+    assert!(msg.contains("undeclared Write"), "{msg}");
+    assert!(msg.contains("t0"), "{msg}");
+    // Outside any task scope (dispatcher preparing buffers): unchecked.
+    // SAFETY: no tasks are running; this thread owns the whole buffer.
+    unsafe { db.slice_mut(0, 8) }.fill(0.0);
+}
+
+#[test]
+fn conflicting_plan_is_rejected_at_stage_guard() {
+    let mut dag: TaskDag<()> = TaskDag::new();
+    let a = dag.add("a", 1.0, &[], ());
+    let b = dag.add("b", 1.0, &[], ());
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        let guard = check::stage_guard(&dag, || {
+            vec![
+                Claim::write(a, Buf::Out, Span::interval(0, 8)),
+                Claim::write(b, Buf::Out, Span::interval(4, 8)),
+            ]
+        });
+        drop(guard); // unreachable: the guard panics on the racy plan
+    }))
+    .unwrap_err();
+    let msg = payload_str(err);
+    assert!(msg.contains("unsound stage plan"), "{msg}");
+    assert!(msg.contains("write-write"), "{msg}");
+}
+
+/// A task panicking mid-tile must not poison claim state: the panic
+/// re-raises on the dispatching thread, the worker's task attribution is
+/// restored, and a fresh stage on the same pool verifies cleanly.
+#[test]
+fn task_panic_does_not_poison_claim_checking() {
+    let pool = ThreadPool::new(1); // one worker: probes share its thread
+    let mut data = vec![0.0f32; 8];
+    {
+        let mut dag: TaskDag<usize> = TaskDag::new();
+        for i in 0..4 {
+            dag.add(format!("w{i}"), 1.0, &[], i);
+        }
+        let guard = check::stage_guard(&dag, || {
+            (0..4).map(|i| Claim::write(i, Buf::Out, Span::interval(i * 2, 2))).collect()
+        });
+        let db = DisjointBuf::new(&mut data).checked(Buf::Out, &guard);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            execute_dag(&pool, dag, |_, &i: &usize| {
+                // SAFETY: task i exclusively owns [2i, 2i+2).
+                unsafe { db.slice_mut(i * 2, 2) }.fill(i as f32);
+                if i == 2 {
+                    panic!("tile exploded mid-stage");
+                }
+            })
+        }));
+        assert!(err.is_err(), "task panic must re-raise on the dispatcher");
+    }
+    // scoped_task's drop guard restored the worker's attribution …
+    pool.execute(|| assert!(check::current_task().is_none(), "stale task id on worker"));
+    pool.wait_idle();
+    // … and a fresh stage (fresh guard) on the same pool checks clean.
+    let mut dag: TaskDag<usize> = TaskDag::new();
+    for i in 0..4 {
+        dag.add(format!("v{i}"), 1.0, &[], i);
+    }
+    let guard = check::stage_guard(&dag, || {
+        (0..4).map(|i| Claim::write(i, Buf::Out, Span::interval(i * 2, 2))).collect()
+    });
+    let db = DisjointBuf::new(&mut data).checked(Buf::Out, &guard);
+    execute_dag(&pool, dag, |_, &i: &usize| {
+        // SAFETY: task i exclusively owns [2i, 2i+2).
+        unsafe { db.slice_mut(i * 2, 2) }.fill(-1.0);
+    });
+    assert_eq!(data, vec![-1.0; 8]);
+}
+
+/// Production stage under the cross-check, after an unrelated task panic on
+/// the same pool: the column-split dense forward must run every accessor
+/// through its claims without a violation and still match the serial path.
+#[test]
+fn dense_fwd_parallel_checks_clean_after_unrelated_panic() {
+    let pool = ThreadPool::new(4);
+    let mut dag: TaskDag<()> = TaskDag::new();
+    dag.add("boom", 1.0, &[], ());
+    let err = catch_unwind(AssertUnwindSafe(|| {
+        execute_dag(&pool, dag, |_, _: &()| panic!("boom"));
+    }));
+    assert!(err.is_err());
+
+    let (m, k, n) = (7usize, 10usize, 19usize); // ragged rows and panels
+    let x: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
+    let w: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 * 0.5 - 1.5).collect();
+    let b: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+    let packed = PackedB::pack(k, n, &w);
+    let mut serial = vec![0.0f32; m * n];
+    ops::dense_fwd_packed(m, &x, &packed, &b, &mut serial);
+    let panels = panel_count(n);
+    let grid = TileGrid {
+        rows_per_tile: 2,
+        row_tiles: (m + 1) / 2,
+        panels_per_tile: 1,
+        panel_tiles: panels,
+    };
+    let mut par = vec![0.0f32; m * n];
+    dense_fwd_parallel(&pool, m, &x, &packed, &b, &mut par, false, grid);
+    assert_eq!(par, serial);
+}
