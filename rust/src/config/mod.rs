@@ -247,6 +247,12 @@ pub struct ClusterConfig {
     pub bandwidth_bytes_per_s: f64,
     /// Per-message latency, seconds.
     pub link_latency_s: f64,
+    /// Bounded-staleness knob for the pipelined outer layer. 0 = serialized
+    /// fetch → train → submit per node (the classic SGWU/AGWU loops,
+    /// bit-identical to the pre-pipeline behavior); s ≥ 1 = each node trains
+    /// on a prefetched snapshot at most `s` versions behind its newest
+    /// server-acked update, overlapping comm with compute (AGWU only).
+    pub staleness: usize,
 }
 
 impl ClusterConfig {
@@ -265,6 +271,7 @@ impl ClusterConfig {
             nodes,
             bandwidth_bytes_per_s: 1.0e9 / 8.0, // 1 Gb/s
             link_latency_s: 200e-6,
+            staleness: 0,
         }
     }
 
@@ -274,7 +281,14 @@ impl ClusterConfig {
             nodes: (0..m).map(|_| NodeProfile::uniform(2.3, 8)).collect(),
             bandwidth_bytes_per_s: 1.0e9 / 8.0,
             link_latency_s: 200e-6,
+            staleness: 0,
         }
+    }
+
+    /// Builder: set the pipelined outer layer's staleness bound.
+    pub fn with_staleness(mut self, s: usize) -> Self {
+        self.staleness = s;
+        self
     }
 
     pub fn size(&self) -> usize {

@@ -78,7 +78,12 @@ fn cmd_train(argv: &[String]) -> i32 {
         .opt("batches", "4", "IDPA batches A")
         .opt("lr", "0.1", "learning rate η (Eq. 23)")
         .opt("seed", "42", "RNG seed")
-        .opt("backend", "native", "compute backend: native|xla");
+        .opt("backend", "native", "compute backend: native|xla")
+        .opt(
+            "staleness",
+            "0",
+            "pipelined outer layer: max versions a training snapshot may lag (0 = serialized)",
+        );
     let usage = spec.usage();
     let p = match handle(spec.parse(argv), &usage) {
         Ok(p) => p,
@@ -96,16 +101,22 @@ fn cmd_train(argv: &[String]) -> i32 {
             learning_rate: p.f64("lr")? as f32,
             seed: p.u64("seed")?,
         };
-        let cluster = ClusterConfig::heterogeneous(p.usize("nodes")?, tc.seed ^ 0x5EED);
+        let cluster = ClusterConfig::heterogeneous(p.usize("nodes")?, tc.seed ^ 0x5EED)
+            .with_staleness(p.usize("staleness")?);
         println!(
-            "training {} ({} params) on {} nodes: {} + {}, N={}, K={}",
+            "training {} ({} params) on {} nodes: {} + {}, N={}, K={}{}",
             tc.network.name,
             tc.network.param_count(),
             cluster.size(),
             tc.update.name(),
             tc.partition.name(),
             tc.total_samples,
-            tc.iterations
+            tc.iterations,
+            if cluster.staleness > 0 {
+                format!(", pipelined (staleness {})", cluster.staleness)
+            } else {
+                String::new()
+            }
         );
         let report = match p.str("backend") {
             "native" => bptcnn::outer::train_native(&tc, &cluster),
@@ -132,6 +143,11 @@ fn cmd_train(argv: &[String]) -> i32 {
             report.wall_s
         );
         println!("allocations: {:?}", report.allocations);
+        println!(
+            "comm on critical path (stall) {:.2} s | hidden behind compute (overlap) {:.2} s",
+            report.cluster.node_stall_s.iter().sum::<f64>(),
+            report.cluster.node_overlap_s.iter().sum::<f64>()
+        );
         Ok(())
     };
     exit_on(run())
@@ -336,6 +352,11 @@ fn cmd_worker(argv: &[String]) -> i32 {
     .opt("seed", "42", "RNG seed (must match the server and peers)")
     .opt("bandwidth-mbs", "0", "throttle: modeled link bandwidth in MB/s (0 = off)")
     .opt("latency-ms", "0", "throttle: modeled link latency in ms")
+    .opt(
+        "staleness",
+        "0",
+        "pipeline comm on a background thread; snapshots may lag ≤ s versions (0 = serialized)",
+    )
     .flag("verbose", "log every iteration");
     let usage = spec.usage();
     let p = match handle(spec.parse(argv), &usage) {
@@ -383,26 +404,37 @@ fn cmd_worker(argv: &[String]) -> i32 {
         let tcp = bptcnn::outer::TcpTransport::connect(addr, node)?;
         let bw_mbs = p.f64("bandwidth-mbs")?;
         let latency_s = p.f64("latency-ms")? / 1e3;
+        let staleness = bptcnn::outer::Staleness(p.usize("staleness")?);
         let verbose = p.bool("verbose");
         let summary = if bw_mbs > 0.0 {
             let model = bptcnn::outer::TransferModel::new(bw_mbs * 1e6, latency_s);
             let mut t = bptcnn::outer::ThrottledTransport::new(tcp, model);
-            bptcnn::outer::drive_worker(&mut t, &mut trainer, &column, iterations, mode, verbose)?
+            bptcnn::outer::drive_worker(
+                &mut t, &mut trainer, &column, iterations, mode, staleness, verbose,
+            )?
         } else {
             let mut t = tcp;
-            bptcnn::outer::drive_worker(&mut t, &mut trainer, &column, iterations, mode, verbose)?
+            bptcnn::outer::drive_worker(
+                &mut t, &mut trainer, &column, iterations, mode, staleness, verbose,
+            )?
         };
         let mb = 1024.0 * 1024.0;
         println!(
             "worker {node} done: v{} | loss {:.4} | acc {:.3} | busy {:.2} s | \
-             wire {:.2} MB | fetch {:.2} s | submit {:.2} s",
+             wire {:.2} MB | fetch {:.2} s | submit {:.2} s | connect {:.2} s | \
+             stall {:.2} s | overlap {:.2} s | max staleness {} ({} refetches)",
             summary.final_version,
             summary.last_loss,
             summary.last_accuracy,
             summary.busy_s,
             summary.stats.wire_bytes as f64 / mb,
             summary.stats.fetch_wall_s,
-            summary.stats.submit_wall_s
+            summary.stats.submit_wall_s,
+            summary.stats.connect_wall_s,
+            summary.stats.stall_wall_s,
+            summary.stats.overlap_wall_s,
+            summary.max_staleness,
+            summary.staleness_refetches
         );
         Ok(())
     };

@@ -16,8 +16,9 @@ use crate::config::UpdateStrategy;
 use crate::tensor::WeightSet;
 
 use super::param_server::{CommStats, ParamServer};
+use super::pipeline::Staleness;
 use super::transport::{InProcTransport, SubmitMeta, SubmitMode, Transport, TransportStats};
-use super::worker::LocalTrainer;
+use super::worker::{drive_worker, LocalTrainer};
 
 /// One global-version record in the training log.
 #[derive(Debug, Clone)]
@@ -46,6 +47,13 @@ pub struct ClusterReport {
     pub wall_s: f64,
     /// Total busy seconds per node (for the balance index).
     pub node_busy_s: Vec<f64>,
+    /// Per-node seconds blocked on communication or the SGWU barrier —
+    /// comm time on that node's critical path. A pipelined driver only
+    /// counts the residual waits its prefetch/async-push could not hide.
+    pub node_stall_s: Vec<f64>,
+    /// Per-node comm seconds hidden behind local compute by the pipelined
+    /// driver (0 everywhere for serialized runs).
+    pub node_overlap_s: Vec<f64>,
     pub final_weights: WeightSet,
 }
 
@@ -106,6 +114,7 @@ pub fn run_sgwu(
         (0..m).map(|j| InProcTransport::new(Arc::clone(&ps), j)).collect();
     let mut sync_wait = 0.0f64;
     let mut node_busy = vec![0.0f64; m];
+    let mut node_stall = vec![0.0f64; m];
     let mut versions = Vec::new();
     let t0 = Instant::now();
 
@@ -144,6 +153,7 @@ pub fn run_sgwu(
         let t_max = outcomes.iter().map(|(_, t)| *t).fold(0.0f64, f64::max);
         for (j, (_, t)) in outcomes.iter().enumerate() {
             sync_wait += t_max - t;
+            node_stall[j] += t_max - t;
             node_busy[j] += t;
         }
         let mean_loss =
@@ -178,6 +188,11 @@ pub fn run_sgwu(
 
     let tstats: Vec<TransportStats> = transports.iter().map(|t| t.stats()).collect();
     drop(transports);
+    // Serialized round structure: the barrier wait plus every comm wall
+    // second sits on the node's critical path.
+    for (j, s) in tstats.iter().enumerate() {
+        node_stall[j] += s.fetch_wall_s + s.submit_wall_s;
+    }
     let wall_s = t0.elapsed().as_secs_f64();
     let (comm, final_weights) = unwrap_server(ps, &tstats);
     ClusterReport {
@@ -187,6 +202,8 @@ pub fn run_sgwu(
         sync_wait_s: sync_wait,
         wall_s,
         node_busy_s: node_busy,
+        node_stall_s: node_stall,
+        node_overlap_s: vec![0.0; m],
         final_weights,
     }
 }
@@ -214,7 +231,7 @@ pub fn run_agwu(
 }
 
 /// Asynchronous run with an explicit update rule (AGWU or the plain
-/// Downpour-style baseline).
+/// Downpour-style baseline), serialized per-node loops (`Staleness(0)`).
 pub fn run_async(
     init: WeightSet,
     workers: Vec<Box<dyn LocalTrainer>>,
@@ -223,6 +240,26 @@ pub fn run_async(
     eval: Option<EvalHook<'_>>,
     mode: AsyncMode,
 ) -> ClusterReport {
+    run_async_pipelined(init, workers, schedule, iterations, eval, mode, Staleness(0))
+}
+
+/// Asynchronous run with an explicit staleness knob. `Staleness(0)` runs
+/// each node's literal serialized fetch → train → submit loop (identical to
+/// [`run_async`]); `Staleness(s ≥ 1)` drives every node through the
+/// pipelined [`drive_worker`], overlapping each node's fetch/submit with
+/// its local epochs under the bounded-staleness guarantee.
+pub fn run_async_pipelined(
+    init: WeightSet,
+    workers: Vec<Box<dyn LocalTrainer>>,
+    schedule: &AllocationSchedule,
+    iterations: usize,
+    eval: Option<EvalHook<'_>>,
+    mode: AsyncMode,
+    staleness: Staleness,
+) -> ClusterReport {
+    if staleness.is_pipelined() {
+        return run_async_drivers(init, workers, schedule, iterations, eval, mode, staleness);
+    }
     let m = workers.len();
     assert!(m > 0);
     let ps = Arc::new(Mutex::new(ParamServer::new(init, m)));
@@ -296,6 +333,9 @@ pub fn run_async(
 
     let (node_busy, tstats): (Vec<f64>, Vec<TransportStats>) = results.into_iter().unzip();
     let wall_s = t0.elapsed().as_secs_f64();
+    // Serialized loops: every comm wall second sits on the critical path.
+    let node_stall: Vec<f64> =
+        tstats.iter().map(|s| s.fetch_wall_s + s.submit_wall_s).collect();
     let (comm, final_weights) = unwrap_server(ps, &tstats);
     let mut versions = Arc::try_unwrap(versions)
         .expect("threads joined")
@@ -310,6 +350,98 @@ pub fn run_async(
         sync_wait_s: 0.0, // no synchronization barrier exists in AGWU
         wall_s,
         node_busy_s: node_busy,
+        node_stall_s: node_stall,
+        node_overlap_s: vec![0.0; m],
+        final_weights,
+    }
+}
+
+/// The pipelined in-process runner: one [`drive_worker`] per node over an
+/// `InProcTransport`, each with its own comm thread and double buffer. The
+/// per-version log is reconstructed from the workers' ack logs (acks carry
+/// the server-assigned version, so the merged order is exact).
+fn run_async_drivers(
+    init: WeightSet,
+    workers: Vec<Box<dyn LocalTrainer>>,
+    schedule: &AllocationSchedule,
+    iterations: usize,
+    eval: Option<EvalHook<'_>>,
+    mode: AsyncMode,
+    staleness: Staleness,
+) -> ClusterReport {
+    let m = workers.len();
+    assert!(m > 0);
+    let ps = Arc::new(Mutex::new(ParamServer::new(init, m)));
+    let t0 = Instant::now();
+    let node_schedules = schedule_columns(schedule, m);
+    let submit_mode = match mode {
+        AsyncMode::Agwu => SubmitMode::Agwu,
+        AsyncMode::Plain => SubmitMode::Plain,
+    };
+
+    let summaries: Vec<super::worker::WorkerRunSummary> = std::thread::scope(|scope| {
+        let handles: Vec<_> = workers
+            .into_iter()
+            .zip(node_schedules)
+            .enumerate()
+            .map(|(j, (mut w, sched))| {
+                let ps = Arc::clone(&ps);
+                scope.spawn(move || {
+                    let mut transport = InProcTransport::new(ps, j);
+                    drive_worker(
+                        &mut transport,
+                        w.as_mut(),
+                        &sched,
+                        iterations,
+                        submit_mode,
+                        staleness,
+                        false,
+                    )
+                    .expect("in-process pipelined worker failed")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let tstats: Vec<TransportStats> = summaries.iter().map(|s| s.stats).collect();
+    let node_busy: Vec<f64> = summaries.iter().map(|s| s.busy_s).collect();
+    let node_stall: Vec<f64> = summaries.iter().map(|s| s.stats.stall_wall_s).collect();
+    let node_overlap: Vec<f64> = summaries.iter().map(|s| s.stats.overlap_wall_s).collect();
+
+    let mut versions: Vec<VersionRecord> = summaries
+        .iter()
+        .enumerate()
+        .flat_map(|(j, s)| {
+            s.ack_log.iter().map(move |a| VersionRecord {
+                version: a.version,
+                node: j,
+                local_loss: a.loss,
+                local_accuracy: a.accuracy,
+                at_s: a.at.saturating_duration_since(t0).as_secs_f64(),
+                eval: None,
+            })
+        })
+        .collect();
+    versions.sort_by_key(|v| v.version);
+
+    let (comm, final_weights) = unwrap_server(ps, &tstats);
+    // Async pushes do not carry snapshots, so per-version eval is not
+    // available mid-flight; evaluate the final global set once instead.
+    if let (Some(f), Some(last)) = (eval, versions.last_mut()) {
+        last.eval = Some(f(&final_weights));
+    }
+
+    ClusterReport {
+        strategy: UpdateStrategy::Agwu,
+        versions,
+        comm,
+        sync_wait_s: 0.0,
+        wall_s,
+        node_busy_s: node_busy,
+        node_stall_s: node_stall,
+        node_overlap_s: node_overlap,
         final_weights,
     }
 }
@@ -436,6 +568,39 @@ mod tests {
         let schedule: AllocationSchedule = vec![vec![0..2, 2..4], vec![4..6, 6..8]];
         let cols = schedule_columns(&schedule, 2);
         assert_eq!(cols, vec![vec![0..2, 4..6], vec![2..4, 6..8]]);
+    }
+
+    /// The pipelined in-process runner produces the same version structure
+    /// as the serialized one — m·K acked versions, strictly increasing —
+    /// while keeping per-node stall/overlap accounting consistent.
+    #[test]
+    fn pipelined_agwu_matches_version_structure() {
+        let (cfg, ds, schedule) = setup(3, 16);
+        let init = Network::init(&cfg, 2).weights;
+        let report = run_async_pipelined(
+            init,
+            workers(&cfg, &ds, 3, 0.2),
+            &schedule,
+            4,
+            None,
+            AsyncMode::Agwu,
+            Staleness(1),
+        );
+        assert_eq!(report.versions.len(), 12);
+        for (i, v) in report.versions.iter().enumerate() {
+            assert_eq!(v.version, i + 1);
+        }
+        // Each node acked exactly its own K submissions.
+        for j in 0..3 {
+            assert_eq!(report.versions.iter().filter(|v| v.node == j).count(), 4);
+        }
+        // Staleness refetches may add fetches, but submits are exact.
+        assert_eq!(report.comm.submits, 12);
+        assert!(report.comm.fetches >= 12);
+        assert_eq!(report.node_stall_s.len(), 3);
+        assert_eq!(report.node_overlap_s.len(), 3);
+        assert!(report.node_stall_s.iter().all(|s| *s >= 0.0));
+        assert!(report.versions.iter().all(|v| v.local_loss.is_finite()));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 pub mod cluster;
 pub mod param_server;
 pub mod partition;
+pub mod pipeline;
 pub mod server;
 pub mod trainer;
 pub mod transport;
@@ -15,10 +16,12 @@ pub mod wire;
 pub mod worker;
 
 pub use cluster::{
-    run_agwu, run_sgwu, schedule_columns, AllocationSchedule, ClusterReport, VersionRecord,
+    run_agwu, run_async, run_async_pipelined, run_sgwu, schedule_columns, AllocationSchedule,
+    AsyncMode, ClusterReport, VersionRecord,
 };
 pub use param_server::{CommStats, ParamServer};
 pub use partition::{udpa_partition, IdpaPartitioner};
+pub use pipeline::{pipeline, AckRecord, CommThread, PipelineAccounting, PipelinedTransport, Staleness};
 pub use server::{serve, ServeOptions};
 pub use trainer::{build_schedule, slowdown_factors, train_native, CurvePoint, TrainReport};
 pub use transport::{

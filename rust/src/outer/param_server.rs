@@ -38,6 +38,10 @@ pub struct CommStats {
     /// Measured wall seconds inside `Transport::submit` across nodes (for
     /// SGWU over TCP this includes the Eq. 8 barrier wait).
     pub submit_wall_s: f64,
+    /// Measured wall seconds of endpoint setup (TCP connect + registration)
+    /// across nodes — split out of the fetch/submit columns so stall
+    /// attribution stays honest. 0 for in-process runs.
+    pub connect_wall_s: f64,
 }
 
 impl CommStats {
@@ -57,6 +61,7 @@ impl CommStats {
         self.wire_bytes += t.wire_bytes;
         self.fetch_wall_s += t.fetch_wall_s;
         self.submit_wall_s += t.submit_wall_s;
+        self.connect_wall_s += t.connect_wall_s;
     }
 }
 

@@ -1,0 +1,485 @@
+//! Pipelined worker communication: overlap transport time with training.
+//!
+//! The serialized worker loop (`fetch → train → submit`, PR 6) keeps the
+//! Eq. 11 communication term on the critical path: every cycle pays one
+//! full fetch and one full submit of wall time, even though the transfers
+//! have no data dependency on the epoch running *right now*. This module
+//! moves all transport calls onto a dedicated **comm thread** and lets the
+//! worker loop:
+//!
+//! * **prefetch** — the next `fetch_global` is issued while the current
+//!   epoch is still training, and the resulting `Arc<WeightSet>` generation
+//!   is swapped in at the epoch boundary ([`PipelinedTransport::take_snapshot`]);
+//! * **push asynchronously** — `submit` runs on the comm thread against the
+//!   sealed local delta of the finished epoch while the next epoch starts
+//!   immediately ([`PipelinedTransport::submit_async`]).
+//!
+//! Consistency is governed by a bounded-[`Staleness`] knob: a snapshot may
+//! be trained on only while it is at most `s` versions behind the newest
+//! version this worker has seen acked by the server. When an ack overtakes
+//! the prefetched snapshot by more than `s`, the snapshot is discarded and
+//! re-fetched (the worker blocks — that residual wait is the `stall_wall_s`
+//! a pipeline cannot hide). `s = 0` is not expressible here by design:
+//! [`super::worker::drive_worker`] dispatches `Staleness(0)` to the
+//! literal serialized loop, keeping the PR-6 path bit-identical (pinned by
+//! test) — a zero-staleness pipeline would still reorder server-side fetch
+//! accounting (`node_base`, hence γ in Eq. 9) even if it blocked on every
+//! boundary.
+//!
+//! The comm thread holds the `&mut dyn Transport` exclusively, so every
+//! existing backend — [`super::transport::InProcTransport`],
+//! [`super::transport::TcpTransport`], throttled or not — composes
+//! unchanged: commands are applied strictly in FIFO order, which preserves
+//! the per-connection request ordering the wire protocol (and the SGWU
+//! Eq. 8 barrier) relies on. Per cycle the queue is `…, fetch_{i+1},
+//! submit_i, …`, so at most one submit is ever in flight and a snapshot
+//! for epoch `i+1` reflects everything up to this worker's `submit_{i-1}`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::WeightSet;
+
+use super::transport::{SubmitAck, SubmitMeta, Transport};
+
+/// Bounded-staleness knob for the pipelined worker loop.
+///
+/// `Staleness(0)` degrades to the serialized fetch → train → submit loop
+/// (bit-identical to the pre-pipeline behavior); `Staleness(s)` with
+/// `s ≥ 1` permits training on a snapshot up to `s` versions behind the
+/// newest server version this worker has seen acked, blocking only when
+/// the bound would be violated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Staleness(pub usize);
+
+impl Staleness {
+    /// The serialized (PR-6) mode: no comm thread, no prefetch.
+    pub const SERIALIZED: Staleness = Staleness(0);
+
+    /// Whether this bound enables the comm-thread pipeline.
+    pub fn is_pipelined(self) -> bool {
+        self.0 > 0
+    }
+}
+
+/// One acknowledged submission, in ack order (the pipelined equivalent of
+/// the serialized loop's per-iteration version bookkeeping).
+#[derive(Debug, Clone, Copy)]
+pub struct AckRecord {
+    /// Server version this submission produced (or, for a buffered SGWU
+    /// part, the version current when it was buffered).
+    pub version: usize,
+    /// Local loss / accuracy of the epoch behind the submission.
+    pub loss: f64,
+    pub accuracy: f64,
+    /// When the ack reached the worker (cluster drivers convert to
+    /// run-relative seconds).
+    pub at: Instant,
+}
+
+enum Cmd {
+    Fetch,
+    Submit(WeightSet, SubmitMeta),
+    Finish,
+}
+
+enum Reply {
+    Fetched(Result<(Arc<WeightSet>, usize)>),
+    Acked(Result<SubmitAck>),
+}
+
+/// The transport-owning end of the pipeline. Runs on a dedicated thread and
+/// applies queued commands strictly in FIFO order against the wrapped
+/// [`Transport`] — ordering, and therefore every backend's protocol
+/// assumptions, are exactly those of the serialized loop.
+pub struct CommThread {
+    cmd_rx: Receiver<Cmd>,
+    reply_tx: Sender<Reply>,
+}
+
+impl CommThread {
+    /// Drain commands until [`Cmd::Finish`] (or channel hangup, e.g. the
+    /// worker bailed on an error) and then close the transport. Send
+    /// failures on the reply channel are ignored: they only mean the worker
+    /// already gave up, and the loop still finishes the transport politely.
+    pub fn run(self, transport: &mut dyn Transport) -> Result<()> {
+        while let Ok(cmd) = self.cmd_rx.recv() {
+            match cmd {
+                Cmd::Fetch => {
+                    let _ = self.reply_tx.send(Reply::Fetched(transport.fetch_global()));
+                }
+                Cmd::Submit(local, meta) => {
+                    let _ = self.reply_tx.send(Reply::Acked(transport.submit(local, &meta)));
+                }
+                Cmd::Finish => return transport.finish(),
+            }
+        }
+        transport.finish()
+    }
+}
+
+/// Pipeline accounting extracted when the run ends (folded into
+/// [`super::worker::WorkerRunSummary`] and `TransportStats`).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineAccounting {
+    /// Wall seconds the worker was blocked on the reply channel — the comm
+    /// time the pipeline could *not* hide (snapshot waits, staleness
+    /// refetch waits, the final ack drain).
+    pub stall_s: f64,
+    /// Snapshots discarded and re-fetched because an ack had overtaken
+    /// them by more than the staleness bound.
+    pub refetches: usize,
+    /// Largest `last_acked − snapshot_version` gap actually trained on —
+    /// the observable the staleness-bound proptest pins (`≤ s` always).
+    pub max_staleness: usize,
+    /// Peak queued + executing comm operations.
+    pub max_inflight: usize,
+    /// Acknowledged submissions in ack order.
+    pub acks: Vec<AckRecord>,
+}
+
+/// The worker-facing end of the pipeline: non-blocking `prefetch` /
+/// `submit_async` enqueue work for the [`CommThread`]; `take_snapshot`
+/// blocks only for the double-buffer swap (and staleness refetches);
+/// `finish` drains outstanding acks and shuts the comm thread down.
+///
+/// This is deliberately *not* an implementation of [`Transport`]: the whole
+/// point is that its calls do not have blocking fetch/submit semantics.
+pub struct PipelinedTransport {
+    cmd_tx: Sender<Cmd>,
+    reply_rx: Receiver<Reply>,
+    staleness: usize,
+    /// Queued or executing commands (fetch + submit), for queue-depth stats.
+    inflight: usize,
+    fetches_outstanding: usize,
+    submits_outstanding: usize,
+    /// (loss, accuracy) for each queued submit, FIFO — acks pair up in
+    /// order because the comm thread preserves command order.
+    pending_meta: VecDeque<(f64, f64)>,
+    /// Newest server version seen in any ack — the staleness reference.
+    last_acked: usize,
+    acct: PipelineAccounting,
+}
+
+/// Create a connected ([`PipelinedTransport`], [`CommThread`]) pair. The
+/// caller spawns `CommThread::run` on a (scoped) thread with the real
+/// transport and drives the worker side from the training loop.
+pub fn pipeline(staleness: Staleness) -> (PipelinedTransport, CommThread) {
+    assert!(
+        staleness.is_pipelined(),
+        "Staleness(0) is the serialized loop — it must not construct a pipeline"
+    );
+    let (cmd_tx, cmd_rx) = channel();
+    let (reply_tx, reply_rx) = channel();
+    (
+        PipelinedTransport {
+            cmd_tx,
+            reply_rx,
+            staleness: staleness.0,
+            inflight: 0,
+            fetches_outstanding: 0,
+            submits_outstanding: 0,
+            pending_meta: VecDeque::new(),
+            last_acked: 0,
+            acct: PipelineAccounting::default(),
+        },
+        CommThread { cmd_rx, reply_tx },
+    )
+}
+
+impl PipelinedTransport {
+    fn enqueue(&mut self, cmd: Cmd) -> Result<()> {
+        self.inflight += 1;
+        self.acct.max_inflight = self.acct.max_inflight.max(self.inflight);
+        self.cmd_tx.send(cmd).map_err(|_| anyhow!("comm thread terminated"))
+    }
+
+    /// Issue the next `fetch_global` on the comm thread (non-blocking).
+    pub fn prefetch(&mut self) -> Result<()> {
+        self.fetches_outstanding += 1;
+        self.enqueue(Cmd::Fetch)
+    }
+
+    /// Queue the sealed local delta for submission on the comm thread and
+    /// return immediately — the next epoch starts while the push runs.
+    pub fn submit_async(&mut self, local: WeightSet, meta: SubmitMeta) -> Result<()> {
+        self.pending_meta.push_back((meta.loss, meta.accuracy));
+        self.submits_outstanding += 1;
+        self.enqueue(Cmd::Submit(local, meta))
+    }
+
+    /// Absorb one reply; returns the snapshot if it was a fetch reply.
+    fn absorb(&mut self, reply: Reply) -> Result<Option<(Arc<WeightSet>, usize)>> {
+        self.inflight -= 1;
+        match reply {
+            Reply::Fetched(r) => {
+                self.fetches_outstanding -= 1;
+                r.map(Some)
+            }
+            Reply::Acked(r) => {
+                self.submits_outstanding -= 1;
+                let ack = r?;
+                let (loss, accuracy) = self
+                    .pending_meta
+                    .pop_front()
+                    .expect("an ack implies a queued submit");
+                self.last_acked = self.last_acked.max(ack.version);
+                self.acct.acks.push(AckRecord {
+                    version: ack.version,
+                    loss,
+                    accuracy,
+                    at: Instant::now(),
+                });
+                Ok(None)
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<Option<(Arc<WeightSet>, usize)>> {
+        let reply = self
+            .reply_rx
+            .recv()
+            .map_err(|_| anyhow!("comm thread terminated"))?;
+        self.absorb(reply)
+    }
+
+    /// Absorb any acks (or stray fetch replies, discarded) that already
+    /// arrived, without blocking — keeps `last_acked` fresh.
+    fn drain_ready(&mut self) -> Result<()> {
+        loop {
+            match self.reply_rx.try_recv() {
+                Ok(reply) => {
+                    // A stray snapshot here can only be a refetch the bound
+                    // made obsolete; drop it (the Arc is just a refcount).
+                    let _ = self.absorb(reply)?;
+                }
+                Err(TryRecvError::Empty) => return Ok(()),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(anyhow!("comm thread terminated"))
+                }
+            }
+        }
+    }
+
+    /// Swap in the prefetched snapshot generation (double-buffer swap
+    /// point). Blocks until a snapshot satisfying the staleness bound is
+    /// available: if the prefetched one has fallen more than `s` versions
+    /// behind the newest acked version, it is discarded and re-fetched.
+    /// Issues the fetch itself if none is outstanding.
+    pub fn take_snapshot(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+        if self.fetches_outstanding == 0 {
+            self.prefetch()?;
+        }
+        let t0 = Instant::now();
+        let out = loop {
+            // Block for the snapshot (acks arriving meanwhile are absorbed).
+            let (snapshot, version) = loop {
+                if let Some(f) = self.recv()? {
+                    break f;
+                }
+            };
+            self.drain_ready()?;
+            let behind = self.last_acked.saturating_sub(version);
+            if behind <= self.staleness {
+                self.acct.max_staleness = self.acct.max_staleness.max(behind);
+                break (snapshot, version);
+            }
+            // Bound violated: the refetch is queued *after* whatever submit
+            // raised `last_acked`, so it must return a version ≥ it.
+            self.acct.refetches += 1;
+            self.prefetch()?;
+        };
+        self.acct.stall_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Newest server version seen in any ack so far.
+    pub fn last_acked(&self) -> usize {
+        self.last_acked
+    }
+
+    /// Snapshots discarded for violating the staleness bound so far.
+    pub fn refetches(&self) -> usize {
+        self.acct.refetches
+    }
+
+    /// Largest staleness gap actually trained on so far.
+    pub fn max_staleness(&self) -> usize {
+        self.acct.max_staleness
+    }
+
+    /// Block until every queued submit is acked (stray prefetches are
+    /// drained and discarded), then stop the comm thread, which closes the
+    /// transport. Returns the pipeline's accounting.
+    pub fn finish(mut self) -> Result<PipelineAccounting> {
+        let t0 = Instant::now();
+        while self.submits_outstanding > 0 || self.fetches_outstanding > 0 {
+            let _ = self.recv()?;
+        }
+        self.acct.stall_s += t0.elapsed().as_secs_f64();
+        self.cmd_tx
+            .send(Cmd::Finish)
+            .map_err(|_| anyhow!("comm thread terminated"))?;
+        Ok(std::mem::take(&mut self.acct))
+    }
+
+    /// Like [`PipelinedTransport::finish`] but without waiting: used on the
+    /// error path, where dropping the command channel makes the comm thread
+    /// close the transport on its own.
+    pub fn abandon(self) -> PipelineAccounting {
+        self.acct
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outer::transport::{SubmitMode, TransportStats};
+    use crate::tensor::Tensor;
+
+    fn ws(vals: &[f32]) -> WeightSet {
+        WeightSet::new(vec![Tensor::from_vec(&[vals.len()], vals.to_vec())])
+    }
+
+    fn meta(base: usize) -> SubmitMeta {
+        SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 0.5,
+            loss: 1.0,
+            want_snapshot: false,
+        }
+    }
+
+    /// Scripted backend: every submit advances the version by `1 + jump`,
+    /// emulating `jump` concurrent peer updates landing with ours.
+    struct JumpTransport {
+        version: usize,
+        jump: usize,
+        stats: TransportStats,
+    }
+
+    impl Transport for JumpTransport {
+        fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+            self.stats.fetches += 1;
+            Ok((Arc::new(ws(&[self.version as f32])), self.version))
+        }
+
+        fn submit(&mut self, _local: WeightSet, _meta: &SubmitMeta) -> Result<SubmitAck> {
+            self.version += 1 + self.jump;
+            self.stats.submits += 1;
+            Ok(SubmitAck { version: self.version, snapshot: None })
+        }
+
+        fn stats(&self) -> TransportStats {
+            self.stats
+        }
+    }
+
+    #[test]
+    fn prefetch_submit_ack_round_trip() {
+        let mut t = JumpTransport { version: 0, jump: 0, stats: TransportStats::default() };
+        std::thread::scope(|scope| {
+            let (mut pipe, comm) = pipeline(Staleness(1));
+            let handle = scope.spawn(|| comm.run(&mut t));
+            let (snap, v0) = pipe.take_snapshot().unwrap();
+            assert_eq!(v0, 0);
+            assert_eq!(snap.tensors()[0].data(), &[0.0]);
+            pipe.prefetch().unwrap();
+            pipe.submit_async(ws(&[1.0]), meta(v0)).unwrap();
+            let (_, v1) = pipe.take_snapshot().unwrap();
+            // FIFO: the prefetch ran before the submit, so it still sees v0.
+            assert_eq!(v1, 0);
+            let acct = pipe.finish().unwrap();
+            handle.join().unwrap().unwrap();
+            assert_eq!(acct.acks.len(), 1);
+            assert_eq!(acct.acks[0].version, 1);
+            assert!(acct.max_inflight >= 2, "fetch and submit were queued together");
+        });
+        assert_eq!((t.stats.fetches, t.stats.submits), (2, 1));
+    }
+
+    /// When an ack overtakes the prefetched snapshot by more than `s`, the
+    /// snapshot is discarded and re-fetched — and the refetch, queued after
+    /// the submit that raised `last_acked`, comes back fresh.
+    #[test]
+    fn staleness_violation_triggers_refetch() {
+        let mut t = JumpTransport { version: 0, jump: 9, stats: TransportStats::default() };
+        std::thread::scope(|scope| {
+            let (mut pipe, comm) = pipeline(Staleness(1));
+            let handle = scope.spawn(|| comm.run(&mut t));
+            let (_, v0) = pipe.take_snapshot().unwrap();
+            assert_eq!(v0, 0);
+            pipe.prefetch().unwrap(); // still sees v0 (queued before the submit)
+            pipe.submit_async(ws(&[1.0]), meta(v0)).unwrap(); // acks v10
+            // Let the comm thread process both so the ack is visible when
+            // the stale snapshot is inspected.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let (_, v) = pipe.take_snapshot().unwrap();
+            assert_eq!(v, 10, "refetch must return the post-submit version");
+            assert_eq!(pipe.refetches(), 1);
+            assert_eq!(pipe.last_acked(), 10);
+            assert_eq!(pipe.max_staleness(), 0, "the stale snapshot was never returned");
+            pipe.finish().unwrap();
+            handle.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn within_bound_snapshot_is_accepted_and_recorded() {
+        let mut t = JumpTransport { version: 0, jump: 1, stats: TransportStats::default() };
+        std::thread::scope(|scope| {
+            let (mut pipe, comm) = pipeline(Staleness(2));
+            let handle = scope.spawn(|| comm.run(&mut t));
+            let (_, v0) = pipe.take_snapshot().unwrap();
+            pipe.prefetch().unwrap();
+            pipe.submit_async(ws(&[1.0]), meta(v0)).unwrap(); // acks v2
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let (_, v) = pipe.take_snapshot().unwrap();
+            assert_eq!(v, 0, "2 behind is within Staleness(2)");
+            assert_eq!(pipe.refetches(), 0);
+            assert_eq!(pipe.max_staleness(), 2);
+            pipe.finish().unwrap();
+            handle.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    fn finish_waits_for_outstanding_acks() {
+        struct SlowSubmit(TransportStats);
+        impl Transport for SlowSubmit {
+            fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+                Ok((Arc::new(ws(&[0.0])), 0))
+            }
+            fn submit(&mut self, _l: WeightSet, _m: &SubmitMeta) -> Result<SubmitAck> {
+                std::thread::sleep(std::time::Duration::from_millis(60));
+                Ok(SubmitAck { version: 1, snapshot: None })
+            }
+            fn stats(&self) -> TransportStats {
+                self.0
+            }
+        }
+        let mut t = SlowSubmit(TransportStats::default());
+        std::thread::scope(|scope| {
+            let (mut pipe, comm) = pipeline(Staleness(1));
+            let handle = scope.spawn(|| comm.run(&mut t));
+            pipe.submit_async(ws(&[1.0]), meta(0)).unwrap();
+            let t0 = Instant::now();
+            let acct = pipe.finish().unwrap();
+            assert!(t0.elapsed().as_secs_f64() >= 0.05, "finish returned before the ack");
+            assert_eq!(acct.acks.len(), 1);
+            assert!(acct.stall_s >= 0.05, "the final drain is a stall");
+            handle.join().unwrap().unwrap();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "serialized")]
+    fn zero_staleness_pipeline_rejected() {
+        let _ = pipeline(Staleness(0));
+    }
+}

@@ -53,6 +53,10 @@ struct ServerState {
     sync_wait_s: f64,
     /// Per-node busy proxy: fetch-reply sent → submission received.
     node_busy: Vec<f64>,
+    /// Per-node stall as seen from the server: the Eq. 8 barrier wait the
+    /// node's submit spent blocked (0 for AGWU). Worker-side comm stall and
+    /// overlap are only observable in the worker's own summary.
+    node_stall: Vec<f64>,
     claimed: Vec<bool>,
     /// Set when a handler dies mid-run so barrier waiters don't hang.
     aborted: bool,
@@ -79,6 +83,7 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
             round_meta: (0..opts.nodes).map(|_| None).collect(),
             sync_wait_s: 0.0,
             node_busy: vec![0.0; opts.nodes],
+            node_stall: vec![0.0; opts.nodes],
             claimed: vec![false; opts.nodes],
             aborted: false,
         }),
@@ -113,6 +118,7 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
 
     let mut st = shared.state.into_inner().unwrap();
     st.versions.sort_by_key(|v| v.version);
+    let nodes = opts.nodes;
     Ok(ClusterReport {
         strategy: opts.update,
         versions: st.versions,
@@ -120,6 +126,8 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
         sync_wait_s: st.sync_wait_s,
         wall_s,
         node_busy_s: st.node_busy,
+        node_stall_s: st.node_stall,
+        node_overlap_s: vec![0.0; nodes],
         final_weights: st.ps.into_global(),
     })
 }
@@ -188,6 +196,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     st.ps.comm.submit_wall_s += acct.submit_wall_s;
     st.sync_wait_s += acct.sync_wait_s;
     st.node_busy[node] += acct.busy_s;
+    st.node_stall[node] += acct.sync_wait_s;
     if result.is_err() {
         st.aborted = true;
         shared.round_cv.notify_all();
@@ -364,6 +373,9 @@ mod tests {
         assert!(report.comm.wire_bytes > 0, "sockets must move real bytes");
         assert_eq!(report.final_weights.tensors()[0].data(), &[2.0]);
         assert!(t.stats().wire_bytes > 0);
+        // Connection setup is accounted separately from transfer walls.
+        assert!(t.stats().connect_wall_s > 0.0);
+        assert!(t.stats().fetch_wall_s > 0.0);
     }
 
     #[test]

@@ -150,12 +150,21 @@ pub fn train_native(tc: &TrainConfig, cluster_cfg: &ClusterConfig) -> TrainRepor
     };
 
     let report = match tc.update {
+        // SGWU's Eq. 8 round barrier leaves nothing to overlap in-process
+        // (every node's next fetch waits for the installed round anyway),
+        // so the staleness knob applies to the asynchronous strategy only.
         UpdateStrategy::Sgwu => {
             cluster::run_sgwu(init, workers, &schedule, iterations, Some(&eval_hook))
         }
-        UpdateStrategy::Agwu => {
-            cluster::run_agwu(init, workers, &schedule, iterations, Some(&eval_hook))
-        }
+        UpdateStrategy::Agwu => cluster::run_async_pipelined(
+            init,
+            workers,
+            &schedule,
+            iterations,
+            Some(&eval_hook),
+            cluster::AsyncMode::Agwu,
+            super::pipeline::Staleness(cluster_cfg.staleness),
+        ),
     };
 
     let curve: Vec<CurvePoint> = report
@@ -256,6 +265,19 @@ mod tests {
         let report = train_native(&tc, &cluster);
         assert!(report.final_accuracy > 0.18, "acc={}", report.final_accuracy);
         assert!(report.sync_wait_s > 0.0, "SGWU with straggler must wait");
+    }
+
+    /// The pipelined path (staleness ≥ 1) reaches the same learning gate as
+    /// the serialized AGWU run it overlaps.
+    #[test]
+    fn train_native_agwu_pipelined_learns() {
+        let tc = quick_tc(UpdateStrategy::Agwu, PartitionStrategy::Udpa);
+        let cluster = ClusterConfig::homogeneous(2).with_staleness(1);
+        let report = train_native(&tc, &cluster);
+        assert!(!report.curve.is_empty());
+        assert!(report.final_accuracy > 0.18, "acc={}", report.final_accuracy);
+        assert_eq!(report.sync_wait_s, 0.0);
+        assert_eq!(report.cluster.node_overlap_s.len(), 2);
     }
 
     #[test]

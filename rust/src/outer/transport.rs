@@ -80,10 +80,26 @@ pub struct TransportStats {
     /// "transfer" is an `Arc` refcount bump.
     pub wire_bytes: u64,
     /// Wall seconds spent inside `fetch_global`, including any throttle.
+    /// Excludes connection setup — that is `connect_wall_s`.
     pub fetch_wall_s: f64,
     /// Wall seconds spent inside `submit` (for SGWU over TCP this includes
     /// the Eq. 8 barrier wait — the reply is the round release).
     pub submit_wall_s: f64,
+    /// Wall seconds establishing the endpoint (TCP connect + registration).
+    /// Kept out of the fetch/submit columns so per-operation stall
+    /// attribution is honest — one-time setup is not Eq. 11 transfer cost.
+    pub connect_wall_s: f64,
+    /// Wall seconds the *driver* was blocked waiting on communication.
+    /// For a serialized worker loop this is the whole fetch+submit wall;
+    /// a pipelined driver only counts the residual waits its double
+    /// buffering could not hide.
+    pub stall_wall_s: f64,
+    /// Wall seconds of communication hidden behind local compute
+    /// (comm wall − stall, clamped at 0). 0 for serialized drivers.
+    pub overlap_wall_s: f64,
+    /// Peak number of comm operations queued or executing on the comm
+    /// thread at once. 0 for serialized drivers (no queue exists).
+    pub max_inflight: usize,
 }
 
 impl TransportStats {
@@ -93,6 +109,10 @@ impl TransportStats {
         self.wire_bytes += other.wire_bytes;
         self.fetch_wall_s += other.fetch_wall_s;
         self.submit_wall_s += other.submit_wall_s;
+        self.connect_wall_s += other.connect_wall_s;
+        self.stall_wall_s += other.stall_wall_s;
+        self.overlap_wall_s += other.overlap_wall_s;
+        self.max_inflight = self.max_inflight.max(other.max_inflight);
     }
 }
 
@@ -189,14 +209,18 @@ pub struct TcpTransport {
 }
 
 impl TcpTransport {
-    /// Connect to `addr` ("host:port") and register as `node`.
+    /// Connect to `addr` ("host:port") and register as `node`. The setup
+    /// time (TCP connect + `Hello` registration write) is recorded in
+    /// `connect_wall_s`, separate from the per-operation wall columns.
     pub fn connect(addr: &str, node: usize) -> Result<Self> {
+        let t0 = Instant::now();
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connect to param server at {addr}"))?;
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
         let mut t = Self { reader, writer: BufWriter::new(stream), stats: TransportStats::default() };
         t.stats.wire_bytes += write_msg(&mut t.writer, &Msg::Hello { node: node as u32 })? as u64;
+        t.stats.connect_wall_s = t0.elapsed().as_secs_f64();
         Ok(t)
     }
 

@@ -15,6 +15,7 @@ use crate::nn::{Network, StepWorkspace, WeightPacks};
 use crate::tensor::WeightSet;
 use crate::util::threadpool::ThreadPool;
 
+use super::pipeline::{pipeline, AckRecord, Staleness};
 use super::transport::{SubmitMeta, SubmitMode, Transport, TransportStats};
 
 /// Result of one local epoch (one "iteration" in the paper's terms: a full
@@ -244,7 +245,17 @@ pub struct WorkerRunSummary {
     pub last_accuracy: f64,
     /// Pure local-training wall seconds (excludes fetch/submit).
     pub busy_s: f64,
-    /// This endpoint's measured communication accounting.
+    /// Largest `last_acked − snapshot_version` gap actually trained on
+    /// (0 for the serialized loop — it always trains on the version it
+    /// just fetched).
+    pub max_staleness: usize,
+    /// Prefetched snapshots discarded for violating the staleness bound.
+    pub staleness_refetches: usize,
+    /// Acknowledged submissions in ack order (version + local loss/acc).
+    pub ack_log: Vec<AckRecord>,
+    /// This endpoint's measured communication accounting. `stall_wall_s`
+    /// is comm time on the worker's critical path; `overlap_wall_s` is
+    /// comm time hidden behind training by the pipelined driver.
     pub stats: TransportStats,
 }
 
@@ -253,7 +264,32 @@ pub struct WorkerRunSummary {
 /// a remote server through `TcpTransport` (the `bptcnn worker` subcommand).
 /// In SGWU mode the Eq. 8 barrier is the transport's blocking submit: the
 /// call does not return until the server installed the whole round.
+///
+/// `Staleness(0)` runs the literal serialized loop — bit-identical to the
+/// pre-pipeline behavior (pinned by test). `Staleness(s ≥ 1)` moves all
+/// transport calls onto a comm thread ([`super::pipeline`]): the next
+/// snapshot prefetches and the sealed delta pushes while training runs,
+/// with the worker blocking only when a snapshot would be more than `s`
+/// versions behind the newest acked server version.
 pub fn drive_worker(
+    transport: &mut dyn Transport,
+    trainer: &mut dyn LocalTrainer,
+    schedule: &[Range<usize>],
+    iterations: usize,
+    mode: SubmitMode,
+    staleness: Staleness,
+    verbose: bool,
+) -> Result<WorkerRunSummary> {
+    if staleness.is_pipelined() {
+        drive_worker_pipelined(transport, trainer, schedule, iterations, mode, staleness, verbose)
+    } else {
+        drive_worker_serialized(transport, trainer, schedule, iterations, mode, verbose)
+    }
+}
+
+/// The PR-6 serialized loop, unchanged in call sequence: every transport
+/// wall second sits on the critical path and is accounted as stall.
+fn drive_worker_serialized(
     transport: &mut dyn Transport,
     trainer: &mut dyn LocalTrainer,
     schedule: &[Range<usize>],
@@ -262,15 +298,19 @@ pub fn drive_worker(
     verbose: bool,
 ) -> Result<WorkerRunSummary> {
     let mut busy = 0.0f64;
+    let mut stall = 0.0f64;
     let mut last_loss = f64::NAN;
     let mut last_accuracy = 0.0f64;
     let mut final_version = 0usize;
+    let mut ack_log = Vec::with_capacity(iterations);
     for iter in 0..iterations {
         // IDPA incremental allocation (batch `iter` of this node's column).
         if iter < schedule.len() {
             trainer.add_samples(schedule[iter].clone());
         }
+        let t = Instant::now();
         let (global, base) = transport.fetch_global()?;
+        stall += t.elapsed().as_secs_f64();
         let t = Instant::now();
         let out = trainer.train_epoch(global);
         busy += t.elapsed().as_secs_f64();
@@ -283,8 +323,16 @@ pub fn drive_worker(
             loss: out.loss,
             want_snapshot: false,
         };
+        let t = Instant::now();
         let ack = transport.submit(out.weights, &meta)?;
+        stall += t.elapsed().as_secs_f64();
         final_version = ack.version;
+        ack_log.push(AckRecord {
+            version: ack.version,
+            loss: out.loss,
+            accuracy: out.accuracy,
+            at: Instant::now(),
+        });
         if verbose {
             eprintln!(
                 "worker: iter {iter} -> v{final_version} loss {last_loss:.4} acc {last_accuracy:.3}"
@@ -292,13 +340,120 @@ pub fn drive_worker(
         }
     }
     transport.finish()?;
+    let mut stats = transport.stats();
+    stats.stall_wall_s += stall;
     Ok(WorkerRunSummary {
         iterations,
         final_version,
         last_loss,
         last_accuracy,
         busy_s: busy,
-        stats: transport.stats(),
+        max_staleness: 0,
+        staleness_refetches: 0,
+        ack_log,
+        stats,
+    })
+}
+
+/// The pipelined loop: the comm thread owns the transport; the worker
+/// thread swaps prefetched `Arc<WeightSet>` generations at epoch
+/// boundaries and seals each epoch's delta into an async push.
+fn drive_worker_pipelined(
+    transport: &mut dyn Transport,
+    trainer: &mut dyn LocalTrainer,
+    schedule: &[Range<usize>],
+    iterations: usize,
+    mode: SubmitMode,
+    staleness: Staleness,
+    verbose: bool,
+) -> Result<WorkerRunSummary> {
+    std::thread::scope(|scope| {
+        let (mut pipe, comm) = pipeline(staleness);
+        let comm_handle = scope.spawn(move || {
+            let result = comm.run(&mut *transport);
+            (result, transport.stats())
+        });
+
+        let mut busy = 0.0f64;
+        let mut last_loss = f64::NAN;
+        let mut last_accuracy = 0.0f64;
+        // Drive the loop in a closure so an early error still tears the
+        // pipeline down (dropping `pipe` hangs up the command channel and
+        // the comm thread closes the transport on its own).
+        let mut run = || -> Result<()> {
+            // Initial snapshot: nothing to overlap yet, a pure stall.
+            let mut current = Some(pipe.take_snapshot()?);
+            for iter in 0..iterations {
+                if iter < schedule.len() {
+                    trainer.add_samples(schedule[iter].clone());
+                }
+                // Double buffer: the next generation's fetch runs on the
+                // comm thread while this epoch trains. Queued before the
+                // epoch's submit, so FIFO keeps at most one submit in
+                // flight and never reorders the wire protocol.
+                let last_iter = iter + 1 == iterations;
+                if !last_iter {
+                    pipe.prefetch()?;
+                }
+                let (snapshot, base) = current.take().expect("snapshot swapped in");
+                let t = Instant::now();
+                let out = trainer.train_epoch(snapshot);
+                busy += t.elapsed().as_secs_f64();
+                last_loss = out.loss;
+                last_accuracy = out.accuracy;
+                let meta = SubmitMeta {
+                    mode,
+                    base,
+                    accuracy: out.accuracy,
+                    loss: out.loss,
+                    want_snapshot: false,
+                };
+                pipe.submit_async(out.weights, meta)?;
+                if verbose {
+                    eprintln!(
+                        "worker: iter {iter} async push from v{base} \
+                         loss {last_loss:.4} acc {last_accuracy:.3}"
+                    );
+                }
+                if !last_iter {
+                    // Swap generations (blocks only for the residual wait
+                    // the prefetch could not hide, or a staleness refetch).
+                    current = Some(pipe.take_snapshot()?);
+                }
+            }
+            Ok(())
+        };
+        let run_result = run();
+        let acct = match run_result {
+            Ok(()) => pipe.finish()?,
+            Err(e) => {
+                drop(pipe.abandon());
+                // Surface the comm thread's error if it has one — it is
+                // usually the root cause of the channel hangup.
+                let (comm_result, _) = comm_handle.join().expect("comm thread panicked");
+                comm_result?;
+                return Err(e);
+            }
+        };
+        let (comm_result, inner_stats) = comm_handle.join().expect("comm thread panicked");
+        comm_result?;
+
+        let mut stats = inner_stats;
+        stats.stall_wall_s += acct.stall_s;
+        stats.overlap_wall_s +=
+            (inner_stats.fetch_wall_s + inner_stats.submit_wall_s - acct.stall_s).max(0.0);
+        stats.max_inflight = stats.max_inflight.max(acct.max_inflight);
+        Ok(WorkerRunSummary {
+            iterations,
+            final_version: acct.acks.last().map(|a| a.version).unwrap_or(0),
+            last_loss,
+            last_accuracy,
+            busy_s: busy,
+            max_staleness: acct.max_staleness,
+            staleness_refetches: acct.refetches,
+            ack_log: acct.acks,
+            stats,
+        })
     })
 }
 
@@ -457,14 +612,108 @@ mod tests {
         let mut w = NativeTrainer::new(&cfg, ds, 0.2);
         let sched = vec![0..32];
         let summary =
-            drive_worker(&mut t, &mut w, &sched, 3, SubmitMode::Agwu, false).unwrap();
+            drive_worker(&mut t, &mut w, &sched, 3, SubmitMode::Agwu, Staleness(0), false)
+                .unwrap();
         assert_eq!(summary.iterations, 3);
         assert_eq!(summary.final_version, 3);
         assert_eq!((summary.stats.fetches, summary.stats.submits), (3, 3));
         assert!(summary.busy_s > 0.0);
         assert!(summary.last_loss.is_finite());
+        assert_eq!(summary.ack_log.len(), 3);
+        assert_eq!(summary.max_staleness, 0);
+        // Serialized driver: every comm second is stall, nothing overlaps.
+        assert_eq!(summary.stats.overlap_wall_s, 0.0);
+        assert_eq!(summary.stats.max_inflight, 0);
         drop(t);
         let ps = Arc::try_unwrap(ps).unwrap().into_inner().unwrap();
         assert_eq!(ps.version(), 3);
+    }
+
+    /// Pin the `Staleness(0)` path to the pre-pipeline call sequence: the
+    /// same trainer driven by a hand-rolled fetch → train → submit loop
+    /// must leave the server with bitwise-identical global weights.
+    #[test]
+    fn staleness_zero_is_bit_identical_to_hand_rolled_loop() {
+        use crate::outer::param_server::ParamServer;
+        use crate::outer::transport::InProcTransport;
+        use std::sync::Mutex;
+
+        let (cfg, ds) = setup();
+        let init = Network::init(&cfg, 6).weights;
+        let sched = vec![0..32, 32..48];
+        let iterations = 3usize;
+
+        let run_driver = || {
+            let ps = Arc::new(Mutex::new(ParamServer::new(init.clone(), 1)));
+            let mut t = InProcTransport::new(Arc::clone(&ps), 0);
+            let mut w = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2);
+            drive_worker(&mut t, &mut w, &sched, iterations, SubmitMode::Agwu, Staleness(0), false)
+                .unwrap();
+            drop(t);
+            Arc::try_unwrap(ps).unwrap().into_inner().unwrap().into_global()
+        };
+        let hand_rolled = || {
+            let ps = Arc::new(Mutex::new(ParamServer::new(init.clone(), 1)));
+            let mut t = InProcTransport::new(Arc::clone(&ps), 0);
+            let mut w = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2);
+            for iter in 0..iterations {
+                if iter < sched.len() {
+                    w.add_samples(sched[iter].clone());
+                }
+                let (global, base) = t.fetch_global().unwrap();
+                let out = w.train_epoch(global);
+                let meta = SubmitMeta {
+                    mode: SubmitMode::Agwu,
+                    base,
+                    accuracy: out.accuracy,
+                    loss: out.loss,
+                    want_snapshot: false,
+                };
+                t.submit(out.weights, &meta).unwrap();
+            }
+            t.finish().unwrap();
+            drop(t);
+            Arc::try_unwrap(ps).unwrap().into_inner().unwrap().into_global()
+        };
+
+        let a = run_driver();
+        let b = hand_rolled();
+        assert_eq!(a.tensors().len(), b.tensors().len());
+        for (ta, tb) in a.tensors().iter().zip(b.tensors().iter()) {
+            assert_eq!(ta.data(), tb.data(), "serialized driver diverged from PR-6 loop");
+        }
+    }
+
+    /// A single pipelined worker over `InProcTransport`: the comm thread
+    /// and double buffering must preserve the loop's learning behavior and
+    /// respect the staleness bound (trivially 0 for one node).
+    #[test]
+    fn drive_worker_pipelined_runs_and_respects_bound() {
+        use crate::outer::param_server::ParamServer;
+        use crate::outer::transport::InProcTransport;
+        use std::sync::Mutex;
+
+        let (cfg, ds) = setup();
+        let init = Network::init(&cfg, 6).weights;
+        let ps = Arc::new(Mutex::new(ParamServer::new(init, 1)));
+        let mut t = InProcTransport::new(Arc::clone(&ps), 0);
+        let mut w = NativeTrainer::new(&cfg, ds, 0.2);
+        let sched = vec![0..32];
+        let summary =
+            drive_worker(&mut t, &mut w, &sched, 4, SubmitMode::Agwu, Staleness(1), false)
+                .unwrap();
+        assert_eq!(summary.iterations, 4);
+        assert_eq!(summary.final_version, 4);
+        assert_eq!((summary.stats.fetches, summary.stats.submits), (4, 4));
+        assert_eq!(summary.ack_log.len(), 4);
+        // One worker: its own acks are the only version advances, and each
+        // prefetch is queued behind the previous submit, so a snapshot is
+        // never stale at all.
+        assert!(summary.max_staleness <= 1, "bound violated: {}", summary.max_staleness);
+        assert!(summary.stats.max_inflight >= 1);
+        assert!(summary.last_loss.is_finite());
+        drop(t);
+        let ps = Arc::try_unwrap(ps).unwrap().into_inner().unwrap();
+        assert_eq!(ps.version(), 4);
     }
 }

@@ -262,7 +262,8 @@ fn communication_matches_eq11_on_real_cluster() {
 #[test]
 fn tcp_loopback_agwu_three_workers_matches_inprocess() {
     use bptcnn::outer::{
-        drive_worker, run_agwu, schedule_columns, serve, ServeOptions, SubmitMode, TcpTransport,
+        drive_worker, run_agwu, schedule_columns, serve, ServeOptions, Staleness, SubmitMode,
+        TcpTransport,
     };
     use std::net::TcpListener;
 
@@ -287,8 +288,16 @@ fn tcp_loopback_agwu_three_workers_matches_inprocess() {
             std::thread::spawn(move || {
                 let mut t = TcpTransport::connect(&addr, node).unwrap();
                 let mut trainer = NativeTrainer::new(&cfg, ds, 0.2);
-                drive_worker(&mut t, &mut trainer, &column, iterations, SubmitMode::Agwu, false)
-                    .unwrap()
+                drive_worker(
+                    &mut t,
+                    &mut trainer,
+                    &column,
+                    iterations,
+                    SubmitMode::Agwu,
+                    Staleness(0),
+                    false,
+                )
+                .unwrap()
             })
         })
         .collect();
@@ -327,7 +336,8 @@ fn tcp_loopback_agwu_three_workers_matches_inprocess() {
 #[test]
 fn tcp_loopback_sgwu_bitwise_matches_inprocess() {
     use bptcnn::outer::{
-        drive_worker, run_sgwu, schedule_columns, serve, ServeOptions, SubmitMode, TcpTransport,
+        drive_worker, run_sgwu, schedule_columns, serve, ServeOptions, Staleness, SubmitMode,
+        TcpTransport,
     };
     use std::net::TcpListener;
 
@@ -353,8 +363,16 @@ fn tcp_loopback_sgwu_bitwise_matches_inprocess() {
             std::thread::spawn(move || {
                 let mut t = TcpTransport::connect(&addr, node).unwrap();
                 let mut trainer = NativeTrainer::new(&cfg, ds, 0.25);
-                drive_worker(&mut t, &mut trainer, &column, iterations, SubmitMode::Sgwu, false)
-                    .unwrap()
+                drive_worker(
+                    &mut t,
+                    &mut trainer,
+                    &column,
+                    iterations,
+                    SubmitMode::Sgwu,
+                    Staleness(0),
+                    false,
+                )
+                .unwrap()
             })
         })
         .collect();
@@ -376,4 +394,83 @@ fn tcp_loopback_sgwu_bitwise_matches_inprocess() {
     assert_eq!(report.comm.bytes, inproc.comm.bytes);
     let diff = report.final_weights.max_abs_diff(&inproc.final_weights);
     assert_eq!(diff, 0.0, "SGWU over TCP must be bit-identical, got max|Δw| = {diff}");
+}
+
+/// PR8 tentpole: the pipelined worker loop (comm on a background thread,
+/// snapshots allowed to lag ≤ 1 version) drives the same 3-worker AGWU
+/// deployment over loopback TCP and must clear the same gates as the
+/// serialized run: full Eq. 11 ledger, learning in the right direction, and
+/// a final weight set within the serialized test's tolerance of an
+/// in-process AGWU run — staleness changes interleaving, not convergence.
+#[test]
+fn tcp_loopback_pipelined_agwu_staleness1_matches_gates() {
+    use bptcnn::outer::{
+        drive_worker, run_agwu, schedule_columns, serve, ServeOptions, Staleness, SubmitMode,
+        TcpTransport,
+    };
+    use std::net::TcpListener;
+
+    let cfg = NetworkConfig::quickstart();
+    let ds = Arc::new(Dataset::synthetic(&cfg, 192, 0.3, 11));
+    let init = Network::init(&cfg, 11).weights;
+    let schedule = vec![vec![0..64, 64..128, 128..192]];
+    let (m, iterations) = (3usize, 3usize);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Agwu, verbose: false };
+    let server = {
+        let init = init.clone();
+        std::thread::spawn(move || serve(listener, init, opts))
+    };
+    let handles: Vec<_> = schedule_columns(&schedule, m)
+        .into_iter()
+        .enumerate()
+        .map(|(node, column)| {
+            let (addr, ds, cfg) = (addr.clone(), Arc::clone(&ds), cfg.clone());
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, node).unwrap();
+                let mut trainer = NativeTrainer::new(&cfg, ds, 0.2);
+                drive_worker(
+                    &mut t,
+                    &mut trainer,
+                    &column,
+                    iterations,
+                    SubmitMode::Agwu,
+                    Staleness(1),
+                    false,
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let summaries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let report = server.join().unwrap().unwrap();
+
+    // Same Eq. 11 ledger as the serialized deployment: the pipeline reorders
+    // transfers, it does not add or drop any.
+    assert_eq!(report.versions.len(), m * iterations);
+    assert_eq!(report.comm.submits, m * iterations);
+    assert!(report.comm.fetches >= m * iterations, "prefetches can only add fetches");
+    for s in &summaries {
+        assert_eq!(s.iterations, iterations);
+        assert_eq!(s.ack_log.len(), iterations, "one ack per submitted epoch");
+        assert!(s.max_staleness <= 1, "staleness bound violated: {}", s.max_staleness);
+        assert!(s.stats.connect_wall_s > 0.0, "TCP connect wall not attributed");
+        assert!(s.stats.wire_bytes > 0, "endpoint moved no bytes");
+    }
+    assert!(
+        summaries.iter().any(|s| s.stats.max_inflight >= 1),
+        "no worker ever had a request in flight — pipeline never overlapped"
+    );
+    let first = report.versions.first().unwrap().local_loss;
+    let last = report.versions.last().unwrap().local_loss;
+    assert!(last < first, "pipelined TCP AGWU did not learn: {first} -> {last}");
+
+    let workers: Vec<Box<dyn LocalTrainer>> = (0..m)
+        .map(|_| Box::new(NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2)) as Box<dyn LocalTrainer>)
+        .collect();
+    let inproc = run_agwu(init, workers, &schedule, iterations, None);
+    let diff = report.final_weights.max_abs_diff(&inproc.final_weights);
+    assert!(diff < 0.5, "pipelined TCP vs in-process AGWU diverged: max|Δw| = {diff}");
 }

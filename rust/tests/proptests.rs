@@ -840,3 +840,153 @@ fn prop_weightset_codec_bit_exact_and_rejects_corruption() {
         assert_true(decode_weight_set(&long).is_err(), "trailing byte accepted")
     });
 }
+
+/// PR8: the pipelined worker never trains on a snapshot more than `s`
+/// versions behind the newest version it has seen acked — for arbitrary
+/// staleness bounds, iteration counts, jittered comm timing, and a phantom
+/// peer racing its own AGWU updates into the server around this worker's
+/// transport calls. Also pinned: exactly one ack per epoch in strictly
+/// increasing version order, the Eq. 11 submit count is exact, and every
+/// fetch beyond one-per-epoch is an accounted staleness refetch.
+#[test]
+fn prop_pipelined_staleness_bound_holds_under_chaos() {
+    use bptcnn::outer::{
+        drive_worker, EpochOutcome, InProcTransport, LocalTrainer, Staleness, SubmitAck,
+        SubmitMeta, SubmitMode, Transport, TransportStats,
+    };
+    use std::sync::{Arc, Mutex};
+
+    /// In-process transport with deterministic chaos: jittered operation
+    /// timing, and a phantom peer (node 1) that lands its own AGWU updates
+    /// around this worker's operations — so the server version advances
+    /// underneath the prefetched snapshots, exactly the interleaving the
+    /// staleness bound exists to police.
+    struct ChaosTransport {
+        inner: InProcTransport,
+        ps: Arc<Mutex<ParamServer>>,
+        rng: u64,
+        /// Percent chance a phantom update brackets each operation.
+        phantom_pct: u64,
+        jitter_us_max: u64,
+    }
+
+    impl ChaosTransport {
+        fn next(&mut self) -> u64 {
+            let mut x = self.rng;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.rng = x;
+            x
+        }
+
+        fn chaos(&mut self) {
+            if self.jitter_us_max > 0 {
+                let us = self.next() % (self.jitter_us_max + 1);
+                std::thread::sleep(std::time::Duration::from_micros(us));
+            }
+            if self.next() % 100 < self.phantom_pct {
+                let mut ps = self.ps.lock().unwrap();
+                let (w, base) = ps.fetch(1);
+                ps.update_agwu(1, &w, base, 0.5);
+            }
+        }
+    }
+
+    impl Transport for ChaosTransport {
+        fn fetch_global(&mut self) -> anyhow::Result<(Arc<WeightSet>, usize)> {
+            self.chaos();
+            let out = self.inner.fetch_global();
+            self.chaos();
+            out
+        }
+
+        fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> anyhow::Result<SubmitAck> {
+            self.chaos();
+            let out = self.inner.submit(local, meta);
+            self.chaos();
+            out
+        }
+
+        fn stats(&self) -> TransportStats {
+            self.inner.stats()
+        }
+    }
+
+    /// Minimal trainer: bounded fake compute, deterministic weight nudge.
+    struct NudgeTrainer {
+        samples: usize,
+        spin_us: u64,
+    }
+
+    impl LocalTrainer for NudgeTrainer {
+        fn train_epoch(&mut self, start: Arc<WeightSet>) -> EpochOutcome {
+            let t0 = std::time::Instant::now();
+            if self.spin_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(self.spin_us));
+            }
+            let mut w = (*start).clone();
+            w.tensors_mut()[0].data_mut()[0] += 0.01;
+            EpochOutcome {
+                weights: w,
+                loss: 1.0,
+                accuracy: 0.5,
+                samples: self.samples.max(1),
+                compute_s: t0.elapsed().as_secs_f64(),
+            }
+        }
+        fn add_samples(&mut self, range: std::ops::Range<usize>) {
+            self.samples += range.len();
+        }
+        fn sample_count(&self) -> usize {
+            self.samples
+        }
+    }
+
+    prop::check("pipelined staleness bound", 40, |g| {
+        let s = g.usize_full(1, 3);
+        let iterations = g.usize_full(2, 6);
+        let init = WeightSet::new(vec![Tensor::zeros(&[8])]);
+        let ps = Arc::new(Mutex::new(ParamServer::new(init, 2)));
+        let mut t = ChaosTransport {
+            inner: InProcTransport::new(Arc::clone(&ps), 0),
+            ps: Arc::clone(&ps),
+            rng: g.u64(1, u64::MAX / 2) | 1,
+            phantom_pct: g.usize_full(0, 90) as u64,
+            jitter_us_max: g.usize_full(0, 200) as u64,
+        };
+        let mut trainer = NudgeTrainer { samples: 4, spin_us: g.usize_full(0, 200) as u64 };
+        let summary = drive_worker(
+            &mut t,
+            &mut trainer,
+            &[],
+            iterations,
+            SubmitMode::Agwu,
+            Staleness(s),
+            false,
+        )
+        .map_err(|e| format!("pipelined worker failed: {e}"))?;
+
+        assert_true(
+            summary.max_staleness <= s,
+            &format!("bound violated: trained {} behind with s={s}", summary.max_staleness),
+        )?;
+        assert_eq_msg(summary.ack_log.len(), iterations, "one ack per epoch")?;
+        for pair in summary.ack_log.windows(2) {
+            assert_true(
+                pair[0].version < pair[1].version,
+                &format!("acks out of order: v{} then v{}", pair[0].version, pair[1].version),
+            )?;
+        }
+        assert_eq_msg(summary.stats.submits, iterations, "Eq. 11 submit count exact")?;
+        assert_true(summary.stats.fetches >= iterations, "refetches can only add fetches")?;
+        assert_eq_msg(
+            summary.staleness_refetches,
+            summary.stats.fetches - iterations,
+            "every extra fetch is an accounted refetch",
+        )?;
+        drop(t);
+        let ps = Arc::try_unwrap(ps).unwrap().into_inner().unwrap();
+        assert_true(ps.version() >= iterations, "server version includes all submits")
+    });
+}
