@@ -101,7 +101,11 @@ fn main() {
 
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let opts = ServeOptions { nodes: 1, update: UpdateStrategy::Agwu, verbose: false };
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            ..ServeOptions::default()
+        };
         let server = {
             let init = init.clone();
             std::thread::spawn(move || serve(listener, init, opts))

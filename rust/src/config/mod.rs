@@ -195,6 +195,34 @@ impl UpdateStrategy {
     }
 }
 
+/// What the param server does when a worker's lease expires or its
+/// connection dies mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnFailure {
+    /// Degrade gracefully: survivors absorb the dead node's remaining IDPA
+    /// batches (AGWU) or the Eq. 8 barrier quorum shrinks (SGWU).
+    Continue,
+    /// Fail fast: any node loss aborts the whole run.
+    Abort,
+}
+
+impl OnFailure {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "continue" => Ok(Self::Continue),
+            "abort" => Ok(Self::Abort),
+            other => anyhow::bail!("unknown failure policy '{other}' (want continue|abort)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Continue => "continue",
+            Self::Abort => "abort",
+        }
+    }
+}
+
 /// Data partitioning strategy (§3.3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionStrategy {
@@ -404,6 +432,9 @@ mod tests {
         assert!(UpdateStrategy::parse("x").is_err());
         assert_eq!(PartitionStrategy::parse("idpa").unwrap(), PartitionStrategy::Idpa);
         assert_eq!(PartitionStrategy::parse("uniform").unwrap(), PartitionStrategy::Udpa);
+        assert_eq!(OnFailure::parse("continue").unwrap(), OnFailure::Continue);
+        assert_eq!(OnFailure::parse("Abort").unwrap(), OnFailure::Abort);
+        assert!(OnFailure::parse("retry").is_err());
     }
 
     #[test]

@@ -256,9 +256,12 @@ fn train_xla(
     })
 }
 
-/// Standalone parameter-server process: binds a socket, accepts exactly
-/// `--nodes` worker connections, serves the SGWU/AGWU update rules over the
-/// wire protocol, and prints the run's ClusterReport summary at the end.
+/// Standalone parameter-server process: binds a socket, accepts `--nodes`
+/// worker connections (re-admitting reconnects), serves the SGWU/AGWU
+/// update rules over the wire protocol, and prints the run's ClusterReport
+/// summary at the end. With `--on-failure continue` a dead worker's
+/// remaining IDPA batches are re-allocated to the survivors (AGWU) or the
+/// round quorum shrinks (SGWU) instead of aborting the run.
 fn cmd_param_server(argv: &[String]) -> i32 {
     let spec = Args::new(
         "bptcnn param-server",
@@ -273,6 +276,15 @@ fn cmd_param_server(argv: &[String]) -> i32 {
     .opt("update", "sgwu", "global weight update strategy: agwu|sgwu")
     .opt("nodes", "2", "number of worker processes to accept")
     .opt("seed", "42", "RNG seed for the initial weights (share with the workers)")
+    .opt("partition", "idpa", "data partitioning: idpa|udpa (must match the workers)")
+    .opt("samples", "512", "training samples (must match the workers)")
+    .opt("iterations", "4", "training iterations K (must match the workers)")
+    .opt("batches", "2", "IDPA batches A (must match the workers)")
+    .opt("on-failure", "abort", "worker-death policy: continue|abort")
+    .opt("lease-ms", "30000", "per-connection read/write deadline in ms (0 = none)")
+    .opt("checkpoint-dir", "", "directory for periodic latest.ckpt weight checkpoints")
+    .opt("checkpoint-every", "25", "checkpoint every this many installed versions")
+    .flag("resume", "restore weights/version from <checkpoint-dir>/latest.ckpt")
     .flag("verbose", "log every installed version")
     .flag(
         "expect-learning",
@@ -289,13 +301,55 @@ fn cmd_param_server(argv: &[String]) -> i32 {
         let nodes = p.usize("nodes")?;
         let listener = std::net::TcpListener::bind(p.str("listen"))?;
         let addr = listener.local_addr()?;
-        let init = Network::init(&network, p.u64("seed")?).weights;
+        let mut init = Network::init(&network, p.u64("seed")?).weights;
+        let mut init_version = 0usize;
+        let mut resumed = false;
+        let checkpoint_dir = p.str("checkpoint-dir");
+        if p.bool("resume") {
+            anyhow::ensure!(!checkpoint_dir.is_empty(), "--resume needs --checkpoint-dir");
+            match bptcnn::outer::read_checkpoint(std::path::Path::new(checkpoint_dir)) {
+                Ok((version, weights)) => {
+                    println!("resuming from checkpoint v{version}");
+                    init = weights;
+                    init_version = version as usize;
+                    resumed = true;
+                }
+                Err(e) => println!("no usable checkpoint ({e:#}); starting fresh"),
+            }
+        }
+        // Rebuild the per-node IDPA schedule the workers derive from the
+        // same flags, so a dead node's remaining batches can be re-allocated.
+        let tc = TrainConfig {
+            network: network.clone(),
+            update,
+            partition: PartitionStrategy::parse(p.str("partition"))?,
+            total_samples: p.usize("samples")?,
+            iterations: p.usize("iterations")?,
+            idpa_batches: p.usize("batches")?,
+            learning_rate: 0.2, // schedule shape does not depend on η
+            seed: p.u64("seed")?,
+        };
+        let cluster = ClusterConfig::homogeneous(nodes);
+        let (schedule, _totals, _iterations) = bptcnn::outer::build_schedule(&tc, &cluster);
+        let columns = bptcnn::outer::schedule_columns(&schedule, nodes);
         println!(
             "param-server listening on {addr} ({nodes} nodes, {}, {} params)",
             update.name(),
             network.param_count()
         );
-        let opts = bptcnn::outer::ServeOptions { nodes, update, verbose: p.bool("verbose") };
+        let opts = bptcnn::outer::ServeOptions {
+            nodes,
+            update,
+            verbose: p.bool("verbose"),
+            on_failure: bptcnn::config::OnFailure::parse(p.str("on-failure"))?,
+            lease: std::time::Duration::from_millis(p.u64("lease-ms")?),
+            checkpoint_dir: (!checkpoint_dir.is_empty())
+                .then(|| std::path::PathBuf::from(checkpoint_dir)),
+            checkpoint_every: p.usize("checkpoint-every")?,
+            init_version,
+            resumed,
+            schedule: Some(columns),
+        };
         let report = bptcnn::outer::serve(listener, init, opts)?;
         let mb = 1024.0 * 1024.0;
         println!(
@@ -309,6 +363,18 @@ fn cmd_param_server(argv: &[String]) -> i32 {
             report.wall_s,
             report.balance_index()
         );
+        if report.fault.any() {
+            println!(
+                "fault recovery: {} reconnects | {} leases expired | \
+                 {} batches ({} samples) re-allocated | {} checkpoints written, {} loaded",
+                report.fault.reconnects,
+                report.fault.leases_expired,
+                report.fault.reallocated_batches,
+                report.fault.reallocated_samples,
+                report.fault.checkpoints_written,
+                report.fault.checkpoints_loaded
+            );
+        }
         match (report.versions.first(), report.versions.last()) {
             (Some(first), Some(last)) => {
                 println!(
@@ -357,6 +423,11 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "0",
         "pipeline comm on a background thread; snapshots may lag ≤ s versions (0 = serialized)",
     )
+    .opt("retries", "4", "attempts per transport operation (reconnecting between tries)")
+    .opt("retry-backoff-ms", "50", "backoff before the first retry; doubles per retry")
+    .opt("io-timeout-ms", "30000", "socket read/write deadline in ms (0 = none)")
+    .opt("checkpoint-dir", "", "server checkpoint directory (for --resume)")
+    .flag("resume", "log the server checkpoint version before connecting")
     .flag("verbose", "log every iteration");
     let usage = spec.usage();
     let p = match handle(spec.parse(argv), &usage) {
@@ -401,23 +472,45 @@ fn cmd_worker(argv: &[String]) -> i32 {
             "worker {node}/{nodes} connecting to {addr} ({}, K={iterations})",
             update.name()
         );
-        let tcp = bptcnn::outer::TcpTransport::connect(addr, node)?;
+        if p.bool("resume") {
+            // The server owns the training state; a resuming worker only
+            // reports which version it expects to rejoin at.
+            let dir = p.str("checkpoint-dir");
+            anyhow::ensure!(!dir.is_empty(), "--resume needs --checkpoint-dir");
+            match bptcnn::outer::read_checkpoint(std::path::Path::new(dir)) {
+                Ok((version, _)) => println!("worker {node}: server checkpoint at v{version}"),
+                Err(e) => println!("worker {node}: no usable checkpoint ({e:#})"),
+            }
+        }
         let bw_mbs = p.f64("bandwidth-mbs")?;
         let latency_s = p.f64("latency-ms")? / 1e3;
         let staleness = bptcnn::outer::Staleness(p.usize("staleness")?);
         let verbose = p.bool("verbose");
-        let summary = if bw_mbs > 0.0 {
-            let model = bptcnn::outer::TransferModel::new(bw_mbs * 1e6, latency_s);
-            let mut t = bptcnn::outer::ThrottledTransport::new(tcp, model);
-            bptcnn::outer::drive_worker(
-                &mut t, &mut trainer, &column, iterations, mode, staleness, verbose,
-            )?
-        } else {
-            let mut t = tcp;
-            bptcnn::outer::drive_worker(
-                &mut t, &mut trainer, &column, iterations, mode, staleness, verbose,
-            )?
+        let policy = bptcnn::outer::RetryPolicy {
+            max_attempts: p.usize("retries")?.max(1),
+            base_backoff: std::time::Duration::from_millis(p.u64("retry-backoff-ms")?),
+            max_backoff: std::time::Duration::from_secs(2),
         };
+        let io_timeout = Some(std::time::Duration::from_millis(p.u64("io-timeout-ms")?));
+        // Every (re)connection goes through the same factory: a dead link is
+        // re-dialed with the same node id and the server replays the current
+        // global snapshot on the first fetch.
+        let addr_owned = addr.to_string();
+        let throttle = (bw_mbs > 0.0)
+            .then(|| bptcnn::outer::TransferModel::new(bw_mbs * 1e6, latency_s));
+        let connect: bptcnn::outer::ConnectFn = Box::new(move || {
+            let tcp =
+                bptcnn::outer::TcpTransport::connect_with_timeout(&addr_owned, node, io_timeout)?;
+            Ok(match throttle {
+                Some(model) => Box::new(bptcnn::outer::ThrottledTransport::new(tcp, model))
+                    as Box<dyn bptcnn::outer::Transport>,
+                None => Box::new(tcp) as Box<dyn bptcnn::outer::Transport>,
+            })
+        });
+        let mut t = bptcnn::outer::RetryingTransport::new(connect, policy);
+        let summary = bptcnn::outer::drive_worker(
+            &mut t, &mut trainer, &column, iterations, mode, staleness, verbose,
+        )?;
         let mb = 1024.0 * 1024.0;
         println!(
             "worker {node} done: v{} | loss {:.4} | acc {:.3} | busy {:.2} s | \
@@ -436,6 +529,12 @@ fn cmd_worker(argv: &[String]) -> i32 {
             summary.max_staleness,
             summary.staleness_refetches
         );
+        if summary.stats.fault.any() {
+            println!(
+                "worker {node} fault recovery: {} retries | {} reconnects",
+                summary.stats.fault.retries, summary.stats.fault.reconnects
+            );
+        }
         Ok(())
     };
     exit_on(run())

@@ -15,6 +15,7 @@ use std::time::Instant;
 use crate::config::UpdateStrategy;
 use crate::tensor::WeightSet;
 
+use super::fault::FaultStats;
 use super::param_server::{CommStats, ParamServer};
 use super::pipeline::Staleness;
 use super::transport::{InProcTransport, SubmitMeta, SubmitMode, Transport, TransportStats};
@@ -54,6 +55,10 @@ pub struct ClusterReport {
     /// Per-node comm seconds hidden behind local compute by the pipelined
     /// driver (0 everywhere for serialized runs).
     pub node_overlap_s: Vec<f64>,
+    /// Fault-recovery accounting (retries, reconnects, re-allocated IDPA
+    /// batches, checkpoints, expired leases). All zero for in-process runs
+    /// and for healthy multi-process runs.
+    pub fault: FaultStats,
     pub final_weights: WeightSet,
 }
 
@@ -204,6 +209,7 @@ pub fn run_sgwu(
         node_busy_s: node_busy,
         node_stall_s: node_stall,
         node_overlap_s: vec![0.0; m],
+        fault: FaultStats::default(),
         final_weights,
     }
 }
@@ -352,6 +358,7 @@ pub fn run_async_pipelined(
         node_busy_s: node_busy,
         node_stall_s: node_stall,
         node_overlap_s: vec![0.0; m],
+        fault: FaultStats::default(),
         final_weights,
     }
 }
@@ -442,6 +449,7 @@ fn run_async_drivers(
         node_busy_s: node_busy,
         node_stall_s: node_stall,
         node_overlap_s: node_overlap,
+        fault: FaultStats::default(),
         final_weights,
     }
 }

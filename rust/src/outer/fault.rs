@@ -1,0 +1,676 @@
+//! Fault tolerance for the outer layer: deterministic fault injection,
+//! bounded retry/reconnect, and atomic weight-set checkpointing.
+//!
+//! Three pieces ride the [`Transport`] seam established in `transport.rs`:
+//!
+//! - [`FaultyTransport`] is a decorator (like `ThrottledTransport`) that
+//!   injects *seeded, deterministic* faults — dropped operations, delayed
+//!   or duplicated frames, truncated payloads, and permanent mid-run peer
+//!   death — so chaos tests replay bit-for-bit from a seed.
+//! - [`RetryPolicy`] + [`RetryingTransport`] wrap a fallible transport
+//!   factory with bounded-attempt exponential backoff. A reconnect simply
+//!   re-runs the factory (for `TcpTransport` that re-sends the `Hello`
+//!   with the same node id; the server re-admits the session and replays
+//!   the current global snapshot), so a dropped connection costs one
+//!   retry, not the run.
+//! - [`write_checkpoint`] / [`read_checkpoint`] persist the global
+//!   `WeightSet` through the `BPWS` codec with write-to-temp +
+//!   `fs::rename`, so a crash mid-checkpoint never corrupts `latest.ckpt`.
+//!
+//! [`FaultStats`] counts every recovery event and is threaded through
+//! `TransportStats` into `ClusterReport`.
+
+use std::fs;
+use std::io::Write as _;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::wire::{decode_weight_set, encode_weight_set_into, encoded_len};
+use crate::tensor::WeightSet;
+
+use super::transport::{SubmitAck, SubmitMeta, Transport, TransportStats};
+
+/// Counters for every fault-recovery event in a run. Merged across nodes
+/// into `ClusterReport.fault`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Operations that failed and were retried (same or new connection).
+    pub retries: usize,
+    /// Successful re-connections after a connection was lost.
+    pub reconnects: usize,
+    /// IDPA batches moved from a dead node to survivors.
+    pub reallocated_batches: usize,
+    /// Samples contained in those re-allocated batches.
+    pub reallocated_samples: usize,
+    /// Checkpoints durably written (post-rename).
+    pub checkpoints_written: usize,
+    /// Checkpoints loaded at startup (`--resume`).
+    pub checkpoints_loaded: usize,
+    /// Worker leases that expired (heartbeat/read deadline missed).
+    pub leases_expired: usize,
+}
+
+impl FaultStats {
+    /// Fold another node's counters into this one.
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.retries += other.retries;
+        self.reconnects += other.reconnects;
+        self.reallocated_batches += other.reallocated_batches;
+        self.reallocated_samples += other.reallocated_samples;
+        self.checkpoints_written += other.checkpoints_written;
+        self.checkpoints_loaded += other.checkpoints_loaded;
+        self.leases_expired += other.leases_expired;
+    }
+
+    /// True if any recovery event fired.
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection
+// ---------------------------------------------------------------------------
+
+/// Which fault, if any, a given operation draws from the plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    None,
+    /// The operation fails as if the connection dropped.
+    Drop,
+    /// The frame is delayed by a deterministic amount before proceeding.
+    Delay,
+    /// A fetch re-delivers the previous snapshot without touching the peer.
+    Duplicate,
+    /// The payload arrives short — surfaces as a decode error.
+    Truncate,
+}
+
+/// Transport decorator injecting seeded, deterministic faults.
+///
+/// All randomness comes from an xorshift64 stream derived from the seed,
+/// so a given (seed, op sequence) replays the identical fault schedule.
+/// Probabilities are percentages checked in a fixed order per operation:
+/// kill, drop, truncate, duplicate (fetch only), delay.
+pub struct FaultyTransport<T: Transport> {
+    inner: T,
+    rng: u64,
+    drop_pct: u8,
+    delay_pct: u8,
+    delay: Duration,
+    duplicate_pct: u8,
+    truncate_pct: u8,
+    kill_after_ops: Option<usize>,
+    ops: usize,
+    last_fetch: Option<(Arc<WeightSet>, usize)>,
+}
+
+impl<T: Transport> FaultyTransport<T> {
+    /// Wrap `inner` with a fault plan seeded by `seed`. All fault rates
+    /// start at zero; enable them with the builder methods.
+    pub fn new(inner: T, seed: u64) -> Self {
+        FaultyTransport {
+            inner,
+            rng: seed.max(1),
+            drop_pct: 0,
+            delay_pct: 0,
+            delay: Duration::from_micros(200),
+            duplicate_pct: 0,
+            truncate_pct: 0,
+            kill_after_ops: None,
+            ops: 0,
+            last_fetch: None,
+        }
+    }
+
+    /// Percentage of operations that fail as a dropped connection.
+    pub fn with_drop_pct(mut self, pct: u8) -> Self {
+        self.drop_pct = pct.min(100);
+        self
+    }
+
+    /// Percentage of operations delayed, and the deterministic delay.
+    pub fn with_delay(mut self, pct: u8, delay: Duration) -> Self {
+        self.delay_pct = pct.min(100);
+        self.delay = delay;
+        self
+    }
+
+    /// Percentage of fetches that re-deliver the previous snapshot
+    /// (a duplicated frame) instead of consulting the peer.
+    pub fn with_duplicate_pct(mut self, pct: u8) -> Self {
+        self.duplicate_pct = pct.min(100);
+        self
+    }
+
+    /// Percentage of operations whose payload arrives truncated.
+    pub fn with_truncate_pct(mut self, pct: u8) -> Self {
+        self.truncate_pct = pct.min(100);
+        self
+    }
+
+    /// After `ops` successful operations the peer dies permanently:
+    /// every later operation fails.
+    pub fn with_kill_after_ops(mut self, ops: usize) -> Self {
+        self.kill_after_ops = Some(ops);
+        self
+    }
+
+    /// Unwrap the decorated transport.
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
+    }
+
+    fn pct(&mut self) -> u8 {
+        (self.next() % 100) as u8
+    }
+
+    /// Draw the fault for the next operation. `fetch` enables Duplicate.
+    fn draw(&mut self, fetch: bool) -> Result<Fault> {
+        if let Some(kill) = self.kill_after_ops {
+            if self.ops >= kill {
+                bail!("injected fault: peer died after {kill} ops");
+            }
+        }
+        self.ops += 1;
+        if self.pct() < self.drop_pct {
+            return Ok(Fault::Drop);
+        }
+        if self.pct() < self.truncate_pct {
+            return Ok(Fault::Truncate);
+        }
+        if fetch && self.pct() < self.duplicate_pct {
+            return Ok(Fault::Duplicate);
+        }
+        if self.pct() < self.delay_pct {
+            return Ok(Fault::Delay);
+        }
+        Ok(Fault::None)
+    }
+}
+
+impl<T: Transport> Transport for FaultyTransport<T> {
+    fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+        match self.draw(true)? {
+            Fault::Drop => bail!("injected fault: connection dropped during fetch"),
+            Fault::Truncate => bail!("injected fault: truncated global frame"),
+            Fault::Duplicate => {
+                if let Some((ws, v)) = &self.last_fetch {
+                    return Ok((Arc::clone(ws), *v));
+                }
+            }
+            Fault::Delay => std::thread::sleep(self.delay),
+            Fault::None => {}
+        }
+        let got = self.inner.fetch_global()?;
+        self.last_fetch = Some((Arc::clone(&got.0), got.1));
+        Ok(got)
+    }
+
+    fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> Result<SubmitAck> {
+        match self.draw(false)? {
+            Fault::Drop => bail!("injected fault: connection dropped during submit"),
+            Fault::Truncate => bail!("injected fault: truncated submit frame"),
+            Fault::Delay => std::thread::sleep(self.delay),
+            Fault::Duplicate | Fault::None => {}
+        }
+        self.inner.submit(local, meta)
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
+    }
+
+    fn take_reassigned(&mut self) -> Vec<Range<usize>> {
+        self.inner.take_reassigned()
+    }
+
+    fn heartbeat(&mut self) -> Result<()> {
+        self.inner.heartbeat()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retry / reconnect
+// ---------------------------------------------------------------------------
+
+/// Bounded-attempt exponential backoff. Fully deterministic: no jitter,
+/// no wall-clock randomness — `backoff(k)` is a pure function of `k`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (first try included). Must be ≥ 1.
+    pub max_attempts: usize,
+    /// Backoff before the first retry; doubles per subsequent retry.
+    pub base_backoff: Duration,
+    /// Ceiling on the per-retry backoff.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(50),
+            max_backoff: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to sleep before retry number `retry` (0-based):
+    /// `min(base · 2^retry, max)`.
+    pub fn backoff(&self, retry: u32) -> Duration {
+        let scaled = self
+            .base_backoff
+            .checked_mul(1u32.checked_shl(retry).unwrap_or(u32::MAX))
+            .unwrap_or(self.max_backoff);
+        scaled.min(self.max_backoff)
+    }
+}
+
+/// Factory that (re-)establishes a transport session. For TCP this is
+/// `TcpTransport::connect(addr, node)` — the node id identifies the
+/// session, so the server re-admits the worker and replays the current
+/// global snapshot on the first fetch.
+pub type ConnectFn = Box<dyn FnMut() -> Result<Box<dyn Transport>> + Send>;
+
+/// Transport wrapper that retries failed operations under a
+/// [`RetryPolicy`], reconnecting via the factory when the underlying
+/// session is lost. Stats of dead sessions are absorbed so nothing is
+/// lost across reconnects.
+pub struct RetryingTransport {
+    connect: ConnectFn,
+    policy: RetryPolicy,
+    inner: Option<Box<dyn Transport>>,
+    ever_connected: bool,
+    absorbed: TransportStats,
+    fault: FaultStats,
+}
+
+impl RetryingTransport {
+    /// Build from a session factory. The first session is established
+    /// lazily on the first operation (and does not count as a reconnect).
+    pub fn new(connect: ConnectFn, policy: RetryPolicy) -> Self {
+        assert!(policy.max_attempts >= 1, "retry policy needs >= 1 attempt");
+        RetryingTransport {
+            connect,
+            policy,
+            inner: None,
+            ever_connected: false,
+            absorbed: TransportStats::default(),
+            fault: FaultStats::default(),
+        }
+    }
+
+    /// Recovery counters accumulated so far.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.fault
+    }
+
+    fn ensure_inner(&mut self) -> Result<&mut Box<dyn Transport>> {
+        if self.inner.is_none() {
+            let session = (self.connect)().context("establish transport session")?;
+            if self.ever_connected {
+                self.fault.reconnects += 1;
+            }
+            self.ever_connected = true;
+            self.inner = Some(session);
+        }
+        Ok(self.inner.as_mut().expect("session just established"))
+    }
+
+    /// Tear down the current session, folding its stats into `absorbed`.
+    fn discard_inner(&mut self) {
+        if let Some(dead) = self.inner.take() {
+            self.absorbed.merge(&dead.stats());
+        }
+    }
+
+    fn with_retry<R>(
+        &mut self,
+        mut op: impl FnMut(&mut dyn Transport) -> Result<R>,
+    ) -> Result<R> {
+        let mut last_err = None;
+        for attempt in 0..self.policy.max_attempts {
+            if attempt > 0 {
+                self.fault.retries += 1;
+                std::thread::sleep(self.policy.backoff(attempt as u32 - 1));
+            }
+            let session = match self.ensure_inner() {
+                Ok(s) => s,
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            match op(session.as_mut()) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    // Assume the session is tainted: reconnect next attempt.
+                    self.discard_inner();
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("max_attempts >= 1").context(format!(
+            "operation failed after {} attempts",
+            self.policy.max_attempts
+        )))
+    }
+}
+
+impl Transport for RetryingTransport {
+    fn fetch_global(&mut self) -> Result<(Arc<WeightSet>, usize)> {
+        self.with_retry(|t| t.fetch_global())
+    }
+
+    fn submit(&mut self, local: WeightSet, meta: &SubmitMeta) -> Result<SubmitAck> {
+        let meta = *meta;
+        self.with_retry(move |t| t.submit(local.clone(), &meta))
+    }
+
+    fn stats(&self) -> TransportStats {
+        let mut s = self.absorbed;
+        if let Some(inner) = &self.inner {
+            s.merge(&inner.stats());
+        }
+        s.fault.merge(&self.fault);
+        s
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // Finishing a lost session is not worth reconnecting for.
+        if let Some(inner) = &mut self.inner {
+            inner.finish()?;
+        }
+        Ok(())
+    }
+
+    fn take_reassigned(&mut self) -> Vec<Range<usize>> {
+        match &mut self.inner {
+            Some(inner) => inner.take_reassigned(),
+            None => Vec::new(),
+        }
+    }
+
+    fn heartbeat(&mut self) -> Result<()> {
+        match &mut self.inner {
+            Some(inner) => inner.heartbeat(),
+            None => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing
+// ---------------------------------------------------------------------------
+
+/// Magic prefix of a checkpoint file.
+pub const CHECKPOINT_MAGIC: [u8; 4] = *b"BPCK";
+/// Checkpoint container format version.
+pub const CHECKPOINT_FORMAT: u16 = 1;
+/// Name of the newest checkpoint inside `--checkpoint-dir`.
+pub const CHECKPOINT_FILE: &str = "latest.ckpt";
+
+/// Path of the live checkpoint in `dir`.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(CHECKPOINT_FILE)
+}
+
+/// Durably write `ws` at global `version` into `dir/latest.ckpt`.
+///
+/// Layout: `"BPCK" | format u16 LE | version u64 LE | BPWS payload`.
+/// The bytes land in a temp file first and are `rename`d into place, so
+/// a crash at any point leaves either the old or the new checkpoint —
+/// never a torn one.
+pub fn write_checkpoint(dir: &Path, version: u64, ws: &WeightSet) -> Result<()> {
+    fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let mut buf = Vec::with_capacity(14 + encoded_len(ws));
+    buf.extend_from_slice(&CHECKPOINT_MAGIC);
+    buf.extend_from_slice(&CHECKPOINT_FORMAT.to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
+    encode_weight_set_into(ws, &mut buf);
+    let tmp = dir.join(format!(".ckpt-{version}.tmp"));
+    {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&buf)
+            .with_context(|| format!("write {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("sync {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, checkpoint_path(dir))
+        .with_context(|| format!("publish checkpoint in {}", dir.display()))?;
+    Ok(())
+}
+
+/// Load `dir/latest.ckpt`, returning the global version it was written
+/// at and the decoded `WeightSet` (bit-identical to what was written).
+pub fn read_checkpoint(dir: &Path) -> Result<(u64, WeightSet)> {
+    let path = checkpoint_path(dir);
+    let bytes =
+        fs::read(&path).with_context(|| format!("read checkpoint {}", path.display()))?;
+    ensure!(bytes.len() >= 14, "checkpoint too short: {} bytes", bytes.len());
+    ensure!(bytes[..4] == CHECKPOINT_MAGIC, "bad checkpoint magic");
+    let format = u16::from_le_bytes([bytes[4], bytes[5]]);
+    ensure!(
+        format == CHECKPOINT_FORMAT,
+        "unsupported checkpoint format {format} (expected {CHECKPOINT_FORMAT})"
+    );
+    let mut v = [0u8; 8];
+    v.copy_from_slice(&bytes[6..14]);
+    let version = u64::from_le_bytes(v);
+    let ws = decode_weight_set(&bytes[14..]).context("decode checkpoint payload")?;
+    Ok((version, ws))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outer::param_server::ParamServer;
+    use crate::outer::transport::{InProcTransport, SubmitMode};
+    use crate::tensor::Tensor;
+    use std::sync::Mutex;
+
+    fn ws(vals: &[f32]) -> WeightSet {
+        WeightSet::new(vec![Tensor::from_vec(&[vals.len()], vals.to_vec())])
+    }
+
+    fn agwu_meta(base: usize) -> SubmitMeta {
+        SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 0.5,
+            loss: 1.0,
+            want_snapshot: false,
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(65),
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(10));
+        assert_eq!(p.backoff(1), Duration::from_millis(20));
+        assert_eq!(p.backoff(2), Duration::from_millis(40));
+        assert_eq!(p.backoff(3), Duration::from_millis(65));
+        assert_eq!(p.backoff(31), Duration::from_millis(65));
+        assert_eq!(p.backoff(63), Duration::from_millis(65));
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_in_the_seed() {
+        let draw_seq = |seed: u64| {
+            let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[0.0]), 1)));
+            let mut t = FaultyTransport::new(InProcTransport::new(ps, 0), seed)
+                .with_drop_pct(30)
+                .with_duplicate_pct(30);
+            (0..32)
+                .map(|_| match t.fetch_global() {
+                    Ok(_) => 0u8,
+                    Err(_) => 1u8,
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draw_seq(7), draw_seq(7));
+        assert_ne!(draw_seq(7), draw_seq(8), "different seeds, same schedule");
+    }
+
+    #[test]
+    fn duplicate_redelivers_previous_snapshot() {
+        let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[1.0]), 1)));
+        let mut t = FaultyTransport::new(InProcTransport::new(Arc::clone(&ps), 0), 3)
+            .with_duplicate_pct(100);
+        // First fetch has nothing cached, so it reaches the server.
+        let (first, v0) = t.fetch_global().unwrap();
+        // Advance the real global behind the decorator's back.
+        {
+            let mut g = ps.lock().unwrap();
+            let _ = g.fetch(0);
+            let local = ws(&[9.0]);
+            g.update_agwu(0, &local, v0, 0.9);
+        }
+        // Duplicate frame: we must see the stale cached snapshot again.
+        let (second, v1) = t.fetch_global().unwrap();
+        assert_eq!(v1, v0);
+        assert_eq!(second.max_abs_diff(&first), 0.0);
+    }
+
+    #[test]
+    fn killed_peer_fails_every_operation() {
+        let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[0.0]), 1)));
+        let mut t = FaultyTransport::new(InProcTransport::new(ps, 0), 11).with_kill_after_ops(2);
+        assert!(t.fetch_global().is_ok());
+        assert!(t.fetch_global().is_ok());
+        assert!(t.fetch_global().is_err());
+        assert!(t.submit(ws(&[0.0]), &agwu_meta(0)).is_err());
+    }
+
+    #[test]
+    fn retrying_transport_reconnects_through_peer_death() {
+        // Each session dies after 3 ops; the retrying wrapper must keep
+        // reconnecting and complete 5 full fetch+submit epochs.
+        let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[0.0]), 1)));
+        let factory_ps = Arc::clone(&ps);
+        let connect: ConnectFn = Box::new(move || {
+            let inner = InProcTransport::new(Arc::clone(&factory_ps), 0);
+            Ok(Box::new(FaultyTransport::new(inner, 5).with_kill_after_ops(3)) as Box<dyn Transport>)
+        });
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+        };
+        let mut t = RetryingTransport::new(connect, policy);
+        for _ in 0..5 {
+            let (snap, base) = t.fetch_global().unwrap();
+            let mut local = (*snap).clone();
+            local.tensors_mut()[0].data_mut()[0] += 1.0;
+            t.submit(local, &agwu_meta(base)).unwrap();
+        }
+        let f = t.fault_stats();
+        assert!(f.reconnects >= 2, "expected reconnects, got {f:?}");
+        assert!(f.retries >= f.reconnects);
+        assert_eq!(ps.lock().unwrap().version(), 5);
+        // Absorbed stats survive session churn.
+        assert_eq!(t.stats().submits, 5);
+        assert_eq!(t.stats().fault.reconnects, f.reconnects);
+    }
+
+    #[test]
+    fn retrying_transport_gives_up_after_max_attempts() {
+        let connect: ConnectFn = Box::new(|| bail!("injected fault: endpoint unreachable"));
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+        };
+        let mut t = RetryingTransport::new(connect, policy);
+        let err = t.fetch_global().unwrap_err();
+        assert!(err.to_string().contains("3 attempts"), "{err:#}");
+        assert_eq!(t.fault_stats().retries, 2);
+        assert_eq!(t.fault_stats().reconnects, 0);
+    }
+
+    #[test]
+    fn checkpoint_round_trips_bit_identically() {
+        let dir = std::env::temp_dir().join(format!(
+            "bptcnn-ckpt-rt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let original = ws(&[1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e8]);
+        write_checkpoint(&dir, 42, &original).unwrap();
+        let (version, restored) = read_checkpoint(&dir).unwrap();
+        assert_eq!(version, 42);
+        let a: Vec<u32> = original.flatten().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = restored.flatten().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "checkpoint payload must be bit-identical");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_overwrite_is_atomic_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!(
+            "bptcnn-ckpt-atomic-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        write_checkpoint(&dir, 1, &ws(&[1.0])).unwrap();
+        write_checkpoint(&dir, 2, &ws(&[2.0])).unwrap();
+        let (version, restored) = read_checkpoint(&dir).unwrap();
+        assert_eq!(version, 2);
+        assert_eq!(restored.flatten(), vec![2.0]);
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n != CHECKPOINT_FILE)
+            .collect();
+        assert!(leftovers.is_empty(), "stray files: {leftovers:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_rejected() {
+        let dir = std::env::temp_dir().join(format!(
+            "bptcnn-ckpt-corrupt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        write_checkpoint(&dir, 7, &ws(&[1.0, 2.0])).unwrap();
+        let path = checkpoint_path(&dir);
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        fs::write(&path, &bytes).unwrap();
+        assert!(read_checkpoint(&dir).is_err());
+        // Truncated payload is rejected by the BPWS decoder, not ignored.
+        bytes[0] = b'B';
+        bytes.truncate(bytes.len() - 1);
+        fs::write(&path, &bytes).unwrap();
+        assert!(read_checkpoint(&dir).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -6,6 +6,7 @@
 //! top-level BPT-CNN trainer.
 
 pub mod cluster;
+pub mod fault;
 pub mod param_server;
 pub mod partition;
 pub mod pipeline;
@@ -19,13 +20,17 @@ pub use cluster::{
     run_agwu, run_async, run_async_pipelined, run_sgwu, schedule_columns, AllocationSchedule,
     AsyncMode, ClusterReport, VersionRecord,
 };
+pub use fault::{
+    read_checkpoint, write_checkpoint, ConnectFn, FaultStats, FaultyTransport, RetryPolicy,
+    RetryingTransport,
+};
 pub use param_server::{CommStats, ParamServer};
-pub use partition::{udpa_partition, IdpaPartitioner};
+pub use partition::{reallocate, udpa_partition, IdpaPartitioner};
 pub use pipeline::{pipeline, AckRecord, CommThread, PipelineAccounting, PipelinedTransport, Staleness};
 pub use server::{serve, ServeOptions};
 pub use trainer::{build_schedule, slowdown_factors, train_native, CurvePoint, TrainReport};
 pub use transport::{
-    InProcTransport, SubmitAck, SubmitMeta, SubmitMode, TcpTransport, ThrottledTransport,
-    TransferModel, Transport, TransportStats,
+    InProcTransport, ServerError, SubmitAck, SubmitMeta, SubmitMode, TcpTransport,
+    ThrottledTransport, TransferModel, Transport, TransportStats, DEFAULT_IO_TIMEOUT,
 };
 pub use worker::{drive_worker, EpochOutcome, LocalTrainer, NativeTrainer, WorkerRunSummary};

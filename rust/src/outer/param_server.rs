@@ -86,21 +86,32 @@ pub struct ParamServer {
     /// Per-node SGWU round buffer: submissions arriving one at a time (the
     /// transport path) are held here until all m parts of the round exist.
     sgwu_pending: Vec<Option<(WeightSet, f64)>>,
+    /// Nodes declared dead (lease expired / connection lost). Dead nodes
+    /// leave Eq. 9's denominator and the Eq. 8 barrier quorum.
+    dead: Vec<bool>,
     pub comm: CommStats,
 }
 
 impl ParamServer {
     pub fn new(init: WeightSet, nodes: usize) -> Self {
+        Self::with_version(init, nodes, 0)
+    }
+
+    /// Resume constructor: start from a checkpointed global set at
+    /// `version`, so AGWU base-version bookkeeping lines up with what
+    /// reconnecting workers last fetched.
+    pub fn with_version(init: WeightSet, nodes: usize, version: usize) -> Self {
         let global = Arc::new(init);
         let mut history = VecDeque::new();
-        history.push_back((0, Arc::clone(&global)));
+        history.push_back((version, Arc::clone(&global)));
         Self {
             global,
-            version: 0,
+            version,
             history,
             history_cap: 2 * nodes.max(1) + 2,
-            node_base: vec![0; nodes],
+            node_base: vec![version; nodes],
             sgwu_pending: (0..nodes).map(|_| None).collect(),
+            dead: vec![false; nodes],
             comm: CommStats::default(),
         }
     }
@@ -123,6 +134,36 @@ impl ParamServer {
         self.node_base.len()
     }
 
+    /// Nodes still counted live (Eq. 8 quorum / Eq. 9 denominator size).
+    pub fn live_nodes(&self) -> usize {
+        self.dead.iter().filter(|&&d| !d).count()
+    }
+
+    /// Declare `node` dead: it leaves the SGWU barrier quorum and Eq. 9's
+    /// denominator. Returns true the first time (so callers count each
+    /// death once); later calls are idempotent.
+    pub fn mark_dead(&mut self, node: usize) -> bool {
+        let first = !self.dead[node];
+        self.dead[node] = true;
+        first
+    }
+
+    /// Re-admit a previously dead node (reconnect with the same node id).
+    pub fn revive(&mut self, node: usize) {
+        self.dead[node] = false;
+    }
+
+    pub fn is_dead(&self, node: usize) -> bool {
+        self.dead[node]
+    }
+
+    /// Whether `node` already contributed its part to the current SGWU
+    /// round — a reconnect replaying its submission must be rejected, not
+    /// double-counted.
+    pub fn sgwu_has_part(&self, node: usize) -> bool {
+        self.sgwu_pending[node].is_some()
+    }
+
     /// Share the current global set with node `j` (counts communication,
     /// records the node's base version for staleness tracking). The
     /// returned snapshot is a refcount bump; a node that mutates it copies
@@ -142,6 +183,7 @@ impl ParamServer {
     /// backing storage, so an SGWU round pays no weight-set clone beyond
     /// the Eq.-11 transfers it models.
     pub fn update_sgwu(&mut self, locals: &[(WeightSet, f64)]) -> usize {
+        assert_eq!(locals.len(), self.nodes(), "SGWU needs all nodes");
         for (ws, _) in locals {
             self.comm.submits += 1;
             self.comm.bytes += ws.byte_size() as u64;
@@ -150,9 +192,11 @@ impl ParamServer {
     }
 
     /// Eq. 7 proper, without communication accounting (the callers above and
-    /// below count each part as it arrives).
+    /// below count each part as it arrives). A full healthy round carries m
+    /// parts; after a node death the surviving quorum's parts are averaged
+    /// instead (`--on-failure continue`).
     fn apply_sgwu(&mut self, locals: &[(WeightSet, f64)]) -> usize {
-        assert_eq!(locals.len(), self.nodes(), "SGWU needs all nodes");
+        assert!(!locals.is_empty(), "SGWU round needs at least one part");
         let total_q: f64 = locals.iter().map(|(_, q)| q.max(1e-9)).sum();
         let mut new_global = self.global.zeros_like();
         for (ws, q) in locals {
@@ -175,11 +219,31 @@ impl ParamServer {
             "node {node} submitted twice in one SGWU round"
         );
         self.sgwu_pending[node] = Some((local, accuracy));
-        if self.sgwu_pending.iter().any(|p| p.is_none()) {
+        self.sgwu_try_install()
+    }
+
+    /// Install the current SGWU round if its quorum is satisfied: every
+    /// *live* node has contributed. Called by `submit_sgwu` on each part
+    /// and by the server after a death shrinks the quorum (a round that was
+    /// only waiting on the dead node must not hang forever). A healthy
+    /// full round installs in node order — numerically identical to
+    /// [`ParamServer::update_sgwu`] with the full slice.
+    pub fn sgwu_try_install(&mut self) -> Option<usize> {
+        let waiting = self
+            .sgwu_pending
+            .iter()
+            .zip(self.dead.iter())
+            .any(|(p, &dead)| p.is_none() && !dead);
+        if waiting {
             return None;
         }
+        // Parts from nodes that died *after* submitting still count — the
+        // work is valid. An all-dead round with no parts installs nothing.
         let locals: Vec<(WeightSet, f64)> =
-            self.sgwu_pending.iter_mut().map(|p| p.take().unwrap()).collect();
+            self.sgwu_pending.iter_mut().filter_map(|p| p.take()).collect();
+        if locals.is_empty() {
+            return None;
+        }
         Some(self.apply_sgwu(&locals))
     }
 
@@ -198,13 +262,15 @@ impl ParamServer {
         let numer = (base_version as f64 / denom_scale).exp();
         let mut denom = 0.0;
         for (j, &k) in self.node_base.iter().enumerate() {
-            if j == node {
+            if j == node || self.dead[j] {
+                // Dead peers leave the denominator: their frozen base
+                // versions would otherwise attenuate survivors forever.
                 continue;
             }
             denom += (k as f64 / denom_scale).exp();
         }
         if denom <= 0.0 {
-            1.0 // single-node cluster: no attenuation
+            1.0 // single-node (or sole-survivor) cluster: no attenuation
         } else {
             numer / denom
         }
@@ -548,5 +614,87 @@ mod tests {
             let v = ps.update_sgwu(&[(ws(&[i as f32]), 1.0)]);
             assert_eq!(v, i);
         }
+    }
+
+    #[test]
+    fn dead_node_shrinks_sgwu_quorum() {
+        let mut ps = ParamServer::new(ws(&[0.0, 0.0]), 3);
+        assert_eq!(ps.submit_sgwu(0, ws(&[3.0, 0.0]), 0.5), None);
+        assert_eq!(ps.submit_sgwu(1, ws(&[0.0, 3.0]), 0.5), None);
+        // Node 2 dies; the round must complete with the two live parts.
+        assert!(ps.mark_dead(2));
+        assert!(!ps.mark_dead(2), "second death report is idempotent");
+        assert_eq!(ps.live_nodes(), 2);
+        assert_eq!(ps.sgwu_try_install(), Some(1));
+        assert_eq!(v0(&ps), vec![1.5, 1.5]);
+        // The next round only waits for the survivors.
+        assert_eq!(ps.submit_sgwu(0, ws(&[1.0, 1.0]), 1.0), None);
+        assert_eq!(ps.submit_sgwu(1, ws(&[1.0, 1.0]), 1.0), Some(2));
+    }
+
+    #[test]
+    fn dead_node_part_already_submitted_still_counts() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 2);
+        assert_eq!(ps.submit_sgwu(0, ws(&[4.0]), 0.5), None);
+        assert!(ps.sgwu_has_part(0));
+        // Node 0 dies after submitting; node 1's part completes the round
+        // and node 0's valid work is still averaged in.
+        ps.mark_dead(0);
+        assert_eq!(ps.submit_sgwu(1, ws(&[2.0]), 0.5), Some(1));
+        assert_eq!(v0(&ps), vec![3.0]);
+    }
+
+    #[test]
+    fn all_dead_round_installs_nothing() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 2);
+        ps.mark_dead(0);
+        ps.mark_dead(1);
+        assert_eq!(ps.sgwu_try_install(), None);
+        assert_eq!(ps.version(), 0);
+    }
+
+    #[test]
+    fn gamma_skips_dead_peers() {
+        let mut ps = ParamServer::new(ws(&[0.0]), 3);
+        // Advance so staleness matters; node 2 stays on base 0.
+        for _ in 0..10 {
+            let (w, k) = ps.fetch(1);
+            ps.update_agwu(1, &w, k, 1.0);
+        }
+        let g_with_dead_peer = {
+            let mut probe = ParamServer::new(ws(&[0.0]), 3);
+            for _ in 0..10 {
+                let (w, k) = probe.fetch(1);
+                probe.update_agwu(1, &w, k, 1.0);
+            }
+            probe.mark_dead(2);
+            probe.gamma(0, 0)
+        };
+        let g_all_live = ps.gamma(0, 0);
+        // Node 2's frozen base-0 term inflated the live denominator; with
+        // node 2 dead the attenuation must relax (γ grows).
+        assert!(
+            g_with_dead_peer > g_all_live,
+            "dead peer still attenuates: {g_with_dead_peer} vs {g_all_live}"
+        );
+        // Sole survivor: no peers left, γ degrades to 1.
+        let mut solo = ParamServer::new(ws(&[0.0]), 2);
+        solo.mark_dead(1);
+        assert_eq!(solo.gamma(0, 0), 1.0);
+        // Revival restores the quorum.
+        solo.revive(1);
+        assert_eq!(solo.live_nodes(), 2);
+        assert!(!solo.is_dead(1));
+    }
+
+    #[test]
+    fn resume_constructor_restores_version() {
+        let mut ps = ParamServer::with_version(ws(&[5.0]), 2, 17);
+        assert_eq!(ps.version(), 17);
+        assert_eq!(v0(&ps), vec![5.0]);
+        let (_, k) = ps.fetch(0);
+        assert_eq!(k, 17);
+        let v = ps.update_agwu(0, &ws(&[6.0]), 17, 1.0);
+        assert_eq!(v, 18);
     }
 }

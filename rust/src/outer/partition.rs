@@ -189,6 +189,70 @@ pub fn udpa_partition(total_samples: usize, m: usize) -> Vec<usize> {
     (0..m).map(|j| base + usize::from(j < rem)).collect()
 }
 
+/// Re-allocate a dead node's remaining sample ranges over the survivors,
+/// proportionally to their measured throughput — the same
+/// capacity-follows-measurement rule IDPA's Eq. 4 applies at batch
+/// boundaries, reused as the failure-time scheduling event.
+///
+/// `ranges` are the dead node's unstarted sample ranges; `throughput[j]` is
+/// survivor j's measured rate (samples/s or any proportional score). Every
+/// sample is conserved exactly: the output's concatenated lengths sum to
+/// the input's. Non-positive or all-zero throughputs degrade to an equal
+/// split. Range boundaries are preserved (a range may be *split* across
+/// survivors, but never merged), so each re-assigned piece still maps to a
+/// contiguous run of the original IDPA batch.
+pub fn reallocate(
+    ranges: &[std::ops::Range<usize>],
+    throughput: &[f64],
+) -> Vec<Vec<std::ops::Range<usize>>> {
+    let m = throughput.len();
+    assert!(m >= 1, "need at least one survivor");
+    let total: usize = ranges.iter().map(|r| r.len()).sum();
+    let mut out = vec![Vec::new(); m];
+    if total == 0 {
+        return out;
+    }
+    let positive_sum: f64 = throughput.iter().filter(|&&t| t > 0.0).sum();
+    let shares: Vec<f64> = if positive_sum > 0.0 {
+        throughput.iter().map(|&t| t.max(0.0) / positive_sum).collect()
+    } else {
+        vec![1.0 / m as f64; m]
+    };
+    // Per-survivor sample quotas: floor of the proportional share, with the
+    // remainder going to the largest shares first (exact conservation).
+    let mut quotas: Vec<usize> = shares.iter().map(|s| (s * total as f64).floor() as usize).collect();
+    let mut assigned: usize = quotas.iter().sum();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| shares[b].partial_cmp(&shares[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut i = 0;
+    while assigned < total {
+        quotas[order[i % m]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // Walk the ranges, carving each survivor's quota off the front.
+    let mut pending = ranges.iter().cloned();
+    let mut current: Option<std::ops::Range<usize>> = None;
+    for (j, &quota) in quotas.iter().enumerate() {
+        let mut need = quota;
+        while need > 0 {
+            let mut r = match current.take().or_else(|| pending.next()) {
+                Some(r) if !r.is_empty() => r,
+                Some(_) => continue,
+                None => unreachable!("quotas sum to the total sample count"),
+            };
+            let take = need.min(r.len());
+            out[j].push(r.start..r.start + take);
+            r.start += take;
+            need -= take;
+            if !r.is_empty() {
+                current = Some(r);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,5 +370,46 @@ mod tests {
         p.first_batch();
         p.next_batch(&[1.0, 1.0]);
         p.next_batch(&[1.0, 1.0]);
+    }
+
+    fn total_len(parts: &[Vec<std::ops::Range<usize>>]) -> usize {
+        parts.iter().flatten().map(|r| r.len()).sum()
+    }
+
+    #[test]
+    fn reallocate_conserves_every_sample() {
+        let ranges = vec![100..250, 400..401, 900..1000];
+        let parts = reallocate(&ranges, &[3.0, 1.0, 2.0]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(total_len(&parts), 251);
+        // Re-assigned pieces tile the original ranges exactly: sorted by
+        // start, they reproduce the input sample set.
+        let mut all: Vec<std::ops::Range<usize>> = parts.iter().flatten().cloned().collect();
+        all.sort_by_key(|r| r.start);
+        let covered: Vec<usize> = all.iter().flat_map(|r| r.clone()).collect();
+        let expect: Vec<usize> = ranges.iter().flat_map(|r| r.clone()).collect();
+        assert_eq!(covered, expect);
+    }
+
+    #[test]
+    fn reallocate_follows_measured_throughput() {
+        let parts = reallocate(&[0..1000], &[3.0, 1.0]);
+        let n0 = total_len(&parts[..1]);
+        assert!((740..=760).contains(&n0), "fast survivor got {n0}/1000");
+    }
+
+    #[test]
+    fn reallocate_zero_throughput_degrades_to_equal_split() {
+        let parts = reallocate(&[0..90], &[0.0, 0.0, -1.0]);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.iter().map(|r| r.len()).sum()).collect();
+        assert_eq!(sizes, vec![30, 30, 30]);
+    }
+
+    #[test]
+    fn reallocate_empty_input_yields_empty_parts() {
+        let parts = reallocate(&[], &[1.0, 2.0]);
+        assert!(parts.iter().all(|p| p.is_empty()));
+        let parts = reallocate(&[5..5], &[1.0]);
+        assert!(parts[0].is_empty());
     }
 }

@@ -36,9 +36,10 @@
 //! for epoch `i+1` reflects everything up to this worker's `submit_{i-1}`.
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -88,7 +89,11 @@ enum Cmd {
 }
 
 enum Reply {
-    Fetched(Result<(Arc<WeightSet>, usize)>),
+    /// A fetch result plus any sample ranges the server re-allocated to
+    /// this node (drained from the transport right after the fetch, so
+    /// they survive even if the snapshot itself is later discarded as
+    /// stale).
+    Fetched(Result<(Arc<WeightSet>, usize)>, Vec<Range<usize>>),
     Acked(Result<SubmitAck>),
 }
 
@@ -101,24 +106,37 @@ pub struct CommThread {
     reply_tx: Sender<Reply>,
 }
 
+/// How long the comm thread sits idle (no queued command) before sending a
+/// keep-alive [`Transport::heartbeat`] — long local epochs must not let the
+/// server's per-connection lease expire.
+pub const HEARTBEAT_IDLE: Duration = Duration::from_millis(500);
+
 impl CommThread {
     /// Drain commands until [`Cmd::Finish`] (or channel hangup, e.g. the
     /// worker bailed on an error) and then close the transport. Send
     /// failures on the reply channel are ignored: they only mean the worker
     /// already gave up, and the loop still finishes the transport politely.
+    /// While the queue is idle (the trainer is mid-epoch) a heartbeat keeps
+    /// the server lease alive; heartbeat errors are swallowed — a real
+    /// failure resurfaces on the next fetch or submit.
     pub fn run(self, transport: &mut dyn Transport) -> Result<()> {
-        while let Ok(cmd) = self.cmd_rx.recv() {
-            match cmd {
-                Cmd::Fetch => {
-                    let _ = self.reply_tx.send(Reply::Fetched(transport.fetch_global()));
+        loop {
+            match self.cmd_rx.recv_timeout(HEARTBEAT_IDLE) {
+                Ok(Cmd::Fetch) => {
+                    let fetched = transport.fetch_global();
+                    let gained = transport.take_reassigned();
+                    let _ = self.reply_tx.send(Reply::Fetched(fetched, gained));
                 }
-                Cmd::Submit(local, meta) => {
+                Ok(Cmd::Submit(local, meta)) => {
                     let _ = self.reply_tx.send(Reply::Acked(transport.submit(local, &meta)));
                 }
-                Cmd::Finish => return transport.finish(),
+                Ok(Cmd::Finish) => return transport.finish(),
+                Err(RecvTimeoutError::Timeout) => {
+                    let _ = transport.heartbeat();
+                }
+                Err(RecvTimeoutError::Disconnected) => return transport.finish(),
             }
         }
-        transport.finish()
     }
 }
 
@@ -162,6 +180,9 @@ pub struct PipelinedTransport {
     pending_meta: VecDeque<(f64, f64)>,
     /// Newest server version seen in any ack — the staleness reference.
     last_acked: usize,
+    /// Sample ranges the server re-allocated to this node (a dead peer's
+    /// remaining IDPA batches), accumulated across fetch replies.
+    reassigned: Vec<Range<usize>>,
     acct: PipelineAccounting,
 }
 
@@ -185,6 +206,7 @@ pub fn pipeline(staleness: Staleness) -> (PipelinedTransport, CommThread) {
             submits_outstanding: 0,
             pending_meta: VecDeque::new(),
             last_acked: 0,
+            reassigned: Vec::new(),
             acct: PipelineAccounting::default(),
         },
         CommThread { cmd_rx, reply_tx },
@@ -216,8 +238,9 @@ impl PipelinedTransport {
     fn absorb(&mut self, reply: Reply) -> Result<Option<(Arc<WeightSet>, usize)>> {
         self.inflight -= 1;
         match reply {
-            Reply::Fetched(r) => {
+            Reply::Fetched(r, gained) => {
                 self.fetches_outstanding -= 1;
+                self.reassigned.extend(gained);
                 r.map(Some)
             }
             Reply::Acked(r) => {
@@ -300,6 +323,12 @@ impl PipelinedTransport {
     /// Newest server version seen in any ack so far.
     pub fn last_acked(&self) -> usize {
         self.last_acked
+    }
+
+    /// Drain the sample ranges the server re-allocated to this node (a dead
+    /// peer's remaining IDPA batches, piggybacked on fetch replies).
+    pub fn take_reassigned(&mut self) -> Vec<Range<usize>> {
+        std::mem::take(&mut self.reassigned)
     }
 
     /// Snapshots discarded for violating the staleness bound so far.

@@ -1,45 +1,126 @@
 //! Standalone parameter-server service: the §3.2.1 server node as a real
-//! process. An accept loop takes one TCP connection per computing node,
-//! each served by its own handler thread against the shared [`ParamServer`]
-//! — the Eq. 7/Eq. 10 update rules run unchanged; only the node ↔ server
-//! link is a socket instead of an `Arc` bump.
+//! process. An accept loop hands each TCP connection to a handler thread
+//! serving the shared [`ParamServer`] — the Eq. 7/Eq. 10 update rules run
+//! unchanged; only the node ↔ server link is a socket instead of an `Arc`
+//! bump.
 //!
 //! SGWU's Eq. 8 barrier falls out of the protocol: a round part's `Ack` is
 //! not written until the last node of the round arrives and the round is
 //! installed, so the blocked socket *is* the synchronization wait (accounted
 //! in `sync_wait_s` exactly like the in-process runner does).
 //!
-//! The service produces the same [`ClusterReport`] as the in-process
-//! cluster: version log with per-submission loss/accuracy, Eq. 11 comm
-//! accounting (logical bytes plus measured wire bytes and handling time),
-//! per-node busy proxies (fetch-reply → submit-arrival spans), and the
-//! final global weight set.
+//! # Failure model
+//!
+//! Every connection carries a read/write deadline of [`ServeOptions::lease`]
+//! — a peer that goes silent longer than its lease is declared dead (a hung
+//! socket can no longer wedge the server). Worker death is a *scheduling
+//! event*, not an error, when `--on-failure continue`:
+//!
+//! * **AGWU** — the run continues with the survivors; the dead node's
+//!   remaining IDPA batches are re-allocated across survivors proportional
+//!   to their measured epoch throughput ([`super::partition::reallocate`])
+//!   and delivered piggybacked on their next fetch replies.
+//! * **SGWU** — the Eq. 8 barrier quorum shrinks to the live nodes, so a
+//!   round waiting only on the dead peer installs immediately.
+//!
+//! A worker reconnecting with the same node id is re-admitted (its old
+//! session is superseded) and replays the current global snapshot with its
+//! first fetch. Protocol violations (bad hello, wrong update mode, decode
+//! rejections) are never survivable: they get an `Error` frame and abort
+//! the run regardless of policy.
+//!
+//! With `--checkpoint-dir`, every `--checkpoint-every`-th installed version
+//! is persisted through [`super::fault::write_checkpoint`] (atomic
+//! rename-on-write), and `--resume` restarts from `latest.ckpt`.
 
+use std::io::Read;
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::UpdateStrategy;
+use crate::config::{OnFailure, UpdateStrategy};
 use crate::tensor::WeightSet;
 
-use super::cluster::{ClusterReport, VersionRecord};
+use super::cluster::{AllocationSchedule, ClusterReport, VersionRecord};
+use super::fault::{write_checkpoint, FaultStats};
 use super::param_server::ParamServer;
-use super::transport::SubmitMode;
+use super::partition::reallocate;
+use super::transport::{SubmitMode, DEFAULT_IO_TIMEOUT};
 use super::wire::{read_msg, write_msg, Msg};
 
 /// Configuration of one serving run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServeOptions {
-    /// Number of computing nodes; the accept loop takes exactly this many
-    /// connections and the run ends when every node sent `Done`.
+    /// Number of computing nodes; the run ends when every node slot has
+    /// finished (or, under `OnFailure::Continue`, finished or died).
     pub nodes: usize,
     /// Update rule this server enforces: SGWU runs reject AGWU submissions
     /// and vice versa (`Plain` submissions ride under `Agwu`).
     pub update: UpdateStrategy,
     /// Log every installed version to stderr.
     pub verbose: bool,
+    /// Policy when a worker's connection dies or its lease expires.
+    pub on_failure: OnFailure,
+    /// Per-connection read/write deadline; a peer silent for longer is
+    /// declared dead. Zero disables the deadline (block forever).
+    pub lease: Duration,
+    /// Directory receiving periodic `latest.ckpt` weight checkpoints.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint every this many installed versions (0 = never).
+    pub checkpoint_every: usize,
+    /// Global version the initial weights correspond to (nonzero when
+    /// resuming from a checkpoint).
+    pub init_version: usize,
+    /// Whether `init` came from a loaded checkpoint (accounted in
+    /// [`FaultStats::checkpoints_loaded`]).
+    pub resumed: bool,
+    /// Per-node IDPA sample schedule (one `Vec<Range>` per node, one range
+    /// per iteration). Needed to re-allocate a dead node's remaining
+    /// batches; without it, death under AGWU only shrinks the cluster.
+    pub schedule: Option<AllocationSchedule>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            verbose: false,
+            on_failure: OnFailure::Abort,
+            lease: DEFAULT_IO_TIMEOUT,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            init_version: 0,
+            resumed: false,
+            schedule: None,
+        }
+    }
+}
+
+/// Lifecycle of a node slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NodeStatus {
+    /// No connection has claimed this slot yet.
+    Unclaimed,
+    /// A live connection is serving this slot.
+    Active,
+    /// The node sent `Done`.
+    Done,
+    /// The node's connection died / lease expired.
+    Dead,
+}
+
+/// Lock a poisoned-or-not mutex: a handler that panicked while holding the
+/// state must not turn every other handler's next lock into an opaque
+/// poison panic — the shared state stays usable and the `aborted` flag
+/// (set by the panicking handler's error path or the supervisor) decides
+/// whether the run survives.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 struct ServerState {
@@ -52,13 +133,31 @@ struct ServerState {
     /// Eq. 8 synchronization wait accumulated across nodes (SGWU only).
     sync_wait_s: f64,
     /// Per-node busy proxy: fetch-reply sent → submission received.
+    /// Updated per submission so death-time re-allocation sees live values.
     node_busy: Vec<f64>,
     /// Per-node stall as seen from the server: the Eq. 8 barrier wait the
     /// node's submit spent blocked (0 for AGWU). Worker-side comm stall and
     /// overlap are only observable in the worker's own summary.
     node_stall: Vec<f64>,
-    claimed: Vec<bool>,
-    /// Set when a handler dies mid-run so barrier waiters don't hang.
+    /// Submissions per node — the epoch count behind the measured
+    /// throughput used for re-allocation.
+    node_submits: Vec<usize>,
+    status: Vec<NodeStatus>,
+    /// Session epoch per slot: bumped when a reconnect supersedes an old
+    /// connection, so the stale handler's death report is ignored.
+    session: Vec<u64>,
+    /// Re-allocated sample ranges awaiting delivery, piggybacked on each
+    /// survivor's next fetch reply.
+    pending_extras: Vec<Vec<Range<usize>>>,
+    /// Fault-recovery accounting for the final report.
+    fault: FaultStats,
+    /// Highest version already checkpointed (dedups concurrent triggers).
+    last_ckpt: u64,
+    /// When the most recent node death was declared — starts the reconnect
+    /// grace window once every node is dead.
+    last_death: Option<Instant>,
+    /// Set when the run must fail (protocol violation, all nodes dead, or
+    /// any death under `OnFailure::Abort`) so barrier waiters don't hang.
     aborted: bool,
 }
 
@@ -71,20 +170,38 @@ struct Shared {
 
 /// Serve one training run on an already-bound listener (bind to port 0 and
 /// read `listener.local_addr()` for ephemeral deployments). Blocks until
-/// all `opts.nodes` workers connected, ran and sent `Done`, then returns
-/// the run's [`ClusterReport`].
+/// every node slot finished — or died, under `OnFailure::Continue` — then
+/// returns the run's [`ClusterReport`].
 pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Result<ClusterReport> {
     ensure!(opts.nodes > 0, "param server needs at least one node");
+    if let Some(schedule) = &opts.schedule {
+        ensure!(
+            schedule.len() == opts.nodes,
+            "schedule covers {} nodes, server has {}",
+            schedule.len(),
+            opts.nodes
+        );
+    }
+    let nodes = opts.nodes;
     let shared = Arc::new(Shared {
         state: Mutex::new(ServerState {
-            ps: ParamServer::new(init, opts.nodes),
+            ps: ParamServer::with_version(init, nodes, opts.init_version),
             versions: Vec::new(),
             round: 0,
-            round_meta: (0..opts.nodes).map(|_| None).collect(),
+            round_meta: (0..nodes).map(|_| None).collect(),
             sync_wait_s: 0.0,
-            node_busy: vec![0.0; opts.nodes],
-            node_stall: vec![0.0; opts.nodes],
-            claimed: vec![false; opts.nodes],
+            node_busy: vec![0.0; nodes],
+            node_stall: vec![0.0; nodes],
+            node_submits: vec![0; nodes],
+            status: vec![NodeStatus::Unclaimed; nodes],
+            session: vec![0; nodes],
+            pending_extras: vec![Vec::new(); nodes],
+            fault: FaultStats {
+                checkpoints_loaded: usize::from(opts.resumed),
+                ..FaultStats::default()
+            },
+            last_ckpt: opts.init_version as u64,
+            last_death: None,
             aborted: false,
         }),
         round_cv: Condvar::new(),
@@ -92,14 +209,51 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
         opts,
     });
 
-    let mut handles = Vec::with_capacity(opts.nodes);
-    for _ in 0..opts.nodes {
-        let (stream, peer) = listener.accept().context("accept worker connection")?;
-        if opts.verbose {
-            eprintln!("param-server: worker connected from {peer}");
+    // Poll-accept so the listener stays open for reconnecting workers and
+    // the loop can notice completion/abort between connections.
+    listener.set_nonblocking(true).context("nonblocking listener")?;
+    let mut handles = Vec::with_capacity(nodes);
+    loop {
+        {
+            let mut st = lock_recover(&shared.state);
+            if st.aborted {
+                break;
+            }
+            let finished = st
+                .status
+                .iter()
+                .all(|s| matches!(s, NodeStatus::Done | NodeStatus::Dead));
+            if finished {
+                if st.status.iter().any(|s| *s == NodeStatus::Done) {
+                    break;
+                }
+                // Every node is dead: hold the listener open for a
+                // reconnect before declaring the run lost.
+                let grace = if shared.opts.lease.is_zero() {
+                    Duration::from_secs(2)
+                } else {
+                    shared.opts.lease * 2
+                };
+                let expired = st.last_death.map(|t| t.elapsed() >= grace).unwrap_or(true);
+                if expired {
+                    st.aborted = true;
+                    break;
+                }
+            }
         }
-        let sh = Arc::clone(&shared);
-        handles.push(std::thread::spawn(move || handle_conn(stream, sh)));
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if shared.opts.verbose {
+                    eprintln!("param-server: worker connected from {peer}");
+                }
+                let sh = Arc::clone(&shared);
+                handles.push(std::thread::spawn(move || handle_conn(stream, sh)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accept worker connection"),
+        }
     }
     drop(listener);
 
@@ -116,11 +270,26 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
     let wall_s = shared.t0.elapsed().as_secs_f64();
     ensure!(failures.is_empty(), "worker connections failed: {}", failures.join("; "));
 
-    let mut st = shared.state.into_inner().unwrap();
+    let mut st = shared.state.into_inner().unwrap_or_else(|e| e.into_inner());
+    ensure!(
+        !st.aborted,
+        "run aborted: every worker died before the run completed"
+    );
+    // Final checkpoint so a resumed deployment can pick up the end state.
+    if let Some(dir) = shared.opts.checkpoint_dir.as_ref() {
+        let version = st.ps.version() as u64;
+        if shared.opts.checkpoint_every > 0
+            && (version > st.last_ckpt || st.fault.checkpoints_written == 0)
+        {
+            match write_checkpoint(dir, version, st.ps.global()) {
+                Ok(()) => st.fault.checkpoints_written += 1,
+                Err(e) => eprintln!("param-server: final checkpoint failed: {e:#}"),
+            }
+        }
+    }
     st.versions.sort_by_key(|v| v.version);
-    let nodes = opts.nodes;
     Ok(ClusterReport {
-        strategy: opts.update,
+        strategy: shared.opts.update,
         versions: st.versions,
         comm: st.ps.comm.clone(),
         sync_wait_s: st.sync_wait_s,
@@ -128,6 +297,7 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
         node_busy_s: st.node_busy,
         node_stall_s: st.node_stall,
         node_overlap_s: vec![0.0; nodes],
+        fault: st.fault,
         final_weights: st.ps.into_global(),
     })
 }
@@ -140,15 +310,190 @@ struct ConnAcct {
     fetch_wall_s: f64,
     submit_wall_s: f64,
     sync_wait_s: f64,
-    busy_s: f64,
     last_fetch_reply: Option<Instant>,
 }
 
 /// Mark the run aborted and release any Eq. 8 barrier waiters so a dead
 /// peer can't hang the round.
 fn abort_run(shared: &Shared) {
-    shared.state.lock().unwrap().aborted = true;
+    lock_recover(&shared.state).aborted = true;
     shared.round_cv.notify_all();
+}
+
+/// The innermost `std::io::Error` of an error chain, if any — the marker
+/// distinguishing "the connection died" from a protocol violation.
+fn io_cause(e: &anyhow::Error) -> Option<&std::io::Error> {
+    e.chain().find_map(|c| c.downcast_ref::<std::io::Error>())
+}
+
+fn is_timeout(io: &std::io::Error) -> bool {
+    matches!(io.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Handle one node's death: shrink the SGWU quorum or re-allocate the
+/// node's remaining AGWU batches over the survivors. Idempotent per
+/// (node, session): a stale superseded handler reports nothing.
+fn declare_dead(shared: &Shared, node: usize, session: u64, lease_expired: bool) {
+    let mut st = lock_recover(&shared.state);
+    if st.session[node] != session || st.status[node] != NodeStatus::Active {
+        return; // superseded by a reconnect, or already resolved
+    }
+    st.status[node] = NodeStatus::Dead;
+    st.last_death = Some(Instant::now());
+    if lease_expired {
+        st.fault.leases_expired += 1;
+    }
+    if !st.ps.mark_dead(node) {
+        return;
+    }
+    if shared.opts.verbose {
+        let why = if lease_expired { "lease expired" } else { "connection lost" };
+        eprintln!("param-server: node {node} dead ({why})");
+    }
+    let update = shared.opts.update;
+    match update {
+        UpdateStrategy::Sgwu => {
+            // The quorum shrank: a round waiting only on this node must
+            // install now, not hang at the Eq. 8 barrier.
+            if let Some(v) = st.ps.sgwu_try_install() {
+                let at_s = shared.t0.elapsed().as_secs_f64();
+                let mut l_sum = 0.0f64;
+                let mut q_sum = 0.0f64;
+                let mut parts = 0usize;
+                for meta in st.round_meta.iter_mut() {
+                    if let Some((l, q)) = meta.take() {
+                        l_sum += l;
+                        q_sum += q;
+                        parts += 1;
+                    }
+                }
+                let m = parts.max(1) as f64;
+                st.versions.push(VersionRecord {
+                    version: v,
+                    node: usize::MAX,
+                    local_loss: l_sum / m,
+                    local_accuracy: q_sum / m,
+                    at_s,
+                    eval: None,
+                });
+                st.round += 1;
+            }
+        }
+        UpdateStrategy::Agwu => reallocate_dead_node(shared, &mut st, node),
+    }
+    drop(st);
+    shared.round_cv.notify_all();
+}
+
+/// Move a dead node's remaining schedule (plus its undelivered extras) onto
+/// the survivors, weighted by measured epoch throughput.
+fn reallocate_dead_node(shared: &Shared, st: &mut ServerState, node: usize) {
+    let mut remaining: Vec<Range<usize>> = Vec::new();
+    if let Some(schedule) = &shared.opts.schedule {
+        let done = st.node_submits[node].min(schedule[node].len());
+        remaining.extend(schedule[node][done..].iter().cloned());
+    }
+    remaining.append(&mut st.pending_extras[node]);
+    if remaining.is_empty() {
+        return;
+    }
+    let survivors: Vec<usize> = (0..shared.opts.nodes)
+        .filter(|&j| {
+            j != node && matches!(st.status[j], NodeStatus::Unclaimed | NodeStatus::Active)
+        })
+        .collect();
+    if survivors.is_empty() {
+        let lost: usize = remaining.iter().map(|r| r.len()).sum();
+        eprintln!(
+            "param-server: node {node} died with {lost} samples left and no \
+             survivor to absorb them"
+        );
+        return;
+    }
+    let throughput: Vec<f64> = survivors
+        .iter()
+        .map(|&j| {
+            if st.node_busy[j] > 0.0 {
+                st.node_submits[j] as f64 / st.node_busy[j]
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let batches = remaining.len();
+    let samples: usize = remaining.iter().map(|r| r.len()).sum();
+    let parts = reallocate(&remaining, &throughput);
+    for (slot, part) in survivors.iter().zip(parts) {
+        st.pending_extras[*slot].extend(part);
+    }
+    st.fault.reallocated_batches += batches;
+    st.fault.reallocated_samples += samples;
+    if shared.opts.verbose {
+        eprintln!(
+            "param-server: re-allocated {batches} batches ({samples} samples) \
+             from node {node} to {} survivors",
+            survivors.len()
+        );
+    }
+}
+
+/// Plan a periodic checkpoint for freshly installed `version`: dedups under
+/// the lock, returns the snapshot to persist once the lock is released.
+fn plan_checkpoint(
+    shared: &Shared,
+    st: &mut ServerState,
+    version: usize,
+) -> Option<(PathBuf, u64, Arc<WeightSet>)> {
+    let dir = shared.opts.checkpoint_dir.as_ref()?;
+    let every = shared.opts.checkpoint_every;
+    if every == 0 || version % every != 0 || version as u64 <= st.last_ckpt {
+        return None;
+    }
+    st.last_ckpt = version as u64;
+    Some((dir.clone(), version as u64, st.ps.global_arc()))
+}
+
+/// Persist a planned checkpoint (outside the state lock) and account it.
+fn run_checkpoint(shared: &Shared, plan: Option<(PathBuf, u64, Arc<WeightSet>)>) {
+    let Some((dir, version, snapshot)) = plan else { return };
+    match write_checkpoint(&dir, version, &snapshot) {
+        Ok(()) => {
+            lock_recover(&shared.state).fault.checkpoints_written += 1;
+            if shared.opts.verbose {
+                eprintln!("param-server: checkpointed v{version}");
+            }
+        }
+        Err(e) => eprintln!("param-server: checkpoint of v{version} failed: {e:#}"),
+    }
+}
+
+/// Send a registration/protocol rejection: an `Error` frame, a short drain
+/// so the peer can collect the frame, then mark the run aborted.
+fn reject_conn(
+    reader: &mut std::io::BufReader<TcpStream>,
+    writer: &mut std::io::BufWriter<TcpStream>,
+    shared: &Shared,
+    why: String,
+) -> anyhow::Error {
+    let _ = write_msg(writer, &Msg::Error { msg: why.clone() });
+    drain_for_error_delivery(reader);
+    abort_run(shared);
+    anyhow!(why)
+}
+
+/// Read (and discard) until the peer closes or a short deadline passes.
+/// Closing immediately after an `Error` frame can reset the connection and
+/// discard the frame from the peer's receive buffer; holding the read side
+/// open until the peer hangs up makes the typed error reliably observable.
+fn drain_for_error_delivery(reader: &mut std::io::BufReader<TcpStream>) {
+    let _ = reader.get_ref().set_read_timeout(Some(Duration::from_secs(1)));
+    let mut buf = [0u8; 4096];
+    loop {
+        match reader.read(&mut buf) {
+            Ok(n) if n > 0 => {}
+            _ => break,
+        }
+    }
 }
 
 /// Serve one node's connection: `Hello`, then fetch/submit rounds until
@@ -156,52 +501,127 @@ fn abort_run(shared: &Shared) {
 /// into the shared [`super::CommStats`] once, at the end.
 fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     stream.set_nodelay(true).ok();
+    let lease = Some(shared.opts.lease).filter(|d| !d.is_zero());
+    stream.set_read_timeout(lease).context("set connection read deadline")?;
+    stream.set_write_timeout(lease).context("set connection write deadline")?;
     let mut reader = std::io::BufReader::new(stream.try_clone().context("clone stream")?);
     let mut writer = std::io::BufWriter::new(stream);
     let mut acct = ConnAcct::default();
 
     // Registration.
-    let (hello, hello_bytes) = read_msg(&mut reader)?;
+    let (hello, hello_bytes) = match read_msg(&mut reader) {
+        Ok(v) => v,
+        Err(e) if io_cause(&e).is_some() => {
+            // The connection died before registering: no slot to clean up
+            // under Continue; any failure fails the run under Abort.
+            return match shared.opts.on_failure {
+                OnFailure::Continue => Ok(()),
+                OnFailure::Abort => {
+                    abort_run(&shared);
+                    Err(e).context("reading hello")
+                }
+            };
+        }
+        Err(e) => {
+            let why = format!("bad hello: {e:#}");
+            return Err(reject_conn(&mut reader, &mut writer, &shared, why));
+        }
+    };
     acct.wire_bytes += hello_bytes as u64;
     let node = match hello {
         Msg::Hello { node } => node as usize,
         other => {
-            let _ = write_msg(&mut writer, &Msg::Error { msg: "expected hello".into() });
-            abort_run(&shared);
-            bail!("expected hello, got {other:?}");
+            let why = format!("expected hello, got {other:?}");
+            return Err(reject_conn(&mut reader, &mut writer, &shared, why));
         }
     };
-    {
-        let mut st = shared.state.lock().unwrap();
-        if node >= shared.opts.nodes || st.claimed[node] {
-            st.aborted = true;
-            shared.round_cv.notify_all();
-            drop(st);
-            let _ = write_msg(
-                &mut writer,
-                &Msg::Error { msg: format!("node slot {node} invalid or already claimed") },
-            );
-            bail!("node slot {node} invalid or already claimed");
+    let session = {
+        let mut st = lock_recover(&shared.state);
+        let rejection = if node >= shared.opts.nodes {
+            Some(format!("node slot {node} out of range"))
+        } else {
+            match st.status[node] {
+                NodeStatus::Unclaimed => None,
+                NodeStatus::Dead => {
+                    // Re-admission: the node comes back under the same id;
+                    // its first fetch replays the current global snapshot.
+                    st.ps.revive(node);
+                    st.fault.reconnects += 1;
+                    if shared.opts.verbose {
+                        eprintln!("param-server: node {node} reconnected");
+                    }
+                    None
+                }
+                NodeStatus::Active if shared.opts.on_failure == OnFailure::Continue => {
+                    // The old connection is still draining its lease;
+                    // supersede it so the reconnect needn't wait it out.
+                    st.fault.reconnects += 1;
+                    if shared.opts.verbose {
+                        eprintln!("param-server: node {node} superseded a stale session");
+                    }
+                    None
+                }
+                NodeStatus::Active | NodeStatus::Done => {
+                    Some(format!("node slot {node} already claimed"))
+                }
+            }
+        };
+        match rejection {
+            Some(why) => {
+                drop(st);
+                return Err(reject_conn(&mut reader, &mut writer, &shared, why));
+            }
+            None => {
+                st.status[node] = NodeStatus::Active;
+                st.session[node] += 1;
+                st.session[node]
+            }
         }
-        st.claimed[node] = true;
-    }
+    };
 
     let result = serve_node(&mut reader, &mut writer, &shared, node, &mut acct);
 
     // Fold this node's measured accounting into the shared stats exactly
-    // once, and make sure barrier waiters can't hang on a dead peer.
-    let mut st = shared.state.lock().unwrap();
-    st.ps.comm.wire_bytes += acct.wire_bytes;
-    st.ps.comm.fetch_wall_s += acct.fetch_wall_s;
-    st.ps.comm.submit_wall_s += acct.submit_wall_s;
-    st.sync_wait_s += acct.sync_wait_s;
-    st.node_busy[node] += acct.busy_s;
-    st.node_stall[node] += acct.sync_wait_s;
-    if result.is_err() {
-        st.aborted = true;
-        shared.round_cv.notify_all();
+    // once per connection.
+    {
+        let mut st = lock_recover(&shared.state);
+        st.ps.comm.wire_bytes += acct.wire_bytes;
+        st.ps.comm.fetch_wall_s += acct.fetch_wall_s;
+        st.ps.comm.submit_wall_s += acct.submit_wall_s;
+        st.sync_wait_s += acct.sync_wait_s;
+        st.node_stall[node] += acct.sync_wait_s;
+        if result.is_ok() && st.session[node] == session {
+            st.status[node] = NodeStatus::Done;
+        }
     }
-    result.with_context(|| format!("serving node {node}"))
+
+    let Err(err) = result else { return Ok(()) };
+    match io_cause(&err) {
+        // The connection died (EOF, reset, or lease timeout): a node
+        // failure, handled per policy.
+        Some(io) => {
+            let lease_expired = is_timeout(io);
+            match shared.opts.on_failure {
+                OnFailure::Continue => {
+                    declare_dead(&shared, node, session, lease_expired);
+                    Ok(())
+                }
+                OnFailure::Abort => {
+                    abort_run(&shared);
+                    Err(err).with_context(|| format!("node {node} connection lost"))
+                }
+            }
+        }
+        // Protocol violation: report it to the peer (the socket is still
+        // frame-aligned — decode errors happen after the full frame was
+        // read) and fail the run regardless of policy.
+        None => {
+            let _ = write_msg(&mut writer, &Msg::Error { msg: format!("{err:#}") });
+            drain_for_error_delivery(&mut reader);
+            abort_run(&shared);
+            Err(err).with_context(|| format!("serving node {node}"))
+        }
+    }
 }
 
 /// The per-connection request loop (registration already done).
@@ -218,23 +638,41 @@ fn serve_node(
         match msg {
             Msg::Fetch => {
                 let t_h = Instant::now();
-                let (snapshot, version) = {
-                    let mut st = shared.state.lock().unwrap();
-                    st.ps.fetch(node)
+                let (snapshot, version, extras) = {
+                    let mut st = lock_recover(&shared.state);
+                    let extras: Vec<(u64, u64)> = st.pending_extras[node]
+                        .drain(..)
+                        .map(|r| (r.start as u64, r.end as u64))
+                        .collect();
+                    let (snapshot, version) = st.ps.fetch(node);
+                    (snapshot, version, extras)
                 };
-                let reply = Msg::Global { version: version as u64, weights: (*snapshot).clone() };
+                let reply = Msg::Global {
+                    version: version as u64,
+                    reassigned: extras,
+                    weights: (*snapshot).clone(),
+                };
                 acct.wire_bytes += write_msg(writer, &reply)? as u64;
                 acct.fetch_wall_s += t_h.elapsed().as_secs_f64();
                 acct.last_fetch_reply = Some(Instant::now());
             }
+            Msg::Ping => {
+                // Lease renewal: the read deadline restarted when the ping
+                // arrived; the reply keeps the worker's side alive too.
+                acct.wire_bytes += write_msg(writer, &Msg::Pong)? as u64;
+            }
             Msg::Submit { mode, base, accuracy, loss, weights } => {
-                if let Some(t) = acct.last_fetch_reply.take() {
-                    acct.busy_s += t.elapsed().as_secs_f64();
-                }
+                let epoch_busy = acct
+                    .last_fetch_reply
+                    .take()
+                    .map(|t| t.elapsed().as_secs_f64())
+                    .unwrap_or(0.0);
                 let t_h = Instant::now();
                 let mut waited = 0.0f64;
+                let mut ckpt = None;
                 let version = {
-                    let mut st = shared.state.lock().unwrap();
+                    let mut st = lock_recover(&shared.state);
+                    st.node_busy[node] += epoch_busy;
                     let at_s = shared.t0.elapsed().as_secs_f64();
                     match (shared.opts.update, mode) {
                         (UpdateStrategy::Agwu, SubmitMode::Agwu)
@@ -244,6 +682,7 @@ fn serve_node(
                             } else {
                                 st.ps.update_async_plain(node, &weights, base as usize)
                             };
+                            st.node_submits[node] += 1;
                             st.versions.push(VersionRecord {
                                 version: v,
                                 node,
@@ -257,20 +696,33 @@ fn serve_node(
                                     "param-server: v{v} node {node} loss {loss:.4} acc {accuracy:.3}"
                                 );
                             }
+                            ckpt = plan_checkpoint(shared, &mut st, v);
                             v
                         }
                         (UpdateStrategy::Sgwu, SubmitMode::Sgwu) => {
+                            if st.ps.sgwu_has_part(node) {
+                                drop(st);
+                                bail!(
+                                    "node {node} already contributed to the current \
+                                     SGWU round (duplicate or replayed submit)"
+                                );
+                            }
                             let my_round = st.round;
                             st.round_meta[node] = Some((loss, accuracy));
+                            st.node_submits[node] += 1;
                             match st.ps.submit_sgwu(node, weights, accuracy) {
                                 Some(v) => {
-                                    let m = shared.opts.nodes as f64;
-                                    let (mut l_sum, mut q_sum) = (0.0f64, 0.0f64);
+                                    let mut l_sum = 0.0f64;
+                                    let mut q_sum = 0.0f64;
+                                    let mut parts = 0usize;
                                     for meta in st.round_meta.iter_mut() {
-                                        let (l, q) = meta.take().expect("full round");
-                                        l_sum += l;
-                                        q_sum += q;
+                                        if let Some((l, q)) = meta.take() {
+                                            l_sum += l;
+                                            q_sum += q;
+                                            parts += 1;
+                                        }
                                     }
+                                    let m = parts.max(1) as f64;
                                     st.versions.push(VersionRecord {
                                         version: v,
                                         node: usize::MAX,
@@ -287,18 +739,22 @@ fn serve_node(
                                     }
                                     st.round += 1;
                                     shared.round_cv.notify_all();
+                                    ckpt = plan_checkpoint(shared, &mut st, v);
                                     v
                                 }
                                 None => {
                                     // Eq. 8: wait for the round's last node.
                                     let w0 = Instant::now();
                                     while st.round == my_round && !st.aborted {
-                                        st = shared.round_cv.wait(st).unwrap();
+                                        st = shared
+                                            .round_cv
+                                            .wait(st)
+                                            .unwrap_or_else(|e| e.into_inner());
                                     }
                                     waited = w0.elapsed().as_secs_f64();
                                     acct.sync_wait_s += waited;
                                     if st.aborted {
-                                        bail!("SGWU round aborted: a peer disconnected");
+                                        bail!("SGWU round aborted: the run failed");
                                     }
                                     st.ps.version()
                                 }
@@ -306,14 +762,13 @@ fn serve_node(
                         }
                         (want, got) => {
                             drop(st);
-                            let msg = format!("server runs {want:?} but node submitted {got:?}");
-                            let _ = write_msg(writer, &Msg::Error { msg: msg.clone() });
-                            bail!("{msg}");
+                            bail!("server runs {want:?} but node submitted {got:?}");
                         }
                     }
                 };
                 acct.submit_wall_s += t_h.elapsed().as_secs_f64() - waited;
                 acct.wire_bytes += write_msg(writer, &Msg::Ack { version: version as u64 })? as u64;
+                run_checkpoint(shared, ckpt);
             }
             Msg::Done => return Ok(()),
             other => bail!("unexpected message from node {node}: {other:?}"),
@@ -324,7 +779,7 @@ fn serve_node(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::outer::transport::{SubmitMeta, TcpTransport, Transport};
+    use crate::outer::transport::{ServerError, SubmitMeta, TcpTransport, Transport};
     use crate::tensor::Tensor;
 
     fn ws(vals: &[f32]) -> WeightSet {
@@ -343,8 +798,11 @@ mod tests {
 
     #[test]
     fn loopback_agwu_round_trip() {
-        let opts =
-            ServeOptions { nodes: 1, update: UpdateStrategy::Agwu, verbose: false };
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            ..ServeOptions::default()
+        };
         let (addr, server) = spawn_server(ws(&[1.0]), opts);
         let mut t = TcpTransport::connect(&addr, 0).unwrap();
         let (g, base) = t.fetch_global().unwrap();
@@ -371,6 +829,7 @@ mod tests {
         assert_eq!(report.comm.fetches, 2);
         assert_eq!(report.comm.submits, 1);
         assert!(report.comm.wire_bytes > 0, "sockets must move real bytes");
+        assert!(!report.fault.any(), "healthy run reports no fault events");
         assert_eq!(report.final_weights.tensors()[0].data(), &[2.0]);
         assert!(t.stats().wire_bytes > 0);
         // Connection setup is accounted separately from transfer walls.
@@ -380,8 +839,11 @@ mod tests {
 
     #[test]
     fn loopback_sgwu_barrier_blocks_until_round_completes() {
-        let opts =
-            ServeOptions { nodes: 2, update: UpdateStrategy::Sgwu, verbose: false };
+        let opts = ServeOptions {
+            nodes: 2,
+            update: UpdateStrategy::Sgwu,
+            ..ServeOptions::default()
+        };
         let (addr, server) = spawn_server(ws(&[0.0, 0.0]), opts);
         let addr2 = addr.clone();
         // Node 0 submits first and must block in submit() until node 1 arrives.
@@ -422,8 +884,11 @@ mod tests {
 
     #[test]
     fn wrong_mode_rejected() {
-        let opts =
-            ServeOptions { nodes: 1, update: UpdateStrategy::Sgwu, verbose: false };
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Sgwu,
+            ..ServeOptions::default()
+        };
         let (addr, server) = spawn_server(ws(&[0.0]), opts);
         let mut t = TcpTransport::connect(&addr, 0).unwrap();
         let meta = SubmitMeta {
@@ -433,18 +898,186 @@ mod tests {
             loss: 1.0,
             want_snapshot: false,
         };
-        assert!(t.submit(ws(&[1.0]), &meta).is_err());
+        let err = t.submit(ws(&[1.0]), &meta).unwrap_err();
+        // The rejection is a *typed* server-side error, not a dead socket.
+        assert!(
+            err.downcast_ref::<ServerError>().is_some(),
+            "want ServerError, got: {err:#}"
+        );
+        drop(t);
         assert!(server.join().unwrap().is_err());
     }
 
     #[test]
     fn bad_node_slot_rejected() {
-        let opts =
-            ServeOptions { nodes: 1, update: UpdateStrategy::Agwu, verbose: false };
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            ..ServeOptions::default()
+        };
         let (addr, server) = spawn_server(ws(&[0.0]), opts);
         let mut t = TcpTransport::connect(&addr, 5).unwrap();
         // The registration error surfaces on the first request.
-        assert!(t.fetch_global().is_err());
+        let err = t.fetch_global().unwrap_err();
+        assert!(
+            err.downcast_ref::<ServerError>().is_some(),
+            "want ServerError, got: {err:#}"
+        );
+        drop(t);
         assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn ping_renews_without_touching_state() {
+        let opts = ServeOptions { nodes: 1, ..ServeOptions::default() };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        t.heartbeat().unwrap();
+        t.heartbeat().unwrap();
+        let (_, v) = t.fetch_global().unwrap();
+        assert_eq!(v, 0, "pings must not install versions");
+        t.finish().unwrap();
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.comm.fetches, 1);
+        assert_eq!(report.versions.len(), 0);
+    }
+
+    #[test]
+    fn lease_expiry_kills_silent_worker_and_run_continues() {
+        let opts = ServeOptions {
+            nodes: 2,
+            update: UpdateStrategy::Agwu,
+            on_failure: OnFailure::Continue,
+            lease: Duration::from_millis(200),
+            ..ServeOptions::default()
+        };
+        let (addr, server) = spawn_server(ws(&[0.0]), opts);
+        // Node 1 connects and goes silent: its lease must expire.
+        let silent = TcpStream::connect(&addr).unwrap();
+        let mut w = std::io::BufWriter::new(silent.try_clone().unwrap());
+        write_msg(&mut w, &Msg::Hello { node: 1 }).unwrap();
+        // Node 0 does real work and finishes.
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let (g, base) = t.fetch_global().unwrap();
+        let mut local = (*g).clone();
+        local.tensors_mut()[0].data_mut()[0] = 1.0;
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 1.0,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        t.submit(local, &meta).unwrap();
+        t.finish().unwrap();
+        drop(w);
+        drop(silent);
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.versions.len(), 1, "survivor's work landed");
+        // The silent node died by lease expiry or by the socket closing —
+        // either way the run survived and the death was accounted.
+        assert!(report.fault.leases_expired <= 1);
+    }
+
+    #[test]
+    fn dead_worker_batches_reallocated_to_survivor() {
+        let schedule: AllocationSchedule = vec![vec![0..10, 10..20], vec![20..30, 30..40]];
+        let opts = ServeOptions {
+            nodes: 2,
+            update: UpdateStrategy::Agwu,
+            on_failure: OnFailure::Continue,
+            schedule: Some(schedule),
+            ..ServeOptions::default()
+        };
+        let (addr, server) = spawn_server(ws(&[0.0]), opts);
+        // Node 1 fetches once, then dies without a Done (socket drop = EOF).
+        {
+            let mut t1 = TcpTransport::connect(&addr, 1).unwrap();
+            let _ = t1.fetch_global().unwrap();
+        }
+        // Node 0 runs its two iterations; the dead node's two batches must
+        // arrive piggybacked on a later fetch.
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let mut gained: Vec<Range<usize>> = Vec::new();
+        for _ in 0..2 {
+            let (g, base) = t.fetch_global().unwrap();
+            gained.extend(t.take_reassigned());
+            let mut local = (*g).clone();
+            local.tensors_mut()[0].data_mut()[0] += 1.0;
+            let meta = SubmitMeta {
+                mode: SubmitMode::Agwu,
+                base,
+                accuracy: 1.0,
+                loss: 1.0,
+                want_snapshot: false,
+            };
+            t.submit(local, &meta).unwrap();
+            // Give the server time to notice the EOF of node 1.
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let (_, _) = t.fetch_global().unwrap();
+        gained.extend(t.take_reassigned());
+        t.finish().unwrap();
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.fault.reallocated_batches, 2);
+        assert_eq!(report.fault.reallocated_samples, 20);
+        let gained_samples: usize = gained.iter().map(|r| r.len()).sum();
+        assert_eq!(gained_samples, 20, "survivor received the dead node's samples");
+    }
+
+    #[test]
+    fn reconnect_is_readmitted_and_replays_snapshot() {
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            on_failure: OnFailure::Continue,
+            // Grace window for all-dead reconnects is 2× the lease: plenty
+            // of room for the 300ms gap below.
+            lease: Duration::from_millis(500),
+            ..ServeOptions::default()
+        };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        // First session: fetch + submit, then vanish without Done.
+        {
+            let mut t = TcpTransport::connect(&addr, 0).unwrap();
+            let (g, base) = t.fetch_global().unwrap();
+            let mut local = (*g).clone();
+            local.tensors_mut()[0].data_mut()[0] = 3.0;
+            let meta = SubmitMeta {
+                mode: SubmitMode::Agwu,
+                base,
+                accuracy: 0.5,
+                loss: 1.0,
+                want_snapshot: false,
+            };
+            t.submit(local, &meta).unwrap();
+        }
+        // Second session under the same node id: must be re-admitted and
+        // see the v1 snapshot the first session installed.
+        std::thread::sleep(Duration::from_millis(300));
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let (g, v) = t.fetch_global().unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(g.tensors()[0].data(), &[2.0]);
+        t.finish().unwrap();
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.fault.reconnects, 1);
+    }
+
+    #[test]
+    fn poisoned_state_lock_recovers() {
+        // A panicking lock holder must not turn later lock attempts into
+        // poison panics — lock_recover takes the data through the poison.
+        let m = Arc::new(Mutex::new(7i32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
     }
 }

@@ -19,17 +19,40 @@
 //! the bytes actually moved, so `bench_outer` reports measured (not
 //! modeled) communication cost.
 
+use std::fmt;
 use std::io::{BufReader, BufWriter, Write as _};
 use std::net::TcpStream;
+use std::ops::Range;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::WeightSet;
 
+use super::fault::FaultStats;
 use super::param_server::ParamServer;
 use super::wire::{read_msg, write_msg, Msg};
+
+/// Default socket read/write deadline for [`TcpTransport`] and the server's
+/// per-connection handlers. A hung peer surfaces as a timeout error (which
+/// the retry layer can turn into a reconnect) instead of blocking forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// An error the *server* reported through a wire `Error` frame — as opposed
+/// to a local I/O failure. Typed so callers can distinguish "the server
+/// rejected my request" (protocol violation, decode rejection, bad node id)
+/// from "the connection died" via `err.downcast_ref::<ServerError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerError(pub String);
+
+impl fmt::Display for ServerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "param server error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 /// Which global weight-update rule a submission requests.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,6 +123,8 @@ pub struct TransportStats {
     /// Peak number of comm operations queued or executing on the comm
     /// thread at once. 0 for serialized drivers (no queue exists).
     pub max_inflight: usize,
+    /// Fault-recovery counters (retries, reconnects, checkpoints, ...).
+    pub fault: FaultStats,
 }
 
 impl TransportStats {
@@ -113,6 +138,7 @@ impl TransportStats {
         self.stall_wall_s += other.stall_wall_s;
         self.overlap_wall_s += other.overlap_wall_s;
         self.max_inflight = self.max_inflight.max(other.max_inflight);
+        self.fault.merge(&other.fault);
     }
 }
 
@@ -134,6 +160,20 @@ pub trait Transport: Send {
     /// Signal an orderly end of this node's run (remote backends tell the
     /// server; in-process ones need nothing).
     fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Drain sample ranges the server re-allocated onto this node after a
+    /// peer died (IDPA re-allocation). Ranges arrive piggybacked on fetch
+    /// replies; drivers fold them into the local training schedule. Default:
+    /// nothing to drain (in-process and decorator-only backends).
+    fn take_reassigned(&mut self) -> Vec<Range<usize>> {
+        Vec::new()
+    }
+
+    /// Liveness probe renewing this node's lease on the server without
+    /// moving weight state. Backends with no lease concept no-op.
+    fn heartbeat(&mut self) -> Result<()> {
         Ok(())
     }
 }
@@ -206,19 +246,43 @@ pub struct TcpTransport {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     stats: TransportStats,
+    /// Sample ranges re-allocated onto this node, piggybacked on fetch
+    /// replies and drained by [`Transport::take_reassigned`].
+    reassigned: Vec<Range<usize>>,
 }
 
 impl TcpTransport {
-    /// Connect to `addr` ("host:port") and register as `node`. The setup
-    /// time (TCP connect + `Hello` registration write) is recorded in
+    /// Connect to `addr` ("host:port") and register as `node`, with the
+    /// default [`DEFAULT_IO_TIMEOUT`] socket deadlines. The setup time
+    /// (TCP connect + `Hello` registration write) is recorded in
     /// `connect_wall_s`, separate from the per-operation wall columns.
     pub fn connect(addr: &str, node: usize) -> Result<Self> {
+        Self::connect_with_timeout(addr, node, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// [`TcpTransport::connect`] with an explicit read/write deadline.
+    /// `None` restores the old block-forever behavior. Note the read
+    /// deadline also bounds the SGWU barrier wait (the delayed Ack *is*
+    /// the Eq. 8 barrier) — size it above the slowest node's epoch.
+    pub fn connect_with_timeout(
+        addr: &str,
+        node: usize,
+        io_timeout: Option<Duration>,
+    ) -> Result<Self> {
         let t0 = Instant::now();
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connect to param server at {addr}"))?;
         stream.set_nodelay(true).ok();
+        let io_timeout = io_timeout.filter(|d| !d.is_zero());
+        stream.set_read_timeout(io_timeout).context("set read timeout")?;
+        stream.set_write_timeout(io_timeout).context("set write timeout")?;
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        let mut t = Self { reader, writer: BufWriter::new(stream), stats: TransportStats::default() };
+        let mut t = Self {
+            reader,
+            writer: BufWriter::new(stream),
+            stats: TransportStats::default(),
+            reassigned: Vec::new(),
+        };
         t.stats.wire_bytes += write_msg(&mut t.writer, &Msg::Hello { node: node as u32 })? as u64;
         t.stats.connect_wall_s = t0.elapsed().as_secs_f64();
         Ok(t)
@@ -229,7 +293,7 @@ impl TcpTransport {
         let (reply, n) = read_msg(&mut self.reader)?;
         self.stats.wire_bytes += n as u64;
         if let Msg::Error { msg } = reply {
-            bail!("param server error: {msg}");
+            return Err(anyhow::Error::new(ServerError(msg)));
         }
         Ok(reply)
     }
@@ -240,7 +304,12 @@ impl Transport for TcpTransport {
         let t0 = Instant::now();
         let reply = self.round_trip(&Msg::Fetch)?;
         let out = match reply {
-            Msg::Global { version, weights } => (Arc::new(weights), version as usize),
+            Msg::Global { version, reassigned, weights } => {
+                self.reassigned.extend(
+                    reassigned.into_iter().map(|(s, e)| s as usize..e as usize),
+                );
+                (Arc::new(weights), version as usize)
+            }
             other => bail!("unexpected reply to fetch: {other:?}"),
         };
         self.stats.fetches += 1;
@@ -274,6 +343,17 @@ impl Transport for TcpTransport {
         self.stats.wire_bytes += write_msg(&mut self.writer, &Msg::Done)? as u64;
         self.writer.flush().ok();
         Ok(())
+    }
+
+    fn take_reassigned(&mut self) -> Vec<Range<usize>> {
+        std::mem::take(&mut self.reassigned)
+    }
+
+    fn heartbeat(&mut self) -> Result<()> {
+        match self.round_trip(&Msg::Ping)? {
+            Msg::Pong => Ok(()),
+            other => bail!("unexpected reply to ping: {other:?}"),
+        }
     }
 }
 
@@ -355,6 +435,14 @@ impl<T: Transport> Transport for ThrottledTransport<T> {
 
     fn finish(&mut self) -> Result<()> {
         self.inner.finish()
+    }
+
+    fn take_reassigned(&mut self) -> Vec<Range<usize>> {
+        self.inner.take_reassigned()
+    }
+
+    fn heartbeat(&mut self) -> Result<()> {
+        self.inner.heartbeat()
     }
 }
 

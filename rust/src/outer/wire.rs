@@ -27,6 +27,8 @@ const TAG_GLOBAL: u8 = 4;
 const TAG_ACK: u8 = 5;
 const TAG_DONE: u8 = 6;
 const TAG_ERROR: u8 = 7;
+const TAG_PING: u8 = 8;
+const TAG_PONG: u8 = 9;
 
 /// One protocol message. Client → server: `Hello`, `Fetch`, `Submit`,
 /// `Done`. Server → client: `Global`, `Ack`, `Error`.
@@ -40,8 +42,12 @@ pub enum Msg {
     /// node trained from (AGWU staleness, Eq. 9); `accuracy`/`loss` feed the
     /// Eq. 7/10 weighting and the server-side learning curve.
     Submit { mode: SubmitMode, base: u64, accuracy: f64, loss: f64, weights: WeightSet },
-    /// Reply to `Fetch`: the global set at `version`.
-    Global { version: u64, weights: WeightSet },
+    /// Reply to `Fetch`: the global set at `version`. `reassigned` carries
+    /// sample ranges the server moved onto this node after a peer died
+    /// (IDPA re-allocation); empty in the healthy path. The ranges ride
+    /// *before* the weight payload because the `BPWS` decoder rejects
+    /// trailing bytes.
+    Global { version: u64, reassigned: Vec<(u64, u64)>, weights: WeightSet },
     /// Reply to `Submit`: the server's version after processing it (for
     /// SGWU, the reply is delayed until the whole round is installed — the
     /// socket *is* the Eq. 8 barrier).
@@ -50,6 +56,11 @@ pub enum Msg {
     Done,
     /// Server-side failure report (protocol violation, bad node id, ...).
     Error { msg: String },
+    /// Liveness probe (client → server). Renews the sender's lease without
+    /// touching the weight state.
+    Ping,
+    /// Reply to `Ping`.
+    Pong,
 }
 
 fn mode_to_wire(m: SubmitMode) -> u8 {
@@ -74,7 +85,9 @@ fn mode_from_wire(b: u8) -> Result<SubmitMode> {
 pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
     let mut body: Vec<u8> = Vec::with_capacity(match msg {
         Msg::Submit { weights, .. } => 1 + 1 + 8 + 8 + 8 + encoded_len(weights),
-        Msg::Global { weights, .. } => 1 + 8 + encoded_len(weights),
+        Msg::Global { reassigned, weights, .. } => {
+            1 + 8 + 4 + 16 * reassigned.len() + encoded_len(weights)
+        }
         _ => 64,
     });
     match msg {
@@ -91,9 +104,14 @@ pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
             body.extend_from_slice(&loss.to_le_bytes());
             encode_weight_set_into(weights, &mut body);
         }
-        Msg::Global { version, weights } => {
+        Msg::Global { version, reassigned, weights } => {
             body.push(TAG_GLOBAL);
             body.extend_from_slice(&version.to_le_bytes());
+            body.extend_from_slice(&(reassigned.len() as u32).to_le_bytes());
+            for (start, end) in reassigned {
+                body.extend_from_slice(&start.to_le_bytes());
+                body.extend_from_slice(&end.to_le_bytes());
+            }
             encode_weight_set_into(weights, &mut body);
         }
         Msg::Ack { version } => {
@@ -105,6 +123,8 @@ pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
             body.push(TAG_ERROR);
             body.extend_from_slice(msg.as_bytes());
         }
+        Msg::Ping => body.push(TAG_PING),
+        Msg::Pong => body.push(TAG_PONG),
     }
     ensure!(body.len() <= MAX_FRAME, "frame body {} exceeds MAX_FRAME", body.len());
     w.write_all(&(body.len() as u32).to_le_bytes()).context("write frame length")?;
@@ -143,10 +163,25 @@ pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
             Msg::Submit { mode, base, accuracy, loss, weights }
         }
         TAG_GLOBAL => {
-            ensure!(rest.len() >= 8, "global body too short: {}", rest.len());
+            ensure!(rest.len() >= 12, "global body too short: {}", rest.len());
             let version = u64::from_le_bytes(rest[..8].try_into().unwrap());
-            let weights = decode_weight_set(&rest[8..])?;
-            Msg::Global { version, weights }
+            let n = u32::from_le_bytes(rest[8..12].try_into().unwrap()) as usize;
+            let ranges_end = 12 + 16 * n;
+            ensure!(
+                rest.len() >= ranges_end,
+                "global declares {n} reassigned ranges but body is {} bytes",
+                rest.len()
+            );
+            let mut reassigned = Vec::with_capacity(n);
+            for i in 0..n {
+                let at = 12 + 16 * i;
+                let start = u64::from_le_bytes(rest[at..at + 8].try_into().unwrap());
+                let end = u64::from_le_bytes(rest[at + 8..at + 16].try_into().unwrap());
+                ensure!(start <= end, "reassigned range {start}..{end} is inverted");
+                reassigned.push((start, end));
+            }
+            let weights = decode_weight_set(&rest[ranges_end..])?;
+            Msg::Global { version, reassigned, weights }
         }
         TAG_ACK => {
             ensure!(rest.len() == 8, "ack body length {}", rest.len());
@@ -157,6 +192,14 @@ pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
             Msg::Done
         }
         TAG_ERROR => Msg::Error { msg: String::from_utf8_lossy(rest).into_owned() },
+        TAG_PING => {
+            ensure!(rest.is_empty(), "ping carries no body");
+            Msg::Ping
+        }
+        TAG_PONG => {
+            ensure!(rest.is_empty(), "pong carries no body");
+            Msg::Pong
+        }
         other => bail!("unknown message tag {other}"),
     };
     Ok((msg, 4 + len))
@@ -197,6 +240,8 @@ mod tests {
             Msg::Error { msg } => assert_eq!(msg, "boom"),
             other => panic!("{other:?}"),
         }
+        assert!(matches!(round_trip(Msg::Ping), Msg::Ping));
+        assert!(matches!(round_trip(Msg::Pong), Msg::Pong));
     }
 
     #[test]
@@ -227,13 +272,38 @@ mod tests {
 
     #[test]
     fn global_round_trips() {
-        match round_trip(Msg::Global { version: 9, weights: ws() }) {
-            Msg::Global { version, weights } => {
+        match round_trip(Msg::Global { version: 9, reassigned: vec![], weights: ws() }) {
+            Msg::Global { version, reassigned, weights } => {
                 assert_eq!(version, 9);
+                assert!(reassigned.is_empty());
                 assert_eq!(weights.param_count(), 4);
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn global_round_trips_with_reassigned_ranges() {
+        let ranges = vec![(100u64, 250u64), (900, 1000)];
+        match round_trip(Msg::Global { version: 3, reassigned: ranges.clone(), weights: ws() }) {
+            Msg::Global { version, reassigned, weights } => {
+                assert_eq!(version, 3);
+                assert_eq!(reassigned, ranges);
+                assert_eq!(weights.param_count(), 4);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn inverted_reassigned_range_rejected() {
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::Global { version: 1, reassigned: vec![(10, 4)], weights: ws() },
+        )
+        .unwrap();
+        assert!(read_msg(&mut std::io::Cursor::new(buf)).is_err());
     }
 
     #[test]

@@ -311,6 +311,10 @@ fn drive_worker_serialized(
         let t = Instant::now();
         let (global, base) = transport.fetch_global()?;
         stall += t.elapsed().as_secs_f64();
+        // Absorb any IDPA batches the server re-allocated from a dead peer.
+        for r in transport.take_reassigned() {
+            trainer.add_samples(r);
+        }
         let t = Instant::now();
         let out = trainer.train_epoch(global);
         busy += t.elapsed().as_secs_f64();
@@ -396,6 +400,11 @@ fn drive_worker_pipelined(
                     pipe.prefetch()?;
                 }
                 let (snapshot, base) = current.take().expect("snapshot swapped in");
+                // Absorb any IDPA batches the server re-allocated from a
+                // dead peer (piggybacked on the fetch behind this snapshot).
+                for r in pipe.take_reassigned() {
+                    trainer.add_samples(r);
+                }
                 let t = Instant::now();
                 let out = trainer.train_epoch(snapshot);
                 busy += t.elapsed().as_secs_f64();

@@ -275,7 +275,7 @@ fn tcp_loopback_agwu_three_workers_matches_inprocess() {
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Agwu, verbose: false };
+    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Agwu, ..ServeOptions::default() };
     let server = {
         let init = init.clone();
         std::thread::spawn(move || serve(listener, init, opts))
@@ -350,7 +350,7 @@ fn tcp_loopback_sgwu_bitwise_matches_inprocess() {
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Sgwu, verbose: false };
+    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Sgwu, ..ServeOptions::default() };
     let server = {
         let init = init.clone();
         std::thread::spawn(move || serve(listener, init, opts))
@@ -418,7 +418,7 @@ fn tcp_loopback_pipelined_agwu_staleness1_matches_gates() {
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Agwu, verbose: false };
+    let opts = ServeOptions { nodes: m, update: UpdateStrategy::Agwu, ..ServeOptions::default() };
     let server = {
         let init = init.clone();
         std::thread::spawn(move || serve(listener, init, opts))
@@ -473,4 +473,315 @@ fn tcp_loopback_pipelined_agwu_staleness1_matches_gates() {
     let inproc = run_agwu(init, workers, &schedule, iterations, None);
     let diff = report.final_weights.max_abs_diff(&inproc.final_weights);
     assert!(diff < 0.5, "pipelined TCP vs in-process AGWU diverged: max|Δw| = {diff}");
+}
+
+/// PR9 tentpole: kill-and-recover. Three worker slots, AGWU, `--on-failure
+/// continue`. The victim registers, fetches once, and dies without ever
+/// submitting (its dropped socket is the crash). The server must declare it
+/// dead, re-allocate both of its unconsumed IDPA batches to the survivors in
+/// proportion to measured throughput (all-zero here → equal split), deliver
+/// them piggybacked on the survivors' next fetch, and complete the run with
+/// the loss still improving.
+#[test]
+fn tcp_agwu_kill_and_recover_survivors_absorb_dead_nodes_batches() {
+    use bptcnn::config::OnFailure;
+    use bptcnn::outer::{
+        drive_worker, schedule_columns, serve, ServeOptions, Staleness, SubmitMode, TcpTransport,
+        Transport,
+    };
+    use std::net::TcpListener;
+
+    let cfg = NetworkConfig::quickstart();
+    let ds = Arc::new(Dataset::synthetic(&cfg, 240, 0.3, 31));
+    let init = Network::init(&cfg, 31).weights;
+    // Two allocation batches per node (rows × nodes); node 2 owns 160..240.
+    let schedule = vec![
+        vec![0..40, 80..120, 160..200],
+        vec![40..80, 120..160, 200..240],
+    ];
+    let (m, iterations) = (3usize, 4usize);
+    let columns = schedule_columns(&schedule, m);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        nodes: m,
+        update: UpdateStrategy::Agwu,
+        on_failure: OnFailure::Continue,
+        schedule: Some(columns.clone()),
+        ..ServeOptions::default()
+    };
+    let server = {
+        let init = init.clone();
+        std::thread::spawn(move || serve(listener, init, opts))
+    };
+
+    // The victim: node 2 registers and fetches, then its socket drops with
+    // no Done — a kill -9 as the server sees it.
+    {
+        let mut victim = TcpTransport::connect(&addr, 2).unwrap();
+        victim.fetch_global().unwrap();
+    }
+    // Let the server observe the EOF and re-allocate before the survivors
+    // register, so their very first Global reply carries the extras.
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let handles: Vec<_> = columns
+        .iter()
+        .take(2)
+        .cloned()
+        .enumerate()
+        .map(|(node, column)| {
+            let (addr, ds, cfg) = (addr.clone(), Arc::clone(&ds), cfg.clone());
+            std::thread::spawn(move || {
+                let mut t = TcpTransport::connect(&addr, node).unwrap();
+                let mut trainer = NativeTrainer::new(&cfg, ds, 0.2);
+                let summary = drive_worker(
+                    &mut t,
+                    &mut trainer,
+                    &column,
+                    iterations,
+                    SubmitMode::Agwu,
+                    Staleness(0),
+                    false,
+                )
+                .unwrap();
+                (summary, trainer.sample_count())
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let report = server.join().unwrap().expect("run must survive the crash");
+
+    // The dead node's two batches (80 samples) moved, none were lost: the
+    // two survivors' shards now cover the full 240-sample dataset.
+    assert_eq!(report.fault.reallocated_batches, 2);
+    assert_eq!(report.fault.reallocated_samples, 80);
+    assert_eq!(report.fault.leases_expired, 0, "death came from EOF, not a lease");
+    let counts: Vec<usize> = results.iter().map(|(_, n)| *n).collect();
+    assert_eq!(counts.iter().sum::<usize>(), 240, "samples lost or duplicated: {counts:?}");
+    assert!(counts.iter().all(|&n| n > 80), "re-allocation not spread: {counts:?}");
+
+    // Only the survivors contributed versions, and the run still learned.
+    assert_eq!(report.versions.len(), 2 * iterations);
+    let first = report.versions.first().unwrap().local_loss;
+    let last = report.versions.last().unwrap().local_loss;
+    assert!(last < first, "run did not keep learning after the crash: {first} -> {last}");
+}
+
+/// PR9 acceptance gate: `--resume` from a mid-run checkpoint reproduces the
+/// uninterrupted run's final weights *bit-identically*. Single-node AGWU
+/// with a one-batch shard is fully deterministic, so 2 epochs + (resume
+/// from the v2 checkpoint) + 2 epochs must equal 4 straight epochs.
+#[test]
+fn checkpoint_resume_reproduces_bit_identical_weights() {
+    use bptcnn::outer::{
+        drive_worker, read_checkpoint, serve, ServeOptions, Staleness, SubmitMode, TcpTransport,
+    };
+    use bptcnn::tensor::WeightSet;
+    use std::net::TcpListener;
+    use std::path::PathBuf;
+
+    let cfg = NetworkConfig::quickstart();
+    let ds = Arc::new(Dataset::synthetic(&cfg, 96, 0.3, 41));
+    let init = Network::init(&cfg, 41).weights;
+    let column = vec![0..96]; // one batch: every epoch trains the same shard
+
+    let run = |init: WeightSet,
+               iters: usize,
+               dir: Option<PathBuf>,
+               init_version: usize,
+               resumed: bool| {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            checkpoint_dir: dir,
+            checkpoint_every: 1,
+            init_version,
+            resumed,
+            ..ServeOptions::default()
+        };
+        let server = std::thread::spawn(move || serve(listener, init, opts));
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let mut trainer = NativeTrainer::new(&cfg, Arc::clone(&ds), 0.2);
+        drive_worker(
+            &mut t,
+            &mut trainer,
+            &column,
+            iters,
+            SubmitMode::Agwu,
+            Staleness(0),
+            false,
+        )
+        .unwrap();
+        server.join().unwrap().unwrap()
+    };
+
+    let full = run(init.clone(), 4, None, 0, false);
+
+    let dir = std::env::temp_dir().join(format!("bptcnn-ckpt-resume-{}", std::process::id()));
+    let half = run(init, 2, Some(dir.clone()), 0, false);
+    assert!(half.fault.checkpoints_written >= 2, "cadence 1 must checkpoint every version");
+
+    let (version, restored) = read_checkpoint(&dir).unwrap();
+    assert_eq!(version, 2);
+    assert_eq!(
+        restored.max_abs_diff(&half.final_weights),
+        0.0,
+        "latest checkpoint must capture the v2 state exactly"
+    );
+
+    let resumed = run(restored, 2, None, 2, true);
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(resumed.fault.checkpoints_loaded, 1);
+    assert_eq!(
+        resumed.versions.last().unwrap().version,
+        full.versions.last().unwrap().version,
+        "resumed run must continue the version sequence, not restart it"
+    );
+    let diff = resumed.final_weights.max_abs_diff(&full.final_weights);
+    assert_eq!(diff, 0.0, "resume must be bit-identical to the unbroken run, got max|Δw| = {diff}");
+}
+
+/// PR9 satellite: a malformed frame is answered with a typed wire `Error`
+/// the peer can actually read — the server holds its read side open until
+/// the frame is collected (naively closing right after the write can turn
+/// into a TCP RST that destroys it) — and the run aborts as a protocol
+/// violation.
+#[test]
+fn tcp_malformed_frame_gets_typed_error_reply_and_aborts_run() {
+    use bptcnn::outer::wire::{read_msg, Msg};
+    use bptcnn::outer::{serve, ServeOptions};
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let init = Network::init(&NetworkConfig::quickstart(), 3).weights;
+    let server =
+        std::thread::spawn(move || serve(listener, init, ServeOptions::default()));
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    // A well-formed frame header carrying an unknown tag where Hello is
+    // expected: the decoder must reject it without reading further.
+    s.write_all(&1u32.to_le_bytes()).unwrap();
+    s.write_all(&[0xEE]).unwrap();
+    s.flush().unwrap();
+
+    let (msg, _) = read_msg(&mut s).unwrap();
+    match msg {
+        Msg::Error { msg } => {
+            assert!(msg.contains("bad hello"), "unexpected error text: {msg}")
+        }
+        other => panic!("expected a typed Error frame, got {other:?}"),
+    }
+    drop(s);
+
+    let err = server.join().unwrap().expect_err("protocol violation must fail the run");
+    assert!(format!("{err:#}").contains("bad hello"), "{err:#}");
+}
+
+/// PR9 satellite: the evicted-base straggler fallback (history window cap
+/// `2m+2`) under the *pipelined* worker loop. A gated straggler holds its
+/// v0 snapshot while the other node installs 12 versions; its eventual
+/// submit's base has left the window, the server falls back to the oldest
+/// retained version, counts it, and the run still completes.
+#[test]
+fn pipelined_straggler_takes_evicted_base_fallback() {
+    use bptcnn::outer::{
+        drive_worker, EpochOutcome, InProcTransport, ParamServer, Staleness, SubmitMode,
+        SubmitMeta, Transport,
+    };
+    use bptcnn::tensor::WeightSet;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    /// Signals `started` when its first epoch begins, then blocks until
+    /// `go` — freezing the straggler at a v0 base for as long as the test
+    /// needs the fast node to run ahead.
+    struct GatedTrainer {
+        started: Arc<AtomicBool>,
+        go: Arc<AtomicBool>,
+        samples: usize,
+    }
+    impl LocalTrainer for GatedTrainer {
+        fn train_epoch(&mut self, start: Arc<WeightSet>) -> EpochOutcome {
+            self.started.store(true, Ordering::Release);
+            while !self.go.load(Ordering::Acquire) {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            let mut w = (*start).clone();
+            w.tensors_mut()[0].data_mut()[0] += 0.01;
+            EpochOutcome {
+                weights: w,
+                loss: 1.0,
+                accuracy: 0.5,
+                samples: self.samples.max(1),
+                compute_s: 0.0,
+            }
+        }
+        fn add_samples(&mut self, range: std::ops::Range<usize>) {
+            self.samples += range.len();
+        }
+        fn sample_count(&self) -> usize {
+            self.samples
+        }
+    }
+
+    let cfg = NetworkConfig::quickstart();
+    let init = Network::init(&cfg, 51).weights;
+    let ps = Arc::new(Mutex::new(ParamServer::new(init, 2)));
+    let started = Arc::new(AtomicBool::new(false));
+    let go = Arc::new(AtomicBool::new(false));
+
+    let straggler = {
+        let ps = Arc::clone(&ps);
+        let (started, go) = (Arc::clone(&started), Arc::clone(&go));
+        std::thread::spawn(move || {
+            let mut t = InProcTransport::new(ps, 0);
+            let mut trainer = GatedTrainer { started, go, samples: 8 };
+            drive_worker(
+                &mut t,
+                &mut trainer,
+                &[0..8],
+                2,
+                SubmitMode::Agwu,
+                Staleness(1),
+                false,
+            )
+            .unwrap()
+        })
+    };
+
+    // Wait until the straggler holds its v0 snapshot, then install 12
+    // versions from the fast node — more than the 2m+2 = 6 the history
+    // window retains, guaranteeing v0 is gone.
+    while !started.load(Ordering::Acquire) {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let mut fast = InProcTransport::new(Arc::clone(&ps), 1);
+    for _ in 0..12 {
+        let (w, base) = fast.fetch_global().unwrap();
+        let local = (*w).clone();
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 0.5,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        fast.submit(local, &meta).unwrap();
+    }
+    go.store(true, Ordering::Release);
+
+    let summary = straggler.join().unwrap();
+    assert_eq!(summary.iterations, 2);
+    assert!(summary.max_staleness <= 1, "pipeline bound violated: {}", summary.max_staleness);
+    let fallbacks = ps.lock().unwrap().comm.evicted_base_fallbacks;
+    assert!(
+        fallbacks >= 1,
+        "straggler's v0 base should have been evicted and counted, got {fallbacks}"
+    );
 }

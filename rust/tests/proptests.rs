@@ -990,3 +990,121 @@ fn prop_pipelined_staleness_bound_holds_under_chaos() {
         assert_true(ps.version() >= iterations, "server version includes all submits")
     });
 }
+
+/// PR9: chaos — the pipelined worker (`s ≥ 1`) keeps every PR8 invariant
+/// when its transport injects seeded drops, truncations, duplicated frames
+/// and delays, and a [`RetryingTransport`] reconnects through them. Faults
+/// fire *before* the underlying operation, so a retried submit is never
+/// double-applied: the ack stream must stay strictly increasing with
+/// exactly one ack per epoch, the staleness bound must hold, and the
+/// recovery ledger must stay internally consistent.
+#[test]
+fn prop_pipelined_chaos_retries_preserve_invariants() {
+    use bptcnn::outer::{
+        drive_worker, ConnectFn, EpochOutcome, FaultyTransport, InProcTransport, LocalTrainer,
+        RetryPolicy, RetryingTransport, Staleness, SubmitMode, Transport,
+    };
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    /// Minimal trainer: bounded fake compute, deterministic weight nudge.
+    struct NudgeTrainer {
+        samples: usize,
+        spin_us: u64,
+    }
+
+    impl LocalTrainer for NudgeTrainer {
+        fn train_epoch(&mut self, start: Arc<WeightSet>) -> EpochOutcome {
+            let t0 = std::time::Instant::now();
+            if self.spin_us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(self.spin_us));
+            }
+            let mut w = (*start).clone();
+            w.tensors_mut()[0].data_mut()[0] += 0.01;
+            EpochOutcome {
+                weights: w,
+                loss: 1.0,
+                accuracy: 0.5,
+                samples: self.samples.max(1),
+                compute_s: t0.elapsed().as_secs_f64(),
+            }
+        }
+        fn add_samples(&mut self, range: std::ops::Range<usize>) {
+            self.samples += range.len();
+        }
+        fn sample_count(&self) -> usize {
+            self.samples
+        }
+    }
+
+    prop::check("pipelined chaos with retries", 40, |g| {
+        let s = g.usize_full(1, 2);
+        let iterations = g.usize_full(2, 6);
+        let drop_pct = g.usize_full(0, 30) as u8;
+        let truncate_pct = g.usize_full(0, 15) as u8;
+        let duplicate_pct = g.usize_full(0, 30) as u8;
+        let delay_pct = g.usize_full(0, 30) as u8;
+        let base_seed = g.u64(1, u64::MAX / 2) | 1;
+
+        let init = WeightSet::new(vec![Tensor::zeros(&[8])]);
+        let ps = Arc::new(Mutex::new(ParamServer::new(init, 1)));
+        // Every (re)connection gets a fresh fault stream derived from the
+        // session counter, so reconnecting never replays the same faults.
+        let connect: ConnectFn = {
+            let ps = Arc::clone(&ps);
+            let mut session = 0u64;
+            Box::new(move || {
+                session += 1;
+                let inner = InProcTransport::new(Arc::clone(&ps), 0);
+                let faulty = FaultyTransport::new(inner, base_seed.wrapping_mul(session) | 1)
+                    .with_drop_pct(drop_pct)
+                    .with_truncate_pct(truncate_pct)
+                    .with_duplicate_pct(duplicate_pct)
+                    .with_delay(delay_pct, Duration::from_micros(50));
+                Ok(Box::new(faulty) as Box<dyn Transport>)
+            })
+        };
+        // 20 attempts at ≤ 45% per-op fault rate: the chance of exhausting
+        // the budget is ~1e-7 per operation — deterministic enough for CI.
+        let policy = RetryPolicy {
+            max_attempts: 20,
+            base_backoff: Duration::from_micros(10),
+            max_backoff: Duration::from_micros(500),
+        };
+        let mut t = RetryingTransport::new(connect, policy);
+        let mut trainer = NudgeTrainer { samples: 4, spin_us: g.usize_full(0, 200) as u64 };
+        let summary = drive_worker(
+            &mut t,
+            &mut trainer,
+            &[],
+            iterations,
+            SubmitMode::Agwu,
+            Staleness(s),
+            false,
+        )
+        .map_err(|e| format!("chaos worker failed: {e:#}"))?;
+
+        assert_true(
+            summary.max_staleness <= s,
+            &format!("bound violated: trained {} behind with s={s}", summary.max_staleness),
+        )?;
+        assert_eq_msg(summary.ack_log.len(), iterations, "one ack per epoch")?;
+        for pair in summary.ack_log.windows(2) {
+            assert_true(
+                pair[0].version < pair[1].version,
+                &format!("acks out of order: v{} then v{}", pair[0].version, pair[1].version),
+            )?;
+        }
+        // Faults fire before the wrapped call, so each epoch lands exactly
+        // one server-side update regardless of how many retries it took.
+        let ledger = summary.stats.fault;
+        assert_true(
+            ledger.reconnects <= ledger.retries,
+            &format!("{} reconnects but only {} retries", ledger.reconnects, ledger.retries),
+        )?;
+        drop(t);
+        let ps = Arc::try_unwrap(ps).unwrap().into_inner().unwrap();
+        assert_eq_msg(ps.version(), iterations, "exactly one installed version per epoch")?;
+        assert_eq_msg(ps.comm.submits, iterations, "no duplicated submits")
+    });
+}
