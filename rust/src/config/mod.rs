@@ -223,6 +223,37 @@ impl OnFailure {
     }
 }
 
+/// When the primary parameter server acknowledges a worker's submit,
+/// relative to streaming the update to the warm standby (`--repl-ack`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum ReplAck {
+    /// Ack the worker immediately; replication is asynchronous. A primary
+    /// crash can lose updates acked after the last replicated snapshot.
+    #[default]
+    None,
+    /// Replication-before-ack: the worker's Ack waits until the standby
+    /// acknowledged the update (with its full snapshot), so every update a
+    /// worker ever saw acked survives a failover bit-identically.
+    Standby,
+}
+
+impl ReplAck {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(Self::None),
+            "standby" => Ok(Self::Standby),
+            other => anyhow::bail!("unknown repl-ack mode '{other}' (want none|standby)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Standby => "standby",
+        }
+    }
+}
+
 /// Data partitioning strategy (§3.3.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionStrategy {
@@ -435,6 +466,10 @@ mod tests {
         assert_eq!(OnFailure::parse("continue").unwrap(), OnFailure::Continue);
         assert_eq!(OnFailure::parse("Abort").unwrap(), OnFailure::Abort);
         assert!(OnFailure::parse("retry").is_err());
+        assert_eq!(ReplAck::parse("none").unwrap(), ReplAck::None);
+        assert_eq!(ReplAck::parse("Standby").unwrap(), ReplAck::Standby);
+        assert!(ReplAck::parse("quorum").is_err());
+        assert_eq!(ReplAck::default(), ReplAck::None);
     }
 
     #[test]

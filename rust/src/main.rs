@@ -284,6 +284,28 @@ fn cmd_param_server(argv: &[String]) -> i32 {
     .opt("lease-ms", "30000", "per-connection read/write deadline in ms (0 = none)")
     .opt("checkpoint-dir", "", "directory for periodic latest.ckpt weight checkpoints")
     .opt("checkpoint-every", "25", "checkpoint every this many installed versions")
+    .opt("role", "primary", "primary serves workers; standby mirrors a primary and promotes itself")
+    .opt("standby", "", "primary: replicate committed updates to a warm standby at this address")
+    .opt(
+        "repl-ack",
+        "none",
+        "replication consistency: none (async) | standby (hold worker acks until replicated)",
+    )
+    .opt(
+        "repl-snapshot-every",
+        "8",
+        "async replication: attach a full weight snapshot every this many updates",
+    )
+    .opt(
+        "repl-lease-ms",
+        "0",
+        "standby: promote after this much primary silence in ms (0 = use --lease-ms)",
+    )
+    .opt(
+        "claim-deadline-ms",
+        "10000",
+        "promoted standby: give up unless a worker fails over within this window",
+    )
     .flag("resume", "restore weights/version from <checkpoint-dir>/latest.ckpt")
     .flag("verbose", "log every installed version")
     .flag(
@@ -332,11 +354,16 @@ fn cmd_param_server(argv: &[String]) -> i32 {
         let cluster = ClusterConfig::homogeneous(nodes);
         let (schedule, _totals, _iterations) = bptcnn::outer::build_schedule(&tc, &cluster);
         let columns = bptcnn::outer::schedule_columns(&schedule, nodes);
+        let role = p.str("role");
         println!(
-            "param-server listening on {addr} ({nodes} nodes, {}, {} params)",
+            "param-server ({role}) listening on {addr} ({nodes} nodes, {}, {} params)",
             update.name(),
             network.param_count()
         );
+        // SIGTERM/SIGINT flips this flag; the serve loop drains in-flight
+        // submits, writes a final checkpoint, and returns cleanly.
+        let shutdown = bptcnn::util::signal::install_shutdown_handler();
+        let standby_addr = p.str("standby");
         let opts = bptcnn::outer::ServeOptions {
             nodes,
             update,
@@ -349,8 +376,37 @@ fn cmd_param_server(argv: &[String]) -> i32 {
             init_version,
             resumed,
             schedule: Some(columns),
+            standby: (!standby_addr.is_empty()).then(|| standby_addr.to_string()),
+            repl_ack: bptcnn::config::ReplAck::parse(p.str("repl-ack"))?,
+            repl_snapshot_every: p.usize("repl-snapshot-every")?.max(1),
+            shutdown: Some(shutdown),
+            ..Default::default()
         };
-        let report = bptcnn::outer::serve(listener, init, opts)?;
+        let report = match role {
+            "primary" => bptcnn::outer::serve(listener, init, opts)?,
+            "standby" => {
+                let repl_lease_ms = match p.u64("repl-lease-ms")? {
+                    0 => p.u64("lease-ms")?,
+                    ms => ms,
+                };
+                let sopts = bptcnn::outer::StandbyOptions {
+                    repl_lease: std::time::Duration::from_millis(repl_lease_ms),
+                    claim_deadline: std::time::Duration::from_millis(
+                        p.u64("claim-deadline-ms")?,
+                    ),
+                    verbose: p.bool("verbose"),
+                    serve: opts,
+                };
+                match bptcnn::outer::serve_standby(listener, init, sopts)? {
+                    bptcnn::outer::StandbyOutcome::PrimaryFinished => {
+                        println!("standby: primary finished the run; standing down");
+                        return Ok(());
+                    }
+                    bptcnn::outer::StandbyOutcome::Promoted(report) => report,
+                }
+            }
+            other => anyhow::bail!("unknown role '{other}' (primary|standby)"),
+        };
         let mb = 1024.0 * 1024.0;
         println!(
             "run complete: {} versions | comm {:.2} MB logical, {:.2} MB wire | \
@@ -365,9 +421,10 @@ fn cmd_param_server(argv: &[String]) -> i32 {
         );
         if report.fault.any() {
             println!(
-                "fault recovery: {} reconnects | {} leases expired | \
+                "fault recovery: {} reconnects | {} failovers | {} leases expired | \
                  {} batches ({} samples) re-allocated | {} checkpoints written, {} loaded",
                 report.fault.reconnects,
+                report.fault.failovers,
                 report.fault.leases_expired,
                 report.fault.reallocated_batches,
                 report.fault.reallocated_samples,
@@ -406,6 +463,11 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "computing-node worker process (connects to a param-server)",
     )
     .opt("connect", "127.0.0.1:7878", "param-server address")
+    .opt(
+        "servers",
+        "",
+        "ordered failover list 'primary:port,standby:port' (overrides --connect)",
+    )
     .opt("node", "0", "this node's slot index (0..nodes)")
     .opt("nodes", "2", "total computing nodes m (must match the server)")
     .opt("network", "quickstart", "network config: quickstart|e2e|case1..case7")
@@ -467,9 +529,20 @@ fn cmd_worker(argv: &[String]) -> i32 {
             UpdateStrategy::Sgwu => bptcnn::outer::SubmitMode::Sgwu,
             UpdateStrategy::Agwu => bptcnn::outer::SubmitMode::Agwu,
         };
-        let addr = p.str("connect");
+        // The ordered server list drives worker-side failover: dial the
+        // preferred address first, advance to the next on connect failure.
+        let addrs: Vec<String> = match p.str("servers") {
+            "" => vec![p.str("connect").to_string()],
+            list => list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        };
+        anyhow::ensure!(!addrs.is_empty(), "--servers needs at least one address");
         println!(
-            "worker {node}/{nodes} connecting to {addr} ({}, K={iterations})",
+            "worker {node}/{nodes} connecting to {} ({}, K={iterations})",
+            addrs.join(","),
             update.name()
         );
         if p.bool("resume") {
@@ -494,20 +567,30 @@ fn cmd_worker(argv: &[String]) -> i32 {
         let io_timeout = Some(std::time::Duration::from_millis(p.u64("io-timeout-ms")?));
         // Every (re)connection goes through the same factory: a dead link is
         // re-dialed with the same node id and the server replays the current
-        // global snapshot on the first fetch.
-        let addr_owned = addr.to_string();
+        // global snapshot on the first fetch. The shared epoch cell carries
+        // the highest observed cluster epoch into each Hello, so a reconnect
+        // after a standby promotion registers with (and fences) the right
+        // server generation.
         let throttle = (bw_mbs > 0.0)
             .then(|| bptcnn::outer::TransferModel::new(bw_mbs * 1e6, latency_s));
-        let connect: bptcnn::outer::ConnectFn = Box::new(move || {
-            let tcp =
-                bptcnn::outer::TcpTransport::connect_with_timeout(&addr_owned, node, io_timeout)?;
-            Ok(match throttle {
-                Some(model) => Box::new(bptcnn::outer::ThrottledTransport::new(tcp, model))
-                    as Box<dyn bptcnn::outer::Transport>,
-                None => Box::new(tcp) as Box<dyn bptcnn::outer::Transport>,
-            })
-        });
-        let mut t = bptcnn::outer::RetryingTransport::new(connect, policy);
+        let servers = bptcnn::outer::ServerList::new(addrs);
+        let connect = bptcnn::outer::failover_connect(
+            std::sync::Arc::clone(&servers),
+            move |addr, epoch_cell| {
+                let tcp = bptcnn::outer::TcpTransport::connect_with_epoch(
+                    addr,
+                    node,
+                    io_timeout,
+                    Some(epoch_cell),
+                )?;
+                Ok(match throttle {
+                    Some(model) => Box::new(bptcnn::outer::ThrottledTransport::new(tcp, model))
+                        as Box<dyn bptcnn::outer::Transport>,
+                    None => Box::new(tcp) as Box<dyn bptcnn::outer::Transport>,
+                })
+            },
+        );
+        let mut t = bptcnn::outer::RetryingTransport::new(connect, policy).with_servers(servers);
         let summary = bptcnn::outer::drive_worker(
             &mut t, &mut trainer, &column, iterations, mode, staleness, verbose,
         )?;
@@ -531,8 +614,10 @@ fn cmd_worker(argv: &[String]) -> i32 {
         );
         if summary.stats.fault.any() {
             println!(
-                "worker {node} fault recovery: {} retries | {} reconnects",
-                summary.stats.fault.retries, summary.stats.fault.reconnects
+                "worker {node} fault recovery: {} retries | {} reconnects | {} failovers",
+                summary.stats.fault.retries,
+                summary.stats.fault.reconnects,
+                summary.stats.fault.failovers
             );
         }
         Ok(())

@@ -24,6 +24,7 @@ use std::fs;
 use std::io::Write as _;
 use std::ops::Range;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -33,6 +34,7 @@ use crate::tensor::wire::{decode_weight_set, encode_weight_set_into, encoded_len
 use crate::tensor::WeightSet;
 
 use super::transport::{SubmitAck, SubmitMeta, Transport, TransportStats};
+use super::wire::{read_msg, write_msg, Msg};
 
 /// Counters for every fault-recovery event in a run. Merged across nodes
 /// into `ClusterReport.fault`.
@@ -52,6 +54,9 @@ pub struct FaultStats {
     pub checkpoints_loaded: usize,
     /// Worker leases that expired (heartbeat/read deadline missed).
     pub leases_expired: usize,
+    /// Failovers: worker-side, a dial that moved on to the next address in
+    /// the `--servers` list; server-side, a standby promotion to primary.
+    pub failovers: usize,
 }
 
 impl FaultStats {
@@ -64,6 +69,7 @@ impl FaultStats {
         self.checkpoints_written += other.checkpoints_written;
         self.checkpoints_loaded += other.checkpoints_loaded;
         self.leases_expired += other.leases_expired;
+        self.failovers += other.failovers;
     }
 
     /// True if any recovery event fired.
@@ -88,6 +94,9 @@ enum Fault {
     Duplicate,
     /// The payload arrives short — surfaces as a decode error.
     Truncate,
+    /// One bit of the frame flips in flight — the CRC32 trailer must catch
+    /// it; surfaces as the wire layer's crc-mismatch decode error.
+    BitFlip,
 }
 
 /// Transport decorator injecting seeded, deterministic faults.
@@ -104,6 +113,7 @@ pub struct FaultyTransport<T: Transport> {
     delay: Duration,
     duplicate_pct: u8,
     truncate_pct: u8,
+    bitflip_pct: u8,
     kill_after_ops: Option<usize>,
     ops: usize,
     last_fetch: Option<(Arc<WeightSet>, usize)>,
@@ -121,6 +131,7 @@ impl<T: Transport> FaultyTransport<T> {
             delay: Duration::from_micros(200),
             duplicate_pct: 0,
             truncate_pct: 0,
+            bitflip_pct: 0,
             kill_after_ops: None,
             ops: 0,
             last_fetch: None,
@@ -150,6 +161,16 @@ impl<T: Transport> FaultyTransport<T> {
     /// Percentage of operations whose payload arrives truncated.
     pub fn with_truncate_pct(mut self, pct: u8) -> Self {
         self.truncate_pct = pct.min(100);
+        self
+    }
+
+    /// Percentage of operations whose frame arrives with one bit flipped.
+    /// Unlike the other faults this one is *end-to-end*: the real wire
+    /// frame is serialized, a deterministic bit is flipped inside the
+    /// body/CRC region, and the frame is re-decoded — the CRC32 trailer
+    /// must reject it, and its decode error is what the caller observes.
+    pub fn with_bitflip_pct(mut self, pct: u8) -> Self {
+        self.bitflip_pct = pct.min(100);
         self
     }
 
@@ -192,6 +213,9 @@ impl<T: Transport> FaultyTransport<T> {
         if self.pct() < self.truncate_pct {
             return Ok(Fault::Truncate);
         }
+        if self.pct() < self.bitflip_pct {
+            return Ok(Fault::BitFlip);
+        }
         if fetch && self.pct() < self.duplicate_pct {
             return Ok(Fault::Duplicate);
         }
@@ -200,6 +224,29 @@ impl<T: Transport> FaultyTransport<T> {
         }
         Ok(Fault::None)
     }
+
+    /// Serialize `msg` as a real wire frame, flip one seeded bit inside the
+    /// body-or-trailer region, and re-decode: the CRC32 check must reject
+    /// it. Returns the decode error the corrupted frame produced — this is
+    /// the end-to-end path a flipped bit takes through the real protocol.
+    fn bit_flip_error(&mut self, msg: &Msg, during: &str) -> anyhow::Error {
+        let mut frame = Vec::new();
+        if let Err(e) = write_msg(&mut frame, msg) {
+            return e.context("injected fault: encode for bit flip");
+        }
+        // Flip within [4, len): body + CRC trailer, never the length prefix
+        // (a corrupt length is a different failure mode — `Truncate`).
+        let span = frame.len() - 4;
+        let bit = (self.next() as usize) % (span * 8);
+        frame[4 + bit / 8] ^= 1 << (bit % 8);
+        match read_msg(&mut std::io::Cursor::new(frame)) {
+            Err(e) => e.context(format!("injected fault: bit-flipped frame during {during}")),
+            Ok(_) => anyhow::anyhow!(
+                "injected bit flip survived the CRC32 trailer during {during} — \
+                 integrity check is broken"
+            ),
+        }
+    }
 }
 
 impl<T: Transport> Transport for FaultyTransport<T> {
@@ -207,6 +254,19 @@ impl<T: Transport> Transport for FaultyTransport<T> {
         match self.draw(true)? {
             Fault::Drop => bail!("injected fault: connection dropped during fetch"),
             Fault::Truncate => bail!("injected fault: truncated global frame"),
+            Fault::BitFlip => {
+                // The reply arrives, but one bit flipped in flight: build
+                // the real Global frame it would have ridden in, corrupt
+                // it, and surface the CRC rejection.
+                let (ws, v) = self.inner.fetch_global()?;
+                let msg = Msg::Global {
+                    version: v as u64,
+                    epoch: 0,
+                    reassigned: Vec::new(),
+                    weights: (*ws).clone(),
+                };
+                return Err(self.bit_flip_error(&msg, "fetch"));
+            }
             Fault::Duplicate => {
                 if let Some((ws, v)) = &self.last_fetch {
                     return Ok((Arc::clone(ws), *v));
@@ -224,6 +284,16 @@ impl<T: Transport> Transport for FaultyTransport<T> {
         match self.draw(false)? {
             Fault::Drop => bail!("injected fault: connection dropped during submit"),
             Fault::Truncate => bail!("injected fault: truncated submit frame"),
+            Fault::BitFlip => {
+                let msg = Msg::Submit {
+                    mode: meta.mode,
+                    base: meta.base as u64,
+                    accuracy: meta.accuracy,
+                    loss: meta.loss,
+                    weights: local,
+                };
+                return Err(self.bit_flip_error(&msg, "submit"));
+            }
             Fault::Delay => std::thread::sleep(self.delay),
             Fault::Duplicate | Fault::None => {}
         }
@@ -291,6 +361,94 @@ impl RetryPolicy {
 /// global snapshot on the first fetch.
 pub type ConnectFn = Box<dyn FnMut() -> Result<Box<dyn Transport>> + Send>;
 
+// ---------------------------------------------------------------------------
+// Worker-driven failover across an ordered server list
+// ---------------------------------------------------------------------------
+
+/// Ordered `--servers` address list shared by a worker's dialers, plus the
+/// cluster-epoch cell every session stamps into its `Hello` and raises
+/// from `Global` replies. `preferred` starts at 0 (the primary); when a
+/// dial fails the factory advances past it, so once the worker has failed
+/// over every later reconnect goes straight to the promoted standby.
+pub struct ServerList {
+    addrs: Vec<String>,
+    preferred: AtomicUsize,
+    failovers: AtomicUsize,
+    epoch: Arc<AtomicU64>,
+}
+
+impl ServerList {
+    /// Build from an ordered address list (primary first). Panics on an
+    /// empty list — a worker with nowhere to dial is a config error.
+    pub fn new(addrs: Vec<String>) -> Arc<Self> {
+        assert!(!addrs.is_empty(), "server list must not be empty");
+        Arc::new(ServerList {
+            addrs,
+            preferred: AtomicUsize::new(0),
+            failovers: AtomicUsize::new(0),
+            epoch: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// The shared cluster-epoch cell. Hand this to every transport dialed
+    /// from the list so a promotion observed on one connection raises the
+    /// epoch all future `Hello`s carry.
+    pub fn epoch_cell(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.epoch)
+    }
+
+    /// Highest cluster epoch observed so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// The addresses, in priority order.
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// Index of the address new sessions currently prefer.
+    pub fn preferred(&self) -> usize {
+        self.preferred.load(Ordering::SeqCst)
+    }
+
+    /// How many times a dial moved on to a different address.
+    pub fn failovers(&self) -> usize {
+        self.failovers.load(Ordering::SeqCst)
+    }
+}
+
+/// Build a [`ConnectFn`] that tries `list` in order starting from the
+/// preferred address, advancing (and counting a failover) when a dial
+/// fails. `dial` receives the address and the shared epoch cell.
+pub fn failover_connect(
+    list: Arc<ServerList>,
+    mut dial: impl FnMut(&str, Arc<AtomicU64>) -> Result<Box<dyn Transport>> + Send + 'static,
+) -> ConnectFn {
+    Box::new(move || {
+        let n = list.addrs.len();
+        let start = list.preferred.load(Ordering::SeqCst);
+        let mut last_err = None;
+        for k in 0..n {
+            let idx = (start + k) % n;
+            match dial(&list.addrs[idx], list.epoch_cell()) {
+                Ok(t) => {
+                    if idx != start {
+                        list.preferred.store(idx, Ordering::SeqCst);
+                        list.failovers.fetch_add(1, Ordering::SeqCst);
+                    }
+                    return Ok(t);
+                }
+                Err(e) => {
+                    last_err =
+                        Some(e.context(format!("dial param server {}", list.addrs[idx])))
+                }
+            }
+        }
+        Err(last_err.expect("server list non-empty"))
+    })
+}
+
 /// Transport wrapper that retries failed operations under a
 /// [`RetryPolicy`], reconnecting via the factory when the underlying
 /// session is lost. Stats of dead sessions are absorbed so nothing is
@@ -302,6 +460,7 @@ pub struct RetryingTransport {
     ever_connected: bool,
     absorbed: TransportStats,
     fault: FaultStats,
+    servers: Option<Arc<ServerList>>,
 }
 
 impl RetryingTransport {
@@ -316,12 +475,24 @@ impl RetryingTransport {
             ever_connected: false,
             absorbed: TransportStats::default(),
             fault: FaultStats::default(),
+            servers: None,
         }
+    }
+
+    /// Attach the [`ServerList`] the factory dials through, so its
+    /// failover count shows up in this transport's fault stats.
+    pub fn with_servers(mut self, servers: Arc<ServerList>) -> Self {
+        self.servers = Some(servers);
+        self
     }
 
     /// Recovery counters accumulated so far.
     pub fn fault_stats(&self) -> FaultStats {
-        self.fault
+        let mut f = self.fault;
+        if let Some(list) = &self.servers {
+            f.failovers += list.failovers();
+        }
+        f
     }
 
     fn ensure_inner(&mut self) -> Result<&mut Box<dyn Transport>> {
@@ -391,7 +562,7 @@ impl Transport for RetryingTransport {
         if let Some(inner) = &self.inner {
             s.merge(&inner.stats());
         }
-        s.fault.merge(&self.fault);
+        s.fault.merge(&self.fault_stats());
         s
     }
 
@@ -458,6 +629,21 @@ pub fn write_checkpoint(dir: &Path, version: u64, ws: &WeightSet) -> Result<()> 
     }
     fs::rename(&tmp, checkpoint_path(dir))
         .with_context(|| format!("publish checkpoint in {}", dir.display()))?;
+    // The rename is only durable once the *directory entry* is on disk:
+    // fsyncing the file alone does not persist the name change, so a
+    // power loss right here could resurrect the old checkpoint — or
+    // leave none at all on filesystems that journal lazily.
+    sync_dir(dir)?;
+    Ok(())
+}
+
+/// Fsync a directory so a just-renamed entry inside it survives power
+/// loss. Split out so the open/sync path is testable on its own.
+pub fn sync_dir(dir: &Path) -> Result<()> {
+    let d = fs::File::open(dir)
+        .with_context(|| format!("open checkpoint dir {} for sync", dir.display()))?;
+    d.sync_all()
+        .with_context(|| format!("sync checkpoint dir {}", dir.display()))?;
     Ok(())
 }
 
@@ -610,6 +796,90 @@ mod tests {
         assert!(err.to_string().contains("3 attempts"), "{err:#}");
         assert_eq!(t.fault_stats().retries, 2);
         assert_eq!(t.fault_stats().reconnects, 0);
+    }
+
+    #[test]
+    fn bit_flip_fault_is_rejected_by_the_crc_trailer() {
+        let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[1.0, -2.0]), 1)));
+        let mut t = FaultyTransport::new(InProcTransport::new(Arc::clone(&ps), 0), 17)
+            .with_bitflip_pct(100);
+        for _ in 0..8 {
+            let err = t.fetch_global().unwrap_err();
+            let chain = format!("{err:#}");
+            assert!(chain.contains("bit-flipped frame during fetch"), "{chain}");
+            assert!(chain.contains("crc mismatch"), "{chain}");
+        }
+        for _ in 0..8 {
+            let err = t.submit(ws(&[0.5, 0.5]), &agwu_meta(0)).unwrap_err();
+            let chain = format!("{err:#}");
+            assert!(chain.contains("bit-flipped frame during submit"), "{chain}");
+            assert!(chain.contains("crc mismatch"), "{chain}");
+        }
+        // The corrupted submits never reached the server.
+        assert_eq!(ps.lock().unwrap().version(), 0);
+    }
+
+    #[test]
+    fn failover_connect_advances_to_the_standby_and_sticks() {
+        let ps = Arc::new(Mutex::new(ParamServer::new(ws(&[0.0]), 1)));
+        let list = ServerList::new(vec!["primary:1".into(), "standby:2".into()]);
+        let dial_log = Arc::new(Mutex::new(Vec::<String>::new()));
+        let log = Arc::clone(&dial_log);
+        let dial_ps = Arc::clone(&ps);
+        let connect = failover_connect(Arc::clone(&list), move |addr, _epoch| {
+            log.lock().unwrap().push(addr.to_string());
+            if addr.starts_with("primary") {
+                bail!("injected fault: primary unreachable");
+            }
+            Ok(Box::new(InProcTransport::new(Arc::clone(&dial_ps), 0)) as Box<dyn Transport>)
+        });
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+        };
+        let mut t = RetryingTransport::new(connect, policy).with_servers(Arc::clone(&list));
+        t.fetch_global().unwrap();
+        t.fetch_global().unwrap();
+        // First connect walked primary -> standby; after the failover the
+        // list prefers the standby, so no second dial of the primary.
+        assert_eq!(
+            *dial_log.lock().unwrap(),
+            vec!["primary:1".to_string(), "standby:2".to_string()]
+        );
+        assert_eq!(list.preferred(), 1);
+        assert_eq!(list.failovers(), 1);
+        assert_eq!(t.fault_stats().failovers, 1);
+        assert_eq!(t.stats().fault.failovers, 1);
+    }
+
+    #[test]
+    fn failover_connect_reports_last_error_when_all_addresses_fail() {
+        let list = ServerList::new(vec!["a:1".into(), "b:2".into()]);
+        let mut connect = failover_connect(Arc::clone(&list), |addr, _| {
+            bail!("injected fault: {addr} unreachable")
+        });
+        let err = connect().unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("dial param server"), "{chain}");
+        assert_eq!(list.failovers(), 0, "failed dials are not failovers");
+    }
+
+    #[test]
+    fn checkpoint_dir_is_syncable_after_publish() {
+        let dir = std::env::temp_dir().join(format!(
+            "bptcnn-ckpt-sync-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        // write_checkpoint itself runs the open/sync path; exercise it
+        // again standalone and assert the failure mode on a missing dir.
+        write_checkpoint(&dir, 3, &ws(&[1.0])).unwrap();
+        sync_dir(&dir).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+        let err = sync_dir(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("open checkpoint dir"), "{err:#}");
     }
 
     #[test]

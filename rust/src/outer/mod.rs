@@ -21,13 +21,13 @@ pub use cluster::{
     AsyncMode, ClusterReport, VersionRecord,
 };
 pub use fault::{
-    read_checkpoint, write_checkpoint, ConnectFn, FaultStats, FaultyTransport, RetryPolicy,
-    RetryingTransport,
+    failover_connect, read_checkpoint, sync_dir, write_checkpoint, ConnectFn, FaultStats,
+    FaultyTransport, RetryPolicy, RetryingTransport, ServerList,
 };
 pub use param_server::{CommStats, ParamServer};
 pub use partition::{reallocate, udpa_partition, IdpaPartitioner};
 pub use pipeline::{pipeline, AckRecord, CommThread, PipelineAccounting, PipelinedTransport, Staleness};
-pub use server::{serve, ServeOptions};
+pub use server::{serve, serve_standby, ServeOptions, StandbyOptions, StandbyOutcome};
 pub use trainer::{build_schedule, slowdown_factors, train_native, CurvePoint, TrainReport};
 pub use transport::{
     InProcTransport, ServerError, SubmitAck, SubmitMeta, SubmitMode, TcpTransport,

@@ -412,4 +412,71 @@ mod tests {
         let parts = reallocate(&[5..5], &[1.0]);
         assert!(parts[0].is_empty());
     }
+
+    #[test]
+    fn reallocate_single_survivor_absorbs_everything_intact() {
+        // One survivor left: it inherits every range, with the original
+        // batch boundaries preserved (no splits are needed).
+        let ranges = vec![10..25, 40..41, 100..163];
+        let parts = reallocate(&ranges, &[0.37]);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], ranges);
+        // Even a zero-throughput lone survivor must take the load — there
+        // is nobody else.
+        let parts = reallocate(&ranges, &[0.0]);
+        assert_eq!(total_len(&parts), 15 + 1 + 63);
+    }
+
+    #[test]
+    fn reallocate_zero_throughput_survivor_among_positive_peers_gets_nothing() {
+        // A survivor with no measured progress (never completed an epoch)
+        // has share 0 when any peer has positive throughput: all samples
+        // go to the nodes demonstrably making progress.
+        let parts = reallocate(&[0..100], &[0.0, 2.0, 0.0, 3.0]);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.iter().map(|r| r.len()).sum()).collect();
+        assert_eq!(sizes[0], 0);
+        assert_eq!(sizes[2], 0);
+        assert_eq!(sizes[1] + sizes[3], 100);
+        assert_eq!(sizes[1], 40, "2:3 throughput split of 100");
+    }
+
+    #[test]
+    fn reallocate_floor_quotas_send_remainder_to_largest_shares() {
+        // shares 0.5/0.25/0.25 of 11 → floors 5/2/2 (Σ=9), the 2-sample
+        // remainder lands on the largest shares first: 6/3/2.
+        let parts = reallocate(&[0..11], &[2.0, 1.0, 1.0]);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.iter().map(|r| r.len()).sum()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 11, "floor+remainder conserves N");
+        assert_eq!(sizes[0], 6, "largest share takes the first remainder sample");
+        assert!(sizes[1] + sizes[2] == 5 && sizes[1] >= 2 && sizes[2] >= 2, "{sizes:?}");
+    }
+
+    #[test]
+    fn reallocate_simultaneous_multi_node_death_conserves_disjointly() {
+        // Two nodes die at once: the server re-allocates each dead node's
+        // remaining ranges in separate calls against the same survivor set
+        // (exactly what `declare_dead` does). The union must conserve every
+        // sample and assign no sample twice.
+        let dead_a = vec![0..37, 80..110];
+        let dead_b = vec![200..275, 300..301];
+        let throughput = [1.7, 0.9, 2.4];
+        let parts_a = reallocate(&dead_a, &throughput);
+        let parts_b = reallocate(&dead_b, &throughput);
+        let total = total_len(&parts_a) + total_len(&parts_b);
+        assert_eq!(total, (37 + 30) + (75 + 1));
+        let mut covered: Vec<usize> = parts_a
+            .iter()
+            .chain(parts_b.iter())
+            .flatten()
+            .flat_map(|r| r.clone())
+            .collect();
+        covered.sort_unstable();
+        let mut expect: Vec<usize> = dead_a
+            .iter()
+            .chain(dead_b.iter())
+            .flat_map(|r| r.clone())
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(covered, expect, "no sample lost, none duplicated");
+    }
 }

@@ -32,17 +32,34 @@
 //! With `--checkpoint-dir`, every `--checkpoint-every`-th installed version
 //! is persisted through [`super::fault::write_checkpoint`] (atomic
 //! rename-on-write), and `--resume` restarts from `latest.ckpt`.
+//!
+//! # High availability
+//!
+//! The server itself is replaceable. A primary given `--standby addr`
+//! streams every committed update (and periodic full snapshots) to a warm
+//! standby over a [`Msg::Replicate`] channel; the standby
+//! ([`serve_standby`]) acks each event, tracks the primary's replication
+//! lease, and on expiry *promotes* itself: it bumps the cluster epoch and
+//! re-opens the worker accept loop ([`serve`]) from the last replicated
+//! state. Epochs fence the old world — every `Hello` carries the highest
+//! epoch the worker has observed (learned from `Global` replies), a
+//! server that sees a higher epoch than its own stands down, and a stale
+//! primary's replication hello is answered with [`Msg::Promote`]. Under
+//! `--repl-ack standby` a worker's submit is not acked until the standby
+//! acked the update (replication-before-ack), so promotion is lossless:
+//! the standby's state is bit-identical to the last acked update.
 
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::ops::Range;
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::config::{OnFailure, UpdateStrategy};
+use crate::config::{OnFailure, ReplAck, UpdateStrategy};
 use crate::tensor::WeightSet;
 
 use super::cluster::{AllocationSchedule, ClusterReport, VersionRecord};
@@ -50,7 +67,12 @@ use super::fault::{write_checkpoint, FaultStats};
 use super::param_server::ParamServer;
 use super::partition::reallocate;
 use super::transport::{SubmitMode, DEFAULT_IO_TIMEOUT};
-use super::wire::{read_msg, write_msg, Msg};
+use super::wire::{read_msg, write_msg, Msg, ReplEvent, REPL_NODE};
+
+/// `ReplEvent::Update.node` sentinel for an SGWU round install (maps to
+/// `VersionRecord.node == usize::MAX`). Distinct from [`REPL_NODE`], which
+/// marks bootstrap snapshots that are not training updates.
+const ROUND_NODE: u32 = u32::MAX - 1;
 
 /// Configuration of one serving run.
 #[derive(Debug, Clone)]
@@ -82,6 +104,39 @@ pub struct ServeOptions {
     /// per iteration). Needed to re-allocate a dead node's remaining
     /// batches; without it, death under AGWU only shrinks the cluster.
     pub schedule: Option<AllocationSchedule>,
+    /// Cluster epoch this server serves at: 0 for a fresh primary, the
+    /// bumped epoch for a promoted standby. Stamped into every `Global`
+    /// reply; a `Hello` carrying a *higher* epoch fences this server.
+    pub epoch: u64,
+    /// Address of a warm standby to replicate committed updates to.
+    pub standby: Option<String>,
+    /// Replication consistency: `Standby` holds each worker Ack until the
+    /// standby acked the update (lossless promotion), `None` replicates
+    /// asynchronously (promotion may lose acked-but-unreplicated tails).
+    pub repl_ack: ReplAck,
+    /// Under async replication, attach a full weight snapshot to every
+    /// this-many-th replicated update (≥ 1; sync replication always
+    /// snapshots).
+    pub repl_snapshot_every: usize,
+    /// Cooperative shutdown flag (SIGTERM/SIGINT): when raised, the server
+    /// stops accepting, drains in-flight submits, writes a final
+    /// checkpoint, and returns cleanly.
+    pub shutdown: Option<Arc<AtomicBool>>,
+    /// Promoted standby only: fail the run if no worker registers within
+    /// this window — a promoted server nobody fails over to is a lost run.
+    pub claim_deadline: Option<Duration>,
+    /// This server is a promoted standby (accounts one failover).
+    pub promoted: bool,
+    /// Slots already `Done` before this server took over.
+    pub pre_done: Vec<usize>,
+    /// Slots already declared dead before this server took over.
+    pub pre_dead: Vec<usize>,
+    /// Per-node submit counts replicated from the predecessor, so
+    /// throughput-weighted re-allocation keeps working across promotion.
+    pub init_submits: Vec<usize>,
+    /// Version history replicated from the predecessor, merged into the
+    /// final report so loss/version trends span the promotion.
+    pub pre_versions: Vec<VersionRecord>,
 }
 
 impl Default for ServeOptions {
@@ -97,6 +152,17 @@ impl Default for ServeOptions {
             init_version: 0,
             resumed: false,
             schedule: None,
+            epoch: 0,
+            standby: None,
+            repl_ack: ReplAck::None,
+            repl_snapshot_every: 8,
+            shutdown: None,
+            claim_deadline: None,
+            promoted: false,
+            pre_done: Vec::new(),
+            pre_dead: Vec::new(),
+            init_submits: Vec::new(),
+            pre_versions: Vec::new(),
         }
     }
 }
@@ -159,6 +225,17 @@ struct ServerState {
     /// Set when the run must fail (protocol violation, all nodes dead, or
     /// any death under `OnFailure::Abort`) so barrier waiters don't hang.
     aborted: bool,
+    /// Queue into the replication thread (None: no standby configured, or
+    /// the replicator shut down).
+    repl: Option<mpsc::Sender<ReplCmd>>,
+    /// Submit handlers currently between frame-read and Ack — the work a
+    /// graceful shutdown drains before closing connections.
+    active_submits: usize,
+    /// Raised by a graceful shutdown: handlers treat connection errors as
+    /// a quiet end instead of node death, barrier waiters are released.
+    draining: bool,
+    /// Successful registrations since this server started serving.
+    claims: usize,
 }
 
 struct Shared {
@@ -166,6 +243,196 @@ struct Shared {
     round_cv: Condvar,
     t0: Instant,
     opts: ServeOptions,
+    /// Clones of every live connection, so a graceful shutdown can unblock
+    /// handlers parked in `read_msg` by closing the sockets under them.
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+// ---------------------------------------------------------------------------
+// Replication (primary side)
+// ---------------------------------------------------------------------------
+
+/// Commands into the replication thread.
+enum ReplCmd {
+    /// Ship one event; if `done` is present (replication-before-ack) the
+    /// sender blocks until the standby acked — the channel is dropped
+    /// (releasing the waiter) even when replication degrades.
+    Event { ev: ReplEvent, done: Option<mpsc::SyncSender<()>> },
+    /// End of run: tell the standby not to promote, then exit.
+    Shutdown,
+}
+
+/// The primary's replication worker: owns the TCP link to the standby,
+/// ships events in commit order, keeps the standby's lease warm with
+/// pings, and fences the primary when the standby says it promoted.
+struct ReplWorker {
+    addr: String,
+    epoch: u64,
+    lease: Duration,
+    /// (version, weights) to bootstrap a fresh standby with on connect.
+    boot: (u64, WeightSet),
+    fenced: Arc<AtomicU64>,
+    link: Option<(std::io::BufReader<TcpStream>, std::io::BufWriter<TcpStream>)>,
+    degraded_logged: bool,
+}
+
+impl ReplWorker {
+    fn connect(&mut self) -> Result<()> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("dial standby {}", self.addr))?;
+        stream.set_nodelay(true).ok();
+        let lease = Some(self.lease).filter(|d| !d.is_zero());
+        stream.set_read_timeout(lease).context("standby read deadline")?;
+        stream.set_write_timeout(lease).context("standby write deadline")?;
+        let mut reader = std::io::BufReader::new(stream.try_clone().context("clone stream")?);
+        let mut writer = std::io::BufWriter::new(stream);
+        write_msg(&mut writer, &Msg::Hello { node: REPL_NODE, epoch: self.epoch })?;
+        // Bootstrap snapshot: a standby that just started (or lost its
+        // state) gets a full base to apply later deltas against. Its ack
+        // doubles as the channel handshake — and a promoted ex-standby
+        // answers with `Promote` here, fencing us immediately.
+        let boot = Msg::Replicate {
+            epoch: self.epoch,
+            event: ReplEvent::Update {
+                version: self.boot.0,
+                node: REPL_NODE,
+                loss: 0.0,
+                accuracy: 0.0,
+                at_s: 0.0,
+                weights: Some(self.boot.1.clone()),
+            },
+        };
+        write_msg(&mut writer, &boot)?;
+        match read_msg(&mut reader)?.0 {
+            Msg::ReplAck { .. } => {
+                self.link = Some((reader, writer));
+                self.degraded_logged = false;
+                Ok(())
+            }
+            Msg::Promote { epoch } => {
+                self.fenced.store(epoch.max(1), Ordering::SeqCst);
+                bail!("standby already promoted to epoch {epoch}")
+            }
+            other => bail!("unexpected standby handshake reply: {other:?}"),
+        }
+    }
+
+    /// Ship `msg` and wait for the standby's ack; one reconnect attempt on
+    /// a broken link. Returns false when replication is degraded (standby
+    /// unreachable) or the primary got fenced.
+    fn ship(&mut self, msg: &Msg) -> bool {
+        for _ in 0..2 {
+            if self.fenced.load(Ordering::SeqCst) != 0 {
+                return false;
+            }
+            if self.link.is_none() && self.connect().is_err() {
+                continue;
+            }
+            let Some((reader, writer)) = self.link.as_mut() else { continue };
+            let reply = write_msg(writer, msg).and_then(|_| read_msg(reader).map(|(m, _)| m));
+            match reply {
+                Ok(Msg::ReplAck { .. }) | Ok(Msg::Pong) => return true,
+                Ok(Msg::Promote { epoch }) => {
+                    self.fenced.store(epoch.max(1), Ordering::SeqCst);
+                    self.link = None;
+                    return false;
+                }
+                Ok(_) | Err(_) => self.link = None,
+            }
+        }
+        if !self.degraded_logged {
+            self.degraded_logged = true;
+            eprintln!(
+                "param-server: replication to {} degraded (standby unreachable); \
+                 continuing without a warm standby",
+                self.addr
+            );
+        }
+        false
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<ReplCmd>) {
+        if self.connect().is_err() && !self.degraded_logged {
+            self.degraded_logged = true;
+            eprintln!(
+                "param-server: standby {} unreachable at startup; replication degraded",
+                self.addr
+            );
+        }
+        let keepalive = if self.lease.is_zero() {
+            Duration::from_secs(5)
+        } else {
+            (self.lease / 3).max(Duration::from_millis(20))
+        };
+        loop {
+            match rx.recv_timeout(keepalive) {
+                Ok(ReplCmd::Event { ev, done }) => {
+                    let msg = Msg::Replicate { epoch: self.epoch, event: ev };
+                    self.ship(&msg);
+                    // Complete (or abandon) the replication-before-ack
+                    // waiter either way: a degraded primary keeps serving.
+                    drop(done);
+                }
+                Ok(ReplCmd::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Clean end of run: the standby must not promote.
+                    if let Some((_, writer)) = self.link.as_mut() {
+                        let _ = write_msg(writer, &Msg::Done);
+                    }
+                    return;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Keep the standby's replication lease warm.
+                    if self.link.is_some() {
+                        self.ship(&Msg::Ping);
+                    }
+                    if self.fenced.load(Ordering::SeqCst) != 0 {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Enqueue replication of freshly installed `version` (under the state
+/// lock, so events leave in commit order). Under `--repl-ack standby`
+/// returns the receiver the caller must block on — *outside* the lock —
+/// before acking the worker.
+fn plan_replication(
+    shared: &Shared,
+    st: &mut ServerState,
+    version: usize,
+    node: u32,
+    loss: f64,
+    accuracy: f64,
+    at_s: f64,
+) -> Option<mpsc::Receiver<()>> {
+    let tx = st.repl.as_ref()?;
+    let sync = shared.opts.repl_ack == ReplAck::Standby;
+    let every = shared.opts.repl_snapshot_every.max(1);
+    let snapshot = sync || version % every == 0;
+    let weights = snapshot.then(|| (*st.ps.global_arc()).clone());
+    let ev = ReplEvent::Update { version: version as u64, node, loss, accuracy, at_s, weights };
+    let (done_tx, done_rx) = if sync {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (Some(tx), Some(rx))
+    } else {
+        (None, None)
+    };
+    if tx.send(ReplCmd::Event { ev, done: done_tx }).is_err() {
+        st.repl = None; // replicator gone: degrade to no replication
+        return None;
+    }
+    done_rx
+}
+
+/// Fire-and-forget replication of a lifecycle event (node done/dead).
+fn replicate_async(st: &mut ServerState, ev: ReplEvent) {
+    if let Some(tx) = &st.repl {
+        if tx.send(ReplCmd::Event { ev, done: None }).is_err() {
+            st.repl = None;
+        }
+    }
 }
 
 /// Serve one training run on an already-bound listener (bind to port 0 and
@@ -183,41 +450,119 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
         );
     }
     let nodes = opts.nodes;
+    // A standby replicator needs a bootstrap snapshot captured before the
+    // weights move into the ParamServer.
+    let boot = opts.standby.as_ref().map(|_| (opts.init_version as u64, init.clone()));
+    let mut ps = ParamServer::with_version(init, nodes, opts.init_version);
+    let mut status = vec![NodeStatus::Unclaimed; nodes];
+    for &n in opts.pre_done.iter().filter(|&&n| n < nodes) {
+        status[n] = NodeStatus::Done;
+    }
+    for &n in opts.pre_dead.iter().filter(|&&n| n < nodes) {
+        status[n] = NodeStatus::Dead;
+        ps.mark_dead(n);
+    }
+    let mut node_submits = vec![0usize; nodes];
+    for (slot, &c) in node_submits.iter_mut().zip(opts.init_submits.iter()) {
+        *slot = c;
+    }
+    let any_pre_dead = opts.pre_dead.iter().any(|&n| n < nodes);
     let shared = Arc::new(Shared {
         state: Mutex::new(ServerState {
-            ps: ParamServer::with_version(init, nodes, opts.init_version),
-            versions: Vec::new(),
+            ps,
+            versions: opts.pre_versions.clone(),
             round: 0,
             round_meta: (0..nodes).map(|_| None).collect(),
             sync_wait_s: 0.0,
             node_busy: vec![0.0; nodes],
             node_stall: vec![0.0; nodes],
-            node_submits: vec![0; nodes],
-            status: vec![NodeStatus::Unclaimed; nodes],
+            node_submits,
+            status,
             session: vec![0; nodes],
             pending_extras: vec![Vec::new(); nodes],
             fault: FaultStats {
                 checkpoints_loaded: usize::from(opts.resumed),
+                failovers: usize::from(opts.promoted),
                 ..FaultStats::default()
             },
             last_ckpt: opts.init_version as u64,
-            last_death: None,
+            last_death: any_pre_dead.then(Instant::now),
             aborted: false,
+            repl: None,
+            active_submits: 0,
+            draining: false,
+            claims: 0,
         }),
         round_cv: Condvar::new(),
         t0: Instant::now(),
         opts,
+        conns: Mutex::new(Vec::new()),
+    });
+
+    // A promoted standby re-allocates the pre-dead nodes' remaining
+    // batches exactly like a live death would have.
+    if any_pre_dead && shared.opts.update == UpdateStrategy::Agwu {
+        let mut st = lock_recover(&shared.state);
+        let dead: Vec<usize> =
+            shared.opts.pre_dead.iter().copied().filter(|&n| n < nodes).collect();
+        for n in dead {
+            reallocate_dead_node(&shared, &mut st, n);
+        }
+    }
+
+    // Start the replication worker before any worker can submit, so no
+    // committed update precedes the channel.
+    let fenced = Arc::new(AtomicU64::new(0));
+    let replicator = shared.opts.standby.clone().map(|addr| {
+        let (tx, rx) = mpsc::channel();
+        lock_recover(&shared.state).repl = Some(tx.clone());
+        let worker = ReplWorker {
+            addr,
+            epoch: shared.opts.epoch,
+            lease: shared.opts.lease,
+            boot: boot.expect("bootstrap snapshot captured when standby is set"),
+            fenced: Arc::clone(&fenced),
+            link: None,
+            degraded_logged: false,
+        };
+        (tx, std::thread::spawn(move || worker.run(rx)))
     });
 
     // Poll-accept so the listener stays open for reconnecting workers and
     // the loop can notice completion/abort between connections.
     listener.set_nonblocking(true).context("nonblocking listener")?;
     let mut handles = Vec::with_capacity(nodes);
+    let mut graceful = false;
+    let mut claim_timeout = false;
     loop {
+        if let Some(flag) = shared.opts.shutdown.as_ref() {
+            if flag.load(Ordering::SeqCst) {
+                // Graceful shutdown: stop accepting and start draining.
+                lock_recover(&shared.state).draining = true;
+                shared.round_cv.notify_all();
+                graceful = true;
+                break;
+            }
+        }
+        if fenced.load(Ordering::SeqCst) != 0 {
+            // The standby promoted past us: stand down immediately so two
+            // servers never serve the same cluster.
+            abort_run(&shared);
+            break;
+        }
         {
             let mut st = lock_recover(&shared.state);
             if st.aborted {
                 break;
+            }
+            if let Some(deadline) = shared.opts.claim_deadline {
+                if st.claims == 0 && shared.t0.elapsed() >= deadline {
+                    st.aborted = true;
+                    claim_timeout = true;
+                    drop(st);
+                    shared.round_cv.notify_all();
+                    break;
+                }
             }
             let finished = st
                 .status
@@ -257,6 +602,21 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
     }
     drop(listener);
 
+    if graceful {
+        // Drain: give in-flight submits a bounded window to reach their
+        // Ack, then close every connection to unblock parked readers.
+        let t_drain = Instant::now();
+        while t_drain.elapsed() < Duration::from_secs(1) {
+            if lock_recover(&shared.state).active_submits == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for conn in lock_recover(&shared.conns).iter() {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
     let mut failures: Vec<String> = Vec::new();
     for h in handles {
         match h.join() {
@@ -265,20 +625,42 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
             Err(_) => failures.push("connection handler panicked".to_string()),
         }
     }
+    // Stop the replicator (sending the standby a clean `Done`) before
+    // unwrapping the shared state.
+    if let Some((tx, handle)) = replicator {
+        lock_recover(&shared.state).repl = None;
+        let _ = tx.send(ReplCmd::Shutdown);
+        let _ = handle.join();
+    }
     let shared = Arc::try_unwrap(shared)
         .map_err(|_| anyhow!("handler threads still hold server state"))?;
     let wall_s = shared.t0.elapsed().as_secs_f64();
+    let fence_epoch = fenced.load(Ordering::SeqCst);
+    if fence_epoch != 0 {
+        bail!(
+            "fenced: standby promoted to cluster epoch {fence_epoch}; \
+             this primary stood down"
+        );
+    }
+    if claim_timeout {
+        bail!(
+            "promoted standby: no worker failed over within {:?}",
+            shared.opts.claim_deadline.unwrap_or_default()
+        );
+    }
     ensure!(failures.is_empty(), "worker connections failed: {}", failures.join("; "));
 
     let mut st = shared.state.into_inner().unwrap_or_else(|e| e.into_inner());
     ensure!(
-        !st.aborted,
+        graceful || !st.aborted,
         "run aborted: every worker died before the run completed"
     );
     // Final checkpoint so a resumed deployment can pick up the end state.
+    // A graceful shutdown always checkpoints (that is its contract), even
+    // when periodic checkpointing is off.
     if let Some(dir) = shared.opts.checkpoint_dir.as_ref() {
         let version = st.ps.version() as u64;
-        if shared.opts.checkpoint_every > 0
+        if (shared.opts.checkpoint_every > 0 || graceful)
             && (version > st.last_ckpt || st.fault.checkpoints_written == 0)
         {
             match write_checkpoint(dir, version, st.ps.global()) {
@@ -286,6 +668,12 @@ pub fn serve(listener: TcpListener, init: WeightSet, opts: ServeOptions) -> Resu
                 Err(e) => eprintln!("param-server: final checkpoint failed: {e:#}"),
             }
         }
+    }
+    if graceful {
+        eprintln!(
+            "param-server: graceful shutdown at v{} (in-flight submits drained)",
+            st.ps.version()
+        );
     }
     st.versions.sort_by_key(|v| v.version);
     Ok(ClusterReport {
@@ -311,6 +699,17 @@ struct ConnAcct {
     submit_wall_s: f64,
     sync_wait_s: f64,
     last_fetch_reply: Option<Instant>,
+}
+
+/// RAII decrement of the graceful-shutdown drain counter: `active_submits`
+/// must fall even when a submit path bails early.
+struct SubmitGuard<'a>(&'a Shared);
+
+impl Drop for SubmitGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_recover(&self.0.state);
+        st.active_submits = st.active_submits.saturating_sub(1);
+    }
 }
 
 /// Mark the run aborted and release any Eq. 8 barrier waiters so a dead
@@ -350,6 +749,7 @@ fn declare_dead(shared: &Shared, node: usize, session: u64, lease_expired: bool)
         let why = if lease_expired { "lease expired" } else { "connection lost" };
         eprintln!("param-server: node {node} dead ({why})");
     }
+    replicate_async(&mut st, ReplEvent::NodeDead { node: node as u32 });
     let update = shared.opts.update;
     match update {
         UpdateStrategy::Sgwu => {
@@ -504,6 +904,9 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let lease = Some(shared.opts.lease).filter(|d| !d.is_zero());
     stream.set_read_timeout(lease).context("set connection read deadline")?;
     stream.set_write_timeout(lease).context("set connection write deadline")?;
+    if let Ok(clone) = stream.try_clone() {
+        lock_recover(&shared.conns).push(clone);
+    }
     let mut reader = std::io::BufReader::new(stream.try_clone().context("clone stream")?);
     let mut writer = std::io::BufWriter::new(stream);
     let mut acct = ConnAcct::default();
@@ -529,7 +932,26 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     };
     acct.wire_bytes += hello_bytes as u64;
     let node = match hello {
-        Msg::Hello { node } => node as usize,
+        Msg::Hello { node, .. } if node == REPL_NODE => {
+            // A (stale) primary's replication channel reached a serving
+            // server: answer with our epoch so it fences itself. Not an
+            // error — the cluster simply moved on without it.
+            let _ = write_msg(&mut writer, &Msg::Promote { epoch: shared.opts.epoch });
+            return Ok(());
+        }
+        Msg::Hello { node, epoch } => {
+            if epoch > shared.opts.epoch {
+                // The worker has seen a newer cluster epoch than ours: we
+                // are the stale server. Fencing beats split-brain.
+                let why = format!(
+                    "fenced: worker observed cluster epoch {epoch}, this server \
+                     serves epoch {}",
+                    shared.opts.epoch
+                );
+                return Err(reject_conn(&mut reader, &mut writer, &shared, why));
+            }
+            node as usize
+        }
         other => {
             let why = format!("expected hello, got {other:?}");
             return Err(reject_conn(&mut reader, &mut writer, &shared, why));
@@ -574,6 +996,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
             None => {
                 st.status[node] = NodeStatus::Active;
                 st.session[node] += 1;
+                st.claims += 1;
                 st.session[node]
             }
         }
@@ -592,10 +1015,16 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
         st.node_stall[node] += acct.sync_wait_s;
         if result.is_ok() && st.session[node] == session {
             st.status[node] = NodeStatus::Done;
+            replicate_async(&mut st, ReplEvent::NodeDone { node: node as u32 });
         }
     }
 
     let Err(err) = result else { return Ok(()) };
+    if lock_recover(&shared.state).draining {
+        // Graceful shutdown closed the socket under this handler: a quiet
+        // end, not a node death.
+        return Ok(());
+    }
     match io_cause(&err) {
         // The connection died (EOF, reset, or lease timeout): a node
         // failure, handled per policy.
@@ -649,6 +1078,7 @@ fn serve_node(
                 };
                 let reply = Msg::Global {
                     version: version as u64,
+                    epoch: shared.opts.epoch,
                     reassigned: extras,
                     weights: (*snapshot).clone(),
                 };
@@ -670,17 +1100,26 @@ fn serve_node(
                 let t_h = Instant::now();
                 let mut waited = 0.0f64;
                 let mut ckpt = None;
+                let mut repl_rx = None;
+                lock_recover(&shared.state).active_submits += 1;
+                let _submit_guard = SubmitGuard(shared);
                 let version = {
                     let mut st = lock_recover(&shared.state);
                     st.node_busy[node] += epoch_busy;
                     let at_s = shared.t0.elapsed().as_secs_f64();
+                    // A worker retrying a submit whose Ack was lost across a
+                    // failover may carry a base newer than a promoted
+                    // server's counter (async replication loses acked
+                    // tails); clamp instead of underflowing the staleness
+                    // math.
+                    let base = (base as usize).min(st.ps.version());
                     match (shared.opts.update, mode) {
                         (UpdateStrategy::Agwu, SubmitMode::Agwu)
                         | (UpdateStrategy::Agwu, SubmitMode::Plain) => {
                             let v = if mode == SubmitMode::Agwu {
-                                st.ps.update_agwu(node, &weights, base as usize, accuracy)
+                                st.ps.update_agwu(node, &weights, base, accuracy)
                             } else {
-                                st.ps.update_async_plain(node, &weights, base as usize)
+                                st.ps.update_async_plain(node, &weights, base)
                             };
                             st.node_submits[node] += 1;
                             st.versions.push(VersionRecord {
@@ -696,6 +1135,8 @@ fn serve_node(
                                     "param-server: v{v} node {node} loss {loss:.4} acc {accuracy:.3}"
                                 );
                             }
+                            repl_rx =
+                                plan_replication(shared, &mut st, v, node as u32, loss, accuracy, at_s);
                             ckpt = plan_checkpoint(shared, &mut st, v);
                             v
                         }
@@ -737,6 +1178,25 @@ fn serve_node(
                                             l_sum / m
                                         );
                                     }
+                                    if let Some(rx) = plan_replication(
+                                        shared,
+                                        &mut st,
+                                        v,
+                                        ROUND_NODE,
+                                        l_sum / m,
+                                        q_sum / m,
+                                        at_s,
+                                    ) {
+                                        // Replication-before-ack: the Eq. 8
+                                        // barrier must not release (no node
+                                        // of the round can be acked) until
+                                        // the standby holds this round.
+                                        drop(st);
+                                        let w0 = Instant::now();
+                                        let _ = rx.recv();
+                                        waited += w0.elapsed().as_secs_f64();
+                                        st = lock_recover(&shared.state);
+                                    }
                                     st.round += 1;
                                     shared.round_cv.notify_all();
                                     ckpt = plan_checkpoint(shared, &mut st, v);
@@ -745,7 +1205,8 @@ fn serve_node(
                                 None => {
                                     // Eq. 8: wait for the round's last node.
                                     let w0 = Instant::now();
-                                    while st.round == my_round && !st.aborted {
+                                    while st.round == my_round && !st.aborted && !st.draining
+                                    {
                                         st = shared
                                             .round_cv
                                             .wait(st)
@@ -755,6 +1216,9 @@ fn serve_node(
                                     acct.sync_wait_s += waited;
                                     if st.aborted {
                                         bail!("SGWU round aborted: the run failed");
+                                    }
+                                    if st.round == my_round && st.draining {
+                                        bail!("SGWU round interrupted: server draining for shutdown");
                                     }
                                     st.ps.version()
                                 }
@@ -766,6 +1230,14 @@ fn serve_node(
                         }
                     }
                 };
+                if let Some(rx) = repl_rx.take() {
+                    // Replication-before-ack (AGWU): hold the worker's Ack
+                    // until the standby acked this update, so an acked
+                    // update can never be lost to a promotion.
+                    let w0 = Instant::now();
+                    let _ = rx.recv();
+                    waited += w0.elapsed().as_secs_f64();
+                }
                 acct.submit_wall_s += t_h.elapsed().as_secs_f64() - waited;
                 acct.wire_bytes += write_msg(writer, &Msg::Ack { version: version as u64 })? as u64;
                 run_checkpoint(shared, ckpt);
@@ -773,6 +1245,272 @@ fn serve_node(
             Msg::Done => return Ok(()),
             other => bail!("unexpected message from node {node}: {other:?}"),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm standby (replica side)
+// ---------------------------------------------------------------------------
+
+/// Configuration of a standby run.
+#[derive(Debug, Clone)]
+pub struct StandbyOptions {
+    /// Replication lease: promote after this much silence from the
+    /// primary (its keepalive pings at `lease/3` keep this warm). Zero
+    /// disables promotion — the standby only mirrors.
+    pub repl_lease: Duration,
+    /// Post-promotion window in which at least one worker must fail over,
+    /// or the promoted server gives up the run.
+    pub claim_deadline: Duration,
+    pub verbose: bool,
+    /// Template for the promoted server. `epoch`, `init_version`,
+    /// `promoted`, `claim_deadline`, and the `pre_*` fields are filled in
+    /// from replicated state at promotion time.
+    pub serve: ServeOptions,
+}
+
+/// How a standby run ended.
+#[derive(Debug)]
+pub enum StandbyOutcome {
+    /// The primary reported a clean end of run (`Done` on the replication
+    /// channel): nothing to take over.
+    PrimaryFinished,
+    /// The primary went silent past its lease; this standby promoted
+    /// itself and served the remainder of the run.
+    Promoted(ClusterReport),
+}
+
+/// Replicated state mirrored by a standby, guarded by one mutex.
+struct ReplState {
+    weights: WeightSet,
+    /// Version of the snapshot in `weights` (≤ `version` under async
+    /// replication; equal under replication-before-ack).
+    snap_version: u64,
+    /// Highest replicated metadata version — the promoted server resumes
+    /// the version counter here so versions stay strictly monotone.
+    version: u64,
+    /// Primary's cluster epoch (promotion serves at `epoch + 1`).
+    epoch: u64,
+    versions: Vec<VersionRecord>,
+    submits: Vec<usize>,
+    done: Vec<bool>,
+    dead: Vec<bool>,
+    finished: bool,
+    /// Last replication frame (any kind) — the promotion timer.
+    last_activity: Option<Instant>,
+    /// Training updates replicated (bootstrap snapshots excluded).
+    updates: usize,
+}
+
+impl ReplState {
+    fn apply(&mut self, epoch: u64, event: ReplEvent) {
+        self.last_activity = Some(Instant::now());
+        self.epoch = self.epoch.max(epoch);
+        match event {
+            ReplEvent::Update { version, node, loss, accuracy, at_s, weights } => {
+                if version > self.version {
+                    self.version = version;
+                }
+                if let Some(w) = weights {
+                    if version >= self.snap_version {
+                        self.weights = w;
+                        self.snap_version = version;
+                    }
+                }
+                if node != REPL_NODE {
+                    self.updates += 1;
+                    let slot = node as usize;
+                    if slot < self.submits.len() {
+                        self.submits[slot] += 1;
+                        // An update from a previously-dead node means the
+                        // primary revived it.
+                        self.dead[slot] = false;
+                    }
+                    self.versions.push(VersionRecord {
+                        version: version as usize,
+                        node: if node == ROUND_NODE { usize::MAX } else { node as usize },
+                        local_loss: loss,
+                        local_accuracy: accuracy,
+                        at_s,
+                        eval: None,
+                    });
+                }
+            }
+            ReplEvent::NodeDone { node } => {
+                if let Some(d) = self.done.get_mut(node as usize) {
+                    *d = true;
+                }
+            }
+            ReplEvent::NodeDead { node } => {
+                if let Some(d) = self.dead.get_mut(node as usize) {
+                    *d = true;
+                }
+            }
+        }
+    }
+}
+
+/// Run as a warm standby on `listener`: mirror the primary's replication
+/// stream, and either stand down when the primary finishes the run, or
+/// promote to primary — bumped epoch, same listener — when the primary's
+/// replication lease expires. `init` must be the same initial weights the
+/// primary starts from (the primary's bootstrap snapshot overwrites it on
+/// first contact anyway).
+pub fn serve_standby(
+    listener: TcpListener,
+    init: WeightSet,
+    opts: StandbyOptions,
+) -> Result<StandbyOutcome> {
+    ensure!(opts.serve.nodes > 0, "standby needs at least one node slot");
+    let nodes = opts.serve.nodes;
+    let rs = Arc::new(Mutex::new(ReplState {
+        weights: init,
+        snap_version: opts.serve.init_version as u64,
+        version: opts.serve.init_version as u64,
+        epoch: opts.serve.epoch,
+        versions: Vec::new(),
+        submits: vec![0; nodes],
+        done: vec![false; nodes],
+        dead: vec![false; nodes],
+        finished: false,
+        last_activity: None,
+        updates: 0,
+    }));
+    listener.set_nonblocking(true).context("nonblocking standby listener")?;
+    loop {
+        {
+            let st = lock_recover(&rs);
+            if st.finished {
+                if opts.verbose {
+                    eprintln!("param-server: standby standing down (primary finished the run)");
+                }
+                return Ok(StandbyOutcome::PrimaryFinished);
+            }
+            if !opts.repl_lease.is_zero() {
+                if let Some(t) = st.last_activity {
+                    if t.elapsed() >= opts.repl_lease {
+                        break; // primary lease expired: promote
+                    }
+                }
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let state = Arc::clone(&rs);
+                let lease = opts.repl_lease;
+                let verbose = opts.verbose;
+                std::thread::spawn(move || standby_conn(stream, state, lease, verbose));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accept on standby listener"),
+        }
+    }
+
+    // Promotion: bump the epoch, rebuild server options from replicated
+    // state, and serve workers on the same listener.
+    let (weights, version, old_epoch, versions, submits, done, dead, updates) = {
+        let mut st = lock_recover(&rs);
+        (
+            std::mem::replace(&mut st.weights, WeightSet::new(Vec::new())),
+            st.version,
+            st.epoch,
+            std::mem::take(&mut st.versions),
+            std::mem::take(&mut st.submits),
+            std::mem::take(&mut st.done),
+            std::mem::take(&mut st.dead),
+            st.updates,
+        )
+    };
+    let epoch = old_epoch + 1;
+    eprintln!(
+        "param-server: standby promoting to primary at cluster epoch {epoch} \
+         (v{version}, {updates} replicated updates)"
+    );
+    let mut so = opts.serve.clone();
+    so.epoch = epoch;
+    so.init_version = version as usize;
+    so.promoted = true;
+    so.claim_deadline = Some(opts.claim_deadline);
+    so.standby = None;
+    so.repl_ack = ReplAck::None;
+    so.pre_done = done.iter().enumerate().filter(|(_, &d)| d).map(|(i, _)| i).collect();
+    so.pre_dead = dead.iter().enumerate().filter(|(_, &d)| d).map(|(i, _)| i).collect();
+    so.init_submits = submits;
+    so.pre_versions = versions;
+    serve(listener, weights, so).map(StandbyOutcome::Promoted)
+}
+
+/// One connection into a standby: a replication channel from the primary
+/// (mirrored and acked), or an early worker (politely rejected — the
+/// worker's retry loop carries it across the promotion window).
+fn standby_conn(
+    stream: TcpStream,
+    rs: Arc<Mutex<ReplState>>,
+    lease: Duration,
+    verbose: bool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let lease_opt = Some(lease).filter(|d| !d.is_zero());
+    stream.set_read_timeout(lease_opt).context("standby conn read deadline")?;
+    stream.set_write_timeout(lease_opt).context("standby conn write deadline")?;
+    let mut reader = std::io::BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut writer = std::io::BufWriter::new(stream);
+    let hello = match read_msg(&mut reader) {
+        Ok((msg, _)) => msg,
+        Err(_) => return Ok(()), // junk dial: nothing worth failing over
+    };
+    match hello {
+        Msg::Hello { node, epoch } if node == REPL_NODE => {
+            if verbose {
+                eprintln!("param-server: standby mirroring primary (epoch {epoch})");
+            }
+            lock_recover(&rs).last_activity = Some(Instant::now());
+            loop {
+                match read_msg(&mut reader) {
+                    Ok((Msg::Replicate { epoch, event }, _)) => {
+                        let version = {
+                            let mut st = lock_recover(&rs);
+                            st.apply(epoch, event);
+                            st.version
+                        };
+                        write_msg(&mut writer, &Msg::ReplAck { epoch, version })?;
+                    }
+                    Ok((Msg::Ping, _)) => {
+                        lock_recover(&rs).last_activity = Some(Instant::now());
+                        write_msg(&mut writer, &Msg::Pong)?;
+                    }
+                    Ok((Msg::Done, _)) => {
+                        lock_recover(&rs).finished = true;
+                        return Ok(());
+                    }
+                    Ok(_) | Err(_) => {
+                        // EOF, lease timeout, or protocol noise: leave
+                        // `last_activity` alone so the promotion timer
+                        // keeps counting from the last real frame (the
+                        // primary may still redial within its lease).
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        Msg::Hello { node, .. } => {
+            // A worker arrived before promotion: tell it why, typed, and
+            // let its retry/failover loop try again.
+            let _ = write_msg(
+                &mut writer,
+                &Msg::Error {
+                    msg: format!(
+                        "standby: not serving workers yet (node {node} arrived before \
+                         promotion; primary holds the cluster)"
+                    ),
+                },
+            );
+            drain_for_error_delivery(&mut reader);
+            Ok(())
+        }
+        _ => Ok(()),
     }
 }
 
@@ -955,7 +1693,7 @@ mod tests {
         // Node 1 connects and goes silent: its lease must expire.
         let silent = TcpStream::connect(&addr).unwrap();
         let mut w = std::io::BufWriter::new(silent.try_clone().unwrap());
-        write_msg(&mut w, &Msg::Hello { node: 1 }).unwrap();
+        write_msg(&mut w, &Msg::Hello { node: 1, epoch: 0 }).unwrap();
         // Node 0 does real work and finishes.
         let mut t = TcpTransport::connect(&addr, 0).unwrap();
         let (g, base) = t.fetch_global().unwrap();
@@ -1062,6 +1800,324 @@ mod tests {
         t.finish().unwrap();
         let report = server.join().unwrap().unwrap();
         assert_eq!(report.fault.reconnects, 1);
+    }
+
+    fn raw_conn(addr: &str) -> (std::io::BufReader<TcpStream>, std::io::BufWriter<TcpStream>) {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        (
+            std::io::BufReader::new(stream.try_clone().unwrap()),
+            std::io::BufWriter::new(stream),
+        )
+    }
+
+    fn standby_opts(nodes: usize, repl_lease_ms: u64) -> StandbyOptions {
+        StandbyOptions {
+            repl_lease: Duration::from_millis(repl_lease_ms),
+            claim_deadline: Duration::from_secs(10),
+            verbose: false,
+            serve: ServeOptions {
+                nodes,
+                update: UpdateStrategy::Agwu,
+                on_failure: OnFailure::Continue,
+                lease: Duration::from_secs(5),
+                ..ServeOptions::default()
+            },
+        }
+    }
+
+    #[test]
+    fn standby_stands_down_when_primary_finishes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || serve_standby(listener, ws(&[0.0]), standby_opts(1, 400)));
+        let (mut r, mut w) = raw_conn(&addr);
+        write_msg(&mut w, &Msg::Hello { node: REPL_NODE, epoch: 0 }).unwrap();
+        let boot = Msg::Replicate {
+            epoch: 0,
+            event: ReplEvent::Update {
+                version: 0,
+                node: REPL_NODE,
+                loss: 0.0,
+                accuracy: 0.0,
+                at_s: 0.0,
+                weights: Some(ws(&[0.0])),
+            },
+        };
+        write_msg(&mut w, &boot).unwrap();
+        assert!(matches!(read_msg(&mut r).unwrap().0, Msg::ReplAck { .. }));
+        write_msg(&mut w, &Msg::Done).unwrap();
+        let outcome = h.join().unwrap().unwrap();
+        assert!(matches!(outcome, StandbyOutcome::PrimaryFinished));
+    }
+
+    #[test]
+    fn standby_promotes_from_replicated_state_and_serves_bit_identically() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || serve_standby(listener, ws(&[0.0, 0.0]), standby_opts(1, 300)));
+
+        // Act as the primary: bootstrap, then replicate v3 with a snapshot,
+        // then vanish without `Done` (a crash).
+        let snap = ws(&[1.25, -0.5]);
+        {
+            let (mut r, mut w) = raw_conn(&addr);
+            write_msg(&mut w, &Msg::Hello { node: REPL_NODE, epoch: 0 }).unwrap();
+            write_msg(
+                &mut w,
+                &Msg::Replicate {
+                    epoch: 0,
+                    event: ReplEvent::Update {
+                        version: 0,
+                        node: REPL_NODE,
+                        loss: 0.0,
+                        accuracy: 0.0,
+                        at_s: 0.0,
+                        weights: Some(ws(&[0.0, 0.0])),
+                    },
+                },
+            )
+            .unwrap();
+            assert!(matches!(read_msg(&mut r).unwrap().0, Msg::ReplAck { .. }));
+            write_msg(
+                &mut w,
+                &Msg::Replicate {
+                    epoch: 0,
+                    event: ReplEvent::Update {
+                        version: 3,
+                        node: 0,
+                        loss: 0.7,
+                        accuracy: 0.6,
+                        at_s: 1.0,
+                        weights: Some(snap.clone()),
+                    },
+                },
+            )
+            .unwrap();
+            let (ack, _) = read_msg(&mut r).unwrap();
+            assert!(matches!(ack, Msg::ReplAck { version: 3, .. }), "{ack:?}");
+        }
+
+        // While the standby waits out the lease, an early worker must get a
+        // typed rejection, not a hang or an abort.
+        {
+            let mut t = TcpTransport::connect(&addr, 0).unwrap();
+            let err = t.fetch_global().unwrap_err();
+            assert!(err.downcast_ref::<ServerError>().is_some(), "{err:#}");
+        }
+
+        // After promotion the same address serves workers at epoch 1 from
+        // the bit-exact replicated snapshot, version counter continued.
+        std::thread::sleep(Duration::from_millis(400));
+        let epoch_cell = Arc::new(AtomicU64::new(0));
+        let mut t = loop {
+            match TcpTransport::connect_with_epoch(
+                &addr,
+                0,
+                Some(Duration::from_secs(5)),
+                Some(Arc::clone(&epoch_cell)),
+            ) {
+                Ok(t) => break t,
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        };
+        let (g, v) = loop {
+            match t.fetch_global() {
+                Ok(got) => break got,
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(50));
+                    t = TcpTransport::connect_with_epoch(
+                        &addr,
+                        0,
+                        Some(Duration::from_secs(5)),
+                        Some(Arc::clone(&epoch_cell)),
+                    )
+                    .unwrap();
+                }
+            }
+        };
+        assert_eq!(v, 3, "version counter resumes at the replicated version");
+        let a: Vec<u32> = snap.flatten().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = g.flatten().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "promoted snapshot must be bit-identical");
+        assert_eq!(epoch_cell.load(Ordering::SeqCst), 1, "worker learned the bumped epoch");
+
+        let mut local = (*g).clone();
+        local.tensors_mut()[0].data_mut()[0] += 1.0;
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base: v,
+            accuracy: 0.8,
+            loss: 0.5,
+            want_snapshot: false,
+        };
+        let ack = t.submit(local, &meta).unwrap();
+        assert_eq!(ack.version, 4, "strictly monotone across the promotion");
+        t.finish().unwrap();
+
+        let outcome = h.join().unwrap().unwrap();
+        let StandbyOutcome::Promoted(report) = outcome else {
+            panic!("expected promotion, got {outcome:?}");
+        };
+        assert_eq!(report.fault.failovers, 1, "promotion accounted as a failover");
+        let versions: Vec<usize> = report.versions.iter().map(|r| r.version).collect();
+        assert_eq!(versions, vec![3, 4], "replicated history merged into the report");
+    }
+
+    #[test]
+    fn stale_primary_replication_hello_gets_promote_reply() {
+        // A server already serving at epoch 2 (a promoted standby) must
+        // answer a replication hello with Promote so the stale primary
+        // fences itself.
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            epoch: 2,
+            ..ServeOptions::default()
+        };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        {
+            let (mut r, mut w) = raw_conn(&addr);
+            write_msg(&mut w, &Msg::Hello { node: REPL_NODE, epoch: 0 }).unwrap();
+            let (reply, _) = read_msg(&mut r).unwrap();
+            assert!(matches!(reply, Msg::Promote { epoch: 2 }), "{reply:?}");
+        }
+        // The run itself is unaffected: a worker completes normally.
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let (_, v) = t.fetch_global().unwrap();
+        assert_eq!(v, 0);
+        t.finish().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn worker_from_newer_epoch_fences_stale_server() {
+        let opts = ServeOptions { nodes: 1, ..ServeOptions::default() };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        let cell = Arc::new(AtomicU64::new(3)); // worker has seen epoch 3
+        let mut t =
+            TcpTransport::connect_with_epoch(&addr, 0, Some(Duration::from_secs(5)), Some(cell))
+                .unwrap();
+        let err = t.fetch_global().unwrap_err();
+        let server_err = err.downcast_ref::<ServerError>();
+        assert!(server_err.is_some_and(|e| e.0.contains("fenced")), "{err:#}");
+        drop(t);
+        let err = server.join().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("fenced"), "{err:#}");
+    }
+
+    #[test]
+    fn repl_ack_standby_holds_worker_ack_until_standby_acks() {
+        // Fake standby that delays its ReplAck: the worker's submit Ack
+        // must not arrive before the standby's.
+        let standby = TcpListener::bind("127.0.0.1:0").unwrap();
+        let standby_addr = standby.local_addr().unwrap().to_string();
+        let delay = Duration::from_millis(300);
+        let standby_thread = std::thread::spawn(move || -> Result<usize> {
+            let (stream, _) = standby.accept()?;
+            let mut r = std::io::BufReader::new(stream.try_clone()?);
+            let mut w = std::io::BufWriter::new(stream);
+            let mut snapshots = 0usize;
+            loop {
+                match read_msg(&mut r) {
+                    Ok((Msg::Hello { node, .. }, _)) => assert_eq!(node, REPL_NODE),
+                    Ok((Msg::Replicate { epoch, event }, _)) => {
+                        let (version, has_snap, is_boot) = match event {
+                            ReplEvent::Update { version, node, weights, .. } => {
+                                (version, weights.is_some(), node == REPL_NODE)
+                            }
+                            _ => (0, false, true),
+                        };
+                        if !is_boot {
+                            assert!(has_snap, "sync replication must carry full snapshots");
+                            snapshots += 1;
+                            std::thread::sleep(delay);
+                        }
+                        write_msg(&mut w, &Msg::ReplAck { epoch, version })?;
+                    }
+                    Ok((Msg::Ping, _)) => write_msg(&mut w, &Msg::Pong).map(|_| ())?,
+                    Ok((Msg::Done, _)) | Err(_) => return Ok(snapshots),
+                    Ok(other) => bail!("unexpected frame at fake standby: {other:?}"),
+                }
+            }
+        });
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            standby: Some(standby_addr),
+            repl_ack: ReplAck::Standby,
+            ..ServeOptions::default()
+        };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let (g, base) = t.fetch_global().unwrap();
+        let mut local = (*g).clone();
+        local.tensors_mut()[0].data_mut()[0] = 2.0;
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 1.0,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        let t_submit = Instant::now();
+        let ack = t.submit(local, &meta).unwrap();
+        let held = t_submit.elapsed();
+        assert_eq!(ack.version, 1);
+        assert!(
+            held >= Duration::from_millis(200),
+            "submit ack must wait for the standby ack (held {held:?})"
+        );
+        t.finish().unwrap();
+        server.join().unwrap().unwrap();
+        let snapshots = standby_thread.join().unwrap().unwrap();
+        assert_eq!(snapshots, 1, "exactly one replicated training update");
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_and_checkpoints() {
+        let dir = std::env::temp_dir().join(format!(
+            "bptcnn-graceful-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let flag = Arc::new(AtomicBool::new(false));
+        let opts = ServeOptions {
+            nodes: 1,
+            update: UpdateStrategy::Agwu,
+            on_failure: OnFailure::Continue,
+            checkpoint_dir: Some(dir.clone()),
+            checkpoint_every: 0, // graceful path must checkpoint anyway
+            shutdown: Some(Arc::clone(&flag)),
+            lease: Duration::from_secs(5),
+            ..ServeOptions::default()
+        };
+        let (addr, server) = spawn_server(ws(&[1.0]), opts);
+        let mut t = TcpTransport::connect(&addr, 0).unwrap();
+        let (g, base) = t.fetch_global().unwrap();
+        let mut local = (*g).clone();
+        local.tensors_mut()[0].data_mut()[0] = 3.0;
+        let meta = SubmitMeta {
+            mode: SubmitMode::Agwu,
+            base,
+            accuracy: 0.5,
+            loss: 1.0,
+            want_snapshot: false,
+        };
+        t.submit(local, &meta).unwrap();
+        // Signal: the server must stop accepting, drain, checkpoint, and
+        // return Ok even though the worker never sent Done.
+        flag.store(true, Ordering::SeqCst);
+        let report = server.join().unwrap().unwrap();
+        assert_eq!(report.versions.len(), 1);
+        assert!(report.fault.checkpoints_written >= 1, "{:?}", report.fault);
+        let (version, restored) = crate::outer::fault::read_checkpoint(&dir).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(restored.flatten(), vec![2.0]);
+        drop(t);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

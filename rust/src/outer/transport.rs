@@ -23,6 +23,7 @@ use std::fmt;
 use std::io::{BufReader, BufWriter, Write as _};
 use std::net::TcpStream;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -249,6 +250,11 @@ pub struct TcpTransport {
     /// Sample ranges re-allocated onto this node, piggybacked on fetch
     /// replies and drained by [`Transport::take_reassigned`].
     reassigned: Vec<Range<usize>>,
+    /// Shared cluster-epoch cell (worker failover): the `Hello` carried its
+    /// value at connect time, and every `Global` reply raises it to the
+    /// serving side's epoch, so a reconnect after a standby promotion
+    /// registers with — and thereby fences — the right generation.
+    epoch_cell: Option<Arc<AtomicU64>>,
 }
 
 impl TcpTransport {
@@ -269,6 +275,19 @@ impl TcpTransport {
         node: usize,
         io_timeout: Option<Duration>,
     ) -> Result<Self> {
+        Self::connect_with_epoch(addr, node, io_timeout, None)
+    }
+
+    /// [`TcpTransport::connect_with_timeout`] plus a shared epoch cell for
+    /// failover-aware deployments: the `Hello` registers at the cell's
+    /// current cluster epoch and later `Global` replies keep it fresh.
+    /// `None` registers at epoch 0 (single-server deployments).
+    pub fn connect_with_epoch(
+        addr: &str,
+        node: usize,
+        io_timeout: Option<Duration>,
+        epoch_cell: Option<Arc<AtomicU64>>,
+    ) -> Result<Self> {
         let t0 = Instant::now();
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connect to param server at {addr}"))?;
@@ -277,13 +296,16 @@ impl TcpTransport {
         stream.set_read_timeout(io_timeout).context("set read timeout")?;
         stream.set_write_timeout(io_timeout).context("set write timeout")?;
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        let epoch = epoch_cell.as_ref().map(|c| c.load(Ordering::SeqCst)).unwrap_or(0);
         let mut t = Self {
             reader,
             writer: BufWriter::new(stream),
             stats: TransportStats::default(),
             reassigned: Vec::new(),
+            epoch_cell,
         };
-        t.stats.wire_bytes += write_msg(&mut t.writer, &Msg::Hello { node: node as u32 })? as u64;
+        t.stats.wire_bytes +=
+            write_msg(&mut t.writer, &Msg::Hello { node: node as u32, epoch })? as u64;
         t.stats.connect_wall_s = t0.elapsed().as_secs_f64();
         Ok(t)
     }
@@ -304,7 +326,12 @@ impl Transport for TcpTransport {
         let t0 = Instant::now();
         let reply = self.round_trip(&Msg::Fetch)?;
         let out = match reply {
-            Msg::Global { version, reassigned, weights } => {
+            Msg::Global { version, epoch, reassigned, weights } => {
+                if let Some(cell) = &self.epoch_cell {
+                    // Only ever raise: a snapshot from the current primary
+                    // must not roll the worker's epoch knowledge back.
+                    cell.fetch_max(epoch, Ordering::SeqCst);
+                }
                 self.reassigned.extend(
                     reassigned.into_iter().map(|(s, e)| s as usize..e as usize),
                 );

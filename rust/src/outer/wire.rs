@@ -1,11 +1,20 @@
 //! Length-prefixed binary protocol between workers and the parameter
 //! server (§3.2's node ↔ server links, made real).
 //!
-//! Every message is one frame: `u32 LE body length | u8 tag | body`.
+//! Every message is one frame:
+//! `u32 LE body length | u8 tag | body | u32 LE CRC32(tag+body)`.
 //! Weight sets ride the [`crate::tensor::wire`] codec unchanged, so the
 //! protocol layer only adds scalars (LE-encoded) around them. Frames are
 //! capped at [`MAX_FRAME`] to keep a corrupt length prefix from driving a
-//! multi-gigabyte allocation.
+//! multi-gigabyte allocation, and the CRC trailer rejects bit corruption
+//! that a length check alone would let through (the server answers a
+//! mismatch with a typed `Error` frame, like any other decode rejection).
+//!
+//! The same framing carries the primary → standby replication channel of
+//! the warm-standby parameter server: `Replicate` streams committed global
+//! updates (metadata plus periodic full `BPWS` snapshots), `ReplAck`
+//! acknowledges them, and `Promote` fences a stale primary after the
+//! standby bumped the cluster epoch.
 
 use std::io::{Read, Write};
 
@@ -20,6 +29,11 @@ use super::transport::SubmitMode;
 /// case are ~hundreds of MB below this).
 pub const MAX_FRAME: usize = 1 << 30;
 
+/// Sentinel node id a replication channel registers with in its `Hello`:
+/// no worker slot can ever collide with it, so the server can tell a
+/// standby's replication link from a computing node by the first frame.
+pub const REPL_NODE: u32 = u32::MAX;
+
 const TAG_HELLO: u8 = 1;
 const TAG_FETCH: u8 = 2;
 const TAG_SUBMIT: u8 = 3;
@@ -29,25 +43,69 @@ const TAG_DONE: u8 = 6;
 const TAG_ERROR: u8 = 7;
 const TAG_PING: u8 = 8;
 const TAG_PONG: u8 = 9;
+const TAG_REPLICATE: u8 = 10;
+const TAG_REPL_ACK: u8 = 11;
+const TAG_PROMOTE: u8 = 12;
+
+const EVENT_UPDATE: u8 = 0;
+const EVENT_NODE_DONE: u8 = 1;
+const EVENT_NODE_DEAD: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3 polynomial, table-driven, hand-rolled — no crates)
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC32 of `data` (the zlib/`cksum -o 3` polynomial). Used as the
+/// per-frame integrity trailer; also handy for fingerprinting weight sets
+/// in logs without dumping them.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
 
 /// One protocol message. Client → server: `Hello`, `Fetch`, `Submit`,
-/// `Done`. Server → client: `Global`, `Ack`, `Error`.
+/// `Done`. Server → client: `Global`, `Ack`, `Error`. Primary ↔ standby:
+/// `Replicate`/`ReplAck`/`Promote` (plus `Hello` with [`REPL_NODE`]).
 #[derive(Debug)]
 pub enum Msg {
-    /// Worker registration: which node slot this connection drives.
-    Hello { node: u32 },
+    /// Registration: which node slot this connection drives ([`REPL_NODE`]
+    /// marks a replication channel) and the cluster epoch the sender last
+    /// observed (0 for a fresh worker; bumped by standby promotion).
+    Hello { node: u32, epoch: u64 },
     /// Request the freshest global weight set.
     Fetch,
     /// Submit a locally-trained weight set. `base` is the global version the
     /// node trained from (AGWU staleness, Eq. 9); `accuracy`/`loss` feed the
     /// Eq. 7/10 weighting and the server-side learning curve.
     Submit { mode: SubmitMode, base: u64, accuracy: f64, loss: f64, weights: WeightSet },
-    /// Reply to `Fetch`: the global set at `version`. `reassigned` carries
-    /// sample ranges the server moved onto this node after a peer died
-    /// (IDPA re-allocation); empty in the healthy path. The ranges ride
+    /// Reply to `Fetch`: the global set at `version`, stamped with the
+    /// server's cluster `epoch` so workers track promotions. `reassigned`
+    /// carries sample ranges the server moved onto this node after a peer
+    /// died (IDPA re-allocation); empty in the healthy path. The ranges ride
     /// *before* the weight payload because the `BPWS` decoder rejects
     /// trailing bytes.
-    Global { version: u64, reassigned: Vec<(u64, u64)>, weights: WeightSet },
+    Global { version: u64, epoch: u64, reassigned: Vec<(u64, u64)>, weights: WeightSet },
     /// Reply to `Submit`: the server's version after processing it (for
     /// SGWU, the reply is delayed until the whole round is installed — the
     /// socket *is* the Eq. 8 barrier).
@@ -57,10 +115,41 @@ pub enum Msg {
     /// Server-side failure report (protocol violation, bad node id, ...).
     Error { msg: String },
     /// Liveness probe (client → server). Renews the sender's lease without
-    /// touching the weight state.
+    /// touching the weight state. Also the primary's keepalive on an idle
+    /// replication channel.
     Ping,
     /// Reply to `Ping`.
     Pong,
+    /// Primary → standby: one committed cluster event at `epoch`.
+    Replicate { epoch: u64, event: ReplEvent },
+    /// Standby → primary: the event stream is durable up to `version` as
+    /// seen at `epoch`.
+    ReplAck { epoch: u64, version: u64 },
+    /// "I am the primary at `epoch`" — sent to fence a connection speaking
+    /// an older epoch (a resurrected primary or a mis-wired second server).
+    /// The receiver must stand down.
+    Promote { epoch: u64 },
+}
+
+/// One replicated cluster event streamed primary → standby.
+#[derive(Debug, Clone)]
+pub enum ReplEvent {
+    /// A committed global update. `node == u32::MAX` marks an SGWU round
+    /// install (no single contributing node). `weights` is the full global
+    /// set at `version` on snapshot frames (every frame under
+    /// `--repl-ack standby`; every `--repl-snapshot-every`-th otherwise).
+    Update {
+        version: u64,
+        node: u32,
+        loss: f64,
+        accuracy: f64,
+        at_s: f64,
+        weights: Option<WeightSet>,
+    },
+    /// A node finished all its iterations on the primary.
+    NodeDone { node: u32 },
+    /// A node was declared dead on the primary.
+    NodeDead { node: u32 },
 }
 
 fn mode_to_wire(m: SubmitMode) -> u8 {
@@ -86,14 +175,18 @@ pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
     let mut body: Vec<u8> = Vec::with_capacity(match msg {
         Msg::Submit { weights, .. } => 1 + 1 + 8 + 8 + 8 + encoded_len(weights),
         Msg::Global { reassigned, weights, .. } => {
-            1 + 8 + 4 + 16 * reassigned.len() + encoded_len(weights)
+            1 + 8 + 8 + 4 + 16 * reassigned.len() + encoded_len(weights)
+        }
+        Msg::Replicate { event: ReplEvent::Update { weights: Some(ws), .. }, .. } => {
+            1 + 8 + 1 + 37 + 1 + encoded_len(ws)
         }
         _ => 64,
     });
     match msg {
-        Msg::Hello { node } => {
+        Msg::Hello { node, epoch } => {
             body.push(TAG_HELLO);
             body.extend_from_slice(&node.to_le_bytes());
+            body.extend_from_slice(&epoch.to_le_bytes());
         }
         Msg::Fetch => body.push(TAG_FETCH),
         Msg::Submit { mode, base, accuracy, loss, weights } => {
@@ -104,9 +197,10 @@ pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
             body.extend_from_slice(&loss.to_le_bytes());
             encode_weight_set_into(weights, &mut body);
         }
-        Msg::Global { version, reassigned, weights } => {
+        Msg::Global { version, epoch, reassigned, weights } => {
             body.push(TAG_GLOBAL);
             body.extend_from_slice(&version.to_le_bytes());
+            body.extend_from_slice(&epoch.to_le_bytes());
             body.extend_from_slice(&(reassigned.len() as u32).to_le_bytes());
             for (start, end) in reassigned {
                 body.extend_from_slice(&start.to_le_bytes());
@@ -125,15 +219,57 @@ pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<usize> {
         }
         Msg::Ping => body.push(TAG_PING),
         Msg::Pong => body.push(TAG_PONG),
+        Msg::Replicate { epoch, event } => {
+            body.push(TAG_REPLICATE);
+            body.extend_from_slice(&epoch.to_le_bytes());
+            match event {
+                ReplEvent::Update { version, node, loss, accuracy, at_s, weights } => {
+                    body.push(EVENT_UPDATE);
+                    body.extend_from_slice(&version.to_le_bytes());
+                    body.extend_from_slice(&node.to_le_bytes());
+                    body.extend_from_slice(&loss.to_le_bytes());
+                    body.extend_from_slice(&accuracy.to_le_bytes());
+                    body.extend_from_slice(&at_s.to_le_bytes());
+                    match weights {
+                        Some(ws) => {
+                            body.push(1);
+                            encode_weight_set_into(ws, &mut body);
+                        }
+                        None => body.push(0),
+                    }
+                }
+                ReplEvent::NodeDone { node } => {
+                    body.push(EVENT_NODE_DONE);
+                    body.extend_from_slice(&node.to_le_bytes());
+                }
+                ReplEvent::NodeDead { node } => {
+                    body.push(EVENT_NODE_DEAD);
+                    body.extend_from_slice(&node.to_le_bytes());
+                }
+            }
+        }
+        Msg::ReplAck { epoch, version } => {
+            body.push(TAG_REPL_ACK);
+            body.extend_from_slice(&epoch.to_le_bytes());
+            body.extend_from_slice(&version.to_le_bytes());
+        }
+        Msg::Promote { epoch } => {
+            body.push(TAG_PROMOTE);
+            body.extend_from_slice(&epoch.to_le_bytes());
+        }
     }
     ensure!(body.len() <= MAX_FRAME, "frame body {} exceeds MAX_FRAME", body.len());
     w.write_all(&(body.len() as u32).to_le_bytes()).context("write frame length")?;
     w.write_all(&body).context("write frame body")?;
+    w.write_all(&crc32(&body).to_le_bytes()).context("write frame crc")?;
     w.flush().context("flush frame")?;
-    Ok(4 + body.len())
+    Ok(4 + body.len() + 4)
 }
 
 /// Read one frame from `r`. Returns the message plus the total bytes read.
+/// A CRC trailer mismatch is a decode error (the stream stays frame-aligned
+/// — the whole frame was consumed), so servers answer it with a typed
+/// `Error` frame instead of tearing the connection down silently.
 pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
     let mut len4 = [0u8; 4];
     r.read_exact(&mut len4).context("read frame length")?;
@@ -142,12 +278,23 @@ pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
     ensure!(len <= MAX_FRAME, "frame length {len} exceeds MAX_FRAME");
     let mut body = vec![0u8; len];
     r.read_exact(&mut body).context("read frame body")?;
+    let mut crc4 = [0u8; 4];
+    r.read_exact(&mut crc4).context("read frame crc")?;
+    let want = u32::from_le_bytes(crc4);
+    let got = crc32(&body);
+    ensure!(
+        got == want,
+        "frame crc mismatch: computed {got:#010x}, trailer {want:#010x} (corrupt frame)"
+    );
     let tag = body[0];
     let rest = &body[1..];
     let msg = match tag {
         TAG_HELLO => {
-            ensure!(rest.len() == 4, "hello body length {}", rest.len());
-            Msg::Hello { node: u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) }
+            ensure!(rest.len() == 12, "hello body length {}", rest.len());
+            Msg::Hello {
+                node: u32::from_le_bytes(rest[..4].try_into().unwrap()),
+                epoch: u64::from_le_bytes(rest[4..12].try_into().unwrap()),
+            }
         }
         TAG_FETCH => {
             ensure!(rest.is_empty(), "fetch carries no body");
@@ -163,10 +310,11 @@ pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
             Msg::Submit { mode, base, accuracy, loss, weights }
         }
         TAG_GLOBAL => {
-            ensure!(rest.len() >= 12, "global body too short: {}", rest.len());
+            ensure!(rest.len() >= 20, "global body too short: {}", rest.len());
             let version = u64::from_le_bytes(rest[..8].try_into().unwrap());
-            let n = u32::from_le_bytes(rest[8..12].try_into().unwrap()) as usize;
-            let ranges_end = 12 + 16 * n;
+            let epoch = u64::from_le_bytes(rest[8..16].try_into().unwrap());
+            let n = u32::from_le_bytes(rest[16..20].try_into().unwrap()) as usize;
+            let ranges_end = 20 + 16 * n;
             ensure!(
                 rest.len() >= ranges_end,
                 "global declares {n} reassigned ranges but body is {} bytes",
@@ -174,14 +322,14 @@ pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
             );
             let mut reassigned = Vec::with_capacity(n);
             for i in 0..n {
-                let at = 12 + 16 * i;
+                let at = 20 + 16 * i;
                 let start = u64::from_le_bytes(rest[at..at + 8].try_into().unwrap());
                 let end = u64::from_le_bytes(rest[at + 8..at + 16].try_into().unwrap());
                 ensure!(start <= end, "reassigned range {start}..{end} is inverted");
                 reassigned.push((start, end));
             }
             let weights = decode_weight_set(&rest[ranges_end..])?;
-            Msg::Global { version, reassigned, weights }
+            Msg::Global { version, epoch, reassigned, weights }
         }
         TAG_ACK => {
             ensure!(rest.len() == 8, "ack body length {}", rest.len());
@@ -200,9 +348,56 @@ pub fn read_msg(r: &mut impl Read) -> Result<(Msg, usize)> {
             ensure!(rest.is_empty(), "pong carries no body");
             Msg::Pong
         }
+        TAG_REPLICATE => {
+            ensure!(rest.len() >= 9, "replicate body too short: {}", rest.len());
+            let epoch = u64::from_le_bytes(rest[..8].try_into().unwrap());
+            let kind = rest[8];
+            let ev = &rest[9..];
+            let event = match kind {
+                EVENT_UPDATE => {
+                    ensure!(ev.len() >= 37, "replicate update body too short: {}", ev.len());
+                    let version = u64::from_le_bytes(ev[..8].try_into().unwrap());
+                    let node = u32::from_le_bytes(ev[8..12].try_into().unwrap());
+                    let loss = f64::from_le_bytes(ev[12..20].try_into().unwrap());
+                    let accuracy = f64::from_le_bytes(ev[20..28].try_into().unwrap());
+                    let at_s = f64::from_le_bytes(ev[28..36].try_into().unwrap());
+                    let weights = match ev[36] {
+                        0 => {
+                            ensure!(ev.len() == 37, "metadata-only update carries no payload");
+                            None
+                        }
+                        1 => Some(decode_weight_set(&ev[37..])?),
+                        other => bail!("bad snapshot flag {other} in replicate update"),
+                    };
+                    ReplEvent::Update { version, node, loss, accuracy, at_s, weights }
+                }
+                EVENT_NODE_DONE | EVENT_NODE_DEAD => {
+                    ensure!(ev.len() == 4, "replicate node event body length {}", ev.len());
+                    let node = u32::from_le_bytes(ev.try_into().unwrap());
+                    if kind == EVENT_NODE_DONE {
+                        ReplEvent::NodeDone { node }
+                    } else {
+                        ReplEvent::NodeDead { node }
+                    }
+                }
+                other => bail!("unknown replicate event kind {other}"),
+            };
+            Msg::Replicate { epoch, event }
+        }
+        TAG_REPL_ACK => {
+            ensure!(rest.len() == 16, "repl-ack body length {}", rest.len());
+            Msg::ReplAck {
+                epoch: u64::from_le_bytes(rest[..8].try_into().unwrap()),
+                version: u64::from_le_bytes(rest[8..16].try_into().unwrap()),
+            }
+        }
+        TAG_PROMOTE => {
+            ensure!(rest.len() == 8, "promote body length {}", rest.len());
+            Msg::Promote { epoch: u64::from_le_bytes(rest.try_into().unwrap()) }
+        }
         other => bail!("unknown message tag {other}"),
     };
-    Ok((msg, 4 + len))
+    Ok((msg, 4 + len + 4))
 }
 
 #[cfg(test)]
@@ -226,8 +421,16 @@ mod tests {
 
     #[test]
     fn scalar_messages_round_trip() {
-        match round_trip(Msg::Hello { node: 7 }) {
-            Msg::Hello { node } => assert_eq!(node, 7),
+        match round_trip(Msg::Hello { node: 7, epoch: 3 }) {
+            Msg::Hello { node, epoch } => assert_eq!((node, epoch), (7, 3)),
+            other => panic!("{other:?}"),
+        }
+        match round_trip(Msg::ReplAck { epoch: 2, version: 99 }) {
+            Msg::ReplAck { epoch, version } => assert_eq!((epoch, version), (2, 99)),
+            other => panic!("{other:?}"),
+        }
+        match round_trip(Msg::Promote { epoch: 5 }) {
+            Msg::Promote { epoch } => assert_eq!(epoch, 5),
             other => panic!("{other:?}"),
         }
         assert!(matches!(round_trip(Msg::Fetch), Msg::Fetch));
@@ -272,9 +475,10 @@ mod tests {
 
     #[test]
     fn global_round_trips() {
-        match round_trip(Msg::Global { version: 9, reassigned: vec![], weights: ws() }) {
-            Msg::Global { version, reassigned, weights } => {
-                assert_eq!(version, 9);
+        match round_trip(Msg::Global { version: 9, epoch: 4, reassigned: vec![], weights: ws() })
+        {
+            Msg::Global { version, epoch, reassigned, weights } => {
+                assert_eq!((version, epoch), (9, 4));
                 assert!(reassigned.is_empty());
                 assert_eq!(weights.param_count(), 4);
             }
@@ -285,12 +489,65 @@ mod tests {
     #[test]
     fn global_round_trips_with_reassigned_ranges() {
         let ranges = vec![(100u64, 250u64), (900, 1000)];
-        match round_trip(Msg::Global { version: 3, reassigned: ranges.clone(), weights: ws() }) {
-            Msg::Global { version, reassigned, weights } => {
-                assert_eq!(version, 3);
+        let msg =
+            Msg::Global { version: 3, epoch: 0, reassigned: ranges.clone(), weights: ws() };
+        match round_trip(msg) {
+            Msg::Global { version, epoch, reassigned, weights } => {
+                assert_eq!((version, epoch), (3, 0));
                 assert_eq!(reassigned, ranges);
                 assert_eq!(weights.param_count(), 4);
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn replicate_round_trips_with_and_without_snapshot() {
+        let msg = Msg::Replicate {
+            epoch: 1,
+            event: ReplEvent::Update {
+                version: 17,
+                node: 2,
+                loss: 0.5,
+                accuracy: 0.75,
+                at_s: 1.25,
+                weights: Some(ws()),
+            },
+        };
+        match round_trip(msg) {
+            Msg::Replicate { epoch, event: ReplEvent::Update { version, node, weights, .. } } => {
+                assert_eq!((epoch, version, node), (1, 17, 2));
+                let got = weights.expect("snapshot survives");
+                let bits: Vec<u32> = got.tensors()[0].data().iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u32> = ws().tensors()[0].data().iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, want, "replicated snapshot must be bit-identical");
+            }
+            other => panic!("{other:?}"),
+        }
+        let meta_only = Msg::Replicate {
+            epoch: 2,
+            event: ReplEvent::Update {
+                version: 18,
+                node: u32::MAX,
+                loss: 0.4,
+                accuracy: 0.8,
+                at_s: 2.0,
+                weights: None,
+            },
+        };
+        match round_trip(meta_only) {
+            Msg::Replicate { event: ReplEvent::Update { version, node, weights, .. }, .. } => {
+                assert_eq!((version, node), (18, u32::MAX));
+                assert!(weights.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        match round_trip(Msg::Replicate { epoch: 3, event: ReplEvent::NodeDone { node: 1 } }) {
+            Msg::Replicate { epoch: 3, event: ReplEvent::NodeDone { node: 1 } } => {}
+            other => panic!("{other:?}"),
+        }
+        match round_trip(Msg::Replicate { epoch: 3, event: ReplEvent::NodeDead { node: 0 } }) {
+            Msg::Replicate { epoch: 3, event: ReplEvent::NodeDead { node: 0 } } => {}
             other => panic!("{other:?}"),
         }
     }
@@ -300,9 +557,14 @@ mod tests {
         let mut buf = Vec::new();
         write_msg(
             &mut buf,
-            &Msg::Global { version: 1, reassigned: vec![(10, 4)], weights: ws() },
+            &Msg::Global { version: 1, epoch: 0, reassigned: vec![(10, 4)], weights: ws() },
         )
         .unwrap();
+        // Re-stamp the CRC so the *range* check (not the trailer) rejects it.
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        let crc = crc32(&buf[4..4 + len]);
+        let at = 4 + len;
+        buf[at..at + 4].copy_from_slice(&crc.to_le_bytes());
         assert!(read_msg(&mut std::io::Cursor::new(buf)).is_err());
     }
 
@@ -310,16 +572,47 @@ mod tests {
     fn corrupt_frames_rejected() {
         let mut buf = Vec::new();
         write_msg(&mut buf, &Msg::Fetch).unwrap();
-        // Truncated frame.
+        // Truncated frame (CRC trailer cut short).
         let mut cur = std::io::Cursor::new(buf[..buf.len() - 1].to_vec());
         assert!(read_msg(&mut cur).is_err());
-        // Unknown tag.
+        // Corrupt tag byte: caught by the CRC trailer before tag dispatch.
         let mut bad = buf.clone();
         bad[4] = 0xEE;
-        assert!(read_msg(&mut std::io::Cursor::new(bad)).is_err());
+        let err = read_msg(&mut std::io::Cursor::new(bad)).unwrap_err();
+        assert!(err.to_string().contains("crc mismatch"), "{err:#}");
         // Oversized declared length.
         let mut bad = buf;
         bad[0..4].copy_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
         assert!(read_msg(&mut std::io::Cursor::new(bad)).is_err());
+    }
+
+    #[test]
+    fn crc_trailer_rejects_any_single_bit_flip() {
+        let mut clean = Vec::new();
+        write_msg(&mut clean, &Msg::Ack { version: 7 }).unwrap();
+        let len = u32::from_le_bytes(clean[..4].try_into().unwrap()) as usize;
+        // Flip every bit of the body and of the trailer, one at a time:
+        // each corruption must be rejected with a crc mismatch.
+        for byte in 4..4 + len + 4 {
+            for bit in 0..8 {
+                let mut bad = clean.clone();
+                bad[byte] ^= 1 << bit;
+                let err = read_msg(&mut std::io::Cursor::new(bad)).unwrap_err();
+                assert!(
+                    err.to_string().contains("crc mismatch"),
+                    "byte {byte} bit {bit}: {err:#}"
+                );
+            }
+        }
+        // The clean frame still parses (the loop above cloned it).
+        assert!(read_msg(&mut std::io::Cursor::new(clean)).is_ok());
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC32 check values (zlib's crc32()).
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
     }
 }

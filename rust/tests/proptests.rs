@@ -1044,6 +1044,7 @@ fn prop_pipelined_chaos_retries_preserve_invariants() {
         let truncate_pct = g.usize_full(0, 15) as u8;
         let duplicate_pct = g.usize_full(0, 30) as u8;
         let delay_pct = g.usize_full(0, 30) as u8;
+        let bitflip_pct = g.usize_full(0, 15) as u8;
         let base_seed = g.u64(1, u64::MAX / 2) | 1;
 
         let init = WeightSet::new(vec![Tensor::zeros(&[8])]);
@@ -1060,14 +1061,16 @@ fn prop_pipelined_chaos_retries_preserve_invariants() {
                     .with_drop_pct(drop_pct)
                     .with_truncate_pct(truncate_pct)
                     .with_duplicate_pct(duplicate_pct)
+                    .with_bitflip_pct(bitflip_pct)
                     .with_delay(delay_pct, Duration::from_micros(50));
                 Ok(Box::new(faulty) as Box<dyn Transport>)
             })
         };
-        // 20 attempts at ≤ 45% per-op fault rate: the chance of exhausting
-        // the budget is ~1e-7 per operation — deterministic enough for CI.
+        // 32 attempts at ≤ 60% per-op fatal-fault rate (drop + truncate +
+        // CRC-rejected bit flip): the chance of exhausting the budget is
+        // ~1e-7 per operation — deterministic enough for CI.
         let policy = RetryPolicy {
-            max_attempts: 20,
+            max_attempts: 32,
             base_backoff: Duration::from_micros(10),
             max_backoff: Duration::from_micros(500),
         };
